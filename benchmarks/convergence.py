@@ -1,0 +1,126 @@
+"""Paper §V.A: convergence-rate comparison, SGD vs SMBGD.
+
+Protocol mirrors the paper: multiple instances of the same separation problem
+(m=4 → n=2) from different random initial separation matrices; count
+iterations (samples seen) until the Amari index stays below threshold; average
+across runs.  Paper reports 4166 (SGD) vs 3166 (SMBGD) → ~24 % improvement.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import easi as easi_lib
+from repro.core import metrics, smbgd as smbgd_lib
+from repro.core.easi import EASIConfig
+from repro.core.smbgd import SMBGDConfig
+from repro.data import signals
+
+M_, N_ = 4, 2
+T = 30_000
+THRESH = 0.08
+N_SEEDS = 24
+CHECK = 50  # evaluate Amari every CHECK samples
+
+
+def _convergence_iters_sgd(key, ecfg: EASIConfig) -> float:
+    kp, ki = jax.random.split(key)
+    A, S, X = signals.make_problem(kp, m=M_, n=N_, T=T)
+    B = easi_lib.init_separation_matrix(ecfg, ki)
+
+    Xc = X[: T // CHECK * CHECK].reshape(-1, CHECK, M_)
+
+    def body(B, xc):
+        B, _ = easi_lib.easi_sgd_scan(B, xc, ecfg)
+        pi = metrics.amari_index(metrics.global_system(B, A))
+        return B, pi
+
+    _, trace = jax.lax.scan(body, B, Xc)
+    it = metrics.iterations_to_converge(trace, THRESH, sustain=3)
+    return jnp.where(it == trace.shape[0], jnp.inf, it * CHECK)
+
+
+def _convergence_iters_smbgd(key, ecfg: EASIConfig, ocfg: SMBGDConfig) -> float:
+    kp, ki = jax.random.split(key)
+    A, S, X = signals.make_problem(kp, m=M_, n=N_, T=T)
+    st = smbgd_lib.init_state(ecfg, ki)
+    Xc = X[: T // CHECK * CHECK].reshape(-1, CHECK, M_)
+
+    def body(st, xc):
+        st, _ = smbgd_lib.smbgd_epoch(st, xc, ecfg, ocfg)
+        pi = metrics.amari_index(metrics.global_system(st.B, A))
+        return st, pi
+
+    _, trace = jax.lax.scan(body, st, Xc)
+    it = metrics.iterations_to_converge(trace, THRESH, sustain=3)
+    return jnp.where(it == trace.shape[0], jnp.inf, it * CHECK)
+
+
+def _mean_converged(v):
+    ok = jnp.isfinite(v)
+    mean = float(jnp.sum(jnp.where(ok, v, 0.0)) / jnp.maximum(jnp.sum(ok), 1))
+    frac = float(jnp.mean(ok))
+    # penalize non-convergence so "fast but unstable" settings don't win
+    return mean if frac == 1.0 else float("inf"), int(jnp.sum(ok))
+
+
+def run() -> Dict[str, float]:
+    """Best-tuned vs best-tuned (the paper's hyper-parameters are not
+    published; momentum's speedup materializes through the larger stable
+    effective step it affords, so each algorithm gets its best μ — and SMBGD
+    its best (β, γ) — over a fixed public grid, averaged over seeds)."""
+    keys = jax.random.split(jax.random.PRNGKey(2017), N_SEEDS)
+    mus = (5e-4, 1e-3, 2e-3, 5e-3)
+
+    best_sgd: Dict = {"iters": float("inf")}
+    for mu in mus:
+        ecfg = EASIConfig(n_components=N_, n_features=M_, mu=mu, nonlinearity="cubic")
+        f = jax.jit(lambda k, e=ecfg: _convergence_iters_sgd(k, e))
+        iters, ok = _mean_converged(jnp.stack([f(k) for k in keys]))
+        if iters < best_sgd["iters"]:
+            best_sgd = {"iters": iters, "mu": mu, "converged": ok}
+
+    best_smb: Dict = {"iters": float("inf")}
+    for mu in mus:
+        for beta, gamma in ((0.9, 0.5), (0.9, 0.8), (1.0, 0.5), (1.0, 0.8)):
+            ecfg = EASIConfig(
+                n_components=N_, n_features=M_, mu=mu, nonlinearity="cubic"
+            )
+            ocfg = SMBGDConfig(batch_size=8, mu=mu, beta=beta, gamma=gamma)
+            f = jax.jit(lambda k, e=ecfg, o=ocfg: _convergence_iters_smbgd(k, e, o))
+            iters, ok = _mean_converged(jnp.stack([f(k) for k in keys]))
+            if iters < best_smb["iters"]:
+                best_smb = {
+                    "iters": iters, "mu": mu, "beta": beta, "gamma": gamma,
+                    "converged": ok,
+                }
+
+    improvement = 100.0 * (1.0 - best_smb["iters"] / best_sgd["iters"])
+    return {
+        "sgd": best_sgd,
+        "smbgd": best_smb,
+        "improvement_pct": improvement,
+        "paper_sgd": 4166,
+        "paper_smbgd": 3166,
+        "paper_improvement_pct": 24.0,
+    }
+
+
+def main():
+    t0 = time.time()
+    r = run()
+    s, m = r["sgd"], r["smbgd"]
+    print(
+        f"convergence,sgd_iters={s['iters']:.0f} (mu={s['mu']}, {s['converged']}/{N_SEEDS}),"
+        f"smbgd_iters={m['iters']:.0f} (mu={m['mu']},beta={m['beta']},gamma={m['gamma']},"
+        f" {m['converged']}/{N_SEEDS}),"
+        f"improvement={r['improvement_pct']:.1f}% (paper: 24%) [{time.time()-t0:.0f}s]"
+    )
+    return r
+
+
+if __name__ == "__main__":
+    main()

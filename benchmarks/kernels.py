@@ -1,0 +1,83 @@
+"""Kernel microbenches.
+
+On this CPU container Pallas runs in interpret mode (Python — not indicative),
+so wall-times are reported for the jit'd XLA paths (ref oracle vs fused closed
+form) and the Pallas kernels are validated by allclose + their VMEM/tiling
+parameters reported structurally (the TPU-relevant numbers)."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import easi as easi_lib
+from repro.kernels.easi_gradient.ref import easi_gradient_ref
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _time(fn, *args, reps=10) -> float:
+    fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> List[Dict]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # EASI gradient: naive per-sample einsum (FPGA-order) vs fused closed form
+    for P, n in ((4096, 8), (16384, 64)):
+        Y = jax.random.normal(key, (P, n))
+        w = jnp.full((P,), 1e-3)
+        t_ref = _time(jax.jit(easi_gradient_ref), Y, w)
+        t_fused = _time(
+            jax.jit(lambda Y, w: easi_lib.batched_relative_gradient(Y, w, lambda v: v**3)),
+            Y, w,
+        )
+        rows.append({
+            "name": f"easi_gradient_P{P}_n{n}",
+            "us_ref": t_ref * 1e6,
+            "us_fused": t_fused * 1e6,
+            "speedup": t_ref / t_fused,
+        })
+
+    # attention: XLA dense reference timing (flash kernel = TPU target,
+    # validated by allclose in tests/test_kernels.py)
+    B, Hq, Hkv, T, d = 1, 8, 2, 1024, 64
+    q = jax.random.normal(key, (B, Hq, T, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, Hkv, T, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, Hkv, T, d))
+    f = jax.jit(lambda q, k, v: attention_ref(q, k, v, scale=d**-0.5))
+    rows.append({"name": f"attention_ref_T{T}", "us_ref": _time(f, q, k, v) * 1e6})
+
+    # structural: flash kernel VMEM working set per grid step
+    bq = bk = 128
+    vmem = (bq * d + 2 * bk * d + bq * bk + bq * d + 2 * bq) * 4
+    rows.append({
+        "name": "flash_attention_vmem_per_step",
+        "block_q": bq, "block_k": bk,
+        "vmem_bytes": vmem,
+        "fits_16MB_vmem": vmem < 16 * 2**20,
+    })
+    return rows
+
+
+def main():
+    out = run()
+    for r in out:
+        if "us_fused" in r:
+            print(f"kernel,{r['name']},ref={r['us_ref']:.0f}us,fused={r['us_fused']:.0f}us,speedup={r['speedup']:.1f}x")
+        elif "us_ref" in r:
+            print(f"kernel,{r['name']},{r['us_ref']:.0f}us")
+        else:
+            print(f"kernel,{r['name']},vmem={r['vmem_bytes']}B,fits={r['fits_16MB_vmem']}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Paper §V.B: nonlinearity cost — tanh vs cubic vs relu.
+
+On the FPGA the cubic saved DSP/ALM resources at equal clock.  The TPU
+analogue: time per batched-relative-gradient call (the g(.) evaluation is the
+only difference) and the transcendental-op count.  Cubic and relu are
+mul/add-only (VPU-cheap) exactly as the paper argues.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import easi as easi_lib
+from repro.core import nonlinearities
+
+
+def _time(fn, *args, reps=20) -> float:
+    fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(P: int = 65_536, n: int = 64) -> List[Dict[str, float]]:
+    key = jax.random.PRNGKey(0)
+    Y = jax.random.normal(key, (P, n))
+    w = jnp.full((P,), 1e-3)
+    rows = []
+    for name in ("cubic", "tanh", "relu", "scaled_tanh"):
+        g = nonlinearities.get(name)
+        f = jax.jit(lambda Y, w, g=g: easi_lib.batched_relative_gradient(Y, w, g))
+        t = _time(f, Y, w)
+        rows.append({"nonlinearity": name, "us_per_call": t * 1e6, "P": P, "n": n})
+    base = next(r for r in rows if r["nonlinearity"] == "tanh")["us_per_call"]
+    for r in rows:
+        r["vs_tanh"] = base / r["us_per_call"]
+    return rows
+
+
+def main():
+    for r in run():
+        print(
+            f"nonlinearity,{r['nonlinearity']},{r['us_per_call']:.0f}us"
+            f",speed_vs_tanh={r['vs_tanh']:.2f}x"
+        )
+    return run()
+
+
+if __name__ == "__main__":
+    main()

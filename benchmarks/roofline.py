@@ -1,0 +1,91 @@
+"""§Roofline report generator: reads the dry-run JSONs and emits the
+per-(arch × shape) table (single-pod mesh, per the assignment).
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir benchmarks/results/dryrun] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+
+def load_results(directory: str = "benchmarks/results/dryrun", mesh: str = "single") -> List[Dict]:
+    rows = []
+    for p in sorted(Path(directory).glob(f"*__{mesh}.json")):
+        r = json.loads(p.read_text())
+        if "skipped" in r:
+            rows.append(r)
+            continue
+        rows.append(r)
+    return rows
+
+
+def fmt_table(rows: List[Dict], md: bool = True) -> str:
+    hdr = [
+        "arch", "shape", "t_compute(s)", "t_memory(s)", "t_coll(s)",
+        "bottleneck", "useful_flops", "roofline_frac",
+    ]
+    lines = []
+    if md:
+        lines.append("| " + " | ".join(hdr) + " |")
+        lines.append("|" + "---|" * len(hdr))
+    for r in rows:
+        if "skipped" in r:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — |"
+                if md else f"{r['arch']},{r['shape']},skipped"
+            )
+            continue
+        ro = r["roofline"]
+        vals = [
+            r["arch"], r["shape"],
+            f"{ro['t_compute_s']:.4g}", f"{ro['t_memory_s']:.4g}",
+            f"{ro['t_collective_s']:.4g}", ro["bottleneck"],
+            f"{ro['useful_flops_ratio']:.3f}", f"{ro['roofline_fraction']:.4f}",
+        ]
+        lines.append(("| " + " | ".join(vals) + " |") if md else ",".join(vals))
+    return "\n".join(lines)
+
+
+def worst_cells(rows: List[Dict], k: int = 5) -> List[Dict]:
+    live = [r for r in rows if "roofline" in r]
+    return sorted(live, key=lambda r: r["roofline"]["roofline_fraction"])[:k]
+
+
+def most_collective_bound(rows: List[Dict], k: int = 5) -> List[Dict]:
+    live = [r for r in rows if "roofline" in r]
+
+    def coll_share(r):
+        ro = r["roofline"]
+        tot = ro["t_compute_s"] + ro["t_memory_s"] + ro["t_collective_s"]
+        return ro["t_collective_s"] / tot if tot else 0.0
+
+    return sorted(live, key=coll_share, reverse=True)[:k]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="benchmarks/results/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args(argv)
+    rows = load_results(args.dir, args.mesh)
+    if not rows:
+        print("roofline,no-results (run: python -m repro.launch.dryrun --all)")
+        return []
+    print(fmt_table(rows, md=not args.csv))
+    print()
+    print("worst roofline fractions:")
+    for r in worst_cells(rows, 3):
+        print(f"  {r['arch']}/{r['shape']}: {r['roofline']['roofline_fraction']:.4f}")
+    print("most collective-bound:")
+    for r in most_collective_bound(rows, 3):
+        ro = r["roofline"]
+        print(f"  {r['arch']}/{r['shape']}: t_coll={ro['t_collective_s']:.3g}s")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Adaptive separation under a non-stationary mixing matrix — the paper's §I
+motivation ("track changes in underlying distributions of input features").
+
+    PYTHONPATH=src python examples/adaptive_stream.py
+
+The mixing matrix rotates slowly while the separator streams mini-batches
+through ``partial_fit``.  SMBGD's γ-momentum + β-recency weighting is exactly
+the knob the paper describes: large γ for smooth drift, small γ for abrupt
+change.  Prints the tracking error over time for SMBGD vs plain SGD.
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+import jax
+
+from repro.core import AdaptiveICA, EASIConfig, SMBGDConfig, amari_index, global_system
+from repro.data.pipeline import MixedSignals
+
+
+def run(algorithm: str, gamma: float, n_steps: int = 4000) -> list:
+    ecfg = EASIConfig(n_components=2, n_features=4, mu=3e-3)
+    ocfg = SMBGDConfig(batch_size=16, mu=3e-3, beta=0.9, gamma=gamma)
+    ica = AdaptiveICA(ecfg, ocfg, algorithm=algorithm)
+    state = ica.init(jax.random.PRNGKey(0))
+    pipe = MixedSignals(m=4, n=2, batch=16, seed=0, drift_rate=3e-6)
+    fit = jax.jit(lambda s, x: ica.partial_fit(s, x))
+    errs = []
+    for step in range(n_steps):
+        state, _ = fit(state, pipe.batch_for_step(step))
+        if step % 500 == 499:
+            pi = float(amari_index(global_system(state.B, pipe.mixing_at(step))))
+            errs.append((step, pi))
+    return errs
+
+
+def main():
+    print("streaming 4000 mini-batches with a slowly rotating mixing matrix")
+    print(f"{'step':>6} | {'SGD':>8} | {'SMBGD γ=0.5':>12}")
+    sgd = dict(run("sgd", gamma=0.0))
+    smb = dict(run("smbgd", gamma=0.5))
+    for step in sorted(sgd):
+        print(f"{step:6d} | {sgd[step]:8.4f} | {smb[step]:12.4f}")
+    final_sgd, final_smb = list(sgd.values())[-1], list(smb.values())[-1]
+    print(
+        f"\nfinal tracking Amari index: SGD {final_sgd:.4f}  vs  SMBGD {final_smb:.4f}"
+        f"  ({'SMBGD tracks better' if final_smb < final_sgd else 'comparable'})"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""End-to-end LM training driver with the SMBGD optimizer — the paper's
+"SMBGD is not limited to EASI" claim, exercised on a real model.
+
+    PYTHONPATH=src python examples/train_lm.py --preset tiny --steps 300
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300   # the full ~100M run
+    PYTHONPATH=src python examples/train_lm.py --arch smollm-135m ...      # any zoo arch
+
+Features on display: fault-tolerant Trainer (async checkpoints, auto-resume —
+re-run the same command after killing it and it continues), SMBGD vs AdamW
+(--optimizer), microbatched SMBGD accumulation (--microbatches).
+"""
+import argparse
+import dataclasses
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+import jax
+
+from repro.configs.registry import get_config
+from repro.data.pipeline import make_lm_pipeline
+from repro.optim.optimizers import adamw
+from repro.optim.smbgd import smbgd
+from repro.train.trainer import Trainer, TrainerConfig
+
+PRESETS = {
+    # ~1M params: CI-speed sanity run
+    "tiny": dict(arch="smollm-135m", d_model=128, n_layers=4, seq=128, batch=8),
+    # ~100M params: the deliverable's end-to-end run (hours on 1 CPU core;
+    # the intended host is a TPU slice via launch/train.py)
+    "100m": dict(arch="smollm-135m", d_model=None, n_layers=None, seq=512, batch=16),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=sorted(PRESETS))
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--optimizer", default="smbgd", choices=["smbgd", "adamw"])
+    ap.add_argument("--lr", type=float, default=0.02)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    p = PRESETS[args.preset]
+    cfg = get_config(args.arch or p["arch"])
+    if p["d_model"]:
+        cfg = dataclasses.replace(
+            cfg, d_model=p["d_model"], n_layers=p["n_layers"], n_heads=4,
+            n_kv_heads=1, head_dim=32, d_ff=4 * p["d_model"], vocab_size=4096,
+            dtype="float32", remat=False,
+        )
+    else:
+        cfg = dataclasses.replace(cfg, dtype="float32", remat=False)
+
+    from repro.models.model import count_params, init_params
+
+    n_params = count_params(jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg)))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M optimizer={args.optimizer}")
+
+    pipe = make_lm_pipeline(cfg, seq_len=p["seq"], global_batch=p["batch"], seed=0)
+    tx = (
+        smbgd(args.lr, gamma=0.9, beta=0.98, microbatches=args.microbatches)
+        if args.optimizer == "smbgd"
+        else adamw(args.lr / 10)
+    )
+    tcfg = TrainerConfig(
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=100,
+        log_every=20,
+        microbatches=args.microbatches,
+        smbgd_beta=0.98 if args.optimizer == "smbgd" else 1.0,
+        metrics_path=str(Path(args.ckpt_dir) / "metrics.jsonl"),
+    )
+    trainer = Trainer(cfg, tx, tcfg)
+
+    t0 = time.time()
+
+    def on_step(step, loss):
+        if step % 20 == 0:
+            print(f"step {step:5d}  loss {loss:.4f}  ({time.time()-t0:.0f}s)")
+
+    _, _, losses = trainer.fit(jax.random.PRNGKey(0), pipe, args.steps, on_step)
+    if losses:
+        print(
+            f"done: loss {losses[0]:.3f} -> {losses[-1]:.3f} over {len(losses)} steps "
+            f"({(time.time()-t0):.0f}s); checkpoints in {args.ckpt_dir}"
+        )
+    else:
+        print("nothing to do (already trained to --steps; delete ckpt dir to restart)")
+
+
+if __name__ == "__main__":
+    main()

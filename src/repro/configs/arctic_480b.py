@@ -1,0 +1,24 @@
+"""Snowflake Arctic (480B) [hf:Snowflake/snowflake-arctic-base] — dense-MoE
+hybrid: every layer has a top-2-of-128 MoE *plus* a parallel dense residual MLP.
+
+35L, d_model 7168, 56 heads (GQA kv=8), dense d_ff 4864 (residual branch),
+per-expert d_ff 4864, vocab 32000."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=4864,
+    vocab_size=32_000,
+    n_experts=128,
+    experts_per_token=2,
+    expert_d_ff=4864,
+    moe_dense_residual=True,
+    load_balance_coef=0.01,
+    rope_theta=10_000.0,
+    fsdp=True,
+)

@@ -1,0 +1,144 @@
+"""Config schema for every assigned architecture (``--arch <id>``).
+
+One ``ModelConfig`` describes any member of the zoo; family-specific fields are
+zero/empty when unused.  ``reduced()`` derives the CPU smoke-test variant of the
+same family (small widths, few layers/experts) used by tests; the full config is
+only ever lowered via ShapeDtypeStructs in the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | gemma2 | moe | xlstm | zamba2
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    tie_embeddings: bool = False
+    rope_theta: float = 10_000.0
+    rmsnorm_eps: float = 1e-6
+
+    # gemma2-style
+    sliding_window: int = 0  # window for "local" layers (0 = none)
+    alt_local_global: bool = False  # alternate local/global attention
+    attn_logit_softcap: float = 0.0
+    final_logit_softcap: float = 0.0
+    sandwich_norm: bool = False  # extra post-attn / post-mlp norms
+    query_scale: Optional[float] = None  # override 1/sqrt(head_dim)
+
+    # MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    expert_d_ff: int = 0
+    moe_dense_residual: bool = False  # arctic: parallel dense MLP branch
+    n_shared_experts: int = 0  # kimi: always-on shared expert(s)
+    first_dense_layers: int = 0  # kimi: leading dense layers
+    router_jitter: float = 0.0
+    load_balance_coef: float = 0.0
+    capacity_factor: float = 1.25  # expert-buffer slack (drops above capacity)
+
+    # SSM / xLSTM
+    ssm_state: int = 0  # Mamba2 N (state per head)
+    ssm_heads: int = 0  # Mamba2 / mLSTM heads (defaults to n_heads)
+    ssm_expand: int = 2  # input expansion factor
+    conv_width: int = 4
+    slstm_every: int = 0  # xlstm: every k-th block is sLSTM (0 = none)
+    ssm_chunk: int = 256  # SSD chunk length
+    mlstm_chunk: int = 0  # xlstm: chunkwise mLSTM (0 = quadratic parallel form)
+
+    # zamba2 hybrid
+    shared_attn_period: int = 0  # apply shared attn block after every k mamba blocks
+    lora_rank: int = 0  # per-invocation LoRA on the shared block
+
+    # modality frontends (stubs — see DESIGN.md)
+    n_codebooks: int = 0  # musicgen: EnCodec codebooks (inputs (B,T,K))
+    vision_tokens: int = 0  # internvl: prepended precomputed patch embeddings
+
+    # numerics / execution
+    dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+    use_pallas_attn: bool = False
+
+    # sharding policy (see repro/sharding/rules.py)
+    fsdp: bool = False  # shard params over the data axis too (zero-3)
+    sequence_parallel: bool = False  # shard long KV caches over 'model'
+    dp_only: bool = False  # replicate params, batch over ALL mesh axes
+    attn_softmax_dtype: str = "float32"  # "bfloat16" halves the T² score traffic
+
+    def __post_init__(self):
+        if self.n_heads % max(self.n_kv_heads, 1):
+            raise ValueError("n_heads must be divisible by n_kv_heads")
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def ssm_heads_(self) -> int:
+        return self.ssm_heads or self.n_heads
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "xlstm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for the long_500k cell (SSM/hybrid state, no dense KV)."""
+        return self.family in ("xlstm", "zamba2")
+
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant: same family/topology, tiny dims."""
+        return dataclasses.replace(
+            self,
+            n_layers=max(2, min(4, self.n_layers)),
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=1 if self.n_heads // self.n_kv_heads > 1 else 4,
+            head_dim=16,
+            d_ff=128 if self.d_ff else 0,
+            vocab_size=256,
+            n_experts=8 if self.n_experts else 0,
+            experts_per_token=min(2, self.experts_per_token) if self.n_experts else 0,
+            expert_d_ff=64 if self.expert_d_ff else 0,
+            first_dense_layers=min(1, self.first_dense_layers),
+            ssm_state=16 if self.ssm_state else 0,
+            ssm_heads=2 if self.ssm_heads else 0,
+            ssm_chunk=16,
+            sliding_window=32 if self.sliding_window else 0,
+            shared_attn_period=2 if self.shared_attn_period else 0,
+            lora_rank=min(8, self.lora_rank),
+            slstm_every=4 if self.slstm_every else 0,
+            vision_tokens=8 if self.vision_tokens else 0,
+            dtype="float32",
+            remat=False,
+            fsdp=False,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One of the assigned input-shape cells."""
+
+    name: str  # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}

@@ -1,0 +1,9 @@
+"""The paper's own workload (m=4 mixtures → n=2 components, fp32, cubic
+nonlinearity) as a selectable config for benches/examples.  Not an LM arch —
+dry-run cells use the 10 assigned LM configs."""
+from repro.core.easi import EASIConfig
+from repro.core.smbgd import SMBGDConfig
+
+EASI = EASIConfig(n_components=2, n_features=4, mu=2e-3, nonlinearity="cubic")
+SMBGD = SMBGDConfig(batch_size=8, mu=2e-3, beta=0.9, gamma=0.5)
+CONFIG = (EASI, SMBGD)

@@ -1,0 +1,27 @@
+"""Gemma2-27B [arXiv:2408.00118] — local(4k sliding)/global alternating
+attention, logit softcapping (attn 50, final 30), sandwich RMSNorms, GeGLU.
+
+46L, d_model 4608, 32 heads (GQA kv=16), head_dim 128, d_ff 36864, vocab 256000.
+Query scale: gemma2-27b uses 1/sqrt(d_model/n_heads) = 1/12 (not head_dim)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-27b",
+    family="gemma2",
+    n_layers=46,
+    d_model=4608,
+    n_heads=32,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=36864,
+    vocab_size=256_000,
+    tie_embeddings=True,
+    rope_theta=10_000.0,
+    sliding_window=4096,
+    alt_local_global=True,
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    sandwich_norm=True,
+    query_scale=(4608 / 32) ** -0.5,
+    fsdp=True,
+)

@@ -1,0 +1,23 @@
+"""InternVL2-Llama3-76B [arXiv:2404.16821; unverified] — InternViT-6B frontend
++ 76B LM backbone (Llama3-70B-arch: 80L, d_model 8192, 64H GQA kv=8,
+d_ff 28672, vocab 128256).
+
+The vision tower is a STUB per the assignment: ``input_specs()`` feeds 256
+precomputed patch embeddings per image, prepended to the text sequence; loss is
+computed on text positions only."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    family="dense",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128_256,
+    vision_tokens=256,
+    rope_theta=500_000.0,
+    fsdp=True,
+)

@@ -1,0 +1,27 @@
+"""Kimi K2 (1T total / 32B active) [arXiv:2501.kimi2; unverified, paper-table].
+
+61L, d_model 7168, 64 heads (GQA kv=8), vocab 163840; MoE: 384 experts top-8,
+per-expert d_ff 2048, 1 shared expert, first layer dense (DeepSeek-V3-style —
+dense d_ff = 8×2048 matching active expert width).  SMBGD's one-slot optimizer
+state is what lets this cell fit 512 chips (see EXPERIMENTS.md §Dry-run)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=112,
+    d_ff=2048,
+    vocab_size=163_840,
+    n_experts=384,
+    experts_per_token=8,
+    expert_d_ff=2048,
+    n_shared_experts=1,
+    first_dense_layers=1,
+    load_balance_coef=0.01,
+    rope_theta=50_000.0,
+    fsdp=True,
+)

@@ -1,0 +1,19 @@
+"""MusicGen-large [arXiv:2306.05284; hf] — decoder-only LM over EnCodec tokens.
+
+48L, d_model 2048, 32 heads (MHA kv=32), d_ff 8192, vocab 2048 per codebook,
+4 codebooks (delay pattern handled as data layout).  The EnCodec frontend is a
+STUB: inputs are the 4-codebook token grid (B, T, 4); embeddings are summed."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large",
+    family="dense",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=2048,
+    n_codebooks=4,
+    rope_theta=10_000.0,
+)

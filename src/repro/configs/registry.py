@@ -1,0 +1,35 @@
+"""Registry: ``--arch <id>`` → ModelConfig.  One module per assigned arch."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "minitron-8b",
+    "smollm-135m",
+    "mistral-nemo-12b",
+    "gemma2-27b",
+    "xlstm-1.3b",
+    "musicgen-large",
+    "zamba2-2.7b",
+    "kimi-k2-1t-a32b",
+    "arctic-480b",
+    "internvl2-76b",
+    # the paper's own workload, as a selectable "arch" for benches/examples
+    "easi-ica",
+]
+
+_MODULES: Dict[str, str] = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; available: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def all_lm_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS if a != "easi-ica"}

@@ -1,0 +1,18 @@
+"""SmolLM-135M — llama-arch small model [hf:HuggingFaceTB/SmolLM-135M].
+
+30L, d_model 576, 9 heads (GQA kv=3), d_ff 1536, vocab 49152.  Also the ~100M
+end-to-end training example (examples/train_lm.py)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-135m",
+    family="dense",
+    n_layers=30,
+    d_model=576,
+    n_heads=9,
+    n_kv_heads=3,
+    d_ff=1536,
+    vocab_size=49_152,
+    tie_embeddings=True,
+    rope_theta=10_000.0,
+)

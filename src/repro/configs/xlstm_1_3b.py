@@ -1,0 +1,21 @@
+"""xLSTM-1.3B [arXiv:2405.04517; unverified] — 48 blocks, d_model 2048,
+4 heads, xLSTM[7:1] (every 8th block sLSTM), no separate FFN (d_ff=0).
+
+Block internals follow the official v1 layers (proj factor 2, qk factor 0.5).
+Runs the long_500k cell: O(1) recurrent state per block."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="xlstm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=50_304,
+    slstm_every=8,
+    ssm_expand=2,
+    conv_width=4,
+    tie_embeddings=True,
+)

@@ -1,0 +1,28 @@
+"""Zamba2-2.7B [arXiv:2411.15242; hf] — Mamba2 backbone + shared attention
+block (tied weights, per-invocation LoRA) applied every 6 mamba blocks.
+
+54 mamba2 layers (d_state 64, headdim 64), shared attn block: 32 heads MHA,
+d_model 2560.  Runs long_500k: SSM state is O(1); the shared attention block
+uses a 4096-token sliding-window ring cache in the long-context cell (the
+sub-quadratic adaptation recorded in DESIGN.md §5)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="zamba2",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=80,
+    d_ff=10240,
+    vocab_size=32_000,
+    ssm_state=64,
+    ssm_heads=80,  # d_inner 5120 / headdim 64
+    ssm_expand=2,
+    conv_width=4,
+    ssm_chunk=256,
+    shared_attn_period=6,
+    lora_rank=128,
+    sliding_window=4096,  # ring-cache window for the shared block (long ctx)
+)

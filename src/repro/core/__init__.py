@@ -1,0 +1,42 @@
+"""Core: the paper's contribution — EASI adaptive ICA with the SMBGD update rule."""
+from repro.core.easi import (
+    EASIConfig,
+    batched_relative_gradient,
+    easi_sgd_scan,
+    easi_sgd_step,
+    init_separation_matrix,
+    relative_gradient,
+    transform,
+)
+from repro.core.ica import AdaptiveICA
+from repro.core.metrics import amari_index, global_system, iterations_to_converge
+from repro.core.smbgd import (
+    SMBGDConfig,
+    SMBGDState,
+    init_state,
+    smbgd_batched_step,
+    smbgd_epoch,
+    smbgd_epoch_sequential,
+    smbgd_sequential_step,
+)
+
+__all__ = [
+    "EASIConfig",
+    "SMBGDConfig",
+    "SMBGDState",
+    "AdaptiveICA",
+    "amari_index",
+    "batched_relative_gradient",
+    "easi_sgd_scan",
+    "easi_sgd_step",
+    "global_system",
+    "init_separation_matrix",
+    "init_state",
+    "iterations_to_converge",
+    "relative_gradient",
+    "smbgd_batched_step",
+    "smbgd_epoch",
+    "smbgd_epoch_sequential",
+    "smbgd_sequential_step",
+    "transform",
+]

@@ -1,0 +1,75 @@
+"""Separation-quality metrics and convergence detection for ICA.
+
+The paper reports "iterations required for convergence" (§V.A: SGD 4166 vs
+SMBGD 3166 → 24 % improvement).  Convergence of a blind separator is measured on
+the *global* system ``C = B A``: perfect separation means C is a scaled
+permutation.  We use the standard Amari performance index, which is 0 iff C is a
+scaled permutation and is invariant to the scale/permutation ambiguity of ICA.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def amari_index(C: jnp.ndarray, eps: float = 1e-12) -> jnp.ndarray:
+    """Amari performance index of a square global matrix ``C (n, n)``.
+
+    PI(C) = 1/(2n(n-1)) * [ Σ_i (Σ_j |c_ij| / max_j |c_ij| − 1)
+                          + Σ_j (Σ_i |c_ij| / max_i |c_ij| − 1) ]
+
+    Normalized to [0, 1]; 0 ⇔ scaled permutation (perfect separation).
+    """
+    A = jnp.abs(C) + eps
+    n = A.shape[0]
+    row = jnp.sum(A / jnp.max(A, axis=1, keepdims=True), axis=1) - 1.0
+    col = jnp.sum(A / jnp.max(A, axis=0, keepdims=True), axis=0) - 1.0
+    return (jnp.sum(row) + jnp.sum(col)) / (2.0 * n * (n - 1))
+
+
+def global_system(B: jnp.ndarray, A: jnp.ndarray) -> jnp.ndarray:
+    """C = B A (n×n): the mixing-then-separating chain EASI equivariance is about."""
+    return B @ A
+
+
+def interference_to_signal(C: jnp.ndarray, eps: float = 1e-12) -> jnp.ndarray:
+    """Total interference-to-signal ratio (ISR) in dB — the BSS community's
+    alternative to the Amari index.  Lower is better."""
+    P = C * C
+    sig = jnp.max(P, axis=1)
+    isr = (jnp.sum(P, axis=1) - sig) / (sig + eps)
+    return 10.0 * jnp.log10(jnp.mean(isr) + eps)
+
+
+def iterations_to_converge(
+    pi_trace: jnp.ndarray, threshold: float = 0.05, sustain: int = 1
+) -> jnp.ndarray:
+    """First iteration index where the Amari index drops (and stays, for
+    ``sustain`` consecutive checks) below ``threshold``.
+
+    Returns the trace length if never converged (callers treat == len as
+    "did not converge").  jit-safe (no data-dependent python control flow).
+    """
+    T = pi_trace.shape[0]
+    below = pi_trace < threshold
+    if sustain > 1:
+        # sustained convergence: all of the next `sustain` checks below threshold
+        windows = jnp.stack(
+            [jnp.roll(below, -i) for i in range(sustain)], axis=0
+        )
+        # roll wraps; mask out the wrapped tail
+        valid = jnp.arange(T) < (T - sustain + 1)
+        below = jnp.all(windows, axis=0) & valid
+    idx = jnp.argmax(below)  # first True (0 if none True)
+    return jnp.where(jnp.any(below), idx, T)
+
+
+def whiteness_error(Y: jnp.ndarray) -> jnp.ndarray:
+    """‖cov(Y) − I‖_F / n — how well the symmetric EASI term has whitened the
+    outputs.  EASI merges whitening with separation, so this must → 0 too."""
+    Yc = Y - jnp.mean(Y, axis=0, keepdims=True)
+    cov = (Yc.T @ Yc) / Y.shape[0]
+    n = cov.shape[0]
+    return jnp.linalg.norm(cov - jnp.eye(n, dtype=cov.dtype)) / n

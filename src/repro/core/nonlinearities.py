@@ -1,0 +1,64 @@
+"""Element-wise nonlinearities g(.) used by the EASI relative gradient.
+
+The paper replaces the traditional ``tanh`` with a *cubic* nonlinearity because it
+only needs multiplies/adds (cheap on FPGA DSP slices, and equally cheap on the TPU
+VPU).  The choice of g changes the stability region of the EASI stationary points
+(it must satisfy Cardoso's nonlinear-moment condition for the source distribution)
+but not the datapath structure, so it is a config knob here.
+
+All functions are pure, shape-preserving and jit/vmap-safe.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax.numpy as jnp
+
+Nonlinearity = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def cubic(y: jnp.ndarray) -> jnp.ndarray:
+    """g(y) = y^3 — the paper's hardware-efficient choice (mul/add only).
+
+    Suitable for sub-Gaussian sources (negative kurtosis), e.g. sinusoids,
+    uniform noise, communication constellations.
+    """
+    return y * y * y
+
+
+def tanh(y: jnp.ndarray) -> jnp.ndarray:
+    """g(y) = tanh(y) — the classic choice the paper compares against."""
+    return jnp.tanh(y)
+
+
+def relu_signed(y: jnp.ndarray) -> jnp.ndarray:
+    """Signed rectifier g(y) = relu(y) - relu(-y-1) style cheap odd-ish function.
+
+    The paper suggests ReLU-family functions as an even cheaper alternative.  EASI
+    needs an (approximately) odd function, so we use the odd extension
+    g(y) = sign(y) * relu(|y| - 1): zero in the unit box, linear outside.  This
+    keeps the skew-symmetric HOS term meaningful while costing only compares/adds.
+    """
+    return jnp.sign(y) * jnp.maximum(jnp.abs(y) - 1.0, 0.0)
+
+
+def scaled_tanh(y: jnp.ndarray) -> jnp.ndarray:
+    """g(y) = tanh(3y): steeper tanh, sometimes used for super-Gaussian sources."""
+    return jnp.tanh(3.0 * y)
+
+
+NONLINEARITIES: Dict[str, Nonlinearity] = {
+    "cubic": cubic,
+    "tanh": tanh,
+    "relu": relu_signed,
+    "scaled_tanh": scaled_tanh,
+}
+
+
+def get(name: str) -> Nonlinearity:
+    try:
+        return NONLINEARITIES[name]
+    except KeyError as e:  # pragma: no cover - trivial
+        raise ValueError(
+            f"unknown nonlinearity {name!r}; available: {sorted(NONLINEARITIES)}"
+        ) from e

@@ -1,0 +1,55 @@
+"""Jit'd public wrapper for the EASI-gradient kernel: padding, alignment,
+dtype policy and the interpret-mode switch (CPU container → interpret=True;
+on real TPU set REPRO_PALLAS_INTERPRET=0)."""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.easi_gradient.easi_gradient import easi_gradient_pallas
+
+_LANE = 128  # TPU lane width (last-dim alignment)
+_SUBLANE = 8  # f32 sublane
+
+
+def _interpret_default() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("nonlinearity", "block_p", "interpret"))
+def easi_gradient(
+    Y: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    nonlinearity: str = "cubic",
+    block_p: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Weighted EASI relative-gradient sum ``S (n, n)`` for ``Y (P, n)``, ``w (P,)``.
+
+    Pads n to the 128-lane boundary and P to a sublane-aligned block; zero
+    padding is exact (zero rows/cols contribute nothing; the identity term is
+    computed from the real Σw and sliced back).  All nonlinearities in the bank
+    satisfy g(0)=0, which the padding relies on (asserted in tests).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    P, n = Y.shape
+    n_pad = _round_up(max(n, _SUBLANE), _LANE if not interpret else _SUBLANE)
+    if block_p is None:
+        block_p = min(512, _round_up(P, _SUBLANE))
+    P_pad = _round_up(P, block_p)
+    Yp = jnp.zeros((P_pad, n_pad), Y.dtype).at[:P, :n].set(Y)
+    wp = jnp.zeros((P_pad, 1), jnp.float32).at[:P, 0].set(w.reshape(-1))
+    S = easi_gradient_pallas(
+        Yp, wp, nonlinearity=nonlinearity, block_p=block_p, interpret=interpret
+    )
+    # Padded diagonal entries carry sum(w)·I — slicing removes them.
+    return S[:n, :n]

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused EASI-gradient kernel.
+
+Independent re-derivation (kept deliberately naive — per-sample outer products
+via einsum) so kernel bugs cannot hide behind a shared closed form.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import nonlinearities
+
+
+def easi_gradient_ref(
+    Y: jnp.ndarray, w: jnp.ndarray, nonlinearity: str = "cubic"
+) -> jnp.ndarray:
+    """S = Σ_p w_p [ I − y_p y_pᵀ − g(y_p) y_pᵀ + y_p g(y_p)ᵀ ]   (fp32)."""
+    Y = Y.astype(jnp.float32)
+    w = w.reshape(-1).astype(jnp.float32)
+    g = nonlinearities.get(nonlinearity)
+    G = g(Y)
+    n = Y.shape[1]
+    eye = jnp.eye(n, dtype=jnp.float32) * jnp.sum(w)
+    yy = jnp.einsum("p,pi,pj->ij", w, Y, Y)
+    gy = jnp.einsum("p,pi,pj->ij", w, G, Y)
+    yg = jnp.einsum("p,pi,pj->ij", w, Y, G)
+    return eye - yy - gy + yg

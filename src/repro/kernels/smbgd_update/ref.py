@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the fused SMBGD commit."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def smbgd_update_ref(gamma_hat, H_prev, S, B):
+    """Ĥ = γ̂ Ĥ_prev + S ;  B' = B + Ĥ B.  Returns (Ĥ, B')."""
+    H_new = gamma_hat * H_prev + S
+    return H_new, B + H_new @ B

@@ -1,0 +1,62 @@
+"""Pallas kernel: fused SMBGD commit —  Ĥ ← γ̂·Ĥ + S ;  B ← B + Ĥ·B.
+
+The commit touches three B-sized tensors and two Ĥ-sized tensors; unfused it
+costs three HBM round-trips of ``B``.  Fused, ``B`` streams through VMEM once:
+each grid step loads one ``(n, block_m)`` column tile of B, applies the fresh
+``Ĥ`` held in VMEM, and writes the tile back.  ``Ĥ`` is emitted once (step 0).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _smbgd_update_kernel(gamma_ref, h_ref, s_ref, b_ref, h_out_ref, b_out_ref):
+    i = pl.program_id(0)
+    gamma = gamma_ref[0, 0]
+    h_new = gamma * h_ref[...] + s_ref[...]  # (n, n) — recomputed per tile, tiny
+
+    @pl.when(i == 0)
+    def _write_h():
+        h_out_ref[...] = h_new
+
+    b = b_ref[...]
+    b_out_ref[...] = b + jax.lax.dot(
+        h_new, b, preferred_element_type=jnp.float32
+    ).astype(b.dtype)
+
+
+def smbgd_update_pallas(
+    gamma_hat: jnp.ndarray,
+    H_prev: jnp.ndarray,
+    S: jnp.ndarray,
+    B: jnp.ndarray,
+    *,
+    block_m: int = 512,
+    interpret: bool = True,
+):
+    """Fused commit.  ``gamma_hat (1,1) f32``, ``H_prev/S (n,n)``, ``B (n,m)``
+    with m % block_m == 0 (ops.py pads).  Returns ``(H_new, B_new)``."""
+    n, m = B.shape
+    assert m % block_m == 0, (m, block_m)
+    grid = (m // block_m,)
+    return pl.pallas_call(
+        _smbgd_update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, block_m), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, block_m), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, n), H_prev.dtype),
+            jax.ShapeDtypeStruct((n, m), B.dtype),
+        ],
+        interpret=interpret,
+    )(gamma_hat, H_prev, S, B)

@@ -1,0 +1,383 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes and extract roofline terms from the compiled artifact.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out benchmarks/results/dryrun
+
+The XLA_FLAGS line above MUST run before any other import (jax locks the
+device count at first init) — 512 host devices back both the 16×16 single-pod
+mesh and the 2×16×16 multi-pod mesh.
+
+Scan-body reconstruction (see hlo_analysis.py): cost_analysis counts while
+bodies once, so each single-pod cell is compiled three times — full model,
+1 scan group, 2 scan groups — and
+    total = cost(full) + (n_groups − 1) · [cost(2g) − cost(1g)]
+"""
+from __future__ import annotations
+
+import os
+
+# MUST precede any other import — jax locks the device count at first init.
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import functools
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPES_BY_NAME, ModelConfig, ShapeConfig
+from repro.configs.registry import all_lm_configs, get_config
+from repro.launch import flops as flops_lib
+from repro.launch import hlo_analysis as hlo
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.optim.smbgd import smbgd as make_smbgd
+from repro.optim.base import apply_updates
+from repro.sharding import rules
+
+
+def _scan_period(cfg: ModelConfig) -> int:
+    if cfg.family == "gemma2" and cfg.alt_local_global:
+        return 2
+    if cfg.family == "xlstm":
+        return cfg.slstm_every or cfg.n_layers
+    if cfg.family == "zamba2":
+        return cfg.shared_attn_period
+    return 1
+
+
+def n_scan_groups(cfg: ModelConfig) -> int:
+    return (cfg.n_layers - cfg.first_dense_layers) // _scan_period(cfg)
+
+
+def cell_skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return "long_500k requires sub-quadratic attention (DESIGN.md §5)"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ModelConfig, optimizer: str = "smbgd"):
+    """Full update step: fwd + bwd + SMBGD (paper) or AdamW (baseline)."""
+    if optimizer == "smbgd":
+        tx = make_smbgd(learning_rate=1e-3, gamma=0.9, beta=0.98, microbatches=1)
+    else:
+        from repro.optim.optimizers import adamw
+
+        tx = adamw(learning_rate=1e-3)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            M.loss_fn, has_aux=True
+        )(params, batch, cfg)
+        updates, opt_state = tx.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss
+
+    return tx, train_step
+
+
+def build_prefill(cfg: ModelConfig):
+    def prefill(params, batch):
+        logits, _ = M.forward(params, batch, cfg)
+        return logits[:, -1:]  # next-token logits (don't materialize all)
+
+    return prefill
+
+
+def build_decode(cfg: ModelConfig):
+    def decode(params, state, batch):
+        return M.decode_step(params, state, batch, cfg)
+
+    return decode
+
+
+# ---------------------------------------------------------------------------
+# shape-struct factories (no allocation anywhere)
+# ---------------------------------------------------------------------------
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_opt_state(tx, params_shape):
+    return jax.eval_shape(tx.init, params_shape)
+
+
+def abstract_serve_state(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        functools.partial(M.init_serve_state, cfg, shape.global_batch, shape.seq_len)
+    )
+
+
+# ---------------------------------------------------------------------------
+# one cell
+# ---------------------------------------------------------------------------
+
+
+def lower_cell(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh,
+    optimizer: str = "smbgd",
+):
+    """Lower + compile one cell.  Returns (compiled, lowered)."""
+    specs = M.input_specs(cfg, shape)
+    batch_sh = jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(
+            mesh, rules.data_spec(s.shape, mesh, dp_only=cfg.dp_only)
+        ),
+        specs,
+    )
+
+    if shape.kind == "train":
+        tx, step = build_train_step(cfg, optimizer)
+        params_shape = abstract_params(cfg)
+        opt_shape = abstract_opt_state(tx, params_shape)
+        params_sh = rules.param_shardings(params_shape, cfg, mesh)
+        opt_sh = _opt_shardings(opt_shape, cfg, mesh)
+        with mesh:
+            jitted = jax.jit(
+                step,
+                in_shardings=(params_sh, opt_sh, batch_sh),
+                out_shardings=(params_sh, opt_sh, rules.replicated(mesh)),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_shape, opt_shape, specs)
+            compiled = lowered.compile()
+        return compiled, lowered
+
+    if shape.kind == "prefill":
+        step = build_prefill(cfg)
+        params_shape = abstract_params(cfg)
+        params_sh = rules.param_shardings(params_shape, cfg, mesh)
+        with mesh:
+            jitted = jax.jit(step, in_shardings=(params_sh, batch_sh))
+            lowered = jitted.lower(params_shape, specs)
+            compiled = lowered.compile()
+        return compiled, lowered
+
+    # decode
+    step = build_decode(cfg)
+    params_shape = abstract_params(cfg)
+    params_sh = rules.param_shardings(params_shape, cfg, mesh)
+    state_shape = abstract_serve_state(cfg, shape)
+    state_sh = rules.state_shardings(state_shape, mesh)
+    with mesh:
+        jitted = jax.jit(
+            step,
+            in_shardings=(params_sh, state_sh, batch_sh),
+            out_shardings=(
+                jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+                state_sh,
+            ),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(params_shape, state_shape, specs)
+        compiled = lowered.compile()
+    return compiled, lowered
+
+
+def _opt_shardings(opt_shape, cfg, mesh):
+    """Optimizer state slots (Ĥ / mu / nu) mirror the param tree one level
+    down, so the param path rules apply after stripping the slot prefix;
+    scalars (step counters) are replicated."""
+
+    def one(path, leaf):
+        if leaf.ndim == 0:
+            return rules.replicated(mesh)
+        ps = rules._path_str(path)
+        sub = ps.split("/", 1)[1] if "/" in ps else ps
+        stacked = any(part in rules._STACKED_PREFIXES for part in sub.split("/"))
+        ndim = leaf.ndim - (1 if stacked else 0)
+        spec = rules.param_spec(sub, ndim, cfg, tuple(mesh.axis_names))
+        if stacked:
+            spec = jax.sharding.PartitionSpec(None, *spec)
+        spec = rules._truncate_spec(spec, leaf.ndim)
+        spec = rules._validate_spec(spec, leaf.shape, mesh)
+        return jax.sharding.NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, opt_shape)
+
+
+# ---------------------------------------------------------------------------
+# analysis
+# ---------------------------------------------------------------------------
+
+
+def analyze_cell(
+    arch: str,
+    shape_name: str,
+    mesh_kind: str,
+    optimizer: str = "smbgd",
+    reconstruct: bool = True,
+    variant: Optional[str] = None,
+) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if variant == "opt":
+        from repro.launch.variants import optimized_config
+
+        opt_cfg = optimized_config(cfg, shape_name)
+        if opt_cfg is None:
+            return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                    "skipped": f"no optimized variant registered"}
+        cfg = opt_cfg
+    shape = SHAPES_BY_NAME[shape_name]
+    skip = cell_skip_reason(cfg, shape)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "skipped": skip}
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    compiled, lowered = lower_cell(cfg, shape, mesh, optimizer)
+    compile_s = time.time() - t0
+
+    cost = hlo.cost_summary(compiled)
+    mem = hlo.memory_summary(compiled)
+    coll = hlo.collective_bytes(compiled.as_text())
+    result: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "variant": variant,
+        "n_chips": n_chips,
+        "optimizer": optimizer if shape.kind == "train" else None,
+        "compile_s": round(compile_s, 1),
+        "cost_once": cost,
+        "collective_once": coll,
+        "memory": mem,
+        "n_scan_groups": n_scan_groups(cfg),
+    }
+
+    if reconstruct and n_scan_groups(cfg) > 1:
+        # Body cost via UNROLLED 1-group vs 2-group models (a scanned body is
+        # counted once by cost_analysis regardless of trip count, so the diff
+        # of two scanned models would be zero — unrolling makes it exact).
+        period = _scan_period(cfg)
+        base = cfg.first_dense_layers
+        cfg1 = dataclasses.replace(cfg, n_layers=base + period, scan_layers=False)
+        cfg2 = dataclasses.replace(cfg, n_layers=base + 2 * period, scan_layers=False)
+        c1, l1 = lower_cell(cfg1, shape, mesh, optimizer)
+        c2, l2 = lower_cell(cfg2, shape, mesh, optimizer)
+        cost1, cost2 = hlo.cost_summary(c1), hlo.cost_summary(c2)
+        coll1 = hlo.collective_bytes(c1.as_text())
+        coll2 = hlo.collective_bytes(c2.as_text())
+        ng = n_scan_groups(cfg)
+        body_flops = max(cost2["flops"] - cost1["flops"], 0.0)
+        body_bytes = max(cost2["bytes"] - cost1["bytes"], 0.0)
+        body_coll = max(coll2["total"] - coll1["total"], 0)
+        flops_total = cost["flops"] + (ng - 1) * body_flops
+        bytes_total = cost["bytes"] + (ng - 1) * body_bytes
+        coll_total = coll["total"] + (ng - 1) * body_coll
+        result["body"] = {
+            "flops": body_flops,
+            "bytes": body_bytes,
+            "coll_bytes": body_coll,
+        }
+    else:
+        flops_total = cost["flops"]
+        bytes_total = cost["bytes"]
+        coll_total = coll["total"]
+
+    dp_shards = int(np.prod([
+        s for a, s in zip(mesh.axis_names, mesh.devices.shape) if a in ("pod", "data")
+    ]))
+    flops_total += flops_lib.slstm_scan_correction(
+        cfg, shape, n_chips=n_chips, dp_shards=dp_shards
+    )
+    mf = flops_lib.model_flops(cfg, shape)
+    roof = hlo.Roofline(
+        flops=flops_total,
+        hbm_bytes=bytes_total,
+        coll_bytes=float(coll_total),
+        n_chips=n_chips,
+        model_flops=mf,
+    )
+    result["roofline"] = roof.as_dict()
+    return result
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--optimizer", default="smbgd", choices=["smbgd", "adamw"])
+    ap.add_argument("--all", action="store_true", help="sweep every cell")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--no-reconstruct", action="store_true")
+    ap.add_argument("--force", action="store_true", help="recompute existing results")
+    ap.add_argument("--variant", default=None, choices=[None, "opt"],
+                    help="'opt': apply the registered optimized config (§Perf)")
+    args = ap.parse_args(argv)
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        cells = [
+            (a, s.name)
+            for a, cfg in all_lm_configs().items()
+            for s in SHAPES_BY_NAME.values()
+        ]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells = [(args.arch, args.shape)]
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    failures = 0
+    for arch, shape in cells:
+        for mesh_kind in meshes:
+            name = f"{arch}__{shape}__{mesh_kind}"
+            if args.variant:
+                name += f"__{args.variant}"
+            path = outdir / f"{name}.json"
+            if path.exists() and not args.force:
+                print(f"[skip-cached] {name}")
+                continue
+            try:
+                # multi-pod pass proves partitioning; reconstruction only on single
+                rec = (mesh_kind == "single") and not args.no_reconstruct
+                res = analyze_cell(arch, shape, mesh_kind, args.optimizer, rec, args.variant)
+                path.write_text(json.dumps(res, indent=2, default=float))
+                roof = res.get("roofline", {})
+                skip = res.get("skipped")
+                if skip:
+                    print(f"[skipped] {name}: {skip}")
+                else:
+                    print(
+                        f"[ok] {name}: compile={res['compile_s']}s "
+                        f"bottleneck={roof.get('bottleneck')} "
+                        f"frac={roof.get('roofline_fraction', 0):.3f}"
+                    )
+            except Exception as e:
+                failures += 1
+                print(f"[FAIL] {name}: {type(e).__name__}: {e}")
+                traceback.print_exc()
+                (outdir / f"{name}.error.txt").write_text(traceback.format_exc())
+            sys.stdout.flush()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,146 @@
+"""Analytic MODEL_FLOPS (the "useful compute" yardstick for §Roofline).
+
+Conventions:
+  * train:    6·N·tokens  (fwd 2N + bwd 4N per token) + attention term
+  * prefill:  2·N·tokens + attention term
+  * decode:   2·N·batch (one token each) + cache-attention term
+  * N = active non-embedding params (MoE: routed experts count k/E-weighted;
+    embeddings excluded per the standard 6ND convention, LM head included).
+
+Attention terms (per layer, causal halves the quadratic):
+  * full-seq: 2 · 2 · B · Hq · dh · T²/2  (qk + pv)
+  * decode:   2 · 2 · B · Hq · dh · T_ctx per step
+  * sliding-window layers use min(T, window) as the effective context.
+  * mamba2/mLSTM state terms are O(T·d·N_state) and folded in analytically.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _param_counts(cfg: ModelConfig) -> Tuple[float, float]:
+    """(total_params, active_params), excluding embeddings/LM-head from both
+    (head flops are added separately since they always run)."""
+    from repro.models.model import init_params
+
+    shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    total = active = 0.0
+
+    def visit(path, leaf):
+        nonlocal total, active
+        ps = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if ps.split("/")[-1] in ("embed", "lm_head"):
+            return
+        total += leaf.size
+        if "/moe/w_" in ps or ps.endswith("moe/w_gate") or ps.endswith("moe/w_up") or ps.endswith("moe/w_down"):
+            active += leaf.size * cfg.experts_per_token / max(cfg.n_experts, 1)
+        else:
+            active += leaf.size
+
+    jax.tree_util.tree_map_with_path(visit, shapes)
+    return total, active
+
+
+def _head_params(cfg: ModelConfig) -> float:
+    k = max(cfg.n_codebooks, 1)
+    return k * cfg.d_model * cfg.vocab_size
+
+
+def _attn_layers(cfg: ModelConfig) -> int:
+    if cfg.family == "xlstm":
+        return 0
+    if cfg.family == "zamba2":
+        return cfg.n_layers // cfg.shared_attn_period
+    return cfg.n_layers
+
+
+def _attention_flops_fullseq(cfg: ModelConfig, B: int, T: int) -> float:
+    hq, dh = cfg.n_heads, cfg.head_dim_
+    n_attn = _attn_layers(cfg)
+    fl = 0.0
+    for i in range(n_attn):
+        if cfg.alt_local_global and i % 2 == 0 and cfg.sliding_window:
+            t_eff = min(T, cfg.sliding_window)
+            fl += 4 * B * hq * dh * T * t_eff  # window band
+        else:
+            fl += 4 * B * hq * dh * T * T / 2  # causal triangle
+    # mamba2 SSD / mLSTM state terms
+    if cfg.family == "zamba2":
+        d_in = cfg.ssm_expand * cfg.d_model
+        fl += cfg.n_layers * 6 * B * T * d_in * cfg.ssm_state
+    if cfg.family == "xlstm":
+        d_in = cfg.ssm_expand * cfg.d_model
+        n_m = cfg.n_layers - cfg.n_layers // max(cfg.slstm_every, cfg.n_layers)
+        if cfg.mlstm_chunk and cfg.mlstm_chunk < T:
+            # chunkwise form: intra-chunk band + inter-chunk matrix state
+            L = cfg.mlstm_chunk
+            H = cfg.n_heads
+            dqk = d_in // H // 2
+            dv = d_in // H
+            fl += n_m * (3 * B * d_in * T * L / 2 + 4 * B * T * H * dqk * dv)
+        else:
+            # quadratic parallel form (qk+pv at dqk=dv/2)
+            fl += n_m * 3 * B * d_in * T * T / 2
+    return fl
+
+
+def _attention_flops_decode(cfg: ModelConfig, B: int, T_ctx: int) -> float:
+    hq, dh = cfg.n_heads, cfg.head_dim_
+    n_attn = _attn_layers(cfg)
+    fl = 0.0
+    for i in range(n_attn):
+        if cfg.family == "zamba2" and cfg.sliding_window:
+            t_eff = min(T_ctx, cfg.sliding_window)  # ring cache
+        elif cfg.alt_local_global and i % 2 == 0 and cfg.sliding_window:
+            t_eff = min(T_ctx, cfg.sliding_window)
+        else:
+            t_eff = T_ctx
+        fl += 4 * B * hq * dh * t_eff
+    if cfg.family == "zamba2":
+        d_in = cfg.ssm_expand * cfg.d_model
+        fl += cfg.n_layers * 6 * B * d_in * cfg.ssm_state
+    if cfg.family == "xlstm":
+        d_in = cfg.ssm_expand * cfg.d_model
+        dqk = d_in // cfg.n_heads // 2 * cfg.n_heads
+        fl += cfg.n_layers * 4 * B * dqk * (d_in // cfg.n_heads)  # C update+read
+    return fl
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    total, active = _param_counts(cfg)
+    head = _head_params(cfg)
+    B, T = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens = B * T
+        return 6 * (active + head) * tokens + 3 * _attention_flops_fullseq(cfg, B, T)
+    if shape.kind == "prefill":
+        tokens = B * T
+        return 2 * (active + head) * tokens + _attention_flops_fullseq(cfg, B, T)
+    # decode: one token per sequence against a T-long cache/state
+    return 2 * (active + head) * B + _attention_flops_decode(cfg, B, T)
+
+
+def slstm_scan_correction(
+    cfg: ModelConfig, shape: ShapeConfig, n_chips: int = 1, dp_shards: int = 1
+) -> float:
+    """Extra **per-chip** HLO FLOPs hidden inside the sLSTM time-scan
+    (cost_analysis counts the cell once; trip count = T).  Recurrent path only
+    — the input path is computed outside the scan.  The cell body operates on
+    the chip-local batch slice: B_local = B / (all axes if dp_only else the
+    data axes), so the correction is divided accordingly."""
+    if cfg.family != "xlstm" or not cfg.slstm_every:
+        return 0.0
+    n_s = cfg.n_layers // cfg.slstm_every
+    shards = n_chips if cfg.dp_only else dp_shards
+    B_local = max(shape.global_batch // max(shards, 1), 1)
+    T = shape.seq_len if shape.kind != "decode" else 1
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    per_step = 2 * 4 * H * dh * dh * B_local  # 4 gate recurrent matmuls
+    mult = 3 if shape.kind == "train" else 1
+    return n_s * (T - 1) * per_step * mult

@@ -1,0 +1,43 @@
+"""Cluster serving launcher (decode cells' production path).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --local
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--local", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    import jax
+
+    from repro.configs.registry import get_config
+    from repro.models.model import init_params
+    from repro.serve.engine import Engine, ServeConfig
+
+    cfg = get_config(args.arch)
+    if args.local:
+        cfg = cfg.reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, ServeConfig(
+        max_batch=args.batch, max_len=args.prompt_len + args.new_tokens + 8,
+    ))
+    shape = (
+        (args.batch, args.prompt_len, cfg.n_codebooks)
+        if cfg.n_codebooks else (args.batch, args.prompt_len)
+    )
+    prompts = jax.random.randint(jax.random.PRNGKey(1), shape, 0, cfg.vocab_size)
+    out, _ = eng.prefill_and_generate(prompts, n_new=args.new_tokens)
+    print(f"[serve] generated {out.shape}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

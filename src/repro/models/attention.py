@@ -1,0 +1,146 @@
+"""GQA attention for the model zoo: training/prefill (flash-able) and
+single-token decode against a KV cache.
+
+Cache layout: ``k/v (B, Hkv, slots, d)`` plus an int32 ``length`` (tokens seen).
+``slots == t_max`` is a plain linear cache; ``slots < t_max`` is a ring buffer
+(used by sliding-window layers in the long-context cells — it holds exactly the
+last ``window`` tokens, so the window mask is the ring itself).  RoPE is applied
+to K *before* caching with absolute positions, so ring overwrites are exact.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.flash_attention.ops import attention as attention_op
+from repro.models import common
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # (B, Hkv, slots, d)
+    v: jnp.ndarray  # (B, Hkv, slots, d)
+    length: jnp.ndarray  # () int32 — total tokens seen (may exceed slots)
+
+
+def init_attn(key, cfg: ModelConfig, dtype) -> dict:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": common.dense_init(kq, d, hq * dh, dtype),
+        "wk": common.dense_init(kk, d, hkv * dh, dtype),
+        "wv": common.dense_init(kv, d, hkv * dh, dtype),
+        "wo": common.dense_init(
+            ko, hq * dh, d, dtype, scale=1.0 / (2 * cfg.n_layers) ** 0.5
+        ),
+    }
+
+
+def _split_heads(x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    B, T, _ = x.shape
+    return x.reshape(B, T, n_heads, -1).transpose(0, 2, 1, 3)  # (B,H,T,d)
+
+
+def _merge_heads(x: jnp.ndarray) -> jnp.ndarray:
+    B, H, T, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B, T, H * d)
+
+
+def attn_fwd(
+    params: dict,
+    x: jnp.ndarray,  # (B, T, d_model)
+    positions: jnp.ndarray,  # (T,) or (B, T) absolute positions
+    cfg: ModelConfig,
+    *,
+    window: int = 0,
+    cache: Optional[KVCache] = None,
+) -> Tuple[jnp.ndarray, Optional[KVCache]]:
+    """Returns (output (B,T,d_model), updated cache or None)."""
+    B, T, _ = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q = _split_heads(x @ params["wq"], hq)
+    k = _split_heads(x @ params["wk"], hkv)
+    v = _split_heads(x @ params["wv"], hkv)
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+    scale = cfg.query_scale if cfg.query_scale is not None else dh**-0.5
+
+    if cache is None:
+        o = attention_op(
+            q, k, v,
+            scale=scale, causal=True, window=window,
+            softcap=cfg.attn_logit_softcap,
+            use_pallas=cfg.use_pallas_attn,
+            softmax_dtype=cfg.attn_softmax_dtype,
+        )
+        return _merge_heads(o) @ params["wo"], None
+
+    slots = cache.k.shape[2]
+    ring = window > 0 and slots == window
+    if ring:
+        if T != 1:
+            raise NotImplementedError("ring-buffer cache is decode-only (T=1)")
+        idx = cache.length % slots
+        k_all = jax.lax.dynamic_update_slice(cache.k, k, (0, 0, idx, 0))
+        v_all = jax.lax.dynamic_update_slice(cache.v, v, (0, 0, idx, 0))
+        valid = jnp.minimum(cache.length + 1, slots)
+        mask = (jnp.arange(slots) < valid)[None, :]  # (1, slots)
+    else:
+        start = cache.length
+        k_all = jax.lax.dynamic_update_slice(cache.k, k, (0, 0, start, 0))
+        v_all = jax.lax.dynamic_update_slice(cache.v, v, (0, 0, start, 0))
+        cols = jnp.arange(slots)[None, :]
+        rows = (cache.length + jnp.arange(T))[:, None]  # absolute q positions
+        mask = cols <= rows
+        if window > 0:
+            mask = mask & (cols > rows - window)
+    new_cache = KVCache(k=k_all, v=v_all, length=cache.length + T)
+    o = _cache_attention(q, k_all, v_all, mask, scale, cfg.attn_logit_softcap)
+    return _merge_heads(o) @ params["wo"], new_cache
+
+
+def _cache_attention(
+    q: jnp.ndarray,  # (B, Hq, Tq, d)
+    k: jnp.ndarray,  # (B, Hkv, S, d)
+    v: jnp.ndarray,
+    mask: jnp.ndarray,  # (Tq or 1, S) bool
+    scale: float,
+    softcap: float,
+) -> jnp.ndarray:
+    """Decode/chunk attention streaming the cache once (memory-bound).
+
+    Grouped einsum keeps GQA K/V unreplicated in HBM — at 500k context the
+    cache read IS the roofline term, so no repeats and no dtype upcasts of
+    the cache: ``preferred_element_type`` gives fp32 accumulation without
+    materializing an fp32 copy of K/V (2× traffic saved on the decode cells).
+    """
+    B, Hq, Tq, d = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    qg = q.reshape(B, Hkv, group, Tq, d)
+    s = jnp.einsum(
+        "bhgqd,bhkd->bhgqk", qg, k, preferred_element_type=jnp.float32
+    ) * scale
+    s = common.softcap(s, softcap)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bhgqk,bhkd->bhgqd", p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    return o.reshape(B, Hq, Tq, d).astype(q.dtype)
+
+
+def make_cache(
+    cfg: ModelConfig, batch: int, t_max: int, dtype, window: int = 0
+) -> KVCache:
+    """Allocate an empty cache; sliding-window layers get a ring of ``window``
+    slots when that is smaller than ``t_max`` (long-context decode)."""
+    slots = min(t_max, window) if window > 0 else t_max
+    shape = (batch, cfg.n_kv_heads, slots, cfg.head_dim_)
+    return KVCache(
+        k=jnp.zeros(shape, dtype),
+        v=jnp.zeros(shape, dtype),
+        length=jnp.zeros((), jnp.int32),
+    )

@@ -1,0 +1,76 @@
+"""Transformer blocks: pre-norm GQA attention + (Ge/Swi)GLU MLP, with the
+gemma2 variants (sandwich norms, local/global alternation, logit soft-caps).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.attention import KVCache, attn_fwd, init_attn
+
+
+def init_mlp(key, cfg: ModelConfig, dtype, d_ff: Optional[int] = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": common.dense_init(k1, d, f, dtype),
+        "w_up": common.dense_init(k2, d, f, dtype),
+        "w_down": common.dense_init(
+            k3, f, d, dtype, scale=1.0 / (2 * cfg.n_layers) ** 0.5
+        ),
+    }
+
+
+def mlp_fwd(params: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    act = common.gelu if cfg.family == "gemma2" else common.silu
+    h = act(x @ params["w_gate"]) * (x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+def init_block(key, cfg: ModelConfig, dtype) -> dict:
+    ka, km = jax.random.split(key)
+    p = {
+        "attn_norm": common.init_rmsnorm(cfg.d_model, dtype),
+        "attn": init_attn(ka, cfg, dtype),
+        "mlp_norm": common.init_rmsnorm(cfg.d_model, dtype),
+        "mlp": init_mlp(km, cfg, dtype),
+    }
+    if cfg.sandwich_norm:
+        p["post_attn_norm"] = common.init_rmsnorm(cfg.d_model, dtype)
+        p["post_mlp_norm"] = common.init_rmsnorm(cfg.d_model, dtype)
+    return p
+
+
+def block_fwd(
+    params: dict,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    window: int = 0,
+    cache: Optional[KVCache] = None,
+) -> Tuple[jnp.ndarray, Optional[KVCache]]:
+    h = common.rmsnorm(params["attn_norm"], x, cfg.rmsnorm_eps)
+    a, new_cache = attn_fwd(
+        params["attn"], h, positions, cfg, window=window, cache=cache
+    )
+    if cfg.sandwich_norm:
+        a = common.rmsnorm(params["post_attn_norm"], a, cfg.rmsnorm_eps)
+    x = x + a
+    h = common.rmsnorm(params["mlp_norm"], x, cfg.rmsnorm_eps)
+    m = mlp_fwd(params["mlp"], h, cfg)
+    if cfg.sandwich_norm:
+        m = common.rmsnorm(params["post_mlp_norm"], m, cfg.rmsnorm_eps)
+    return x + m, new_cache
+
+
+def layer_window(cfg: ModelConfig, layer_idx: int) -> int:
+    """gemma2 alternation: even layers local (sliding window), odd global."""
+    if cfg.alt_local_global and cfg.sliding_window > 0:
+        return cfg.sliding_window if layer_idx % 2 == 0 else 0
+    return cfg.sliding_window if cfg.sliding_window > 0 and not cfg.alt_local_global else 0

@@ -1,0 +1,114 @@
+"""Shared model building blocks: norms, rotary embeddings, initializers.
+
+All modules are functional: ``init_*`` returns a params pytree (nested dicts of
+arrays), ``*_fwd`` consumes it.  Layer-stacked parameters carry a leading ``L``
+axis and are consumed by ``lax.scan`` (compile-time O(1) in depth).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+# -- initializers -------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: float = 1.0):
+    """Truncated-normal fan-in init (LM standard)."""
+    std = scale / (in_dim**0.5)
+    return (
+        jax.random.truncated_normal(key, -2.0, 2.0, (in_dim, out_dim), jnp.float32)
+        * std
+    ).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    # std = dim^-1/2: unit-scale logits under tied heads, and the gemma-style
+    # sqrt(d) input rescale restores O(1) embedding outputs.
+    return (
+        jax.random.truncated_normal(key, -2.0, 2.0, (vocab, dim), jnp.float32)
+        / dim**0.5
+    ).astype(dtype)
+
+
+# -- norms --------------------------------------------------------------------
+
+
+def init_rmsnorm(dim: int, dtype) -> PyTree:
+    return {"scale": jnp.zeros((dim,), dtype)}
+
+
+def rmsnorm(params: PyTree, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm with (1 + scale) parameterization (gemma/llama convention)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+# -- rotary position embeddings ----------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float
+) -> jnp.ndarray:
+    """x (B, H, T, d), positions (B, T) or (T,) — rotate pairs (even, odd)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # (d/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[:, None, :, None].astype(jnp.float32) * freqs  # (B,1,T,d/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# -- misc ---------------------------------------------------------------------
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    return cap * jnp.tanh(x / cap) if cap > 0 else x
+
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.gelu(x, approximate=True)
+
+
+def silu(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.silu(x)
+
+
+def cross_entropy_loss(
+    logits: jnp.ndarray,  # (..., V) — any leading dims
+    labels: jnp.ndarray,  # (...) int32
+    mask: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Mean token CE in fp32; `mask` zeroes padded / non-text positions."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def stacked_init(init_fn: Callable[[jax.Array], PyTree], key: jax.Array, n: int) -> PyTree:
+    """vmap an init over a leading layer axis → scan-ready stacked params."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)

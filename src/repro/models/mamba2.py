@@ -1,0 +1,184 @@
+"""Mamba2 (SSD — state-space duality) block: chunked-parallel training form and
+O(1)-state recurrent decode.  Used by zamba2 (hybrid backbone).
+
+Scalar-per-head decay: h_t = exp(A·dt_t)·h_{t-1} + dt_t·(B_t ⊗ x_t), y_t = C_tᵀh_t + D·x_t
+with x (…, H, P), B/C shared across heads (n_groups=1), state N per head.
+
+Training uses the standard chunked algorithm: intra-chunk quadratic term +
+inter-chunk state scan (T/chunk steps of lax.scan) — sub-quadratic overall and
+the reason the zamba/xlstm cells are the ones that run long_500k.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+
+
+class SSMState(NamedTuple):
+    conv: jnp.ndarray  # (B, conv_width-1, conv_dim) — conv1d tail
+    h: jnp.ndarray  # (B, H, P, N) — SSM state
+    length: jnp.ndarray  # () int32
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = cfg.ssm_heads_
+    P = d_inner // H
+    N = cfg.ssm_state
+    return d_inner, H, P, N
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    d_inner, H, P, N = _dims(cfg)
+    conv_dim = d_inner + 2 * N  # x, B, C all convolved
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        "norm": common.init_rmsnorm(d, dtype),
+        # in_proj → [z (d_inner), x (d_inner), B (N), C (N), dt (H)]
+        "in_proj": common.dense_init(k1, d, 2 * d_inner + 2 * N + H, dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.conv_width, conv_dim), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "out_norm": common.init_rmsnorm(d_inner, dtype),
+        "out_proj": common.dense_init(
+            k3, d_inner, d, dtype, scale=1.0 / (2 * cfg.n_layers) ** 0.5
+        ),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 tail: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv1d over time. x (B, T, C), w (W, C).  ``tail``
+    (B, W-1, C) prepends streaming context (decode); else zero-pad."""
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)  # (B, T+W-1, C)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(W))
+    return out + b[None, None, :]
+
+
+def _ssd_chunked(
+    xh: jnp.ndarray,  # (B, T, H, P)
+    dt: jnp.ndarray,  # (B, T, H) — softplus'd
+    A: jnp.ndarray,  # (H,) — negative decay rates
+    Bm: jnp.ndarray,  # (B, T, N)
+    Cm: jnp.ndarray,  # (B, T, N)
+    chunk: int,
+    h0: Optional[jnp.ndarray] = None,  # (B, H, P, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD. Returns (y (B,T,H,P), h_final (B,H,P,N))."""
+    Bsz, T, H, P = xh.shape
+    N = Bm.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    # reshape into chunks
+    xc = xh.reshape(Bsz, nc, chunk, H, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    Bc = Bm.reshape(Bsz, nc, chunk, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, N)
+
+    a = dtc * (-jnp.exp(A))[None, None, None, :]  # (B,nc,Q,H) log-decay ≤ 0
+    a_cum = jnp.cumsum(a, axis=2)  # within-chunk cumulative
+
+    # intra-chunk: L[i,j] = exp(a_cum_i − a_cum_j) for i ≥ j (else 0).
+    # Mask BEFORE exp: the i<j region has positive exponents that overflow,
+    # and a post-exp where() would still leak inf into the backward pass.
+    diff = a_cum[:, :, :, None, :] - a_cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    Li = jnp.exp(jnp.where(tri[None, None, :, :, None], diff, -1e30))
+    # scores[i,j] = C_i·B_j — shared across heads (n_groups=1)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+    M = scores[..., None] * Li  # (B,nc,Q,Q,H)
+    xdt = xc.astype(jnp.float32) * dtc[..., None]  # dt-weighted input
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xdt)
+
+    # chunk-final states: S_c = Σ_j exp(a_end − a_cum_j)·B_j ⊗ (dt_j x_j)
+    decay_to_end = jnp.exp(a_cum[:, :, -1:, :] - a_cum)  # (B,nc,Q,H)
+    S = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", decay_to_end, Bc.astype(jnp.float32), xdt)
+
+    # inter-chunk recurrence (lax.scan over chunks)
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])  # (B,nc,H)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def body(h, inp):
+        S_c, dec = inp  # (B,H,P,N), (B,H)
+        h_out = h  # state *entering* the chunk
+        h = h * dec[:, :, None, None] + S_c
+        return h, h_out
+
+    Ss = jnp.moveaxis(S, 1, 0)  # (nc,B,H,P,N)
+    decs = jnp.moveaxis(chunk_decay, 1, 0)  # (nc,B,H)
+    h_final, h_in = jax.lax.scan(body, h0, (Ss, decs))
+    h_in = jnp.moveaxis(h_in, 0, 1)  # (B,nc,H,P,N) state entering each chunk
+
+    # inter-chunk output: y_off_i = exp(a_cum_i)·C_i · h_in
+    inner_decay = jnp.exp(a_cum)  # (B,nc,Q,H)
+    y_off = jnp.einsum("bcin,bchpn,bcih->bcihp", Cc.astype(jnp.float32), h_in, inner_decay)
+
+    y = (y_intra + y_off).reshape(Bsz, T, H, P)
+    return y, h_final
+
+
+def mamba2_fwd(
+    params: dict,
+    x: jnp.ndarray,  # (B, T, d)
+    cfg: ModelConfig,
+    state: Optional[SSMState] = None,
+) -> Tuple[jnp.ndarray, Optional[SSMState]]:
+    """Full block: norm → in_proj → conv → SSD → gate → out_proj (+residual)."""
+    Bsz, T, d = x.shape
+    d_inner, H, P, N = _dims(cfg)
+    h = common.rmsnorm(params["norm"], x, cfg.rmsnorm_eps)
+    zxbcdt = h @ params["in_proj"]
+    z, xin, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1
+    )
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    tail = state.conv if state is not None else None
+    conv_out = common.silu(_causal_conv(conv_in, params["conv_w"], params["conv_b"], tail))
+    xin, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,T,H)
+    xh = xin.reshape(Bsz, T, H, P)
+    A = params["A_log"]
+
+    if state is None:
+        y, _ = _ssd_chunked(xh, dt, A, Bm, Cm, min(cfg.ssm_chunk, T))
+        new_state = None
+    else:
+        if T != 1:
+            raise NotImplementedError("streaming mamba2 is decode-only (T=1)")
+        decay = jnp.exp(dt[:, 0, :] * (-jnp.exp(A))[None, :])  # (B,H)
+        dBx = jnp.einsum(
+            "bh,bn,bhp->bhpn", dt[:, 0, :], Bm[:, 0].astype(jnp.float32),
+            xh[:, 0].astype(jnp.float32),
+        )
+        h_new = state.h * decay[:, :, None, None] + dBx
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), h_new)
+        y = y[:, None].reshape(Bsz, 1, H, P)
+        new_conv = jnp.concatenate([state.conv[:, 1:], conv_in], axis=1)
+        new_state = SSMState(conv=new_conv, h=h_new, length=state.length + 1)
+
+    y = y + xh.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(Bsz, T, d_inner).astype(x.dtype)
+    y = common.rmsnorm(params["out_norm"], y * common.silu(z), cfg.rmsnorm_eps)
+    return x + y @ params["out_proj"], new_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype) -> SSMState:
+    d_inner, H, P, N = _dims(cfg)
+    conv_dim = d_inner + 2 * N
+    return SSMState(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+        h=jnp.zeros((batch, H, P, N), jnp.float32),
+        length=jnp.zeros((), jnp.int32),
+    )

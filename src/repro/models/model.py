@@ -1,0 +1,538 @@
+"""Model assembly: config → init / loss / prefill / decode_step.
+
+Layer stacks are scan-compatible: per-layer params are stacked on a leading
+axis and executed with ``lax.scan`` (compile time O(1) in depth; remat policy
+applied to the scan body).  Families with repeating patterns scan over
+*groups*:
+
+  dense                  scan over L identical blocks
+  gemma2                 scan over L/2 (local, global) pairs
+  moe                    unstacked leading dense layers (kimi) + scan over rest
+  xlstm                  scan over L/period groups of (period-1 mLSTM + 1 sLSTM)
+  zamba2                 scan over L/period groups of `period` mamba2 blocks,
+                         shared attention block (tied weights + per-invocation
+                         LoRA) applied between groups
+
+Serving state (KV caches / SSM states) is stacked along the same axis and
+threaded through the scan as xs/ys.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import common
+from repro.models import blocks as blocks_lib
+from repro.models import mamba2 as mamba_lib
+from repro.models import moe as moe_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.attention import KVCache, make_cache
+
+PyTree = Any
+
+REMAT_POLICY = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    return jax.checkpoint(fn, policy=REMAT_POLICY) if cfg.remat else fn
+
+
+def _apply_stack(body, carry, xs, cfg: ModelConfig):
+    """lax.scan over the stacked layer-group axis, or an unrolled python loop
+    when cfg.scan_layers=False (used by the dry-run's body-cost reconstruction —
+    cost_analysis counts while bodies once, unrolled HLO counts every group)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    dt = _dtype(cfg)
+    k_emb, k_layers, k_head, k_extra = jax.random.split(key, 4)
+    params: Dict[str, Any] = {}
+
+    # embeddings ------------------------------------------------------------
+    if cfg.n_codebooks:  # musicgen: one table per codebook
+        keys = jax.random.split(k_emb, cfg.n_codebooks)
+        params["embed"] = jnp.stack(
+            [common.embed_init(k, cfg.vocab_size, cfg.d_model, dt) for k in keys]
+        )  # (K, V, d)
+    else:
+        params["embed"] = common.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dt)
+
+    # layer stacks ------------------------------------------------------------
+    fam = cfg.family
+    if fam in ("dense", "gemma2"):
+        period = 2 if cfg.alt_local_global else 1
+        assert cfg.n_layers % period == 0
+
+        def group_init(k):
+            ks = jax.random.split(k, period)
+            return {f"b{i}": blocks_lib.init_block(ks[i], cfg, dt) for i in range(period)}
+
+        params["layers"] = common.stacked_init(group_init, k_layers, cfg.n_layers // period)
+    elif fam == "moe":
+        nd = cfg.first_dense_layers
+        if nd:
+            kd, k_layers = jax.random.split(k_layers)
+            ks = jax.random.split(kd, nd)
+            params["dense_layers"] = [
+                moe_lib.init_moe_block(ks[i], cfg, dt, dense=True) for i in range(nd)
+            ]
+        params["layers"] = common.stacked_init(
+            lambda k: moe_lib.init_moe_block(k, cfg, dt, dense=False),
+            k_layers,
+            cfg.n_layers - nd,
+        )
+    elif fam == "xlstm":
+        period = cfg.slstm_every or cfg.n_layers
+        assert cfg.n_layers % period == 0
+
+        def group_init(k):
+            ks = jax.random.split(k, period)
+            g = {
+                f"m{i}": xlstm_lib.init_mlstm(ks[i], cfg, dt)
+                for i in range(period - 1)
+            }
+            g["s"] = xlstm_lib.init_slstm(ks[-1], cfg, dt)
+            return g
+
+        params["layers"] = common.stacked_init(group_init, k_layers, cfg.n_layers // period)
+    elif fam == "zamba2":
+        period = cfg.shared_attn_period
+        assert cfg.n_layers % period == 0
+        n_groups = cfg.n_layers // period
+
+        def group_init(k):
+            ks = jax.random.split(k, period)
+            return {f"m{i}": mamba_lib.init_mamba2(ks[i], cfg, dt) for i in range(period)}
+
+        params["layers"] = common.stacked_init(group_init, k_layers, n_groups)
+        ks1, ks2 = jax.random.split(k_extra)
+        params["shared_block"] = blocks_lib.init_block(ks1, cfg, dt)
+        if cfg.lora_rank:
+            d, r = cfg.d_model, cfg.lora_rank
+            qkv_dim = cfg.n_heads * cfg.head_dim_ + 2 * cfg.n_kv_heads * cfg.head_dim_
+
+            def lora_init(k):
+                ka, kb = jax.random.split(k)
+                return {
+                    "A": common.dense_init(ka, d, r, dt),
+                    "B": jnp.zeros((r, qkv_dim), dt),
+                }
+
+            params["shared_lora"] = common.stacked_init(lora_init, ks2, n_groups)
+    else:  # pragma: no cover
+        raise ValueError(f"unknown family {fam}")
+
+    # output ------------------------------------------------------------------
+    params["final_norm"] = common.init_rmsnorm(cfg.d_model, dt)
+    if cfg.n_codebooks:
+        keys = jax.random.split(k_head, cfg.n_codebooks)
+        params["lm_head"] = jnp.stack(
+            [common.dense_init(k, cfg.d_model, cfg.vocab_size, dt) for k in keys]
+        )  # (K, d, V)
+    elif not cfg.tie_embeddings:
+        params["lm_head"] = common.dense_init(k_head, cfg.d_model, cfg.vocab_size, dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params: PyTree, batch: Dict[str, jnp.ndarray], cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.n_codebooks:
+        toks = batch["tokens"]  # (B, T, K)
+        x = sum(
+            jnp.take(params["embed"][k], toks[..., k], axis=0)
+            for k in range(cfg.n_codebooks)
+        )
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)  # (B, T, d)
+    if cfg.family == "gemma2":
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    if cfg.vision_tokens and "vision_embeds" in batch:
+        x = jnp.concatenate([batch["vision_embeds"].astype(x.dtype), x], axis=1)
+    return x
+
+
+def lm_logits(params: PyTree, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    x = common.rmsnorm(params["final_norm"], x, cfg.rmsnorm_eps)
+    if cfg.n_codebooks:
+        logits = jnp.einsum("btd,kdv->btkv", x, params["lm_head"])
+    elif cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["lm_head"]
+    return common.softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill — full sequence, optional cache build)
+# ---------------------------------------------------------------------------
+
+
+def _zamba_shared(params, lora, x, positions, cfg):
+    """Shared attention block with per-invocation LoRA folded into wq."""
+    p = params["shared_block"]
+    if lora is not None:
+        # LoRA on the fused qkv input projection: x·(A·B) added to q projection
+        delta = (x @ lora["A"]) @ lora["B"]
+        hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+        dq, dk, _ = hq * dh, hkv * dh, hkv * dh
+        h = common.rmsnorm(p["attn_norm"], x, cfg.rmsnorm_eps)
+        # emulate fused-qkv LoRA by splitting delta
+        d_q, d_k, d_v = jnp.split(delta, [dq, dq + dk], axis=-1)
+        patched = dict(p["attn"])
+        out, _ = _attn_with_delta(patched, h, (d_q, d_k, d_v), positions, cfg)
+        x = x + out
+        hm = common.rmsnorm(p["mlp_norm"], x, cfg.rmsnorm_eps)
+        return x + blocks_lib.mlp_fwd(p["mlp"], hm, cfg)
+    out, _ = blocks_lib.block_fwd(p, x, positions, cfg)
+    return out
+
+
+def _attn_with_delta(params, h, deltas, positions, cfg):
+    from repro.models.attention import _merge_heads, _split_heads, attention_op
+
+    d_q, d_k, d_v = deltas
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q = _split_heads(h @ params["wq"] + d_q, hq)
+    k = _split_heads(h @ params["wk"] + d_k, hkv)
+    v = _split_heads(h @ params["wv"] + d_v, hkv)
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+    scale = cfg.query_scale if cfg.query_scale is not None else dh**-0.5
+    o = attention_op(
+        q, k, v, scale=scale, causal=True, window=0,
+        softcap=cfg.attn_logit_softcap, use_pallas=cfg.use_pallas_attn,
+    )
+    return _merge_heads(o) @ params["wo"], None
+
+
+def forward(
+    params: PyTree, batch: Dict[str, jnp.ndarray], cfg: ModelConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward.  Returns (logits, aux_loss)."""
+    x = embed_inputs(params, batch, cfg)
+    B, T, _ = x.shape
+    positions = jnp.arange(T)
+    aux = jnp.zeros((), jnp.float32)
+    fam = cfg.family
+
+    if fam in ("dense", "gemma2"):
+        period = 2 if cfg.alt_local_global else 1
+
+        def body(x, layer_params):
+            for i in range(period):
+                window = blocks_lib.layer_window(cfg, i)
+                x, _ = blocks_lib.block_fwd(
+                    layer_params[f"b{i}"], x, positions, cfg, window=window
+                )
+            return x, None
+
+        x, _ = _apply_stack(_maybe_remat(body, cfg), x, params["layers"], cfg)
+    elif fam == "moe":
+        for lp in params.get("dense_layers", []):
+            x, _, _ = moe_lib.moe_block_fwd(lp, x, positions, cfg)
+
+        def body(carry, layer_params):
+            x, aux = carry
+            x, _, a = moe_lib.moe_block_fwd(layer_params, x, positions, cfg)
+            return (x, aux + a), None
+
+        (x, aux), _ = _apply_stack(_maybe_remat(body, cfg), (x, aux), params["layers"], cfg)
+    elif fam == "xlstm":
+        period = cfg.slstm_every or cfg.n_layers
+
+        def body(x, gp):
+            for i in range(period - 1):
+                x, _ = xlstm_lib.mlstm_fwd(gp[f"m{i}"], x, cfg)
+            x, _ = xlstm_lib.slstm_fwd(gp["s"], x, cfg)
+            return x, None
+
+        x, _ = _apply_stack(_maybe_remat(body, cfg), x, params["layers"], cfg)
+    elif fam == "zamba2":
+        period = cfg.shared_attn_period
+        lora = params.get("shared_lora")
+
+        def body(x, xs):
+            gp, lora_g = xs
+            for i in range(period):
+                x, _ = mamba_lib.mamba2_fwd(gp[f"m{i}"], x, cfg)
+            x = _zamba_shared(params, lora_g, x, positions, cfg)
+            return x, None
+
+        xs = (params["layers"], lora)
+        x, _ = _apply_stack(_maybe_remat(body, cfg), x, xs, cfg)
+    else:  # pragma: no cover
+        raise ValueError(fam)
+
+    return lm_logits(params, x, cfg), aux
+
+
+def loss_fn(
+    params: PyTree, batch: Dict[str, jnp.ndarray], cfg: ModelConfig
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Next-token LM loss (text positions only for VLM; mean over codebooks
+    for audio).  Returns (loss, metrics)."""
+    logits, aux = forward(params, batch, cfg)
+    toks = batch["tokens"]
+    if cfg.n_codebooks:
+        lg = logits[:, :-1]  # (B, T-1, K, V)
+        lbl = toks[:, 1:]  # (B, T-1, K)
+        ce = common.cross_entropy_loss(lg, lbl)
+    elif cfg.vision_tokens:
+        lg = logits[:, cfg.vision_tokens : -1]  # text positions
+        lbl = toks[:, 1:]
+        ce = common.cross_entropy_loss(lg, lbl)
+    else:
+        ce = common.cross_entropy_loss(logits[:, :-1], toks[:, 1:])
+    total = ce + cfg.load_balance_coef * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with per-layer state
+# ---------------------------------------------------------------------------
+
+
+class ServeState(NamedTuple):
+    """Stacked per-layer serving state; exact pytree structure is family-
+    dependent (documented in serve/engine.py)."""
+
+    layers: PyTree
+    extra: PyTree  # e.g. zamba shared-block caches (n_groups-stacked)
+    length: jnp.ndarray
+
+
+def init_serve_state(cfg: ModelConfig, batch: int, t_max: int) -> ServeState:
+    dt = _dtype(cfg)
+    fam = cfg.family
+    zero = jnp.zeros((), jnp.int32)
+    if fam in ("dense", "gemma2"):
+        period = 2 if cfg.alt_local_global else 1
+        n_groups = cfg.n_layers // period
+
+        def one(i):
+            window = blocks_lib.layer_window(cfg, i)
+            return make_cache(cfg, batch, t_max, dt, window=window)
+
+        group = {f"b{i}": one(i) for i in range(period)}
+        layers = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape), group
+        )
+        return ServeState(layers=layers, extra=None, length=zero)
+    if fam == "moe":
+        nd = cfg.first_dense_layers
+        dense = [make_cache(cfg, batch, t_max, dt) for _ in range(nd)]
+        one = make_cache(cfg, batch, t_max, dt)
+        layers = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers - nd,) + x.shape), one
+        )
+        return ServeState(layers=layers, extra=dense, length=zero)
+    if fam == "xlstm":
+        period = cfg.slstm_every or cfg.n_layers
+        n_groups = cfg.n_layers // period
+        group = {
+            f"m{i}": xlstm_lib.init_mlstm_state(cfg, batch, dt)
+            for i in range(period - 1)
+        }
+        group["s"] = xlstm_lib.init_slstm_state(cfg, batch, dt)
+        layers = jax.tree.map(lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape), group)
+        return ServeState(layers=layers, extra=None, length=zero)
+    if fam == "zamba2":
+        period = cfg.shared_attn_period
+        n_groups = cfg.n_layers // period
+        group = {f"m{i}": mamba_lib.init_ssm_state(cfg, batch, dt) for i in range(period)}
+        layers = jax.tree.map(lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape), group)
+        # shared attention block: one cache per invocation; windowed (ring) for
+        # the long-context cells — the sub-quadratic adaptation (DESIGN.md §5)
+        window = cfg.sliding_window if cfg.sliding_window else 0
+        cache = make_cache(cfg, batch, t_max, dt, window=window)
+        extra = jax.tree.map(lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape), cache)
+        return ServeState(layers=layers, extra=extra, length=zero)
+    raise ValueError(fam)
+
+
+def decode_step(
+    params: PyTree,
+    state: ServeState,
+    batch: Dict[str, jnp.ndarray],  # tokens (B, 1) [+ modality extras]
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, ServeState]:
+    """One-token decode against per-layer caches/states.  Returns (logits,
+    new state)."""
+    x = embed_inputs(params, batch, cfg)  # (B, 1, d)
+    positions = state.length + jnp.arange(x.shape[1])
+    fam = cfg.family
+    extra = state.extra
+
+    if fam in ("dense", "gemma2"):
+        period = 2 if cfg.alt_local_global else 1
+
+        def body(x, xs):
+            lp, caches = xs
+            new_caches = {}
+            for i in range(period):
+                window = blocks_lib.layer_window(cfg, i)
+                x, nc = blocks_lib.block_fwd(
+                    lp[f"b{i}"], x, positions, cfg, window=window, cache=caches[f"b{i}"]
+                )
+                new_caches[f"b{i}"] = nc
+            return x, new_caches
+
+        x, new_layers = _apply_stack(body, x, (params["layers"], state.layers), cfg)
+    elif fam == "moe":
+        new_extra = []
+        for lp, c in zip(params.get("dense_layers", []), extra or []):
+            x, nc, _ = moe_lib.moe_block_fwd(lp, x, positions, cfg, cache=c)
+            new_extra.append(nc)
+        extra = new_extra
+
+        def body(x, xs):
+            lp, cache = xs
+            x, nc, _ = moe_lib.moe_block_fwd(lp, x, positions, cfg, cache=cache)
+            return x, nc
+
+        x, new_layers = _apply_stack(body, x, (params["layers"], state.layers), cfg)
+    elif fam == "xlstm":
+        period = cfg.slstm_every or cfg.n_layers
+
+        def body(x, xs):
+            gp, st = xs
+            new = {}
+            for i in range(period - 1):
+                x, ns = xlstm_lib.mlstm_fwd(gp[f"m{i}"], x, cfg, state=st[f"m{i}"])
+                new[f"m{i}"] = ns
+            x, ns = xlstm_lib.slstm_fwd(gp["s"], x, cfg, state=st["s"])
+            new["s"] = ns
+            return x, new
+
+        x, new_layers = _apply_stack(body, x, (params["layers"], state.layers), cfg)
+    elif fam == "zamba2":
+        period = cfg.shared_attn_period
+        lora = params.get("shared_lora")
+
+        def body(x, xs):
+            gp, st, cache, lora_g = xs
+            new = {}
+            for i in range(period):
+                x, ns = mamba_lib.mamba2_fwd(gp[f"m{i}"], x, cfg, state=st[f"m{i}"])
+                new[f"m{i}"] = ns
+            x, nc = _zamba_shared_decode(params, lora_g, x, positions, cfg, cache)
+            return x, (new, nc)
+
+        xs = (params["layers"], state.layers, state.extra, lora)
+        x, (new_layers, new_extra) = _apply_stack(body, x, xs, cfg)
+        extra = new_extra
+    else:  # pragma: no cover
+        raise ValueError(fam)
+
+    logits = lm_logits(params, x, cfg)
+    return logits, ServeState(layers=new_layers, extra=extra, length=state.length + x.shape[1])
+
+
+def _zamba_shared_decode(params, lora, x, positions, cfg, cache):
+    p = params["shared_block"]
+    h = common.rmsnorm(p["attn_norm"], x, cfg.rmsnorm_eps)
+    from repro.models.attention import attn_fwd
+
+    if lora is not None:
+        delta = (x @ lora["A"]) @ lora["B"]
+        hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+        dq, dk = hq * dh, hkv * dh
+        d_q, d_k, d_v = jnp.split(delta, [dq, dq + dk], axis=-1)
+        out, nc = _attn_with_delta_cache(p["attn"], h, (d_q, d_k, d_v), positions, cfg, cache)
+    else:
+        window = cfg.sliding_window or 0
+        out, nc = attn_fwd(p["attn"], h, positions, cfg, window=window, cache=cache)
+    x = x + out
+    hm = common.rmsnorm(p["mlp_norm"], x, cfg.rmsnorm_eps)
+    return x + blocks_lib.mlp_fwd(p["mlp"], hm, cfg), nc
+
+
+def _attn_with_delta_cache(params, h, deltas, positions, cfg, cache):
+    from repro.models import attention as attn_mod
+
+    d_q, d_k, d_v = deltas
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q = attn_mod._split_heads(h @ params["wq"] + d_q, hq)
+    k = attn_mod._split_heads(h @ params["wk"] + d_k, hkv)
+    v = attn_mod._split_heads(h @ params["wv"] + d_v, hkv)
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+    scale = cfg.query_scale if cfg.query_scale is not None else dh**-0.5
+    slots = cache.k.shape[2]
+    window = cfg.sliding_window or 0
+    ring = window > 0 and slots == window
+    T = q.shape[2]
+    if ring:
+        idx = cache.length % slots
+        k_all = jax.lax.dynamic_update_slice(cache.k, k, (0, 0, idx, 0))
+        v_all = jax.lax.dynamic_update_slice(cache.v, v, (0, 0, idx, 0))
+        valid = jnp.minimum(cache.length + 1, slots)
+        mask = (jnp.arange(slots) < valid)[None, :]
+    else:
+        start = cache.length
+        k_all = jax.lax.dynamic_update_slice(cache.k, k, (0, 0, start, 0))
+        v_all = jax.lax.dynamic_update_slice(cache.v, v, (0, 0, start, 0))
+        cols = jnp.arange(slots)[None, :]
+        rows = (cache.length + jnp.arange(T))[:, None]
+        mask = cols <= rows
+        if window > 0:
+            mask = mask & (cols > rows - window)
+    new_cache = attn_mod.KVCache(k=k_all, v=v_all, length=cache.length + T)
+    o = attn_mod._cache_attention(q, k_all, v_all, mask, scale, cfg.attn_logit_softcap)
+    return attn_mod._merge_heads(o) @ params["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins — never allocated)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    B = shape.global_batch
+    T = shape.seq_len if shape.kind != "decode" else 1
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.n_codebooks:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, T, cfg.n_codebooks), jnp.int32)
+    elif cfg.vision_tokens and shape.kind != "decode":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, T - cfg.vision_tokens), jnp.int32)
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_tokens, cfg.d_model), _dtype(cfg)
+        )
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, T), jnp.int32)
+    return specs
+
+
+def count_params(params: PyTree) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

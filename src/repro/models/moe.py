@@ -1,0 +1,154 @@
+"""Mixture-of-Experts FFN with GShard-style capacity dispatch.
+
+Covers both assigned MoE archs:
+  * kimi-k2-1t-a32b — 384 experts, top-8, + always-on shared expert, first
+    layer(s) dense;
+  * arctic-480b — 128 experts, top-2, + *parallel dense residual* MLP branch.
+
+Dispatch is the canonical TPU formulation: tokens are grouped, each group
+builds a one-hot ``(S, E, C)`` dispatch tensor (C = per-group expert capacity)
+and dispatch/combine are einsums — under pjit with tokens sharded over "data"
+and experts over "model" this lowers to the expected all-to-all pair.  Dropped
+tokens (over capacity) fall through the residual connection, standard for
+capacity-factor routing.  The dispatch-einsum FLOPs are bookkept separately in
+the roofline notes (they are mask matmuls, not model math).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+
+GROUP_SIZE = 512  # tokens per dispatch group (keeps the one-hot tensor small)
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.expert_d_ff
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    std = 1.0 / d**0.5
+    p = {
+        "router": common.dense_init(kr, d, E, jnp.float32),  # router in fp32
+        "w_gate": (jax.random.normal(kg, (E, d, f), jnp.float32) * std).astype(dtype),
+        "w_up": (jax.random.normal(ku, (E, d, f), jnp.float32) * std).astype(dtype),
+        "w_down": (
+            jax.random.normal(kd, (E, f, d), jnp.float32)
+            * std
+            / (2 * cfg.n_layers) ** 0.5
+        ).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        from repro.models.blocks import init_mlp
+
+        p["shared"] = init_mlp(
+            ks, cfg, dtype, d_ff=cfg.expert_d_ff * cfg.n_shared_experts
+        )
+    return p
+
+
+def _capacity(group_size: int, k: int, n_experts: int, factor: float) -> int:
+    c = int(group_size * k * factor / n_experts)
+    return max(8, (c + 7) // 8 * 8)  # sublane-align
+
+
+def moe_fwd(
+    params: dict, x: jnp.ndarray, cfg: ModelConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B, T, d) → (out (B, T, d), aux load-balance loss scalar)."""
+    B, T, d = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    S = min(GROUP_SIZE, B * T)
+    tokens = x.reshape(-1, d)
+    N = tokens.shape[0]
+    assert N % S == 0, (N, S)
+    G = N // S
+    xg = tokens.reshape(G, S, d)
+
+    logits = (xg.astype(jnp.float32) @ params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, S, E)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (G, S, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renormalize over top-k
+
+    C = _capacity(S, k, E, cfg.capacity_factor)
+    # position of each (token, choice) in its expert's buffer
+    onehot = jax.nn.one_hot(top_e, E, dtype=jnp.float32)  # (G, S, k, E)
+    # priority: iterate choices in order, tokens in order (GShard policy)
+    flat = onehot.reshape(G, S * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat  # (G, S*k, E) slot index per assignment
+    pos = jnp.sum(pos * flat, axis=-1).reshape(G, S, k)  # (G, S, k)
+    keep = (pos < C) & (top_p > 0)
+    gate = top_p * keep  # (G, S, k)
+
+    # dispatch tensor (G, S, E, C) — one-hot in expert and slot
+    slot_oh = jax.nn.one_hot(jnp.where(keep, pos, C), C + 1, dtype=xg.dtype)[..., :C]
+    disp = jnp.einsum("gske,gskc->gsec", onehot.astype(xg.dtype), slot_oh)
+    comb = jnp.einsum("gsk,gske,gskc->gsec", gate.astype(xg.dtype),
+                      onehot.astype(xg.dtype), slot_oh)
+
+    xe = jnp.einsum("gsd,gsec->gecd", xg, disp)  # (G, E, C, d)  [all-to-all]
+    h = common.silu(jnp.einsum("gecd,edf->gecf", xe, params["w_gate"])) * jnp.einsum(
+        "gecd,edf->gecf", xe, params["w_up"]
+    )
+    ye = jnp.einsum("gecf,efd->gecd", h, params["w_down"])  # (G, E, C, d)
+    y = jnp.einsum("gecd,gsec->gsd", ye, comb)  # [all-to-all back]
+
+    out = y.reshape(B, T, d)
+    if cfg.n_shared_experts:
+        from repro.models.blocks import mlp_fwd
+
+        out = out + mlp_fwd(params["shared"], x, cfg)
+
+    # Switch-style load-balance aux: E * Σ_e f_e · p̄_e
+    me = jnp.mean(jnp.sum(onehot, axis=2), axis=1)  # (G, E) fraction routed
+    pe = jnp.mean(probs, axis=1)  # (G, E) mean prob
+    aux = E * jnp.mean(jnp.sum(me * pe, axis=-1))
+    return out, aux
+
+
+def init_moe_block(key, cfg: ModelConfig, dtype, dense: bool = False) -> dict:
+    """Full layer: attention + (dense | MoE [+ dense residual]) FFN."""
+    from repro.models.attention import init_attn
+    from repro.models.blocks import init_mlp
+
+    ka, kf, kr = jax.random.split(key, 3)
+    p = {
+        "attn_norm": common.init_rmsnorm(cfg.d_model, dtype),
+        "attn": init_attn(ka, cfg, dtype),
+        "mlp_norm": common.init_rmsnorm(cfg.d_model, dtype),
+    }
+    if dense:
+        p["mlp"] = init_mlp(kf, cfg, dtype, d_ff=cfg.expert_d_ff * cfg.experts_per_token)
+    else:
+        p["moe"] = init_moe(kf, cfg, dtype)
+        if cfg.moe_dense_residual:
+            p["residual_mlp"] = init_mlp(kr, cfg, dtype, d_ff=cfg.d_ff)
+    return p
+
+
+def moe_block_fwd(
+    params: dict,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    cache=None,
+):
+    """Returns (x, cache, aux)."""
+    from repro.models.attention import attn_fwd
+    from repro.models.blocks import mlp_fwd
+
+    h = common.rmsnorm(params["attn_norm"], x, cfg.rmsnorm_eps)
+    a, new_cache = attn_fwd(params["attn"], h, positions, cfg, cache=cache)
+    x = x + a
+    h = common.rmsnorm(params["mlp_norm"], x, cfg.rmsnorm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if "mlp" in params:  # dense leading layer (kimi)
+        m = mlp_fwd(params["mlp"], h, cfg)
+    else:
+        m, aux = moe_fwd(params["moe"], h, cfg)
+        if cfg.moe_dense_residual:
+            m = m + mlp_fwd(params["residual_mlp"], h, cfg)  # arctic parallel branch
+    return x + m, new_cache, aux

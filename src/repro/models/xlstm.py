@@ -1,0 +1,369 @@
+"""xLSTM blocks (Beck et al. 2024): mLSTM (matrix memory, parallel train form +
+O(1) recurrent decode) and sLSTM (scalar memory, true hidden-to-hidden
+recurrence → lax.scan over time).
+
+Block structure follows the official v1 layers: up-projection (factor
+``ssm_expand``), causal conv feeding q/k, exponential gating with
+log-stabilizer, per-head norm, z-gated down-projection.  sLSTM blocks carry the
+official 4/3-GLU FFN (the assigned config's d_ff=0 means "no separate FFN
+sublayer"; the projections here are part of the block).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.mamba2 import _causal_conv
+
+
+class MLSTMState(NamedTuple):
+    conv: jnp.ndarray  # (B, W-1, d_in)
+    C: jnp.ndarray  # (B, H, dqk, dv) matrix memory
+    n: jnp.ndarray  # (B, H, dqk) normalizer
+    m: jnp.ndarray  # (B, H) log stabilizer
+
+
+class SLSTMState(NamedTuple):
+    conv: jnp.ndarray  # (B, W-1, d)
+    c: jnp.ndarray  # (B, H, dh)
+    n: jnp.ndarray  # (B, H, dh)
+    h: jnp.ndarray  # (B, H, dh)
+    m: jnp.ndarray  # (B, H, dh)
+
+
+def _mlstm_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = cfg.n_heads
+    dv = d_in // H
+    dqk = dv // 2  # qk_dim_factor = 0.5 (official)
+    return d_in, H, dqk, dv
+
+
+def init_mlstm(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    d_in, H, dqk, dv = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": common.init_rmsnorm(d, dtype),
+        "up": common.dense_init(ks[0], d, 2 * d_in, dtype),  # [x_in, z]
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, d_in), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "wq": common.dense_init(ks[2], d_in, H * dqk, dtype),
+        "wk": common.dense_init(ks[3], d_in, H * dqk, dtype),
+        "wv": common.dense_init(ks[4], d_in, H * dv, dtype),
+        "w_if": common.dense_init(ks[5], d_in, 2 * H, dtype),  # input/forget gates
+        "if_bias": jnp.concatenate(
+            [jnp.zeros((H,), jnp.float32), 3.0 + jnp.arange(H, dtype=jnp.float32)]
+        ),  # positive forget-gate bias init (official)
+        "head_norm": common.init_rmsnorm(d_in, dtype),
+        "down": common.dense_init(
+            ks[6], d_in, d, dtype, scale=1.0 / (2 * cfg.n_layers) ** 0.5
+        ),
+    }
+
+
+def _mlstm_parallel(q, k, v, log_i, log_f, compute_dtype=jnp.float32):
+    """Stabilized parallel mLSTM.  q/k (B,H,T,dqk), v (B,H,T,dv),
+    gates (B,H,T).  Returns h (B,H,T,dv).
+
+    ``compute_dtype=bfloat16`` runs the three (B,H,T,T) tensors (decay matrix
+    W, score matrix S, their product A) in bf16 — the gate cumsums and the
+    row stabilizer stay fp32, and the normalizer is accumulated in fp32 by
+    folding a ones-column into the A·V contraction (no fp32 T² tensors).
+    """
+    T = q.shape[2]
+    dqk = q.shape[-1]
+    cd = jnp.dtype(compute_dtype)
+    F = jnp.cumsum(log_f, axis=-1)  # (B,H,T) fp32
+    D = F[..., :, None] - F[..., None, :] + log_i[..., None, :]  # (B,H,T,T)
+    tri = jnp.tril(jnp.ones((T, T), bool))
+    D = jnp.where(tri[None, None], D, -jnp.inf)
+    m = jnp.max(D, axis=-1)  # (B,H,T) fp32
+    m = jnp.maximum(m, -1e30)  # guard all -inf rows
+    W = jnp.exp((D - m[..., None]).astype(cd) if cd != jnp.float32 else D - m[..., None])
+    if cd != jnp.float32:
+        W = jnp.where(tri[None, None], W, jnp.zeros((), cd))  # exp(bf16(-inf))=0 safe anyway
+    S = jnp.einsum("bhtd,bhsd->bhts", q, k, preferred_element_type=cd) / jnp.asarray(
+        dqk**0.5, cd
+    )
+    A = W.astype(cd) * S
+    v_ext = jnp.concatenate(
+        [v.astype(cd), jnp.ones(v.shape[:-1] + (1,), cd)], axis=-1
+    )
+    o_ext = jnp.einsum(
+        "bhts,bhsv->bhtv", A, v_ext, preferred_element_type=jnp.float32
+    )
+    num, l = o_ext[..., :-1], o_ext[..., -1]
+    den = jnp.maximum(jnp.abs(l), jnp.exp(-m))  # (B,H,T) fp32
+    return num / den[..., None]
+
+
+def _mlstm_chunkwise(q, k, v, log_i, log_f, chunk: int, unroll: bool = False):
+    """Chunkwise-parallel mLSTM (the official xLSTM kernel formulation):
+    O(T·L) intra-chunk quadratic + O(T/L) inter-chunk state recurrence instead
+    of the O(T²) dense form.  Exact (stabilizers cancel in exact arithmetic);
+    equality with `_mlstm_parallel` asserted in tests.
+
+    q/k (B,H,T,dqk) pre-scaled by caller? NO — raw; 1/sqrt(dqk) applied here.
+    gates (B,H,T) fp32 log-space.  Returns h (B,H,T,dv).
+    ``unroll`` mirrors cfg.scan_layers=False for honest dry-run cost counting.
+    """
+    B, H, T, dqk = q.shape
+    dv = v.shape[-1]
+    L = min(chunk, T)
+    assert T % L == 0, (T, L)
+    nc = T // L
+    inv = 1.0 / (dqk**0.5)
+
+    def c(x):  # (B,H,T,…) → (B,H,nc,L,…)
+        return x.reshape(*x.shape[:2], nc, L, *x.shape[3:])
+
+    qc, kc, vc = c(q), c(k), c(v)
+    li, lf = c(log_i), c(log_f)  # (B,H,nc,L)
+    b = jnp.cumsum(lf, axis=-1)  # within-chunk cumulative log-forget
+    F = b[..., -1]  # (B,H,nc) total chunk log-decay
+
+    # intra-chunk decay matrix (same structure as the dense form, L×L)
+    D = b[..., :, None] - b[..., None, :] + li[..., None, :]  # (B,H,nc,L,L)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    D = jnp.where(tri, D, -jnp.inf)
+    m_intra = jnp.maximum(jnp.max(D, axis=-1), -1e30)  # (B,H,nc,L)
+    S = jnp.einsum("bhcld,bhcmd->bhclm", qc, kc, preferred_element_type=jnp.float32) * inv
+
+    # chunk-boundary state ingredients: decay-to-end weights per source pos
+    w_end = F[..., None] - b + li  # (B,H,nc,L): log-weight of k_j v_jᵀ into C_c
+    m_loc = jnp.max(w_end, axis=-1)  # (B,H,nc)
+
+    carry0 = (
+        jnp.zeros((B, H, dqk, dv), jnp.float32),
+        jnp.zeros((B, H, dqk), jnp.float32),
+        jnp.full((B, H), -1e30, jnp.float32),
+    )
+
+    def chunk_step(carry, idx):
+        C_prev, n_prev, m_prev = carry
+        Dc = D[:, :, idx]  # (B,H,L,L)
+        Sc = S[:, :, idx]
+        bc = b[:, :, idx]  # (B,H,L)
+        m_i = m_intra[:, :, idx]
+        # combined stabilizer per target position
+        m_inter = bc + m_prev[..., None]  # (B,H,L)
+        m_comb = jnp.maximum(m_i, m_inter)
+        W = jnp.exp(Dc - m_comb[..., None])  # (B,H,L,L)
+        A = W * Sc
+        num = jnp.einsum("bhlm,bhmv->bhlv", A, vc[:, :, idx].astype(jnp.float32))
+        den = jnp.sum(A, axis=-1)  # (B,H,L)
+        inter_scale = jnp.exp(m_inter - m_comb)  # (B,H,L)
+        qf = qc[:, :, idx].astype(jnp.float32) * inv
+        num = num + inter_scale[..., None] * jnp.einsum("bhld,bhdv->bhlv", qf, C_prev)
+        den = den + inter_scale * jnp.einsum("bhld,bhd->bhl", qf, n_prev)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_comb))[..., None]
+
+        # state update with its own running max
+        m_new = jnp.maximum(F[:, :, idx] + m_prev, m_loc[:, :, idx])
+        w = jnp.exp(w_end[:, :, idx] - m_new[..., None])  # (B,H,L)
+        kf = kc[:, :, idx].astype(jnp.float32)
+        # two explicit steps — a 3-operand einsum may pick an outer-product
+        # contraction order materializing a (B,H,L,dqk,dv) 5-D intermediate
+        wk = w[..., None] * kf  # (B,H,L,dqk)
+        C_new = jnp.exp(F[:, :, idx] + m_prev - m_new)[..., None, None] * C_prev + jnp.einsum(
+            "bhld,bhlv->bhdv", wk, vc[:, :, idx].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        n_new = jnp.exp(F[:, :, idx] + m_prev - m_new)[..., None] * n_prev + jnp.sum(
+            wk, axis=2
+        )
+        return (C_new, n_new, m_new), h
+
+    if unroll:
+        carry, hs = carry0, []
+        for i in range(nc):
+            carry, h = chunk_step(carry, i)
+            hs.append(h)
+        h_all = jnp.stack(hs, axis=2)  # (B,H,nc,L,dv)
+    else:
+        carry, h_all = jax.lax.scan(
+            lambda cr, i: chunk_step(cr, i), carry0, jnp.arange(nc)
+        )
+        h_all = jnp.moveaxis(h_all, 0, 2)  # (nc,B,H,L,dv) → (B,H,nc,L,dv)
+
+    return h_all.reshape(B, H, T, dv)
+
+
+def mlstm_fwd(
+    params: dict,
+    x: jnp.ndarray,  # (B, T, d)
+    cfg: ModelConfig,
+    state: Optional[MLSTMState] = None,
+) -> Tuple[jnp.ndarray, Optional[MLSTMState]]:
+    Bsz, T, d = x.shape
+    d_in, H, dqk, dv = _mlstm_dims(cfg)
+    hN = common.rmsnorm(params["norm"], x, cfg.rmsnorm_eps)
+    up = hN @ params["up"]
+    x_in, z = jnp.split(up, 2, axis=-1)
+    tail = state.conv if state is not None else None
+    x_conv = common.silu(_causal_conv(x_in, params["conv_w"], params["conv_b"], tail))
+    q = (x_conv @ params["wq"]).reshape(Bsz, T, H, dqk).transpose(0, 2, 1, 3)
+    k = (x_conv @ params["wk"]).reshape(Bsz, T, H, dqk).transpose(0, 2, 1, 3)
+    v = (x_in @ params["wv"]).reshape(Bsz, T, H, dv).transpose(0, 2, 1, 3)
+    gates = (x_conv @ params["w_if"]).astype(jnp.float32) + params["if_bias"]
+    log_i, log_f = jnp.split(gates, 2, axis=-1)  # (B,T,H)
+    log_i = log_i.transpose(0, 2, 1)  # treated as log ĩ (pre-stabilizer)
+    log_f = jax.nn.log_sigmoid(log_f.transpose(0, 2, 1))
+
+    if state is None:
+        if cfg.mlstm_chunk:
+            h = _mlstm_chunkwise(
+                q, k, v, log_i, log_f, cfg.mlstm_chunk,
+                unroll=not cfg.scan_layers,
+            )
+        else:
+            h = _mlstm_parallel(
+                q, k, v, log_i, log_f,
+                compute_dtype=jnp.dtype(cfg.attn_softmax_dtype),
+            )  # (B,H,T,dv)
+        new_state = None
+    else:
+        if T != 1:
+            raise NotImplementedError("recurrent mLSTM is decode-only (T=1)")
+        li, lf = log_i[:, :, 0], log_f[:, :, 0]  # (B,H)
+        m_new = jnp.maximum(lf + state.m, li)
+        i_s = jnp.exp(li - m_new)[..., None]
+        f_s = jnp.exp(lf + state.m - m_new)[..., None]
+        k0 = k[:, :, 0].astype(jnp.float32) / (dqk**0.5)
+        C = f_s[..., None] * state.C + i_s[..., None] * (
+            k0[..., :, None] * v[:, :, 0].astype(jnp.float32)[..., None, :]
+        )
+        n = f_s * state.n + i_s * k0
+        q0 = q[:, :, 0].astype(jnp.float32)
+        num = jnp.einsum("bhd,bhdv->bhv", q0, C)
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhd,bhd->bh", q0, n)), jnp.exp(-m_new)
+        )
+        h = (num / den[..., None])[:, :, None, :]  # (B,H,1,dv)
+        new_state = MLSTMState(
+            conv=jnp.concatenate([state.conv[:, 1:], x_in], axis=1),
+            C=C, n=n, m=m_new,
+        )
+
+    h = h.transpose(0, 2, 1, 3).reshape(Bsz, T, d_in).astype(x.dtype)
+    h = common.rmsnorm(params["head_norm"], h, cfg.rmsnorm_eps)
+    out = (h * common.silu(z)) @ params["down"]
+    return x + out, new_state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, dtype) -> MLSTMState:
+    d_in, H, dqk, dv = _mlstm_dims(cfg)
+    return MLSTMState(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, d_in), dtype),
+        C=jnp.zeros((batch, H, dqk, dv), jnp.float32),
+        n=jnp.zeros((batch, H, dqk), jnp.float32),
+        m=jnp.full((batch, H), -1e30, jnp.float32),
+    )
+
+
+# -- sLSTM --------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 8)
+    f_ff = int(d * 4 / 3) // 8 * 8
+    return {
+        "norm": common.init_rmsnorm(d, dtype),
+        "conv_w": (jax.random.normal(ks[0], (cfg.conv_width, d), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d,), dtype),
+        "w_gates": common.dense_init(ks[1], d, 4 * d, dtype),  # z,i,f,o from conv(x)
+        "r_gates": (jax.random.normal(ks[2], (4, H, dh, dh), jnp.float32) / dh**0.5).astype(dtype),
+        "gate_bias": jnp.concatenate(
+            [
+                jnp.zeros((2 * d,), jnp.float32),  # z, i
+                jnp.full((d,), 3.0, jnp.float32),  # f (positive bias)
+                jnp.zeros((d,), jnp.float32),  # o
+            ]
+        ),
+        "head_norm": common.init_rmsnorm(d, dtype),
+        "ffn_norm": common.init_rmsnorm(d, dtype),
+        "ffn_gate": common.dense_init(ks[3], d, f_ff, dtype),
+        "ffn_up": common.dense_init(ks[4], d, f_ff, dtype),
+        "ffn_down": common.dense_init(
+            ks[5], f_ff, d, dtype, scale=1.0 / (2 * cfg.n_layers) ** 0.5
+        ),
+    }
+
+
+def _slstm_cell(carry, wx, r_gates):
+    """One sLSTM time step.  wx (B, 4, H, dh) pre-activations from input path."""
+    c, n, h, m = carry  # each (B,H,dh)
+    rec = jnp.einsum("bhd,ghde->bghe", h, r_gates.astype(jnp.float32))  # (B,4,H,dh)
+    z_pre, i_pre, f_pre, o_pre = [wx[:, g] + rec[:, g] for g in range(4)]
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_s = jnp.exp(i_pre - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c = f_s * c + i_s * z
+    n = f_s * n + i_s
+    h_new = o * c / jnp.maximum(n, 1.0)
+    return (c, n, h_new, m_new), h_new
+
+
+def slstm_fwd(
+    params: dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    state: Optional[SLSTMState] = None,
+) -> Tuple[jnp.ndarray, Optional[SLSTMState]]:
+    Bsz, T, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    x_norm = common.rmsnorm(params["norm"], x, cfg.rmsnorm_eps)
+    tail = state.conv if state is not None else None
+    x_conv = common.silu(_causal_conv(x_norm, params["conv_w"], params["conv_b"], tail))
+    wx = (x_conv @ params["w_gates"]).astype(jnp.float32) + params["gate_bias"]
+    wx = wx.reshape(Bsz, T, 4, H, dh)
+
+    if state is None:
+        c0 = jnp.zeros((Bsz, H, dh), jnp.float32)
+        m0 = jnp.full((Bsz, H, dh), -1e30, jnp.float32)
+        carry0 = (c0, c0, c0, m0)
+    else:
+        carry0 = (state.c, state.n, state.h, state.m)
+
+    def body(carry, wx_t):
+        return _slstm_cell(carry, wx_t, params["r_gates"])
+
+    carry, hs = jax.lax.scan(body, carry0, jnp.moveaxis(wx, 1, 0))
+    h_seq = jnp.moveaxis(hs, 0, 1).reshape(Bsz, T, d).astype(x.dtype)
+    h_seq = common.rmsnorm(params["head_norm"], h_seq, cfg.rmsnorm_eps)
+    x = x + h_seq
+    # block-internal 4/3 GLU FFN (official sLSTM block)
+    fN = common.rmsnorm(params["ffn_norm"], x, cfg.rmsnorm_eps)
+    ff = common.gelu(fN @ params["ffn_gate"]) * (fN @ params["ffn_up"])
+    x = x + ff @ params["ffn_down"]
+
+    new_state = None
+    if state is not None:
+        new_state = SLSTMState(
+            conv=jnp.concatenate([state.conv[:, 1:], x_norm[:, -1:]], axis=1),
+            c=carry[0], n=carry[1], h=carry[2], m=carry[3],
+        )
+    return x, new_state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int, dtype) -> SLSTMState:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return SLSTMState(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, d), dtype),
+        c=z, n=z, h=z, m=jnp.full((batch, H, dh), -1e30, jnp.float32),
+    )

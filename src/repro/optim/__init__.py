@@ -1,0 +1,45 @@
+"""Optimizer library: SMBGD (the paper's rule, generalized) + standard baselines."""
+from repro.optim.base import (
+    GradientTransformation,
+    apply_updates,
+    chain,
+    clip_by_global_norm,
+    constant,
+    global_norm,
+    scale,
+    scale_by_schedule,
+    tree_zeros_like,
+    warmup_cosine,
+)
+from repro.optim.optimizers import OPTIMIZERS, adafactor_lite, adamw, momentum, sgd
+from repro.optim.smbgd import SMBGDOptState, smbgd, smbgd_weights
+
+__all__ = [
+    "GradientTransformation",
+    "OPTIMIZERS",
+    "SMBGDOptState",
+    "adafactor_lite",
+    "adamw",
+    "apply_updates",
+    "chain",
+    "clip_by_global_norm",
+    "constant",
+    "global_norm",
+    "momentum",
+    "scale",
+    "scale_by_schedule",
+    "sgd",
+    "smbgd",
+    "smbgd_weights",
+    "tree_zeros_like",
+    "warmup_cosine",
+]
+
+
+def make_optimizer(name: str, learning_rate: float, **kw) -> GradientTransformation:
+    """Registry entry point used by configs (``optimizer: smbgd|sgd|adamw|...``)."""
+    if name == "smbgd":
+        return smbgd(learning_rate, **kw)
+    if name in OPTIMIZERS:
+        return OPTIMIZERS[name](learning_rate, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,110 @@
+"""Minimal pure-JAX optimizer core (optax-compatible signatures, no optax dep).
+
+A ``GradientTransformation`` is an ``(init, update)`` pair:
+    state = tx.init(params)
+    updates, state = tx.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+Updates follow the optax sign convention: they are *added* to params, so a
+descent method emits negative multiples of the gradient.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class GradientTransformation(NamedTuple):
+    init: Callable[[PyTree], Any]
+    update: Callable[[PyTree, Any, Optional[PyTree]], Tuple[PyTree, Any]]
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def tree_zeros_like(params: PyTree, dtype=None) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=dtype or p.dtype), params)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def chain(*txs: GradientTransformation) -> GradientTransformation:
+    """Compose transformations left-to-right (like optax.chain)."""
+
+    def init(params):
+        return tuple(tx.init(params) for tx in txs)
+
+    def update(grads, state, params=None):
+        new_state = []
+        for tx, st in zip(txs, state):
+            grads, st = tx.update(grads, st, params)
+            new_state.append(st)
+        return grads, tuple(new_state)
+
+    return GradientTransformation(init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        norm = global_norm(grads)
+        scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+        return jax.tree.map(lambda g: g * scale, grads), state
+
+    return GradientTransformation(init, update)
+
+
+def scale(factor: float) -> GradientTransformation:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        return jax.tree.map(lambda g: g * factor, grads), state
+
+    return GradientTransformation(init, update)
+
+
+class ScheduleState(NamedTuple):
+    count: jnp.ndarray
+
+
+def scale_by_schedule(schedule: Callable[[jnp.ndarray], jnp.ndarray]) -> GradientTransformation:
+    def init(params):
+        return ScheduleState(count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        s = schedule(state.count)
+        return (
+            jax.tree.map(lambda g: g * s, grads),
+            ScheduleState(count=state.count + 1),
+        )
+
+    return GradientTransformation(init, update)
+
+
+# -- schedules ---------------------------------------------------------------
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int, floor: float = 0.0):
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (peak_lr - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+
+    return schedule
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)

@@ -1,0 +1,154 @@
+"""Baseline optimizers (pure JAX): SGD, momentum-SGD, AdamW, Adafactor-lite.
+
+The paper benchmarks SMBGD against plain SGD; AdamW is included because it is
+the de-facto LM-training baseline and its 2-slot state is the memory foil to
+SMBGD's 1-slot state in the 1T-param dry-run cell.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import GradientTransformation, tree_zeros_like
+
+
+def sgd(learning_rate: float) -> GradientTransformation:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        return jax.tree.map(lambda g: -learning_rate * g, grads), state
+
+    return GradientTransformation(init, update)
+
+
+class MomentumState(NamedTuple):
+    velocity: jnp.ndarray
+
+
+def momentum(learning_rate: float, decay: float = 0.9, nesterov: bool = False) -> GradientTransformation:
+    def init(params):
+        return MomentumState(velocity=tree_zeros_like(params))
+
+    def update(grads, state, params=None):
+        v = jax.tree.map(lambda v, g: decay * v + g, state.velocity, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda v, g: -learning_rate * (decay * v + g), v, grads)
+        else:
+            upd = jax.tree.map(lambda v: -learning_rate * v, v)
+        return upd, MomentumState(velocity=v)
+
+    return GradientTransformation(init, update)
+
+
+class AdamWState(NamedTuple):
+    mu: jnp.ndarray
+    nu: jnp.ndarray
+    count: jnp.ndarray
+
+
+def adamw(
+    learning_rate: float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    state_dtype=jnp.float32,
+) -> GradientTransformation:
+    def init(params):
+        return AdamWState(
+            mu=tree_zeros_like(params, dtype=state_dtype),
+            nu=tree_zeros_like(params, dtype=state_dtype),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        t = count.astype(jnp.float32)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype), state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(v.dtype)), state.nu, grads
+        )
+        mu_hat_scale = 1.0 / (1.0 - b1**t)
+        nu_hat_scale = 1.0 / (1.0 - b2**t)
+
+        def upd(m, v, p):
+            step = m * mu_hat_scale / (jnp.sqrt(v * nu_hat_scale) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(step.dtype)
+            return (-learning_rate * step).astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamWState(mu=mu, nu=nu, count=count)
+
+    return GradientTransformation(init, update)
+
+
+class AdafactorState(NamedTuple):
+    row: jnp.ndarray  # pytree of row second-moment factors (or full moments for <2D)
+    col: jnp.ndarray
+    count: jnp.ndarray
+
+
+def adafactor_lite(
+    learning_rate: float, decay: float = 0.8, eps: float = 1e-30, clip: float = 1.0
+) -> GradientTransformation:
+    """Factored second moments for matrix params — sub-linear optimizer memory,
+    the standard trick for very large models (complements SMBGD's 1-slot state)."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        row = jax.tree.map(
+            lambda p: jnp.zeros(p.shape[:-1], jnp.float32)
+            if _factored(p)
+            else jnp.zeros(p.shape, jnp.float32),
+            params,
+        )
+        col = jax.tree.map(
+            lambda p: jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            if _factored(p)
+            else jnp.zeros((), jnp.float32),
+            params,
+        )
+        return AdafactorState(row=row, col=col, count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        beta = 1.0 - (count.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def upd(g, r, c, p):
+            g32 = g.astype(jnp.float32)
+            sq = jnp.square(g32) + eps
+            if _factored(p):
+                r_new = beta * r + (1 - beta) * jnp.mean(sq, axis=-1)
+                c_new = beta * c + (1 - beta) * jnp.mean(sq, axis=-2)
+                r_fac = r_new / jnp.mean(r_new, axis=-1, keepdims=True)
+                denom = jnp.sqrt(r_fac[..., None] * c_new[..., None, :])
+            else:
+                r_new = beta * r + (1 - beta) * sq
+                c_new = c
+                denom = jnp.sqrt(r_new)
+            step = g32 / jnp.maximum(denom, eps)
+            norm = jnp.sqrt(jnp.mean(jnp.square(step)))
+            step = step / jnp.maximum(1.0, norm / clip)
+            return (-learning_rate * step).astype(p.dtype), r_new, c_new
+
+        out = jax.tree.map(upd, grads, state.row, state.col, params)
+        updates = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        row = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        col = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, AdafactorState(row=row, col=col, count=count)
+
+    return GradientTransformation(init, update)
+
+
+OPTIMIZERS = {
+    "sgd": sgd,
+    "momentum": momentum,
+    "adamw": adamw,
+    "adafactor": adafactor_lite,
+}

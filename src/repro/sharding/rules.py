@@ -1,0 +1,169 @@
+"""Logical-axis → mesh-axis sharding rules.
+
+Parameter rules are path-based (Megatron-style TP over "model", optional
+ZeRO-3/FSDP over "data"); serving-state rules are shape-based best-effort
+(batch → "data", largest model-divisible dim → "model", which gives sequence-
+parallel KV caches when head counts don't divide the TP degree).
+
+All rules emit ``PartitionSpec``s; ``make_shardings`` binds them to a mesh as
+``NamedSharding``s for pjit ``in_shardings``/``out_shardings``.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+PyTree = Any
+
+# stacked collections: leading axis is the scan (layer-group) axis → never sharded
+_STACKED_PREFIXES = ("layers", "shared_lora")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_spec(path: str, ndim: int, cfg: ModelConfig, mesh_axes: Tuple[str, ...]) -> P:
+    """PartitionSpec for one parameter.  ``ndim`` EXCLUDES the stack axis
+    (caller re-prepends None for stacked params)."""
+    if cfg.dp_only:
+        # small-model policy: replicate params, parallelize over batch only —
+        # avoids degenerate TP (e.g. 9 heads over a 16-way model axis)
+        return P(*([None] * ndim))
+    fsdp = ("data",) if (cfg.fsdp and "data" in mesh_axes) else None
+    leaf = path.rsplit("/", 1)[-1]
+
+    # embeddings / heads --------------------------------------------------
+    if leaf == "embed":
+        return P(None, "model", None) if ndim == 3 else P("model", None)
+    if leaf == "lm_head":
+        return P(None, None, "model") if ndim == 3 else P(None, "model")
+
+    # attention ------------------------------------------------------------
+    if leaf in ("wq", "wk", "wv", "w_gate", "w_up", "up", "in_proj", "w_gates", "w_if", "ffn_gate", "ffn_up"):
+        if ndim == 3:  # MoE experts (E, d, f): EP over model, fsdp over d
+            return P("model", fsdp, None)
+        return P(fsdp, "model")
+    if leaf in ("wo", "w_down", "down", "out_proj", "ffn_down"):
+        if ndim == 3:  # (E, f, d)
+            return P("model", None, fsdp)
+        return P("model", fsdp)
+
+    # LoRA ------------------------------------------------------------------
+    if leaf == "A":
+        return P(fsdp, None)
+    if leaf == "B":
+        return P(None, "model")
+
+    # small / replicated ----------------------------------------------------
+    # router, norms, conv kernels, gate biases, A_log, dt_bias, D, r_gates
+    return P(*([None] * ndim))
+
+
+def param_shardings(params_shape: PyTree, cfg: ModelConfig, mesh: Mesh) -> PyTree:
+    """NamedSharding pytree matching ``params_shape`` (arrays or
+    ShapeDtypeStructs)."""
+    axes = tuple(mesh.axis_names)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        stacked = any(part in _STACKED_PREFIXES for part in ps.split("/"))
+        ndim = leaf.ndim - (1 if stacked else 0)
+        spec = param_spec(ps, ndim, cfg, axes)
+        if stacked:
+            spec = P(None, *spec)
+        spec = _truncate_spec(spec, leaf.ndim)
+        spec = _validate_spec(spec, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def _truncate_spec(spec: P, ndim: int) -> P:
+    parts = list(spec) + [None] * ndim
+    return P(*parts[:ndim])
+
+
+def _validate_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop axis assignments that don't divide the dim (replicate instead)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if ax is None:
+            out.append(None)
+            continue
+        axs = ax if isinstance(ax, tuple) else (ax,)
+        total = int(np.prod([sizes[a] for a in axs]))
+        out.append(ax if dim % total == 0 else None)
+    return P(*out)
+
+
+def data_spec(shape: Tuple[int, ...], mesh: Mesh, dp_only: bool = False) -> P:
+    """Input batches: batch dim over all data axes ("pod","data") — or over
+    EVERY axis under the dp_only policy; falls back to replication if not
+    divisible (e.g. batch=1)."""
+    dp_axes = (
+        tuple(mesh.axis_names)
+        if dp_only
+        else tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    )
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = int(np.prod([sizes[a] for a in dp_axes])) if dp_axes else 1
+    first = dp_axes if (shape and shape[0] % max(total, 1) == 0 and dp_axes) else None
+    return P(first, *([None] * (len(shape) - 1)))
+
+
+def state_spec(shape: Tuple[int, ...], mesh: Mesh, stacked: bool = True) -> P:
+    """Best-effort sharding for serving state (KV caches / SSM states).
+
+    Layout assumption: [L-stack,] batch, then feature/time dims.  Batch →
+    data axes when divisible; the largest remaining dim divisible by the
+    "model" axis → "model" (for 32k+ caches this is the sequence dim ⇒ SP).
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = sizes.get("model", 1)
+    dp_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp = int(np.prod([sizes[a] for a in dp_axes])) if dp_axes else 1
+
+    spec: list = [None] * len(shape)
+    start = 1 if stacked and len(shape) > 1 else 0
+    # batch dim
+    if len(shape) > start and shape[start] % dp == 0 and dp > 1:
+        spec[start] = dp_axes
+    # model dim: largest remaining divisible dim
+    cand = [
+        (shape[i], i)
+        for i in range(start + 1, len(shape))
+        if shape[i] % model == 0 and model > 1
+    ]
+    if cand:
+        _, i = max(cand)
+        spec[i] = "model"
+    return P(*spec)
+
+
+def state_shardings(state_shape: PyTree, mesh: Mesh) -> PyTree:
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, state_spec(leaf.shape, mesh, stacked=True))
+
+    return jax.tree.map(one, state_shape)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,140 @@
+"""EASI algorithm: relative-gradient structure, equivariance (the paper's
+namesake property), whitening, and baseline SGD convergence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import easi as easi_lib
+from repro.core import metrics
+from repro.core.easi import EASIConfig
+from repro.data import signals
+
+
+def _cfg(n=2, m=4, mu=2e-3, nl="cubic", **kw):
+    return EASIConfig(n_components=n, n_features=m, mu=mu, nonlinearity=nl, **kw)
+
+
+class TestRelativeGradient:
+    def test_symmetric_plus_skew_structure(self):
+        """H = (I − yyᵀ) + (ygᵀ − gyᵀ): sym part is I−yyᵀ, skew part is HOS."""
+        y = jnp.array([0.5, -1.2, 0.3])
+        g = easi_lib.relative_gradient(y, lambda v: v**3)
+        sym = 0.5 * (g + g.T)
+        skew = 0.5 * (g - g.T)
+        np.testing.assert_allclose(
+            np.asarray(sym), np.asarray(jnp.eye(3) - jnp.outer(y, y)), atol=1e-6
+        )
+        gy = y**3
+        np.testing.assert_allclose(
+            np.asarray(skew), np.asarray(jnp.outer(y, gy) - jnp.outer(gy, y)), atol=1e-6
+        )
+
+    def test_zero_at_whitened_independent_fixed_point(self):
+        """E[H] ≈ 0 for unit-variance independent symmetric sources — the
+        stationary point of the separator."""
+        key = jax.random.PRNGKey(0)
+        Y = jax.random.uniform(key, (200_000, 2), minval=-1.7320508, maxval=1.7320508)
+        w = jnp.ones((Y.shape[0],)) / Y.shape[0]
+        S = easi_lib.batched_relative_gradient(Y, w, lambda v: v**3)
+        assert float(jnp.max(jnp.abs(S))) < 2e-2
+
+    @given(
+        n=st.integers(2, 6),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_batched_equals_sum_of_persample(self, n, seed):
+        key = jax.random.PRNGKey(seed)
+        P = 17
+        Y = jax.random.normal(key, (P, n))
+        w = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (P,)))
+        batched = easi_lib.batched_relative_gradient(Y, w, jnp.tanh)
+        manual = sum(
+            w[p] * easi_lib.relative_gradient(Y[p], jnp.tanh) for p in range(P)
+        )
+        np.testing.assert_allclose(np.asarray(batched), np.asarray(manual), rtol=2e-4, atol=2e-4)
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_weight_linearity(self, seed):
+        """S(w1 + w2) = S(w1) + S(w2) — the property that makes DP-EASI exact."""
+        key = jax.random.PRNGKey(seed)
+        Y = jax.random.normal(key, (32, 3))
+        w1 = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (32,)))
+        w2 = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (32,)))
+        g = lambda v: v**3
+        s12 = easi_lib.batched_relative_gradient(Y, w1 + w2, g)
+        s1 = easi_lib.batched_relative_gradient(Y, w1, g)
+        s2 = easi_lib.batched_relative_gradient(Y, w2, g)
+        np.testing.assert_allclose(np.asarray(s12), np.asarray(s1 + s2), rtol=1e-4, atol=1e-4)
+
+
+class TestEquivariance:
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=8, deadline=None)
+    def test_global_system_independent_of_mixing(self, seed):
+        """Equivariance: with square invertible A, the trajectory of C = B·A
+        depends only on C0 and the sources — never on A itself."""
+        n = 2
+        key = jax.random.PRNGKey(seed)
+        kS, kA1, kA2, kC = jax.random.split(key, 4)
+        S = signals.source_bank(kS, n, 500)
+        C0 = jnp.eye(n) + 0.3 * jax.random.normal(kC, (n, n))
+        cfg = _cfg(n=n, m=n, mu=1e-3)
+
+        traces = []
+        for kA in (kA1, kA2):
+            A = jax.random.normal(kA, (n, n)) + 2.0 * jnp.eye(n)  # well-conditioned
+            B0 = C0 @ jnp.linalg.inv(A)
+            X = S @ A.T
+            B_fin, _ = easi_lib.easi_sgd_scan(B0, X, cfg)
+            traces.append(B_fin @ A)
+        np.testing.assert_allclose(
+            np.asarray(traces[0]), np.asarray(traces[1]), rtol=5e-3, atol=5e-3
+        )
+
+
+class TestConvergence:
+    def test_sgd_separates_paper_problem(self):
+        """m=4 → n=2 (the paper's Table I problem): Amari index drops below
+        threshold from a random init."""
+        key = jax.random.PRNGKey(3)
+        A, S, X = signals.make_problem(key, m=4, n=2, T=40_000)
+        cfg = _cfg()
+        B0 = easi_lib.init_separation_matrix(cfg, jax.random.PRNGKey(7))
+        pi0 = metrics.amari_index(metrics.global_system(B0, A))
+        B, _ = easi_lib.easi_sgd_scan(B0, X, cfg)
+        pi = metrics.amari_index(metrics.global_system(B, A))
+        assert float(pi) < 0.12, f"did not separate: {float(pi0):.3f} -> {float(pi):.3f}"
+        assert float(pi) < float(pi0) / 3
+
+    def test_whitening_emerges(self):
+        key = jax.random.PRNGKey(4)
+        A, S, X = signals.make_problem(key, m=4, n=2, T=40_000)
+        cfg = _cfg()
+        B0 = easi_lib.init_separation_matrix(cfg, jax.random.PRNGKey(8))
+        B, Y = easi_lib.easi_sgd_scan(B0, X, cfg)
+        err = metrics.whiteness_error(Y[-10_000:])
+        assert float(err) < 0.15
+
+    def test_normalized_variant_stable_at_large_mu(self):
+        key = jax.random.PRNGKey(5)
+        A, S, X = signals.make_problem(key, m=4, n=2, T=20_000)
+        cfg = _cfg(mu=2e-2, normalized=True)
+        B0 = easi_lib.init_separation_matrix(cfg, jax.random.PRNGKey(9))
+        B, _ = easi_lib.easi_sgd_scan(B0, X, cfg)
+        assert bool(jnp.all(jnp.isfinite(B)))
+
+
+class TestConfigValidation:
+    def test_too_many_components_rejected(self):
+        with pytest.raises(ValueError):
+            EASIConfig(n_components=5, n_features=4)
+
+    def test_transform_shape(self):
+        cfg = _cfg()
+        B = jnp.ones((2, 4))
+        X = jnp.ones((7, 4))
+        assert easi_lib.transform(B, X).shape == (7, 2)

@@ -1,0 +1,113 @@
+"""Per-kernel validation: shape/dtype sweeps against the pure-jnp oracles
+(interpret mode — CPU container; TPU is the compile target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.easi_gradient.ops import easi_gradient
+from repro.kernels.easi_gradient.ref import easi_gradient_ref
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.smbgd_update.ops import smbgd_update
+from repro.kernels.smbgd_update.ref import smbgd_update_ref
+
+
+class TestEASIGradientKernel:
+    @pytest.mark.parametrize("P,n", [(8, 2), (64, 2), (1000, 4), (513, 17), (4096, 64), (256, 128)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_oracle(self, P, n, dtype):
+        key = jax.random.PRNGKey(P * 1000 + n)
+        Y = jax.random.normal(key, (P, n), dtype)
+        w = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (P,)))
+        S_k = easi_gradient(Y, w)
+        S_r = easi_gradient_ref(Y, w)
+        tol = 5e-3 if dtype == jnp.bfloat16 else 2e-3
+        scale = max(1.0, float(jnp.max(jnp.abs(S_r))))
+        assert float(jnp.max(jnp.abs(S_k - S_r))) < tol * scale
+
+    @pytest.mark.parametrize("nl", ["cubic", "tanh", "relu", "scaled_tanh"])
+    def test_all_nonlinearities(self, nl):
+        key = jax.random.PRNGKey(0)
+        Y = jax.random.normal(key, (128, 8))
+        w = jnp.ones((128,)) * 1e-3
+        np.testing.assert_allclose(
+            np.asarray(easi_gradient(Y, w, nonlinearity=nl)),
+            np.asarray(easi_gradient_ref(Y, w, nonlinearity=nl)),
+            rtol=1e-4, atol=1e-5,
+        )
+
+    @given(P=st.integers(1, 300), n=st.integers(2, 32))
+    @settings(max_examples=15, deadline=None)
+    def test_property_random_shapes(self, P, n):
+        """Padding must be exact for arbitrary (P, n)."""
+        key = jax.random.PRNGKey(P * 37 + n)
+        Y = jax.random.normal(key, (P, n))
+        w = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (P,))) * 0.01
+        S_k = easi_gradient(Y, w)
+        S_r = easi_gradient_ref(Y, w)
+        scale = max(1.0, float(jnp.max(jnp.abs(S_r))))
+        assert float(jnp.max(jnp.abs(S_k - S_r))) < 1e-3 * scale
+
+
+class TestSMBGDUpdateKernel:
+    @pytest.mark.parametrize("n,m", [(2, 4), (2, 2), (16, 33), (64, 600), (7, 1025)])
+    def test_matches_oracle(self, n, m):
+        key = jax.random.PRNGKey(n * 100 + m)
+        H = jax.random.normal(key, (n, n)) * 0.1
+        S = jax.random.normal(jax.random.fold_in(key, 1), (n, n)) * 0.1
+        B = jax.random.normal(jax.random.fold_in(key, 2), (n, m))
+        for gamma in (0.0, 0.45, 0.99):
+            Hk, Bk = smbgd_update(gamma, H, S, B)
+            Hr, Br = smbgd_update_ref(gamma, H, S, B)
+            np.testing.assert_allclose(np.asarray(Hk), np.asarray(Hr), rtol=1e-5, atol=1e-6)
+            np.testing.assert_allclose(np.asarray(Bk), np.asarray(Br), rtol=1e-5, atol=1e-5)
+
+
+class TestFlashAttentionKernel:
+    @pytest.mark.parametrize("Hq,Hkv", [(4, 4), (4, 2), (8, 1)])
+    @pytest.mark.parametrize(
+        "opts",
+        [
+            dict(causal=True),
+            dict(causal=False),
+            dict(causal=True, window=64),
+            dict(causal=True, softcap=30.0),
+            dict(causal=True, window=32, softcap=50.0),
+        ],
+    )
+    def test_matches_oracle(self, Hq, Hkv, opts):
+        B, T, d = 2, 256, 64
+        key = jax.random.PRNGKey(0)
+        q = jax.random.normal(key, (B, Hq, T, d))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, Hkv, T, d))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, Hkv, T, d))
+        o_k = flash_attention_pallas(q, k, v, scale=d**-0.5, block_q=64, block_k=64, **opts)
+        o_r = attention_ref(q, k, v, scale=d**-0.5, **opts)
+        np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), rtol=2e-4, atol=2e-5)
+
+    def test_bf16_inputs_fp32_softmax(self):
+        B, H, T, d = 1, 2, 128, 64
+        key = jax.random.PRNGKey(1)
+        q = jax.random.normal(key, (B, H, T, d), jnp.bfloat16)
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, H, T, d), jnp.bfloat16)
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, H, T, d), jnp.bfloat16)
+        o_k = flash_attention_pallas(q, k, v, scale=d**-0.5, block_q=64, block_k=64)
+        o_r = attention_ref(q, k, v, scale=d**-0.5)
+        assert o_k.dtype == jnp.bfloat16
+        np.testing.assert_allclose(
+            np.asarray(o_k, dtype=np.float32), np.asarray(o_r, dtype=np.float32),
+            rtol=5e-2, atol=5e-2,
+        )
+
+    def test_block_shape_invariance(self):
+        """Different BlockSpec tilings must give identical results."""
+        B, H, T, d = 1, 2, 256, 64
+        key = jax.random.PRNGKey(2)
+        q = jax.random.normal(key, (B, H, T, d))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, H, T, d))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, H, T, d))
+        o1 = flash_attention_pallas(q, k, v, scale=0.125, block_q=64, block_k=64)
+        o2 = flash_attention_pallas(q, k, v, scale=0.125, block_q=128, block_k=32)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-5, atol=1e-6)

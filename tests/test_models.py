@@ -1,0 +1,197 @@
+"""Per-architecture smoke tests (REDUCED configs — the assignment's (f)):
+one forward/train step on CPU, assert output shapes + no NaNs; plus the
+parallel-vs-recurrent serving consistency that pins down KV-cache/SSM-state
+correctness for every family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES_BY_NAME
+from repro.configs.registry import ARCH_IDS, all_lm_configs, get_config
+from repro.models import model as M
+
+LM_ARCHS = [a for a in ARCH_IDS if a != "easi-ica"]
+
+
+def _batch(cfg, key, B=2, T=32):
+    if cfg.n_codebooks:
+        return {"tokens": jax.random.randint(key, (B, T, cfg.n_codebooks), 0, cfg.vocab_size)}
+    if cfg.vision_tokens:
+        return {
+            "tokens": jax.random.randint(key, (B, T - cfg.vision_tokens), 0, cfg.vocab_size),
+            "vision_embeds": jax.random.normal(key, (B, cfg.vision_tokens, cfg.d_model)),
+        }
+    return {"tokens": jax.random.randint(key, (B, T), 0, cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+class TestArchSmoke:
+    def test_forward_shapes_and_finite(self, arch):
+        cfg = get_config(arch).reduced()
+        key = jax.random.PRNGKey(0)
+        params = M.init_params(key, cfg)
+        batch = _batch(cfg, key)
+        logits, aux = M.forward(params, batch, cfg)
+        B, T = 2, 32
+        if cfg.n_codebooks:
+            assert logits.shape == (B, T, cfg.n_codebooks, cfg.vocab_size)
+        else:
+            assert logits.shape == (B, T, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_train_step_finite_and_learns_direction(self, arch):
+        """One SGD step must reduce loss on the same batch (sane gradients)."""
+        cfg = get_config(arch).reduced()
+        key = jax.random.PRNGKey(1)
+        params = M.init_params(key, cfg)
+        batch = _batch(cfg, key)
+
+        def loss(p):
+            return M.loss_fn(p, batch, cfg)[0]
+
+        l0, g = jax.value_and_grad(loss)(params)
+        assert bool(jnp.isfinite(l0))
+        gnorm = sum(float(jnp.sum(jnp.abs(x))) for x in jax.tree.leaves(g))
+        assert np.isfinite(gnorm) and gnorm > 0
+        p1 = jax.tree.map(lambda p, gi: p - 0.3 * gi, params, g)
+        l1 = loss(p1)
+        assert float(l1) < float(l0), f"{arch}: {float(l0)} -> {float(l1)}"
+
+    def test_input_specs_cover_all_shapes(self, arch):
+        cfg = get_config(arch)
+        for s in SHAPES_BY_NAME.values():
+            specs = M.input_specs(cfg, s)
+            assert "tokens" in specs
+            B = s.global_batch
+            assert specs["tokens"].shape[0] == B
+
+
+@pytest.mark.parametrize(
+    "arch", ["minitron-8b", "gemma2-27b", "xlstm-1.3b", "zamba2-2.7b", "musicgen-large"]
+)
+def test_parallel_vs_recurrent_consistency(arch):
+    """Token-by-token decode must reproduce the parallel forward exactly —
+    validates KV caches, ring buffers, SSM/mLSTM/sLSTM streaming states."""
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    B, T = 2, 16
+    batch = _batch(cfg, key, B=B, T=T)
+    toks = batch["tokens"]
+    logits_par, _ = M.forward(params, batch, cfg)
+    st = M.init_serve_state(cfg, B, T)
+    outs = []
+    for t in range(T):
+        lg, st = M.decode_step(params, st, {"tokens": toks[:, t : t + 1]}, cfg)
+        outs.append(lg[:, 0])
+    logits_seq = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(logits_par), np.asarray(logits_seq), rtol=1e-3, atol=2e-4
+    )
+
+
+def test_moe_parallel_vs_recurrent_no_drops():
+    """MoE equality holds exactly when expert capacity is not exceeded."""
+    cfg = dataclasses.replace(get_config("arctic-480b").reduced(), capacity_factor=8.0)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    B, T = 2, 16
+    toks = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
+    logits_par, _ = M.forward(params, {"tokens": toks}, cfg)
+    st = M.init_serve_state(cfg, B, T)
+    outs = []
+    for t in range(T):
+        lg, st = M.decode_step(params, st, {"tokens": toks[:, t : t + 1]}, cfg)
+        outs.append(lg[:, 0])
+    np.testing.assert_allclose(
+        np.asarray(logits_par), np.asarray(jnp.stack(outs, axis=1)), rtol=1e-3, atol=2e-4
+    )
+
+
+def test_moe_load_balance_aux_positive():
+    cfg = get_config("kimi-k2-1t-a32b").reduced()
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    batch = {"tokens": jax.random.randint(key, (2, 32), 0, cfg.vocab_size)}
+    _, aux = M.forward(params, batch, cfg)
+    assert float(aux) > 0.5  # ≈1 at uniform routing, per Switch normalization
+
+
+def test_scan_vs_unrolled_forward_equal():
+    """cfg.scan_layers=False (dry-run body reconstruction path) must be
+    numerically identical to the scanned stack."""
+    cfg = get_config("minitron-8b").reduced()
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    batch = _batch(cfg, key)
+    l1, _ = M.forward(params, batch, cfg)
+    l2, _ = M.forward(params, batch, dataclasses.replace(cfg, scan_layers=False))
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-4, atol=1e-5)
+
+
+def test_gemma2_softcap_bounds_logits():
+    cfg = get_config("gemma2-27b").reduced()
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    batch = _batch(cfg, key)
+    logits, _ = M.forward(params, batch, cfg)
+    assert float(jnp.max(jnp.abs(logits))) <= cfg.final_logit_softcap + 1e-3
+
+
+def test_sliding_window_restricts_context():
+    """A token beyond the window must not influence a gemma2 local layer."""
+    cfg = dataclasses.replace(
+        get_config("gemma2-27b").reduced(), n_layers=2, sliding_window=8
+    )
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    T = 32
+    toks = jax.random.randint(key, (1, T), 0, cfg.vocab_size)
+    # Perturb token 0; positions ≥ window in a 2-layer net (1 local + 1 global)
+    # still see it through the global layer — so compare against a model with
+    # BOTH layers local instead.
+    cfg_local = dataclasses.replace(cfg, alt_local_global=False, sliding_window=8)
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 1) % cfg.vocab_size)
+    l1, _ = M.forward(params, {"tokens": toks}, cfg_local)
+    l2, _ = M.forward(params, {"tokens": toks2}, cfg_local)
+    # windows are [t-8, t]: positions > 2*8 cannot be reached in 2 hops
+    tail = slice(2 * 8 + 1, None)
+    np.testing.assert_allclose(
+        np.asarray(l1[0, tail]), np.asarray(l2[0, tail]), atol=1e-5
+    )
+    assert float(jnp.max(jnp.abs(l1[0, 0] - l2[0, 0]))) > 1e-4  # sanity: head moved
+
+
+def test_mlstm_chunkwise_equals_parallel():
+    """Chunkwise mLSTM (the §Perf variant / official xLSTM formulation) must
+    equal the quadratic parallel form for any chunk size."""
+    from repro.models.xlstm import _mlstm_chunkwise, _mlstm_parallel
+
+    key = jax.random.PRNGKey(0)
+    B, H, T, dqk, dv = 2, 3, 64, 8, 16
+    q = jax.random.normal(key, (B, H, T, dqk))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, H, T, dqk))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, H, T, dv))
+    log_i = jax.random.normal(jax.random.fold_in(key, 3), (B, H, T))
+    log_f = jax.nn.log_sigmoid(
+        jax.random.normal(jax.random.fold_in(key, 4), (B, H, T)) + 3.0
+    )
+    h_par = _mlstm_parallel(q, k, v, log_i, log_f)
+    for L in (8, 16, 64):
+        h_chk = _mlstm_chunkwise(q, k, v, log_i, log_f, L)
+        np.testing.assert_allclose(
+            np.asarray(h_par), np.asarray(h_chk), rtol=2e-4, atol=2e-4
+        )
+    # unrolled (dry-run counting path) == scanned
+    h_u = _mlstm_chunkwise(q, k, v, log_i, log_f, 16, unroll=True)
+    np.testing.assert_allclose(
+        np.asarray(h_u),
+        np.asarray(_mlstm_chunkwise(q, k, v, log_i, log_f, 16)),
+        rtol=1e-5, atol=1e-5,
+    )
+    # gradients finite through the chunk recurrence
+    g = jax.grad(lambda q: float(0) + jnp.sum(_mlstm_chunkwise(q, k, v, log_i, log_f, 16) ** 2))(q)
+    assert bool(jnp.all(jnp.isfinite(g)))

@@ -1,0 +1,140 @@
+"""Optimizer library: SMBGD-general semantics + baselines + microbatch fold."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (
+    adamw,
+    apply_updates,
+    chain,
+    clip_by_global_norm,
+    global_norm,
+    make_optimizer,
+    momentum,
+    sgd,
+    smbgd,
+    warmup_cosine,
+)
+from repro.train.microbatch import smbgd_accumulate_grads, split_batch
+
+
+def _quad_problem():
+    """min ||x - t||²: every sane optimizer must converge."""
+    t = jnp.array([1.0, -2.0, 3.0])
+
+    def loss(p):
+        return jnp.sum((p["x"] - t) ** 2)
+
+    return loss, {"x": jnp.zeros(3)}, t
+
+
+class TestSMBGDGeneral:
+    def test_p1_equals_heavyball(self):
+        """SMBGD with P=1 must match a hand-rolled heavy-ball loop (with the
+        paper's first-step γ gate)."""
+        loss, params, _ = _quad_problem()
+        tx = smbgd(learning_rate=0.1, gamma=0.5, beta=1.0, microbatches=1)
+        state = tx.init(params)
+        p = params
+        h = jnp.zeros(3)
+        for k in range(5):
+            g = jax.grad(loss)(p)["x"]
+            gam = 0.0 if k == 0 else 0.5
+            h = gam * h + 0.1 * g
+            upd, state = tx.update(jax.grad(loss)(p), state, p)
+            p = apply_updates(p, upd)
+            np.testing.assert_allclose(np.asarray(upd["x"]), np.asarray(-h), rtol=1e-6)
+
+    def test_converges_quadratic(self):
+        loss, params, t = _quad_problem()
+        tx = smbgd(learning_rate=0.05, gamma=0.8)
+        state = tx.init(params)
+        p = params
+        for _ in range(200):
+            upd, state = tx.update(jax.grad(loss)(p), state, p)
+            p = apply_updates(p, upd)
+        np.testing.assert_allclose(np.asarray(p["x"]), np.asarray(t), atol=1e-3)
+
+    def test_one_slot_state(self):
+        """SMBGD memory claim: exactly one param-shaped slot (AdamW has two)."""
+        _, params, _ = _quad_problem()
+        s_smbgd = smbgd(0.1).init(params)
+        s_adamw = adamw(0.1).init(params)
+        n_big = lambda s: sum(1 for l in jax.tree.leaves(s) if l.ndim > 0)
+        assert n_big(s_smbgd) == 1
+        assert n_big(s_adamw) == 2
+
+
+class TestBaselines:
+    @pytest.mark.parametrize("name", ["sgd", "momentum", "adamw", "adafactor"])
+    def test_converges(self, name):
+        loss, params, t = _quad_problem()
+        kw = {"weight_decay": 0.0} if name == "adamw" else {}
+        tx = make_optimizer(name, 0.05, **kw)
+        state = tx.init(params)
+        p = params
+        for _ in range(400):
+            upd, state = tx.update(jax.grad(loss)(p), state, p)
+            p = apply_updates(p, upd)
+        np.testing.assert_allclose(np.asarray(p["x"]), np.asarray(t), atol=2e-2)
+
+    def test_clip_by_global_norm(self):
+        tx = clip_by_global_norm(1.0)
+        g = {"a": jnp.array([3.0, 4.0])}  # norm 5
+        clipped, _ = tx.update(g, tx.init(g))
+        np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-6)
+
+    def test_chain_and_schedule(self):
+        sched = warmup_cosine(peak_lr=1.0, warmup=10, total=100)
+        assert float(sched(jnp.array(0))) == 0.0
+        assert float(sched(jnp.array(10))) == pytest.approx(1.0)
+        assert float(sched(jnp.array(100))) == pytest.approx(0.0, abs=1e-6)
+        tx = chain(clip_by_global_norm(10.0), sgd(0.1))
+        g = {"a": jnp.array([1.0])}
+        upd, _ = tx.update(g, tx.init(g))
+        np.testing.assert_allclose(np.asarray(upd["a"]), [-0.1], rtol=1e-6)
+
+
+class TestMicrobatchFold:
+    def test_beta1_equals_mean_gradient(self):
+        """β=1 microbatch fold == full-batch gradient (exactly, for a loss
+        that is a mean over examples)."""
+        key = jax.random.PRNGKey(0)
+        X = jax.random.normal(key, (16, 4))
+        y = jax.random.normal(jax.random.fold_in(key, 1), (16,))
+        params = {"w": jnp.zeros(4)}
+
+        def loss_fn(p, batch):
+            pred = batch["x"] @ p["w"]
+            return jnp.mean((pred - batch["y"]) ** 2), None
+
+        g_full = jax.grad(lambda p: loss_fn(p, {"x": X, "y": y})[0])(params)
+        g_mb, loss = smbgd_accumulate_grads(
+            loss_fn, params, {"x": X, "y": y}, microbatches=4, beta=1.0
+        )
+        np.testing.assert_allclose(
+            np.asarray(g_mb["w"]), np.asarray(g_full["w"]), rtol=1e-5, atol=1e-6
+        )
+
+    def test_beta_weights_recent_microbatches(self):
+        """β<1: last microbatch dominates the fold (Eq. 1 ordering)."""
+        params = {"w": jnp.zeros(1)}
+
+        def loss_fn(p, batch):
+            # per-microbatch constant gradient = batch value
+            return jnp.mean(p["w"] * batch), None
+
+        batch = jnp.array([[1.0], [0.0], [0.0], [10.0]])  # 4 microbatches
+        g, _ = smbgd_accumulate_grads(loss_fn, params, batch, 4, beta=0.5)
+        # fold: Σ β^{P-1-p} g_p / Σ β^i = (0.125·1 + 10) / 1.875
+        np.testing.assert_allclose(
+            float(g["w"][0]), (0.5**3 * 1.0 + 10.0) / (1 + 0.5 + 0.25 + 0.125),
+            rtol=1e-5,
+        )
+
+    def test_split_batch_shapes(self):
+        b = {"tokens": jnp.zeros((8, 5)), "extra": jnp.zeros((8, 2, 3))}
+        s = split_batch(b, 4)
+        assert s["tokens"].shape == (4, 2, 5)
+        assert s["extra"].shape == (4, 2, 2, 3)

@@ -1,0 +1,96 @@
+"""Trainer: loss goes down, resume-from-checkpoint continuity, NaN guard."""
+import dataclasses
+import json
+import math
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.data.pipeline import make_lm_pipeline
+from repro.optim.smbgd import smbgd
+from repro.optim.optimizers import adamw
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def _setup(tmp_path, arch="smollm-135m", **tkw):
+    cfg = dataclasses.replace(get_config(arch).reduced(), n_layers=2)
+    pipe = make_lm_pipeline(cfg, seq_len=32, global_batch=8, seed=0)
+    tcfg = TrainerConfig(
+        ckpt_dir=str(tmp_path / "ckpt"),
+        ckpt_every=5,
+        log_every=2,
+        metrics_path=str(tmp_path / "metrics.jsonl"),
+        **tkw,
+    )
+    tx = smbgd(learning_rate=0.05, gamma=0.8)
+    return cfg, pipe, tcfg, tx
+
+
+class TestTraining:
+    def test_loss_decreases(self, tmp_path):
+        cfg, pipe, tcfg, tx = _setup(tmp_path)
+        tr = Trainer(cfg, tx, tcfg)
+        _, _, losses = tr.fit(jax.random.PRNGKey(0), pipe, n_steps=30)
+        assert len(losses) == 30
+        assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3
+
+    def test_metrics_logged(self, tmp_path):
+        cfg, pipe, tcfg, tx = _setup(tmp_path)
+        tr = Trainer(cfg, tx, tcfg)
+        tr.fit(jax.random.PRNGKey(0), pipe, n_steps=11)
+        lines = [json.loads(l) for l in open(tmp_path / "metrics.jsonl")]
+        assert any("loss" in l for l in lines)
+
+    def test_resume_continues_stream(self, tmp_path):
+        """Kill after 12 steps, restart: the second run must resume from the
+        checkpoint step and end near the uninterrupted run."""
+        cfg, pipe, tcfg, tx = _setup(tmp_path)
+        tr1 = Trainer(cfg, tx, tcfg)
+        p_full, _, losses_full = tr1.fit(jax.random.PRNGKey(0), pipe, n_steps=20)
+
+        tcfg2 = dataclasses.replace(tcfg, ckpt_dir=str(tmp_path / "ckpt2"))
+        tr2 = Trainer(cfg, tx, tcfg2)
+        tr2.fit(jax.random.PRNGKey(0), pipe, n_steps=12)
+        tr3 = Trainer(cfg, tx, tcfg2)
+        p_resumed, _, losses_tail = tr3.fit(jax.random.PRNGKey(0), pipe, n_steps=20)
+        # resumed run processed only the remaining steps
+        assert len(losses_tail) < 12
+        # end state close to the uninterrupted run (same data stream; small
+        # drift from the few re-executed steps after the 10-step checkpoint)
+        l_full = losses_full[-1]
+        l_res = losses_tail[-1]
+        assert abs(l_full - l_res) < 0.35 * max(abs(l_full), 1.0)
+
+    def test_microbatched_smbgd_runs(self, tmp_path):
+        cfg, pipe, tcfg, tx = _setup(tmp_path, microbatches=4, smbgd_beta=0.9)
+        tr = Trainer(cfg, tx, tcfg)
+        _, _, losses = tr.fit(jax.random.PRNGKey(0), pipe, n_steps=8)
+        assert all(math.isfinite(l) for l in losses)
+
+
+class TestNaNGuard:
+    def test_nan_guard_restores(self, tmp_path):
+        cfg, pipe, tcfg, tx = _setup(tmp_path)
+        tr = Trainer(cfg, tx, tcfg)
+        params, opt_state, _ = tr.init_state(jax.random.PRNGKey(0))
+        tr.ckpt.save(4, (params, opt_state))
+
+        calls = {"n": 0}
+        real_step = tr.step_fn
+
+        def poisoned(params, opt_state, batch):
+            calls["n"] += 1
+            p, o, l = real_step(params, opt_state, batch)
+            if calls["n"] == 3:
+                return p, o, jnp.float32(float("nan"))
+            return p, o, l
+
+        tr.step_fn = poisoned
+        _, _, losses = tr.fit(jax.random.PRNGKey(0), pipe, n_steps=10)
+        assert all(math.isfinite(l) for l in losses)
+        # resumes at ckpt step 4 → reruns steps 5..9: 3 calls + 5 rerun = 8
+        assert calls["n"] == 8
