@@ -4,6 +4,8 @@
 
   convergence   — §V.A  (SGD 4166 vs SMBGD 3166 iterations, 24 %)
   throughput    — Table I analogue (serial SGD vs batched SMBGD, P sweep)
+  streams       — SeparatorBank scaling (fused S-stream step vs Python loop,
+                  S sweep; writes BENCH_streams.json)
   nonlinearity  — §V.B  (tanh vs cubic vs relu cost)
   kernels       — Pallas hot-spot microbenches / structural VMEM report
   roofline      — §Roofline table from the dry-run artifacts
@@ -21,10 +23,20 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args(argv)
 
-    from benchmarks import convergence, kernels, nonlinearity, roofline, throughput
+    from benchmarks import (
+        convergence,
+        kernels,
+        nonlinearity,
+        roofline,
+        stream_throughput,
+        throughput,
+    )
 
     suites = {
         "throughput": throughput.main,
+        "streams": lambda: stream_throughput.run(
+            quick=args.quick, out="BENCH_streams.json"
+        ),
         "nonlinearity": nonlinearity.main,
         "kernels": kernels.main,
         "roofline": lambda: roofline.main([]),

@@ -1,0 +1,134 @@
+"""Multi-stream scaling: SeparatorBank vs a Python loop over S separators.
+
+The paper's Table I measured one datapath's throughput; this measures the
+*rack*.  Scenario = streaming deployment (what ``serve.SeparationService``
+does): every tick each live session delivers a ``(P, m)`` mini-batch, and the
+engine must advance all S sessions before the next tick.
+
+  * ``bank`` — ONE fused ``SeparatorBank.step`` per tick (leading stream axis;
+    optionally the batched (streams, P-tiles) Pallas kernel),
+  * ``loop`` — the naive engine: a Python loop dispatching S jitted
+    single-stream ``smbgd_batched_step`` calls per tick.
+
+Per-tick wall-clock of the bank grows sublinearly in S (one dispatch, one
+compiled program, vectorized math) while the loop pays per-session dispatch
+every tick.  samples/sec vs S goes to ``BENCH_streams.json`` so the perf
+trajectory is recorded run over run.
+
+    PYTHONPATH=src python benchmarks/stream_throughput.py [--quick] [--pallas]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+from typing import Dict, List
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import smbgd as smbgd_lib
+from repro.core.easi import EASIConfig
+from repro.core.smbgd import SMBGDConfig
+from repro.stream import SeparatorBank
+
+
+def bench_streams(
+    S: int,
+    P: int = 32,
+    m: int = 4,
+    n: int = 2,
+    n_ticks: int = 50,
+    use_pallas: bool = False,
+    reps: int = 3,
+) -> Dict[str, float]:
+    ecfg = EASIConfig(n_components=n, n_features=m, mu=1e-3)
+    ocfg = SMBGDConfig(batch_size=P, mu=1e-3, beta=0.9, gamma=0.5)
+    key = jax.random.PRNGKey(0)
+    X = jax.random.normal(jax.random.fold_in(key, 1), (S, P, m))
+
+    # fused bank: one jitted step advances all S sessions
+    bank = SeparatorBank(ecfg, ocfg, n_streams=S, use_pallas=use_pallas)
+    bank_step = jax.jit(bank.step)
+    state0 = bank.init(key)
+    jax.block_until_ready(bank_step(state0, X))  # compile
+    t_bank = float("inf")
+    for _ in range(reps):
+        st = state0
+        t0 = time.perf_counter()
+        for _ in range(n_ticks):
+            st, _ = bank_step(st, X)
+        jax.block_until_ready(st)
+        t_bank = min(t_bank, (time.perf_counter() - t0) / n_ticks)
+
+    # naive engine: Python loop of S single-stream jitted steps per tick
+    # (the jit cache is shared across sessions — the loop pays dispatch,
+    # not recompilation)
+    single_step = jax.jit(
+        lambda st, x: smbgd_lib.smbgd_batched_step(st, x, ecfg, ocfg)
+    )
+    states0 = [smbgd_lib.init_state(ecfg, k) for k in jax.random.split(key, S)]
+    jax.block_until_ready(single_step(states0[0], X[0]))  # compile
+    t_loop = float("inf")
+    for _ in range(reps):
+        states = list(states0)
+        t0 = time.perf_counter()
+        for _ in range(n_ticks):
+            states = [single_step(states[s], X[s])[0] for s in range(S)]
+        jax.block_until_ready(states)  # ALL streams — async backends
+        t_loop = min(t_loop, (time.perf_counter() - t0) / n_ticks)
+
+    samples_per_tick = S * P
+    row = {
+        "S": S, "P": P, "m": m, "n": n, "n_ticks": n_ticks,
+        "use_pallas": use_pallas,
+        "bank_tick_s": t_bank,
+        "loop_tick_s": t_loop,
+        "bank_samples_per_s": samples_per_tick / t_bank,
+        "loop_samples_per_s": samples_per_tick / t_loop,
+        "bank_over_loop": t_loop / t_bank,
+    }
+    print(
+        f"streams,S={S},bank={row['bank_samples_per_s']:.3g}sps"
+        f",loop={row['loop_samples_per_s']:.3g}sps"
+        f",bank/loop={row['bank_over_loop']:.1f}x"
+    )
+    return row
+
+
+def run(
+    quick: bool = False,
+    use_pallas: bool = False,
+    out: str | None = None,
+) -> List[Dict[str, float]]:
+    """Sweep S; write the JSON artifact when ``out`` is given."""
+    sweep = (1, 8, 64) if quick else (1, 8, 64, 512)
+    reps = 2 if quick else 3
+    ticks = 20 if quick else 50
+    rows = [
+        bench_streams(S, use_pallas=use_pallas, reps=reps, n_ticks=ticks)
+        for S in sweep
+    ]
+    if out:
+        Path(out).write_text(json.dumps(rows, indent=2) + "\n")
+        print(f"wrote {out}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="S ≤ 64, fewer reps (CI)")
+    ap.add_argument("--pallas", action="store_true", help="fused Pallas bank kernel")
+    ap.add_argument(
+        "--out", default="BENCH_streams.json", help="result file (JSON rows)"
+    )
+    args = ap.parse_args()
+    run(quick=args.quick, use_pallas=args.pallas, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,12 +1,19 @@
-"""Adaptive separation under a non-stationary mixing matrix — the paper's §I
-motivation ("track changes in underlying distributions of input features").
+"""Adaptive separation under non-stationary mixing — single stream and bank.
 
     PYTHONPATH=src python examples/adaptive_stream.py
 
-The mixing matrix rotates slowly while the separator streams mini-batches
-through ``partial_fit``.  SMBGD's γ-momentum + β-recency weighting is exactly
-the knob the paper describes: large γ for smooth drift, small γ for abrupt
-change.  Prints the tracking error over time for SMBGD vs plain SGD.
+Part 1 (the paper's §I motivation): one mixing matrix rotates slowly while the
+separator streams mini-batches through ``partial_fit``.  SMBGD's γ-momentum +
+β-recency weighting is exactly the knob the paper describes: large γ for
+smooth drift, small γ for abrupt change.  Prints tracking error over time for
+SMBGD vs plain SGD.
+
+Part 2 (the production shape): a ``SeparatorBank`` runs S such sessions at
+once — every stream has its own sources, its own mixing matrix and its own
+drift phase (``MixedSignals(streams=S)``), yet each tick is ONE fused array
+program.  With ``use_pallas=True`` the gradient sums of all streams go through
+a single (streams, P-tiles) kernel launch (interpreted on CPU; set
+``REPRO_PALLAS_INTERPRET=0`` on real TPU hardware).
 """
 import sys
 from pathlib import Path
@@ -14,9 +21,11 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import AdaptiveICA, EASIConfig, SMBGDConfig, amari_index, global_system
 from repro.data.pipeline import MixedSignals
+from repro.stream import SeparatorBank
 
 
 def run(algorithm: str, gamma: float, n_steps: int = 4000) -> list:
@@ -35,6 +44,22 @@ def run(algorithm: str, gamma: float, n_steps: int = 4000) -> list:
     return errs
 
 
+def run_bank(n_streams: int = 8, n_steps: int = 2000) -> jnp.ndarray:
+    """S drifting sessions, one fused program; returns per-stream Amari index."""
+    ecfg = EASIConfig(n_components=2, n_features=4, mu=3e-3)
+    ocfg = SMBGDConfig(batch_size=16, mu=3e-3, beta=0.9, gamma=0.5)
+    bank = SeparatorBank(ecfg, ocfg, n_streams=n_streams)
+    state = bank.init(jax.random.PRNGKey(0))
+    pipe = MixedSignals(
+        m=4, n=2, batch=16, seed=0, drift_rate=3e-6, streams=n_streams
+    )
+    step_fn = jax.jit(lambda s, x: bank.step(s, x))
+    for step in range(n_steps):
+        state, _ = step_fn(state, pipe.batch_for_step(step))
+    # evaluate against the last-seen mixing (same convention as run())
+    return bank.performance_index(state, pipe.mixing_at(n_steps - 1))
+
+
 def main():
     print("streaming 4000 mini-batches with a slowly rotating mixing matrix")
     print(f"{'step':>6} | {'SGD':>8} | {'SMBGD γ=0.5':>12}")
@@ -47,6 +72,14 @@ def main():
         f"\nfinal tracking Amari index: SGD {final_sgd:.4f}  vs  SMBGD {final_smb:.4f}"
         f"  ({'SMBGD tracks better' if final_smb < final_sgd else 'comparable'})"
     )
+
+    S = 8
+    print(f"\nSeparatorBank: {S} drifting sessions, one fused step per tick")
+    pis = run_bank(n_streams=S)
+    per = "  ".join(f"{float(p):.3f}" for p in pis)
+    print(f"per-stream tracking Amari index after 2000 ticks: {per}")
+    print(f"worst stream: {float(jnp.max(pis)):.4f} (each stream has its own "
+          "sources, mixing matrix and drift phase)")
 
 
 if __name__ == "__main__":

@@ -6,6 +6,13 @@ Reproduces the paper's benchmark setting (m=4 observed mixtures of n=2
 independent sources, fp32, cubic nonlinearity), trains the adaptive separator
 with the SMBGD update rule (Eq. 1), and reports the Amari separation index and
 the SGD-vs-SMBGD comparison on the same problem.
+
+``AdaptiveICA`` is the single-stream front-end (``algorithm`` selects
+``sgd | smbgd_sequential | smbgd_batched``; ``use_pallas=True`` routes the
+gradient sum through the fused Pallas kernel — interpreted on CPU by default,
+set ``REPRO_PALLAS_INTERPRET=0`` on real TPU).  To run many separation
+sessions at once as one fused program, see ``repro.stream.SeparatorBank``
+(examples/adaptive_stream.py) and ``serve.engine.SeparationService``.
 """
 import sys
 from pathlib import Path

@@ -11,68 +11,35 @@ regime the paper targets.
     state, y = ica.partial_fit(state, x_batch)   # online: track drift
     Y = ica.transform(state, X_new)         # deployment: separate only
 
+``AdaptiveICA`` is the back-compat name for ``repro.stream.separator.Separator``
+— the unified front-end over the three epoch drivers (``sgd``,
+``smbgd_sequential``, ``smbgd_batched``; ``"smbgd"`` is an accepted alias of
+the batched form).  For many concurrent sessions use
+``repro.stream.SeparatorBank``, which is this estimator vmapped over a leading
+stream axis with a fused multi-stream Pallas kernel.
+
 Everything is pure-functional (state in/state out) so it drops into pjit/scan.
-Data-parallel fitting over a device mesh is provided by ``fit_sharded`` which
-psums the weighted gradient across the batch axis — the gradient sum in
-``batched_relative_gradient`` is linear in samples, so DP is exact.
+Data-parallel fitting over a device mesh is provided by ``make_sharded_step``
+which psums the weighted gradient across the batch axis — the gradient sum in
+``batched_relative_gradient`` is linear in samples, so DP is exact.  (Stream
+parallelism — sharding *sessions* rather than samples — lives in
+``repro.stream.sharding``.)
 """
 from __future__ import annotations
-
-import dataclasses
-from functools import partial
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import easi as easi_lib
-from repro.core import metrics as metrics_lib
 from repro.core import smbgd as smbgd_lib
 from repro.core.easi import EASIConfig
 from repro.core.smbgd import SMBGDConfig, SMBGDState
+from repro.stream.separator import Separator
 
 
-@dataclasses.dataclass(frozen=True)
-class AdaptiveICA:
-    easi: EASIConfig
-    opt: SMBGDConfig
-    algorithm: str = "smbgd"  # "smbgd" | "sgd"
-    use_pallas: bool = False
-
-    def init(self, key: jax.Array) -> SMBGDState:
-        return smbgd_lib.init_state(self.easi, key)
-
-    # -- training ---------------------------------------------------------
-    def fit(
-        self, state: SMBGDState, X: jnp.ndarray
-    ) -> Tuple[SMBGDState, jnp.ndarray]:
-        """One pass over ``X (T, m)``; returns updated state and outputs."""
-        if self.algorithm == "sgd":
-            B, Y = easi_lib.easi_sgd_scan(state.B, X, self.easi)
-            return state._replace(B=B, step=state.step + X.shape[0]), Y
-        return smbgd_lib.smbgd_epoch(
-            state, X, self.easi, self.opt, use_pallas=self.use_pallas
-        )
-
-    def partial_fit(
-        self, state: SMBGDState, X_batch: jnp.ndarray
-    ) -> Tuple[SMBGDState, jnp.ndarray]:
-        """One mini-batch update (streaming deployment; tracks drift)."""
-        if self.algorithm == "sgd":
-            B, Y = easi_lib.easi_sgd_scan(state.B, X_batch, self.easi)
-            return state._replace(B=B, step=state.step + X_batch.shape[0]), Y
-        return smbgd_lib.smbgd_batched_step(
-            state, X_batch, self.easi, self.opt, use_pallas=self.use_pallas
-        )
-
-    # -- deployment --------------------------------------------------------
-    def transform(self, state: SMBGDState, X: jnp.ndarray) -> jnp.ndarray:
-        return easi_lib.transform(state.B, X)
-
-    # -- diagnostics --------------------------------------------------------
-    def performance_index(self, state: SMBGDState, A: jnp.ndarray) -> jnp.ndarray:
-        return metrics_lib.amari_index(metrics_lib.global_system(state.B, A))
+class AdaptiveICA(Separator):
+    """Back-compat subclass; all behavior lives on ``Separator``."""
 
 
 # ---------------------------------------------------------------------------
@@ -118,11 +85,9 @@ def make_sharded_step(mesh, easi_cfg: EASIConfig, cfg: SMBGDConfig, axis: str = 
             check_rep=False,
         )
         S, Y = sharded(state.B, X_batch, w)
-        gamma_hat = jnp.where(
-            state.step == 0, 0.0, cfg.effective_momentum
-        ).astype(state.B.dtype)
-        H_hat = gamma_hat * state.H_hat + S
-        B_next = state.B + H_hat @ state.B
+        H_hat, B_next = smbgd_lib.smbgd_commit(
+            state.step, state.H_hat, S, state.B, cfg
+        )
         return SMBGDState(B=B_next, H_hat=H_hat, step=state.step + 1), Y
 
     return step

@@ -108,6 +108,30 @@ def smbgd_sequential_step(
     return SMBGDState(B=B_next, H_hat=H_hat, step=state.step + 1), Y
 
 
+def smbgd_commit(
+    step: jnp.ndarray,
+    H_prev: jnp.ndarray,
+    S: jnp.ndarray,
+    B: jnp.ndarray,
+    cfg: SMBGDConfig,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The closed-form commit shared by every batched driver:
+
+        Ĥ = γ̂·Ĥ_prev + S,   B' = B + Ĥ B,   γ̂ gated off where step == 0.
+
+    Shape-polymorphic: scalar ``step`` with ``(n, n)``/``(n, m)`` operands
+    (single stream), or ``step (S,)`` with a leading stream axis on all mats
+    (``SeparatorBank``).  Keeping this in ONE place means a change to the
+    update rule cannot silently skip the sharded or Pallas-bank paths.
+    """
+    gamma_hat = jnp.where(step == 0, 0.0, cfg.effective_momentum).astype(B.dtype)
+    if gamma_hat.ndim:
+        gamma_hat = gamma_hat[:, None, None]
+    H_hat = gamma_hat * H_prev + S.astype(B.dtype)
+    B_next = B + H_hat @ B  # matmul broadcasts over a leading stream axis
+    return H_hat, B_next
+
+
 def smbgd_batched_step(
     state: SMBGDState, X_batch: jnp.ndarray, easi_cfg: EASIConfig, cfg: SMBGDConfig,
     *,
@@ -127,11 +151,7 @@ def smbgd_batched_step(
         S = easi_ops.easi_gradient(Y, w, nonlinearity=easi_cfg.nonlinearity)
     else:
         S = easi_lib.batched_relative_gradient(Y, w, easi_cfg.g)
-    gamma_hat = jnp.where(
-        state.step == 0, 0.0, cfg.effective_momentum
-    ).astype(B.dtype)
-    H_hat = gamma_hat * H_prev + S
-    B_next = B + H_hat @ B
+    H_hat, B_next = smbgd_commit(state.step, H_prev, S, B, cfg)
     return SMBGDState(B=B_next, H_hat=H_hat, step=state.step + 1), Y
 
 

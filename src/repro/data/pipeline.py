@@ -18,6 +18,7 @@ stream is invariant to dp_size (elastic-safe).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -102,6 +103,24 @@ class MemmapTokens:
         return {"tokens": jnp.asarray(rows)}
 
 
+@functools.lru_cache(maxsize=64)
+def _base_mixing_cached(pipe: "MixedSignals", lo: int, hi: int) -> jnp.ndarray:
+    """Per-stream stationary mixing matrices ``(hi-lo, m, n)`` — a pure
+    function of the pipe's seeds, so computed (batched SVD) once per
+    (pipe, range), not once per tick."""
+    seeds, _ = pipe._stream_params(lo, hi)
+    return jax.jit(jax.vmap(pipe._base_mixing))(seeds)
+
+
+@functools.partial(jax.jit, static_argnums=0)  # frozen dataclass → hashable
+def _streamed_batch_jit(pipe: "MixedSignals", seeds, A0s, phases, step) -> jnp.ndarray:
+    """vmap the per-stream generator over the (local) stream axis; jitted so a
+    bank serving loop pays one compiled dispatch per tick, not S traces."""
+    return jax.vmap(lambda sd, a0, ph: pipe._stream_batch(sd, a0, ph, step))(
+        seeds, A0s, phases
+    )
+
+
 def make_lm_pipeline(cfg: ModelConfig, seq_len: int, global_batch: int, seed: int = 0) -> SyntheticLM:
     return SyntheticLM(
         vocab_size=cfg.vocab_size,
@@ -116,30 +135,70 @@ def make_lm_pipeline(cfg: ModelConfig, seq_len: int, global_batch: int, seed: in
 
 @dataclasses.dataclass(frozen=True)
 class MixedSignals:
-    """Streaming ICA input: (optionally drifting) mixtures, step-addressable."""
+    """Streaming ICA input: (optionally drifting) mixtures, step-addressable.
+
+    With ``streams == 0`` (default) this is the legacy single-stream source:
+    ``batch_for_step`` returns ``(batch, m)`` and dp ranks slice the batch.
+
+    With ``streams = S > 0`` the pipeline grows a leading stream axis — the
+    substrate for ``repro.stream.SeparatorBank``: ``batch_for_step`` returns
+    ``(S, batch, m)`` where stream s has its own seed (own sources, own mixing
+    matrix) and its own drift phase, so a bank sees S genuinely distinct
+    separation problems.  dp ranks then slice the *stream* axis (streams are
+    the unit of device parallelism; ``streams % dp_size == 0``), matching
+    ``stream.sharding.make_sharded_bank_step``.
+    """
 
     m: int = 4
     n: int = 2
     batch: int = 8
     seed: int = 0
     drift_rate: float = 0.0  # >0: non-stationary mixing (adaptive regime)
+    streams: int = 0  # 0 → legacy single-stream; S>0 → leading (S, ...) axis
 
-    def mixing_at(self, step: int) -> jnp.ndarray:
+    # per-stream seed/drift-phase derivation (stream=None → legacy stream)
+    def _stream_seed(self, stream: Optional[int]) -> int:
+        return self.seed if stream is None else self.seed + 1_000_003 * (stream + 1)
+
+    def _drift_phase(self, stream: Optional[int]) -> float:
+        # golden-angle stagger so concurrent streams never drift in phase
+        return 0.0 if stream is None else 2.399963229728653 * (stream + 1)
+
+    def _base_mixing(self, seed) -> jnp.ndarray:
+        """Stationary mixing matrix A0 from a (traced) seed."""
         from repro.data import signals
 
-        key = jax.random.PRNGKey(self.seed)
-        A0 = signals.random_mixing_matrix(key, self.m, self.n)
+        return signals.random_mixing_matrix(jax.random.PRNGKey(seed), self.m, self.n)
+
+    def _drift(self, A0: jnp.ndarray, phase, step) -> jnp.ndarray:
+        """Apply the drift rotation (no-op when drift_rate == 0)."""
         if not self.drift_rate:
             return A0
-        theta = self.drift_rate * step * self.batch
+        theta = self.drift_rate * step * self.batch + phase
         c, s = jnp.cos(theta), jnp.sin(theta)
         R = jnp.eye(self.m).at[0, 0].set(c).at[1, 1].set(c).at[0, 1].set(-s).at[1, 0].set(s)
         return R @ A0
 
-    def batch_for_step(self, step: int, dp_rank: int = 0, dp_size: int = 1) -> jnp.ndarray:
-        """Global mini-batch is a pure function of (seed, step); ranks slice."""
-        assert self.batch % dp_size == 0
-        key = jax.random.fold_in(jax.random.PRNGKey(self.seed + 1), step)
+    def _mixing_traced(self, seed, phase, step) -> jnp.ndarray:
+        """Mixing matrix from traced (seed, phase, step) — vmap/jit-safe."""
+        return self._drift(self._base_mixing(seed), phase, step)
+
+    def mixing_at(self, step: int, stream: Optional[int] = None) -> jnp.ndarray:
+        """Mixing matrix at ``step``: ``(m, n)`` for one stream, or stacked
+        ``(S, m, n)`` when ``streams > 0`` and ``stream`` is omitted."""
+        if self.streams and stream is None:
+            seeds, phases = self._stream_params(0, self.streams)
+            return jax.vmap(lambda sd, ph: self._mixing_traced(sd, ph, step))(
+                seeds, phases
+            )
+        return self._mixing_traced(
+            self._stream_seed(stream), self._drift_phase(stream), step
+        )
+
+    def _stream_batch(self, seed, A0, phase, step) -> jnp.ndarray:
+        """One stream's ``(batch, m)`` mini-batch from traced params (``A0``
+        is the precomputed stationary mixing matrix — drift applied here)."""
+        key = jax.random.fold_in(jax.random.PRNGKey(seed + 1), step)
         t = step * self.batch + jnp.arange(self.batch)
         # mixed sub-Gaussian bank: even components sinusoidal, odd uniform
         s_sine = jnp.sin(0.05 * t[:, None] + jnp.arange(self.n)[None, :] * 2.1)
@@ -147,7 +206,36 @@ class MixedSignals:
             key, (self.batch, self.n), minval=-1.7320508, maxval=1.7320508
         )
         S = jnp.where(jnp.arange(self.n)[None, :] % 2 == 0, s_sine * 2**0.5, s_unif)
-        A = self.mixing_at(step)
-        X = S @ A.T
+        A = self._drift(A0, phase, step)
+        return S @ A.T
+
+    @functools.lru_cache(maxsize=64)
+    def _stream_params(self, lo: int, hi: int):
+        """Per-stream (seeds, phases) arrays — pure in (self, lo, hi), cached
+        so the per-tick path doesn't rebuild O(S) host lists."""
+        seeds = jnp.asarray([self._stream_seed(s) for s in range(lo, hi)])
+        phases = jnp.asarray([self._drift_phase(s) for s in range(lo, hi)])
+        return seeds, phases
+
+    def batch_for_step(self, step: int, dp_rank: int = 0, dp_size: int = 1) -> jnp.ndarray:
+        """Global mini-batch is a pure function of (seed, step); ranks slice —
+        the batch axis in single-stream mode, the stream axis in bank mode."""
+        if self.streams:
+            # one traced program generates the whole (local_S, batch, m) block:
+            # at bank scale the fused separator step is a single dispatch, so
+            # host-side data gen must not become an O(S) Python loop per tick
+            assert self.streams % dp_size == 0
+            local = self.streams // dp_size
+            lo = dp_rank * local
+            seeds, phases = self._stream_params(lo, lo + local)
+            A0s = _base_mixing_cached(self, lo, lo + local)
+            return _streamed_batch_jit(self, seeds, A0s, phases, step)
+        assert self.batch % dp_size == 0
+        X = self._stream_batch(
+            self._stream_seed(None),
+            self._base_mixing(self._stream_seed(None)),
+            self._drift_phase(None),
+            step,
+        )
         local = self.batch // dp_size
         return X[dp_rank * local : (dp_rank + 1) * local]

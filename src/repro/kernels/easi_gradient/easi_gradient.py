@@ -11,6 +11,13 @@ in place.  This is the TPU-native replacement for the paper's one-sample-per-
 clock FPGA pipeline: arithmetic intensity grows from O(1) (rank-1 outer-product
 updates) to O(block_p) (rank-P matmuls) — MXU-bound instead of HBM-bound.
 
+The *bank* variant (``easi_gradient_bank_pallas``) adds a leading **streams**
+grid dimension: for ``Y (S, P, n)`` the grid is ``(S, P // block_p)`` and one
+launch folds every stream's tiles — S independent separator sessions cost one
+kernel dispatch instead of S.  The stream axis is the majormost grid dim, so
+for each stream the tile index still iterates innermost and the per-stream
+(n, n) accumulator pattern is unchanged.
+
 Layout notes (TPU target; validated on CPU via interpret=True):
   * last dim n is padded to a multiple of 128 (lane width) by ops.py,
   * block_p is a multiple of 8 (f32 sublane) — default 512,
@@ -25,19 +32,17 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-NONLIN_KERNELS: dict = {
-    "cubic": lambda y: y * y * y,
-    "tanh": jnp.tanh,
-    "relu": lambda y: jnp.sign(y) * jnp.maximum(jnp.abs(y) - 1.0, 0.0),
-    "scaled_tanh": lambda y: jnp.tanh(3.0 * y),
-}
+from repro.core.nonlinearities import NONLINEARITIES
+
+# The kernel nonlinearity table IS the core registry: every g(.) there is pure
+# jnp elementwise (VPU-lowerable), so registering a new nonlinearity in
+# core/nonlinearities.py makes it available inside the kernel automatically —
+# the two banks cannot drift.
+NONLIN_KERNELS: dict = NONLINEARITIES
 
 
-def _easi_gradient_kernel(y_ref, w_ref, out_ref, *, nonlin: str):
-    """One grid step: fold a (block_p, n) tile of Y into the (n, n) accumulator."""
-    i = pl.program_id(0)
-    y = y_ref[...].astype(jnp.float32)  # (bp, n)
-    w = w_ref[...].astype(jnp.float32)  # (bp, 1)
+def _fold_tile(y, w, nonlin: str):
+    """Fold one (bp, n) fp32 tile of Y into an (n, n) gradient contribution."""
     g = NONLIN_KERNELS[nonlin](y)
     yw = y * w  # weighted rows — one VPU pass
     # Two MXU contractions over the tile's P dimension (rank-bp updates).
@@ -50,7 +55,15 @@ def _easi_gradient_kernel(y_ref, w_ref, out_ref, *, nonlin: str):
     n = gram.shape[0]
     # Per-tile identity contribution: Σ_tiles sum(w_tile)·I == sum(w)·I overall.
     eye = jnp.eye(n, dtype=jnp.float32) * jnp.sum(w)
-    s_tile = eye - gram - cross + cross.T
+    return eye - gram - cross + cross.T
+
+
+def _easi_gradient_kernel(y_ref, w_ref, out_ref, *, nonlin: str):
+    """One grid step: fold a (block_p, n) tile of Y into the (n, n) accumulator."""
+    i = pl.program_id(0)
+    y = y_ref[...].astype(jnp.float32)  # (bp, n)
+    w = w_ref[...].astype(jnp.float32)  # (bp, 1)
+    s_tile = _fold_tile(y, w, nonlin)
 
     @pl.when(i == 0)
     def _init():
@@ -85,5 +98,52 @@ def easi_gradient_pallas(
         ],
         out_specs=pl.BlockSpec((n, n), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=interpret,
+    )(Y, w)
+
+
+def _easi_gradient_bank_kernel(y_ref, w_ref, out_ref, *, nonlin: str):
+    """One grid step of the bank kernel: fold stream s's tile i into its
+    (n, n) accumulator.  Grid is (streams, tiles); tiles iterate innermost so
+    ``i == 0`` marks the first visit to stream s's output block."""
+    i = pl.program_id(1)
+    y = y_ref[0].astype(jnp.float32)  # (bp, n) — block is (1, bp, n)
+    w = w_ref[...].astype(jnp.float32)  # (bp, 1) — shared across streams
+    s_tile = _fold_tile(y, w, nonlin)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[0] = s_tile
+
+    @pl.when(i > 0)
+    def _acc():
+        out_ref[0] += s_tile
+
+
+def easi_gradient_bank_pallas(
+    Y: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    nonlinearity: str = "cubic",
+    block_p: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Batched-stream launch: ``Y (S, P, n)``, shared weights ``w (P, 1)`` →
+    ``S_out (S, n, n)`` fp32.  One kernel dispatch folds all S·(P/block_p)
+    tiles via the (streams, tiles) grid.  Expects pre-padded inputs as in
+    ``easi_gradient_pallas``."""
+    S, P, n = Y.shape
+    assert P % block_p == 0, (P, block_p)
+    grid = (S, P // block_p)
+    kernel = functools.partial(_easi_gradient_bank_kernel, nonlin=nonlinearity)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_p, n), lambda s, i: (s, i, 0)),
+            pl.BlockSpec((block_p, 1), lambda s, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n, n), lambda s, i: (s, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, n, n), jnp.float32),
         interpret=interpret,
     )(Y, w)

@@ -1,6 +1,14 @@
-"""Jit'd public wrapper for the EASI-gradient kernel: padding, alignment,
-dtype policy and the interpret-mode switch (CPU container → interpret=True;
-on real TPU set REPRO_PALLAS_INTERPRET=0)."""
+"""Jit'd public wrappers for the EASI-gradient kernels: padding, alignment,
+dtype policy and the interpret-mode switch.
+
+``REPRO_PALLAS_INTERPRET`` controls lowering: the default (``1``) runs the
+kernels through the Pallas interpreter so the CPU container can execute and
+test them; on real TPU set ``REPRO_PALLAS_INTERPRET=0`` to compile to Mosaic.
+Both entry points honour it:
+
+  * ``easi_gradient``       — single stream,   ``Y (P, n)``    → ``S (n, n)``
+  * ``easi_gradient_bank``  — S streams fused, ``Y (S, P, n)`` → ``S (S, n, n)``
+"""
 from __future__ import annotations
 
 import functools
@@ -9,7 +17,10 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.easi_gradient.easi_gradient import easi_gradient_pallas
+from repro.kernels.easi_gradient.easi_gradient import (
+    easi_gradient_bank_pallas,
+    easi_gradient_pallas,
+)
 
 _LANE = 128  # TPU lane width (last-dim alignment)
 _SUBLANE = 8  # f32 sublane
@@ -21,6 +32,14 @@ def _interpret_default() -> bool:
 
 def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
+
+
+def _pad_geometry(P: int, n: int, block_p: int | None, interpret: bool):
+    n_pad = _round_up(max(n, _SUBLANE), _LANE if not interpret else _SUBLANE)
+    if block_p is None:
+        block_p = min(512, _round_up(P, _SUBLANE))
+    P_pad = _round_up(P, block_p)
+    return P_pad, n_pad, block_p
 
 
 @functools.partial(jax.jit, static_argnames=("nonlinearity", "block_p", "interpret"))
@@ -42,10 +61,7 @@ def easi_gradient(
     if interpret is None:
         interpret = _interpret_default()
     P, n = Y.shape
-    n_pad = _round_up(max(n, _SUBLANE), _LANE if not interpret else _SUBLANE)
-    if block_p is None:
-        block_p = min(512, _round_up(P, _SUBLANE))
-    P_pad = _round_up(P, block_p)
+    P_pad, n_pad, block_p = _pad_geometry(P, n, block_p, interpret)
     Yp = jnp.zeros((P_pad, n_pad), Y.dtype).at[:P, :n].set(Y)
     wp = jnp.zeros((P_pad, 1), jnp.float32).at[:P, 0].set(w.reshape(-1))
     S = easi_gradient_pallas(
@@ -53,3 +69,31 @@ def easi_gradient(
     )
     # Padded diagonal entries carry sum(w)·I — slicing removes them.
     return S[:n, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("nonlinearity", "block_p", "interpret"))
+def easi_gradient_bank(
+    Y: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    nonlinearity: str = "cubic",
+    block_p: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Bank form: ``Y (S, P, n)`` with shared weights ``w (P,)`` →
+    ``S_out (S, n, n)`` in one fused (streams, tiles) launch.
+
+    Same padding contract as ``easi_gradient`` — padding rows/cols are zero and
+    contribute nothing (g(0)=0 for the whole bank), so each stream's slice is
+    bit-identical to a single-stream launch with the same block geometry.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    S_streams, P, n = Y.shape
+    P_pad, n_pad, block_p = _pad_geometry(P, n, block_p, interpret)
+    Yp = jnp.zeros((S_streams, P_pad, n_pad), Y.dtype).at[:, :P, :n].set(Y)
+    wp = jnp.zeros((P_pad, 1), jnp.float32).at[:P, 0].set(w.reshape(-1))
+    S = easi_gradient_bank_pallas(
+        Yp, wp, nonlinearity=nonlinearity, block_p=block_p, interpret=interpret
+    )
+    return S[:, :n, :n]

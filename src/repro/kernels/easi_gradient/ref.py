@@ -24,3 +24,15 @@ def easi_gradient_ref(
     gy = jnp.einsum("p,pi,pj->ij", w, G, Y)
     yg = jnp.einsum("p,pi,pj->ij", w, Y, G)
     return eye - yy - gy + yg
+
+
+def easi_gradient_bank_ref(
+    Y: jnp.ndarray, w: jnp.ndarray, nonlinearity: str = "cubic"
+) -> jnp.ndarray:
+    """Bank oracle: per-stream ``easi_gradient_ref`` stacked over the leading
+    stream axis of ``Y (S, P, n)`` — deliberately a plain Python loop so the
+    fused (streams, tiles) kernel is checked against S truly independent
+    single-stream computations."""
+    return jnp.stack(
+        [easi_gradient_ref(Y[s], w, nonlinearity) for s in range(Y.shape[0])]
+    )

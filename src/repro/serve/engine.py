@@ -1,24 +1,30 @@
-"""Batched serving engine: chunked prefill + decode over the model zoo.
+"""Batched serving engines: LM decode + multi-stream separation service.
 
 Deployment counterpart of the trainer (the paper's "model creation, training
-AND deployment in hardware" mandate).  Supports:
-  * batched requests with per-request lengths (right-padded, masked loss-free),
-  * chunked prefill through ``decode_step`` semantics for the recurrent
-    families / one-shot ``forward`` prefill for attention families,
-  * greedy / temperature sampling,
-  * continuous-batching bookkeeping (slot free-list; new requests drop into
-    finished slots between decode steps).
+AND deployment in hardware" mandate).  Two engines share the
+continuous-batching idiom (slot free-list; new sessions drop into freed slots
+between steps):
+  * ``Engine`` — LM serving: batched requests with per-request lengths,
+    chunked prefill through ``decode_step`` semantics, greedy / temperature
+    sampling,
+  * ``SeparationService`` — ICA serving: admits/evicts separation *sessions*
+    into the slots of a ``repro.stream.SeparatorBank``; every tick steps all
+    live sessions with one fused bank program (the multi-stream analogue of
+    the paper's single always-on FPGA datapath).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Hashable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.smbgd import SMBGDState
 from repro.models import model as M
+from repro.stream.bank import BankState, SeparatorBank
 
 PyTree = Any
 
@@ -43,10 +49,7 @@ class Engine:
         self.key = jax.random.PRNGKey(scfg.seed)
 
     def _sample(self, logits: jnp.ndarray) -> jnp.ndarray:
-        if self.cfg.n_codebooks:
-            logits = logits[:, -1]  # (B, K, V)
-        else:
-            logits = logits[:, -1]  # (B, V)
+        logits = logits[:, -1]  # last position: (B, V), or (B, K, V) w/ codebooks
         if self.scfg.temperature <= 0:
             return jnp.argmax(logits, axis=-1)
         self.key, k = jax.random.split(self.key)
@@ -73,3 +76,138 @@ class Engine:
             tok = self._sample(logits)[:, None] if not self.cfg.n_codebooks else self._sample(logits)[:, None, :]
         self.state = state
         return jnp.concatenate(out, axis=1), []
+
+
+class SeparationService:
+    """Continuous-batching front door for a ``SeparatorBank``.
+
+    Sessions (independent separation problems — one user's sensor stream, one
+    channel of an EEG array, ...) are admitted into free bank slots and
+    evicted when done; ``step`` advances every live session with ONE fused
+    bank program per tick.  Slots without fresh data this tick are frozen via
+    the bank's active mask, so intermittent streams don't corrupt their state.
+
+        svc = SeparationService(SeparatorBank(ecfg, ocfg, n_streams=64))
+        svc.admit("user-a"); svc.admit("user-b")
+        outs = svc.step({"user-a": xa, "user-b": xb})   # one fused launch
+        final = svc.evict("user-a")                     # SMBGDState handed back
+    """
+
+    def __init__(self, bank: SeparatorBank, seed: int = 0):
+        self.bank = bank
+        self.key = jax.random.PRNGKey(seed)
+        self.state: BankState = bank.init(self.key)
+        self._free: List[int] = list(range(bank.n_streams - 1, -1, -1))  # pop() → slot 0 first
+        self._slot_of: Dict[Hashable, int] = {}
+        self._step = jax.jit(lambda st, X, act: bank.step(st, X, active=act))
+
+    @property
+    def n_active(self) -> int:
+        return len(self._slot_of)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def admit(self, session_id: Hashable) -> int:
+        """Assign ``session_id`` a fresh separator in a free slot; returns the
+        slot index.  Raises when the bank is full or the id is already live."""
+        if session_id in self._slot_of:
+            raise ValueError(f"session {session_id!r} already admitted")
+        if not self._free:
+            raise RuntimeError(
+                f"bank full ({self.bank.n_streams} slots); evict before admitting"
+            )
+        slot = self._free.pop()
+        self.key, k = jax.random.split(self.key)
+        self.state = self.bank.init_slot(self.state, slot, k)
+        self._slot_of[session_id] = slot
+        return slot
+
+    def evict(self, session_id: Hashable) -> SMBGDState:
+        """Release the session's slot back to the free list; returns its final
+        single-stream state (B is the session's learned separation matrix)."""
+        slot = self._slot_of.pop(session_id)
+        final = self.bank.slot_state(self.state, slot)
+        self._free.append(slot)
+        return final
+
+    def step(self, batches: Dict[Hashable, jnp.ndarray]) -> Dict[Hashable, jnp.ndarray]:
+        """Advance every session that sent data this tick.
+
+        ``batches`` maps session_id → ``(P, m)`` mini-batch.  Sessions without
+        data (and free slots) are masked inactive — state untouched.  Returns
+        session_id → separated ``(P, n)`` outputs from one fused bank step.
+        """
+        if not batches:
+            return {}
+        unknown = set(batches) - set(self._slot_of)
+        if unknown:
+            raise KeyError(f"sessions not admitted: {sorted(map(str, unknown))}")
+        S = self.bank.n_streams
+        P = self.bank.opt.batch_size
+        m = self.bank.easi.n_features
+        X = np.zeros((S, P, m), dtype=np.float32)
+        active = np.zeros((S,), dtype=bool)
+        for sid, xb in batches.items():
+            xb = np.asarray(xb, dtype=np.float32)
+            if xb.shape != (P, m):  # don't let numpy broadcast a wrong batch
+                raise ValueError(
+                    f"session {sid!r}: batch shape {xb.shape} != required "
+                    f"(P={P}, m={m})"
+                )
+            slot = self._slot_of[sid]
+            X[slot] = xb
+            active[slot] = True
+        self.state, Y = self._step(self.state, jnp.asarray(X), jnp.asarray(active))
+        return {sid: Y[self._slot_of[sid]] for sid in batches}
+
+    # -- persistence -------------------------------------------------------
+    # The bank state is a plain pytree, so the array side round-trips through
+    # any Checkpointer.  The session→slot map is host bookkeeping (arbitrary
+    # hashable ids — not arrays): callers persist it themselves via
+    # ``sessions`` and hand it back to ``restore`` to resume live sessions.
+
+    @property
+    def sessions(self) -> Dict[Hashable, int]:
+        """Snapshot of the live session→slot map (save alongside the arrays)."""
+        return dict(self._slot_of)
+
+    def save(self, checkpointer, step: int) -> None:
+        # rng_key rides along so post-restore admissions continue the key
+        # sequence instead of replaying pre-save inits
+        checkpointer.save(step, dict(self.state._asdict(), rng_key=self.key))
+
+    def restore(
+        self,
+        checkpointer,
+        step: Optional[int] = None,
+        sessions: Optional[Dict[Hashable, int]] = None,
+    ) -> int:
+        """Restore bank arrays and (optionally) re-attach live sessions.
+
+        Without ``sessions`` every slot is considered free: restored separator
+        matrices are still in the arrays but will be overwritten as slots are
+        re-admitted.  Pass the ``sessions`` map captured at save time to
+        resume those sessions in place.
+        """
+        sessions = sessions or {}
+        bad = {
+            s: slot
+            for s, slot in sessions.items()
+            if not 0 <= slot < self.bank.n_streams
+        }
+        if bad:
+            raise ValueError(f"session slots out of range: {bad}")
+        if len(set(sessions.values())) != len(sessions):
+            raise ValueError(f"duplicate slots in session map: {sessions}")
+        # validate BEFORE mutating: a rejected map must leave the live
+        # service untouched
+        target = dict(self.state._asdict(), rng_key=self.key)
+        tree, got = checkpointer.restore(target, step=step)
+        self.key = tree.pop("rng_key")
+        self.state = BankState(**tree)
+        self._slot_of = dict(sessions)
+        taken = set(sessions.values())
+        self._free = [s for s in range(self.bank.n_streams - 1, -1, -1) if s not in taken]
+        return got

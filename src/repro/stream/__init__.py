@@ -1,0 +1,34 @@
+"""Multi-stream separation: banks of independent EASI/SMBGD sessions stepped
+as one array program.
+
+The paper's SMBGD freezes ``B`` inside a mini-batch so the datapath has no
+loop-carried dependency; this package exploits the same property across
+*sessions*: S independent separators are carried as one batched state
+(leading stream axis) and stepped by one fused program — ``vmap``-native math
+on CPU/GPU/TPU, a batched ``(streams, P-tiles)`` Pallas kernel on the fused
+path, and ``shard_map`` over the stream axis to scale banks across devices.
+
+Public API:
+  * ``Separator``       — single-stream front-end; ``algorithm`` knob collapses
+                          the three historical epoch drivers
+                          (``sgd | smbgd_sequential | smbgd_batched``).
+  * ``SeparatorBank``   — S-stream bank; same algorithms, batched state.
+  * ``BankState``       — ``B (S, n, m)``, ``H_hat (S, n, n)``, ``step (S,)``.
+  * ``make_sharded_bank_step`` / ``bank_sharding`` — stream-axis device
+    parallelism (streams are independent: no collectives in the hot path).
+
+Pallas kernels run through the interpreter by default so the CPU container can
+execute them; set ``REPRO_PALLAS_INTERPRET=0`` on real TPU hardware.
+"""
+from repro.stream.bank import BankState, SeparatorBank
+from repro.stream.separator import ALGORITHMS, Separator
+from repro.stream.sharding import bank_sharding, make_sharded_bank_step
+
+__all__ = [
+    "ALGORITHMS",
+    "BankState",
+    "Separator",
+    "SeparatorBank",
+    "bank_sharding",
+    "make_sharded_bank_step",
+]

@@ -1,0 +1,178 @@
+"""SeparatorBank: S independent separator sessions as one batched program.
+
+State carries a leading stream axis — ``B (S, n, m)``, ``H_hat (S, n, n)``,
+``step (S,)`` — and every step is one fused array program:
+
+  * non-Pallas paths are the single-stream step functions ``jax.vmap``-ed over
+    the stream axis (op-for-op the same math, so a bank of S streams matches S
+    independent runs to float tolerance),
+  * the Pallas path routes the weighted gradient sum of ALL streams through
+    one ``(streams, P-tiles)`` grid launch of the fused EASI-gradient kernel
+    (``kernels.easi_gradient.ops.easi_gradient_bank``) — S kernel dispatches
+    collapse into one.
+
+Per-stream ``step`` counters make the bank admission-friendly: a freshly
+admitted stream has ``step == 0`` and its first mini-batch gates γ off (the
+paper's first-batch rule) regardless of what the other streams are doing.
+``step(..., active=mask)`` freezes masked-out slots entirely — the
+continuous-batching hook used by ``serve.engine.SeparationService``.
+
+Checkpointing: ``BankState`` is a plain pytree of arrays, so
+``checkpoint.Checkpointer`` round-trips it unmodified (tested).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metrics as metrics_lib
+from repro.core import smbgd as smbgd_lib
+from repro.core.easi import EASIConfig
+from repro.core.smbgd import SMBGDConfig, SMBGDState
+from repro.stream.separator import Separator
+
+
+class BankState(NamedTuple):
+    """Batched carry for S separator sessions (leading stream axis)."""
+
+    B: jnp.ndarray  # (S, n, m)
+    H_hat: jnp.ndarray  # (S, n, n)
+    step: jnp.ndarray  # (S,) int32 — per-stream mini-batch counter
+
+
+@dataclasses.dataclass(frozen=True)
+class SeparatorBank:
+    """S-stream separation engine; same ``algorithm`` knob as ``Separator``."""
+
+    easi: EASIConfig
+    opt: SMBGDConfig
+    n_streams: int
+    algorithm: str = "smbgd_batched"
+    use_pallas: bool = False
+
+    def __post_init__(self) -> None:
+        if self.n_streams < 1:
+            raise ValueError("n_streams must be >= 1")
+        # reuse Separator's alias resolution + validation
+        sep = Separator(self.easi, self.opt, self.algorithm, self.use_pallas)
+        object.__setattr__(self, "algorithm", sep.algorithm)
+
+    @property
+    def _sep(self) -> Separator:
+        return Separator(self.easi, self.opt, self.algorithm, self.use_pallas)
+
+    # -- state ------------------------------------------------------------
+    def init(self, key: jax.Array) -> BankState:
+        """Independent per-stream inits from ``jax.random.split(key, S)`` —
+        stream s's state equals ``Separator.init(split_keys[s])`` exactly."""
+        keys = jax.random.split(key, self.n_streams)
+        sub = jax.vmap(lambda k: smbgd_lib.init_state(self.easi, k))(keys)
+        return BankState(B=sub.B, H_hat=sub.H_hat, step=sub.step)
+
+    def init_slot(self, state: BankState, slot, key: jax.Array) -> BankState:
+        """Reset one stream slot to a fresh session (admission path)."""
+        sub = smbgd_lib.init_state(self.easi, key)
+        return BankState(
+            B=state.B.at[slot].set(sub.B),
+            H_hat=state.H_hat.at[slot].set(sub.H_hat),
+            step=state.step.at[slot].set(sub.step),
+        )
+
+    @staticmethod
+    def slot_state(state: BankState, slot: int) -> SMBGDState:
+        """Extract one stream's state as a single-stream ``SMBGDState``."""
+        return SMBGDState(
+            B=state.B[slot], H_hat=state.H_hat[slot], step=state.step[slot]
+        )
+
+    @staticmethod
+    def stack_states(states) -> BankState:
+        """Stack S single-stream ``SMBGDState``s into a ``BankState``."""
+        return BankState(
+            B=jnp.stack([s.B for s in states]),
+            H_hat=jnp.stack([s.H_hat for s in states]),
+            step=jnp.stack([s.step for s in states]),
+        )
+
+    # -- stepping ----------------------------------------------------------
+    def step(
+        self,
+        state: BankState,
+        X: jnp.ndarray,
+        active: Optional[jnp.ndarray] = None,
+    ) -> Tuple[BankState, jnp.ndarray]:
+        """One fused mini-batch update for all streams.
+
+        ``X (S, P, m)`` → ``Y (S, P, n)``.  ``active (S,)`` bool (optional)
+        freezes masked-out slots: their state is returned unchanged (their Y
+        rows are still computed — garbage-in/garbage-out for free slots).
+        """
+        new_state, Y = self._step_all(state, X)
+        if active is not None:
+            a3 = active[:, None, None]
+            new_state = BankState(
+                B=jnp.where(a3, new_state.B, state.B),
+                H_hat=jnp.where(a3, new_state.H_hat, state.H_hat),
+                step=jnp.where(active, new_state.step, state.step),
+            )
+        return new_state, Y
+
+    def _step_all(self, state: BankState, X: jnp.ndarray):
+        if self.algorithm == "smbgd_batched" and self.use_pallas:
+            return self._step_pallas(state, X)
+        sep = self._sep
+        sub = SMBGDState(B=state.B, H_hat=state.H_hat, step=state.step)
+        new_sub, Y = jax.vmap(sep.step)(sub, X)
+        return BankState(B=new_sub.B, H_hat=new_sub.H_hat, step=new_sub.step), Y
+
+    def _step_pallas(self, state: BankState, X: jnp.ndarray):
+        """Closed-form SMBGD step with the gradient sum of all S streams fused
+        into one (streams, P-tiles) Pallas launch."""
+        from repro.kernels.easi_gradient import ops as easi_ops
+
+        B, H_prev = state.B, state.H_hat
+        Y = jnp.einsum("spm,snm->spn", X, B)  # per-stream Y = X Bᵀ
+        w = self.opt.within_batch_weights(dtype=B.dtype)
+        S_grad = easi_ops.easi_gradient_bank(
+            Y, w, nonlinearity=self.easi.nonlinearity
+        )
+        H_hat, B_next = smbgd_lib.smbgd_commit(
+            state.step, H_prev, S_grad, B, self.opt
+        )
+        return BankState(B=B_next, H_hat=H_hat, step=state.step + 1), Y
+
+    def epoch(
+        self, state: BankState, X: jnp.ndarray
+    ) -> Tuple[BankState, jnp.ndarray]:
+        """One pass over ``X (S, T, m)`` for every stream; returns
+        ``(state, Y (S, T', n))`` with T' = K·P (SMBGD) or T (SGD)."""
+        if self.algorithm == "sgd":
+            sep = self._sep
+            sub = SMBGDState(B=state.B, H_hat=state.H_hat, step=state.step)
+            new_sub, Y = jax.vmap(sep.epoch)(sub, X)
+            return BankState(new_sub.B, new_sub.H_hat, new_sub.step), Y
+        S, T, m = X.shape
+        P = self.opt.batch_size
+        K = T // P
+        Xb = X[:, : K * P].reshape(S, K, P, m).transpose(1, 0, 2, 3)  # (K, S, P, m)
+
+        def body(st, xb):
+            return self._step_all(st, xb)
+
+        state, Yb = jax.lax.scan(body, state, Xb)  # Yb (K, S, P, n)
+        return state, Yb.transpose(1, 0, 2, 3).reshape(S, K * P, -1)
+
+    # -- deployment / diagnostics -----------------------------------------
+    def transform(self, state: BankState, X: jnp.ndarray) -> jnp.ndarray:
+        """Per-stream separation: ``X (S, ..., m)`` → ``Y (S, ..., n)``."""
+        return jnp.einsum("s...m,snm->s...n", X, state.B)
+
+    def performance_index(self, state: BankState, A: jnp.ndarray) -> jnp.ndarray:
+        """Per-stream Amari index against mixing ``A (m, n)`` or ``(S, m, n)``."""
+        if A.ndim == 2:
+            A = jnp.broadcast_to(A, (self.n_streams,) + A.shape)
+        gs = jax.vmap(metrics_lib.global_system)(state.B, A)
+        return jax.vmap(metrics_lib.amari_index)(gs)

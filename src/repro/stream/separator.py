@@ -1,0 +1,98 @@
+"""Single-stream separator front-end: one API over the three epoch drivers.
+
+Historically the repo exposed three parallel single-stream drivers
+(``easi_sgd_scan``, ``smbgd_epoch``, ``smbgd_epoch_sequential``); ``Separator``
+collapses them behind an ``algorithm`` config knob:
+
+  * ``"sgd"``              — vanilla per-sample EASI (the paper's Table I
+                             baseline; serial ``lax.scan``),
+  * ``"smbgd_sequential"`` — literal Eq. 1 per-sample recurrence inside each
+                             mini-batch (the FPGA-semantics equivalence
+                             oracle),
+  * ``"smbgd_batched"``    — the closed-form MXU step (production path;
+                             ``use_pallas=True`` routes the gradient sum
+                             through the fused Pallas kernel).
+
+``"smbgd"`` is accepted as an alias of ``"smbgd_batched"`` for backwards
+compatibility (``repro.core.ica.AdaptiveICA`` is now a thin subclass).
+
+All methods are pure (state in / state out) over ``SMBGDState`` so they drop
+into jit/scan/vmap — ``repro.stream.bank.SeparatorBank`` is literally this
+class vmapped over a leading stream axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import easi as easi_lib
+from repro.core import metrics as metrics_lib
+from repro.core import smbgd as smbgd_lib
+from repro.core.easi import EASIConfig
+from repro.core.smbgd import SMBGDConfig, SMBGDState
+
+ALGORITHMS = ("sgd", "smbgd_sequential", "smbgd_batched")
+_ALIASES = {"smbgd": "smbgd_batched"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Separator:
+    easi: EASIConfig
+    opt: SMBGDConfig
+    algorithm: str = "smbgd_batched"
+    use_pallas: bool = False
+
+    def __post_init__(self) -> None:
+        canon = _ALIASES.get(self.algorithm, self.algorithm)
+        if canon not in ALGORITHMS:
+            raise ValueError(
+                f"unknown algorithm {self.algorithm!r}; "
+                f"available: {ALGORITHMS} (alias: {sorted(_ALIASES)})"
+            )
+        object.__setattr__(self, "algorithm", canon)
+
+    def init(self, key: jax.Array) -> SMBGDState:
+        return smbgd_lib.init_state(self.easi, key)
+
+    # -- training ---------------------------------------------------------
+    def epoch(self, state: SMBGDState, X: jnp.ndarray) -> Tuple[SMBGDState, jnp.ndarray]:
+        """One pass over ``X (T, m)``; returns updated state and outputs."""
+        if self.algorithm == "sgd":
+            B, Y = easi_lib.easi_sgd_scan(state.B, X, self.easi)
+            return state._replace(B=B, step=state.step + X.shape[0]), Y
+        if self.algorithm == "smbgd_sequential":
+            return smbgd_lib.smbgd_epoch_sequential(state, X, self.easi, self.opt)
+        return smbgd_lib.smbgd_epoch(
+            state, X, self.easi, self.opt, use_pallas=self.use_pallas
+        )
+
+    def step(
+        self, state: SMBGDState, X_batch: jnp.ndarray
+    ) -> Tuple[SMBGDState, jnp.ndarray]:
+        """One mini-batch update (streaming deployment; tracks drift)."""
+        if self.algorithm == "sgd":
+            B, Y = easi_lib.easi_sgd_scan(state.B, X_batch, self.easi)
+            return state._replace(B=B, step=state.step + X_batch.shape[0]), Y
+        if self.algorithm == "smbgd_sequential":
+            return smbgd_lib.smbgd_sequential_step(state, X_batch, self.easi, self.opt)
+        return smbgd_lib.smbgd_batched_step(
+            state, X_batch, self.easi, self.opt, use_pallas=self.use_pallas
+        )
+
+    # back-compat method names (the old AdaptiveICA estimator API)
+    def fit(self, state: SMBGDState, X: jnp.ndarray):
+        return self.epoch(state, X)
+
+    def partial_fit(self, state: SMBGDState, X_batch: jnp.ndarray):
+        return self.step(state, X_batch)
+
+    # -- deployment --------------------------------------------------------
+    def transform(self, state: SMBGDState, X: jnp.ndarray) -> jnp.ndarray:
+        return easi_lib.transform(state.B, X)
+
+    # -- diagnostics -------------------------------------------------------
+    def performance_index(self, state: SMBGDState, A: jnp.ndarray) -> jnp.ndarray:
+        return metrics_lib.amari_index(metrics_lib.global_system(state.B, A))

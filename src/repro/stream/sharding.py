@@ -1,0 +1,69 @@
+"""Device parallelism over the stream axis of a SeparatorBank.
+
+Streams are independent sessions, so sharding the bank over devices needs no
+collectives in the hot path — each device steps its local slice of the bank
+with the same fused program (``shard_map`` with everything partitioned over
+the stream axis).  This is the "rack of FPGAs" layout: bank state and the
+incoming mini-batches live sharded; only diagnostics ever gather.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.stream.bank import BankState, SeparatorBank
+
+
+def bank_sharding(mesh, axis: str = "stream") -> BankState:
+    """NamedSharding pytree for a BankState: every leaf partitioned over
+    ``axis`` on its leading (stream) dimension.  Feed to ``jax.device_put`` or
+    ``Checkpointer.restore(shardings=...)`` for reshard-on-load."""
+    return BankState(
+        B=NamedSharding(mesh, P(axis)),
+        H_hat=NamedSharding(mesh, P(axis)),
+        step=NamedSharding(mesh, P(axis)),
+    )
+
+
+def make_sharded_bank_step(bank: SeparatorBank, mesh, axis: str = "stream"):
+    """Build a jitted ``step(state, X[, active]) -> (state, Y)`` where the
+    bank's stream axis is sharded over mesh axis ``axis``.
+
+    Each device runs the fused bank step on its local streams; there are no
+    cross-device collectives (streams are independent).  Requires
+    ``bank.n_streams %% mesh.shape[axis] == 0``.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    n_dev = mesh.shape[axis]
+    if bank.n_streams % n_dev:
+        raise ValueError(
+            f"n_streams {bank.n_streams} not divisible by {n_dev} devices on "
+            f"axis {axis!r}"
+        )
+
+    def local_step(B, H_hat, step, X, active):
+        st, Y = bank.step(BankState(B, H_hat, step), X, active=active)
+        return st.B, st.H_hat, st.step, Y
+
+    sharded = shard_map(
+        local_step,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
+        out_specs=(P(axis), P(axis), P(axis), P(axis)),
+        check_rep=False,
+    )
+
+    @jax.jit
+    def step(
+        state: BankState, X: jnp.ndarray, active: Optional[jnp.ndarray] = None
+    ) -> Tuple[BankState, jnp.ndarray]:
+        if active is None:
+            active = jnp.ones((bank.n_streams,), dtype=bool)
+        B, H_hat, stp, Y = sharded(state.B, state.H_hat, state.step, X, active)
+        return BankState(B, H_hat, stp), Y
+
+    return step

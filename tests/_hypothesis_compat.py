@@ -1,0 +1,95 @@
+"""Graceful degradation when ``hypothesis`` is not installed.
+
+With hypothesis available the real ``given``/``settings``/``st`` are
+re-exported unchanged.  Without it (bare CPU containers), property tests
+degrade to deterministic seeded example tests: each strategy exposes a small
+list of representative values (always including the boundaries) and ``@given``
+runs the test body over a fixed-seed sample of combinations.  Coverage is
+thinner than real property testing but the suite still collects and runs.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised implicitly when hypothesis is present
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import inspect
+    import random as _random
+
+    HAVE_HYPOTHESIS = False
+
+    _MAX_EXAMPLES = 6  # per @given — seeded, not exhaustive
+
+    class _Strategy:
+        def __init__(self, examples):
+            self.examples = list(examples)
+
+    class _St:
+        """Deterministic stand-ins for the strategies this repo uses."""
+
+        @staticmethod
+        def sampled_from(seq):
+            return _Strategy(seq)
+
+        @staticmethod
+        def integers(min_value, max_value):
+            rng = _random.Random(f"int:{min_value}:{max_value}")
+            span = max_value - min_value
+            vals = {min_value, max_value, min_value + span // 2}
+            vals.update(min_value + rng.randrange(span + 1) for _ in range(3))
+            return _Strategy(sorted(vals))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            rng = _random.Random(f"float:{min_value}:{max_value}")
+            vals = [min_value, max_value, 0.5 * (min_value + max_value)]
+            vals += [
+                min_value + (max_value - min_value) * rng.random() for _ in range(2)
+            ]
+            return _Strategy(vals)
+
+    st = _St()
+
+    def settings(*_args, **_kwargs):  # max_examples/deadline are no-ops here
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        names = sorted(strategies)
+
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                rng = _random.Random(0)
+                pools = {k: strategies[k].examples for k in names}
+                n = min(max(len(p) for p in pools.values()), _MAX_EXAMPLES)
+                for i in range(n):
+                    # offset each pool by its key index so equal-length pools
+                    # aren't paired diagonally (covers cross-boundary combos
+                    # like (min, max) instead of only (min, min))
+                    chosen = {
+                        k: (
+                            pools[k][(i + j) % len(pools[k])]
+                            if i < n - 1
+                            else rng.choice(pools[k])
+                        )
+                        for j, k in enumerate(names)
+                    }
+                    fn(*args, **{**kwargs, **chosen})
+
+            # Hide the strategy-supplied params from pytest's fixture
+            # resolution (deliberately NOT functools.wraps: __wrapped__ would
+            # expose the original signature again).
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(
+                parameters=[
+                    p for p in sig.parameters.values() if p.name not in strategies
+                ]
+            )
+            return wrapper
+
+        return deco

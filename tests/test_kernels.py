@@ -4,10 +4,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
-from repro.kernels.easi_gradient.ops import easi_gradient
-from repro.kernels.easi_gradient.ref import easi_gradient_ref
+from repro.core.nonlinearities import NONLINEARITIES
+from repro.kernels.easi_gradient.easi_gradient import NONLIN_KERNELS
+from repro.kernels.easi_gradient.ops import easi_gradient, easi_gradient_bank
+from repro.kernels.easi_gradient.ref import easi_gradient_bank_ref, easi_gradient_ref
 from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.smbgd_update.ops import smbgd_update
@@ -49,6 +51,48 @@ class TestEASIGradientKernel:
         S_r = easi_gradient_ref(Y, w)
         scale = max(1.0, float(jnp.max(jnp.abs(S_r))))
         assert float(jnp.max(jnp.abs(S_k - S_r))) < 1e-3 * scale
+
+    def test_nonlin_table_is_core_registry(self):
+        """The kernel nonlinearity bank must BE the core registry (satellite:
+        the hand-copied table let `relu` drift once already)."""
+        assert NONLIN_KERNELS is NONLINEARITIES
+
+
+class TestEASIGradientBankKernel:
+    """The (streams, P-tiles) batched grid: one launch folds all streams."""
+
+    @pytest.mark.parametrize("S,P,n", [(1, 64, 2), (4, 64, 2), (3, 513, 17), (8, 100, 7)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_bank_oracle(self, S, P, n, dtype):
+        key = jax.random.PRNGKey(S * 10_000 + P * 10 + n)
+        Y = jax.random.normal(key, (S, P, n), dtype)
+        w = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (P,))) * 0.1
+        S_k = easi_gradient_bank(Y, w)
+        S_r = easi_gradient_bank_ref(Y, w)
+        tol = 5e-3 if dtype == jnp.bfloat16 else 2e-3
+        scale = max(1.0, float(jnp.max(jnp.abs(S_r))))
+        assert float(jnp.max(jnp.abs(S_k - S_r))) < tol * scale
+
+    def test_streams_bit_identical_to_single_launches(self):
+        """Each stream's slice must equal a single-stream launch with the same
+        block geometry — the bank grid adds no numerical difference."""
+        key = jax.random.PRNGKey(0)
+        Y = jax.random.normal(key, (5, 200, 6))
+        w = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (200,))) * 0.01
+        bank = easi_gradient_bank(Y, w)
+        singles = jnp.stack([easi_gradient(Y[s], w) for s in range(5)])
+        np.testing.assert_array_equal(np.asarray(bank), np.asarray(singles))
+
+    @pytest.mark.parametrize("nl", sorted(NONLINEARITIES))
+    def test_all_nonlinearities(self, nl):
+        key = jax.random.PRNGKey(1)
+        Y = jax.random.normal(key, (3, 128, 8))
+        w = jnp.ones((128,)) * 1e-3
+        np.testing.assert_allclose(
+            np.asarray(easi_gradient_bank(Y, w, nonlinearity=nl)),
+            np.asarray(easi_gradient_bank_ref(Y, w, nonlinearity=nl)),
+            rtol=1e-4, atol=1e-5,
+        )
 
 
 class TestSMBGDUpdateKernel:

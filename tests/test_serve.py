@@ -11,7 +11,8 @@ from repro.configs.registry import get_config
 from repro.core import AdaptiveICA, EASIConfig, SMBGDConfig, amari_index, global_system
 from repro.data.pipeline import MixedSignals
 from repro.models import model as M
-from repro.serve.engine import Engine, ServeConfig
+from repro.serve.engine import Engine, SeparationService, ServeConfig
+from repro.stream import SeparatorBank
 
 
 @pytest.mark.parametrize("arch", ["smollm-135m", "xlstm-1.3b", "musicgen-large"])
@@ -43,6 +44,189 @@ def test_generation_matches_forward_argmax():
         prompts, n_new=1
     )
     np.testing.assert_array_equal(np.asarray(out[:, 0]), np.asarray(expected))
+
+
+class TestSampling:
+    """Engine._sample: greedy vs temperature, with and without codebooks."""
+
+    def _engine(self, temperature, n_codebooks=0):
+        cfg = dataclasses.replace(
+            get_config("musicgen-large" if n_codebooks else "smollm-135m").reduced(),
+            n_layers=1,
+        )
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        return Engine(
+            cfg, params, ServeConfig(max_batch=2, max_len=16, temperature=temperature)
+        ), cfg
+
+    def test_greedy_is_argmax(self):
+        eng, cfg = self._engine(temperature=0.0)
+        logits = jax.random.normal(jax.random.PRNGKey(1), (2, 3, cfg.vocab_size))
+        tok = eng._sample(logits)
+        np.testing.assert_array_equal(
+            np.asarray(tok), np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        )
+
+    def test_temperature_samples_in_range_and_advances_key(self):
+        eng, cfg = self._engine(temperature=1.0)
+        logits = jax.random.normal(jax.random.PRNGKey(2), (2, 3, cfg.vocab_size))
+        key_before = np.asarray(eng.key)
+        tok = eng._sample(logits)
+        assert tok.shape == (2,)
+        assert int(tok.max()) < cfg.vocab_size and int(tok.min()) >= 0
+        assert not np.array_equal(key_before, np.asarray(eng.key))
+        # near-zero temperature concentrates on the argmax
+        eng.scfg.temperature = 1e-4
+        tok_cold = eng._sample(logits)
+        np.testing.assert_array_equal(
+            np.asarray(tok_cold), np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        )
+
+    def test_codebook_path_samples_every_codebook(self):
+        eng, cfg = self._engine(temperature=0.0, n_codebooks=4)
+        K = cfg.n_codebooks
+        logits = jax.random.normal(jax.random.PRNGKey(3), (2, 3, K, cfg.vocab_size))
+        tok = eng._sample(logits)
+        assert tok.shape == (2, K)
+        np.testing.assert_array_equal(
+            np.asarray(tok), np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        )
+
+
+class TestSeparationService:
+    """Continuous-batching admission into SeparatorBank slots."""
+
+    def _svc(self, S=4, P=8):
+        ecfg = EASIConfig(n_components=2, n_features=4, mu=2e-3)
+        ocfg = SMBGDConfig(batch_size=P, mu=2e-3, beta=0.9, gamma=0.5)
+        return SeparationService(SeparatorBank(ecfg, ocfg, n_streams=S), seed=0)
+
+    def test_admit_step_evict_lifecycle(self):
+        svc = self._svc()
+        slot_a = svc.admit("a")
+        svc.admit("b")
+        assert svc.n_active == 2 and svc.n_free == 2
+        X = jax.random.normal(jax.random.PRNGKey(1), (8, 4))
+        out = svc.step({"a": X, "b": X})
+        assert set(out) == {"a", "b"} and out["a"].shape == (8, 2)
+        final = svc.evict("a")
+        assert final.B.shape == (2, 4) and int(final.step) == 1
+        # freed slot is reused by the next admission
+        assert svc.admit("c") == slot_a
+
+    def test_session_matches_independent_separator(self):
+        """A session stepped through the service must follow exactly the
+        trajectory of a standalone separator with the same init."""
+        from repro.core import smbgd as smbgd_lib
+
+        svc = self._svc()
+        svc.admit("only")
+        slot = svc._slot_of["only"]
+        st_ref = svc.bank.slot_state(svc.state, slot)
+        ecfg, ocfg = svc.bank.easi, svc.bank.opt
+        for k in range(5):
+            X = jax.random.normal(jax.random.PRNGKey(10 + k), (8, 4))
+            out = svc.step({"only": X})
+            st_ref, Y_ref = smbgd_lib.smbgd_batched_step(st_ref, X, ecfg, ocfg)
+            np.testing.assert_allclose(
+                np.asarray(out["only"]), np.asarray(Y_ref), rtol=1e-5, atol=1e-6
+            )
+        final = svc.evict("only")
+        np.testing.assert_allclose(
+            np.asarray(final.B), np.asarray(st_ref.B), rtol=1e-5, atol=1e-6
+        )
+
+    def test_idle_sessions_frozen(self):
+        svc = self._svc()
+        svc.admit("busy")
+        svc.admit("idle")
+        idle_before = svc.bank.slot_state(svc.state, svc._slot_of["idle"])
+        for k in range(3):
+            svc.step({"busy": jax.random.normal(jax.random.PRNGKey(k), (8, 4))})
+        idle_after = svc.bank.slot_state(svc.state, svc._slot_of["idle"])
+        np.testing.assert_array_equal(
+            np.asarray(idle_before.B), np.asarray(idle_after.B)
+        )
+        assert int(idle_after.step) == 0
+
+    def test_capacity_and_duplicate_guards(self):
+        svc = self._svc(S=2)
+        svc.admit("a")
+        with pytest.raises(ValueError):
+            svc.admit("a")
+        svc.admit("b")
+        with pytest.raises(RuntimeError):
+            svc.admit("c")
+        with pytest.raises(KeyError):
+            svc.step({"ghost": jnp.zeros((8, 4))})
+
+    def test_wrong_batch_shape_rejected(self):
+        """A wrong-shaped mini-batch must error, not silently broadcast."""
+        svc = self._svc()
+        svc.admit("a")
+        for bad in ((4,), (1, 4), (5, 4), (8, 3)):
+            with pytest.raises(ValueError, match="batch shape"):
+                svc.step({"a": jnp.zeros(bad)})
+
+    def test_checkpoint_roundtrip_resumes_sessions(self, tmp_path):
+        from repro.checkpoint.checkpointer import Checkpointer
+
+        svc = self._svc()
+        svc.admit("a")
+        X = jax.random.normal(jax.random.PRNGKey(0), (8, 4))
+        svc.step({"a": X})
+        ckpt = Checkpointer(tmp_path)
+        svc.save(ckpt, step=1)
+        sessions = svc.sessions
+
+        svc2 = self._svc()
+        got = svc2.restore(ckpt, sessions=sessions)
+        assert got == 1
+        for a, b in zip(svc.state, svc2.state):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # session "a" resumes in place: same trajectory as the original...
+        np.testing.assert_array_equal(
+            np.asarray(svc.step({"a": X})["a"]), np.asarray(svc2.step({"a": X})["a"])
+        )
+        # ...a new admission cannot steal its slot...
+        slot_b = svc2.admit("b")
+        assert slot_b != sessions["a"]
+        # ...and the RNG key resumed too: both services mint the SAME next
+        # session (resume equivalence), which differs from session "a"'s init
+        slot_b_orig = svc.admit("b")
+        np.testing.assert_array_equal(
+            np.asarray(svc.bank.slot_state(svc.state, slot_b_orig).B),
+            np.asarray(svc2.bank.slot_state(svc2.state, slot_b).B),
+        )
+        assert not np.array_equal(
+            np.asarray(svc2.bank.slot_state(svc2.state, slot_b).B),
+            np.asarray(svc2.bank.slot_state(svc2.state, sessions["a"]).B),
+        )
+
+    def test_restore_validates_session_map(self, tmp_path):
+        from repro.checkpoint.checkpointer import Checkpointer
+
+        svc = self._svc()
+        svc.admit("live")
+        svc.step({"live": jax.random.normal(jax.random.PRNGKey(0), (8, 4))})
+        ckpt = Checkpointer(tmp_path)
+        svc.save(ckpt, step=0)
+        state_before = jax.tree.map(np.asarray, svc.state._asdict())
+        with pytest.raises(ValueError, match="out of range"):
+            svc.restore(ckpt, sessions={"a": 99})
+        with pytest.raises(ValueError, match="duplicate"):
+            svc.restore(ckpt, sessions={"a": 0, "b": 0})
+        # a rejected restore must leave the live service fully untouched
+        assert svc.sessions == {"live": 0}
+        for k, v in svc.state._asdict().items():
+            np.testing.assert_array_equal(np.asarray(v), state_before[k])
+
+    def test_empty_tick_is_noop(self):
+        svc = self._svc()
+        svc.admit("a")
+        state_before = svc.state
+        assert svc.step({}) == {}
+        assert svc.state is state_before  # no fused launch dispatched
 
 
 class TestAdaptiveICADeployment:

@@ -1,0 +1,295 @@
+"""SeparatorBank: S-stream equivalence with S independent single-stream runs
+(the bank's central correctness claim), algorithm dispatch, admission masking,
+stream-axis sharding, checkpoint round-trip, and the streamed data pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import easi as easi_lib
+from repro.core import smbgd as smbgd_lib
+from repro.core.easi import EASIConfig
+from repro.core.smbgd import SMBGDConfig
+from repro.data.pipeline import MixedSignals
+from repro.stream import (
+    BankState,
+    Separator,
+    SeparatorBank,
+    bank_sharding,
+    make_sharded_bank_step,
+)
+
+
+def _cfgs(P=8, mu=2e-3, beta=0.9, gamma=0.5, n=2, m=4):
+    return (
+        EASIConfig(n_components=n, n_features=m, mu=mu),
+        SMBGDConfig(batch_size=P, mu=mu, beta=beta, gamma=gamma),
+    )
+
+
+class TestSeparatorFrontend:
+    """One front-end over the three historical epoch drivers."""
+
+    def test_algorithm_dispatch_matches_drivers(self):
+        ecfg, ocfg = _cfgs()
+        key = jax.random.PRNGKey(0)
+        X = jax.random.normal(key, (64, 4))
+        st0 = smbgd_lib.init_state(ecfg, jax.random.PRNGKey(1))
+
+        sep = Separator(ecfg, ocfg, algorithm="smbgd_batched")
+        st_a, Y_a = sep.epoch(st0, X)
+        st_b, Y_b = smbgd_lib.smbgd_epoch(st0, X, ecfg, ocfg)
+        np.testing.assert_array_equal(np.asarray(st_a.B), np.asarray(st_b.B))
+
+        sep = Separator(ecfg, ocfg, algorithm="smbgd_sequential")
+        st_a, _ = sep.epoch(st0, X)
+        st_b, _ = smbgd_lib.smbgd_epoch_sequential(st0, X, ecfg, ocfg)
+        np.testing.assert_array_equal(np.asarray(st_a.B), np.asarray(st_b.B))
+
+        sep = Separator(ecfg, ocfg, algorithm="sgd")
+        st_a, _ = sep.epoch(st0, X)
+        B_b, _ = easi_lib.easi_sgd_scan(st0.B, X, ecfg)
+        np.testing.assert_array_equal(np.asarray(st_a.B), np.asarray(B_b))
+
+    def test_smbgd_alias_and_unknown_rejected(self):
+        ecfg, ocfg = _cfgs()
+        assert Separator(ecfg, ocfg, algorithm="smbgd").algorithm == "smbgd_batched"
+        with pytest.raises(ValueError):
+            Separator(ecfg, ocfg, algorithm="newton")
+
+
+class TestBankEquivalence:
+    """A bank of S streams must match S independent single-stream runs."""
+
+    def test_s64_matches_64_independent_epochs(self):
+        """The acceptance bar: SeparatorBank(S=64) ≡ 64 × smbgd_epoch ≤ 1e-5."""
+        ecfg, ocfg = _cfgs(P=8)
+        S, T = 64, 256
+        key = jax.random.PRNGKey(7)
+        bank = SeparatorBank(ecfg, ocfg, n_streams=S)
+        state = bank.init(key)
+        # real per-stream separation problems (raw normal data can diverge)
+        X = MixedSignals(m=4, n=2, batch=T, seed=0, streams=S).batch_for_step(0)
+        state2, Y = bank.epoch(state, X)
+        # fused Pallas path must hold the same bar over the full epoch
+        state_p, Y_p = jax.jit(
+            SeparatorBank(ecfg, ocfg, n_streams=S, use_pallas=True).epoch
+        )(state, X)
+        keys = jax.random.split(key, S)
+        for s in range(S):
+            st0 = smbgd_lib.init_state(ecfg, keys[s])
+            st1, Y1 = smbgd_lib.smbgd_epoch(st0, X[s], ecfg, ocfg)
+            assert float(jnp.max(jnp.abs(st1.B - state2.B[s]))) <= 1e-5
+            assert float(jnp.max(jnp.abs(st1.H_hat - state2.H_hat[s]))) <= 1e-5
+            assert float(jnp.max(jnp.abs(Y1 - Y[s]))) <= 1e-5
+            assert float(jnp.max(jnp.abs(st1.B - state_p.B[s]))) <= 1e-5
+            assert float(jnp.max(jnp.abs(Y1 - Y_p[s]))) <= 1e-5
+
+    @pytest.mark.parametrize("algorithm", ["sgd", "smbgd_sequential"])
+    def test_other_algorithms_match_independent(self, algorithm):
+        ecfg, ocfg = _cfgs(P=4)
+        S, T = 6, 64
+        key = jax.random.PRNGKey(3)
+        bank = SeparatorBank(ecfg, ocfg, n_streams=S, algorithm=algorithm)
+        state = bank.init(key)
+        X = jax.random.normal(jax.random.fold_in(key, 1), (S, T, 4))
+        state2, Y = bank.epoch(state, X)
+        keys = jax.random.split(key, S)
+        sep = Separator(ecfg, ocfg, algorithm=algorithm)
+        for s in range(S):
+            st1, Y1 = sep.epoch(sep.init(keys[s]), X[s])
+            assert float(jnp.max(jnp.abs(st1.B - state2.B[s]))) <= 1e-5
+            assert float(jnp.max(jnp.abs(Y1 - Y[s]))) <= 1e-5
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("P,n,m", [(8, 2, 4), (13, 3, 5), (32, 17, 17)])
+    def test_pallas_bank_matches_vmap_path(self, dtype, P, n, m):
+        """Fused (streams, tiles) kernel vs the vmapped reference math for one
+        bank step, across dtypes and odd (non-lane-aligned) n / odd P padding
+        cases.  Single-step on purpose: multi-step trajectories are chaotic
+        and amplify bf16 ulps unboundedly (fp32 epochs are compared in
+        ``test_s64_matches_64_independent_epochs``)."""
+        ecfg = EASIConfig(n_components=n, n_features=m, mu=1e-3, dtype=dtype)
+        ocfg = SMBGDConfig(batch_size=P, mu=1e-3, beta=0.9, gamma=0.5)
+        S = 5
+        key = jax.random.PRNGKey(P * 10 + n)
+        X = jax.random.normal(jax.random.fold_in(key, 1), (S, P, m), dtype)
+        ref_bank = SeparatorBank(ecfg, ocfg, n_streams=S, use_pallas=False)
+        pal_bank = SeparatorBank(ecfg, ocfg, n_streams=S, use_pallas=True)
+        state = ref_bank.init(key)
+        st_r, Y_r = ref_bank.step(state, X)
+        st_p, Y_p = jax.jit(pal_bank.step)(state, X)
+        # bf16 has ~2^-8 relative resolution → a few ulps of slack
+        tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+        assert float(jnp.max(jnp.abs(st_r.B.astype(jnp.float32) - st_p.B.astype(jnp.float32)))) <= tol
+        assert float(jnp.max(jnp.abs(Y_r.astype(jnp.float32) - Y_p.astype(jnp.float32)))) <= tol
+
+    def test_fresh_slot_gamma_gated_independently(self):
+        """Per-stream step counters: a freshly admitted stream (step=0) must
+        gate γ off even while its neighbours are at step k ≫ 0."""
+        ecfg, ocfg = _cfgs(P=4, gamma=0.9)
+        bank = SeparatorBank(ecfg, ocfg, n_streams=2)
+        key = jax.random.PRNGKey(0)
+        state = bank.init(key)
+        # poison both momentum buffers; stream 1 pretends to be at step 5
+        state = BankState(
+            B=state.B,
+            H_hat=jnp.full_like(state.H_hat, 1e3),
+            step=state.step.at[1].set(5),
+        )
+        X = jax.random.normal(jax.random.fold_in(key, 1), (2, 4, 4))
+        new_state, _ = bank.step(state, X)
+        # stream 0 (step=0): poisoned H ignored → finite, small B
+        st0 = smbgd_lib.init_state(ecfg, jax.random.split(key, 2)[0])
+        ref, _ = smbgd_lib.smbgd_batched_step(
+            st0._replace(B=state.B[0], H_hat=state.H_hat[0]), X[0], ecfg, ocfg
+        )
+        np.testing.assert_allclose(
+            np.asarray(new_state.B[0]), np.asarray(ref.B), atol=1e-6
+        )
+        # stream 1 (step=5): poisoned H applied → very different B
+        assert float(jnp.max(jnp.abs(new_state.B[1] - state.B[1]))) > 1.0
+
+    def test_active_mask_freezes_slots(self):
+        ecfg, ocfg = _cfgs(P=4)
+        bank = SeparatorBank(ecfg, ocfg, n_streams=4)
+        key = jax.random.PRNGKey(0)
+        state = bank.init(key)
+        X = jax.random.normal(jax.random.fold_in(key, 1), (4, 4, 4))
+        active = jnp.array([True, False, True, False])
+        new_state, _ = bank.step(state, X, active=active)
+        for s, a in enumerate(active):
+            same = bool(jnp.all(new_state.B[s] == state.B[s]))
+            stepped = int(new_state.step[s]) == int(state.step[s]) + 1
+            assert same != bool(a)
+            assert stepped == bool(a)
+
+    def test_bank_converges_per_stream(self):
+        """Every stream of a bank fed its own separation problem converges."""
+        ecfg, ocfg = _cfgs(P=16, mu=3e-3)
+        S = 4
+        bank = SeparatorBank(ecfg, ocfg, n_streams=S)
+        state = bank.init(jax.random.PRNGKey(0))
+        pipe = MixedSignals(m=4, n=2, batch=16, seed=0, streams=S)
+        step = jax.jit(lambda st, x: bank.step(st, x))
+        for k in range(1500):
+            state, _ = step(state, pipe.batch_for_step(k))
+        pi = bank.performance_index(state, pipe.mixing_at(1499))
+        assert pi.shape == (S,)
+        assert float(jnp.max(pi)) < 0.2, np.asarray(pi)
+
+
+class TestSlotHelpers:
+    def test_stack_states_inverts_slot_state(self):
+        """stack/slot round-trip: a bank rebuilt from its per-slot states is
+        the same bank (the warm-migration path)."""
+        ecfg, ocfg = _cfgs()
+        bank = SeparatorBank(ecfg, ocfg, n_streams=5)
+        state = bank.init(jax.random.PRNGKey(4))
+        rebuilt = SeparatorBank.stack_states(
+            [bank.slot_state(state, s) for s in range(5)]
+        )
+        for a, b in zip(state, rebuilt):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestBankSharding:
+    def test_sharded_step_matches_local(self):
+        ecfg, ocfg = _cfgs(P=8)
+        bank = SeparatorBank(ecfg, ocfg, n_streams=4)
+        key = jax.random.PRNGKey(1)
+        state = bank.init(key)
+        X = jax.random.normal(jax.random.fold_in(key, 1), (4, 8, 4))
+        mesh = jax.make_mesh((1,), ("stream",))
+        sharded_step = make_sharded_bank_step(bank, mesh)
+        st_sh, Y_sh = sharded_step(state, X)
+        st_lo, Y_lo = bank.step(state, X)
+        np.testing.assert_allclose(
+            np.asarray(st_sh.B), np.asarray(st_lo.B), rtol=1e-6, atol=1e-7
+        )
+        np.testing.assert_allclose(
+            np.asarray(Y_sh), np.asarray(Y_lo), rtol=1e-6, atol=1e-7
+        )
+
+    def test_indivisible_streams_rejected(self):
+        import types
+
+        ecfg, ocfg = _cfgs()
+        bank = SeparatorBank(ecfg, ocfg, n_streams=3)
+        # divisibility is checked before shard_map is built, so a stub mesh
+        # with a 2-way stream axis exercises the rejection on 1 CPU device
+        stub = types.SimpleNamespace(shape={"stream": 2})
+        with pytest.raises(ValueError, match="not divisible"):
+            make_sharded_bank_step(bank, stub)
+        # and 4 % 1 == 0 on a real 1-device mesh builds fine
+        mesh = jax.make_mesh((1,), ("stream",))
+        assert callable(make_sharded_bank_step(
+            SeparatorBank(ecfg, ocfg, n_streams=4), mesh
+        ))
+
+    def test_bank_sharding_placement(self):
+        from jax.sharding import NamedSharding
+
+        ecfg, ocfg = _cfgs()
+        bank = SeparatorBank(ecfg, ocfg, n_streams=2)
+        mesh = jax.make_mesh((1,), ("stream",))
+        sh = bank_sharding(mesh)
+        state = bank.init(jax.random.PRNGKey(0))
+        placed = jax.device_put(state, sh)
+        assert isinstance(placed.B.sharding, NamedSharding)
+
+
+class TestBankCheckpoint:
+    def test_bank_state_roundtrip(self, tmp_path):
+        from repro.checkpoint.checkpointer import Checkpointer
+
+        ecfg, ocfg = _cfgs()
+        bank = SeparatorBank(ecfg, ocfg, n_streams=8)
+        key = jax.random.PRNGKey(2)
+        state = bank.init(key)
+        state, _ = bank.epoch(
+            state, jax.random.normal(jax.random.fold_in(key, 1), (8, 64, 4))
+        )
+        ckpt = Checkpointer(tmp_path)
+        ckpt.save(11, state._asdict())
+        restored, step = ckpt.restore(jax.tree.map(jnp.zeros_like, state._asdict()))
+        assert step == 11
+        restored = BankState(**restored)
+        for a, b in zip(state, restored):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestStreamedMixedSignals:
+    def test_stream_axis_shapes_and_determinism(self):
+        pipe = MixedSignals(m=4, n=2, batch=8, seed=0, streams=3)
+        a = pipe.batch_for_step(5)
+        assert a.shape == (3, 8, 4)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(pipe.batch_for_step(5)))
+
+    def test_streams_are_distinct_problems(self):
+        pipe = MixedSignals(m=4, n=2, batch=8, seed=0, streams=3)
+        X = np.asarray(pipe.batch_for_step(0))
+        assert not np.allclose(X[0], X[1])
+        A = np.asarray(pipe.mixing_at(0))
+        assert A.shape == (3, 4, 2)
+        assert not np.allclose(A[0], A[1])
+
+    def test_per_stream_drift_staggered(self):
+        pipe = MixedSignals(m=4, n=2, batch=8, seed=0, streams=2, drift_rate=1e-3)
+        d0 = np.asarray(pipe.mixing_at(500, 0) - pipe.mixing_at(0, 0))
+        d1 = np.asarray(pipe.mixing_at(500, 1) - pipe.mixing_at(0, 1))
+        assert np.abs(d0).max() > 1e-3 and np.abs(d1).max() > 1e-3
+        assert not np.allclose(d0, d1)
+
+    def test_dp_slices_stream_axis(self):
+        pipe = MixedSignals(m=4, n=2, batch=8, seed=0, streams=4)
+        full = pipe.batch_for_step(2, 0, 1)
+        parts = jnp.concatenate(
+            [pipe.batch_for_step(2, r, 2) for r in range(2)], axis=0
+        )
+        np.testing.assert_array_equal(np.asarray(full), np.asarray(parts))
+
+    def test_legacy_single_stream_unchanged(self):
+        pipe = MixedSignals(m=4, n=2, batch=8, seed=0)
+        assert pipe.batch_for_step(0).shape == (8, 4)
+        assert pipe.mixing_at(0).shape == (4, 2)
