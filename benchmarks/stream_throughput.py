@@ -5,9 +5,15 @@ The paper's Table I measured one datapath's throughput; this measures the
 does): every tick each live session delivers a ``(P, m)`` mini-batch, and the
 engine must advance all S sessions before the next tick.
 
-  * ``bank`` — ONE fused ``SeparatorBank.step`` per tick (leading stream axis;
-    optionally the batched (streams, P-tiles) Pallas kernel),
-  * ``loop`` — the naive engine: a Python loop dispatching S jitted
+  * ``bank``   — ONE fused ``SeparatorBank.step`` per tick (vmap XLA math on
+    the leading stream axis),
+  * ``bank_pallas`` — the PR-1 Pallas path: the weighted gradient sum of all
+    streams in one (streams, P-tiles) kernel, Y/commit as XLA ops around it,
+  * ``fused_step`` — the whole-step megakernel: Y = X Bᵀ, nonlinearity,
+    gradient sum AND the SMBGD commit in one launch on persistent padded
+    state, with donated buffers and a block-aligned X (the zero-copy serving
+    configuration),
+  * ``loop``   — the naive engine: a Python loop dispatching S jitted
     single-stream ``smbgd_batched_step`` calls per tick.
 
 Per-tick wall-clock of the bank grows sublinearly in S (one dispatch, one
@@ -15,7 +21,11 @@ compiled program, vectorized math) while the loop pays per-session dispatch
 every tick.  samples/sec vs S goes to ``BENCH_streams.json`` so the perf
 trajectory is recorded run over run.
 
-    PYTHONPATH=src python benchmarks/stream_throughput.py [--quick] [--pallas]
+    PYTHONPATH=src python benchmarks/stream_throughput.py [--quick]
+    PYTHONPATH=src python benchmarks/stream_throughput.py --autotune   # block_p sweep
+    PYTHONPATH=src python benchmarks/stream_throughput.py --smoke      # CI gate:
+        re-measures S=8 and exits 1 on a >2x per-tick regression vs the
+        checked-in BENCH_streams.json
 """
 from __future__ import annotations
 
@@ -24,7 +34,7 @@ import json
 import sys
 import time
 from pathlib import Path
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 
@@ -36,6 +46,29 @@ from repro.core.easi import EASIConfig
 from repro.core.smbgd import SMBGDConfig
 from repro.stream import SeparatorBank
 
+DEFAULT_OUT = Path(__file__).parent.parent / "BENCH_streams.json"
+SMOKE_S = 8
+SMOKE_FACTOR = 2.0  # CI fails when a tick gets this much slower
+SMOKE_KEYS = ("bank_tick_s", "fused_tick_s")
+
+
+def _time_step_loop(step, state0, n_ticks, reps, *args, copy_state=False):
+    """Best-of-reps per-tick wall clock for ``state, _ = step(state, *args)``.
+
+    ``copy_state=True`` re-clones the initial state each rep — required when
+    ``step`` donates its state buffers (the clone is outside the timed
+    region, like a real service's startup)."""
+    t_best = float("inf")
+    for _ in range(reps):
+        st = jax.tree.map(jnp.copy, state0) if copy_state else state0
+        jax.block_until_ready(st)
+        t0 = time.perf_counter()
+        for _ in range(n_ticks):
+            st, _ = step(st, *args)
+        jax.block_until_ready(st)
+        t_best = min(t_best, (time.perf_counter() - t0) / n_ticks)
+    return t_best
+
 
 def bench_streams(
     S: int,
@@ -43,27 +76,40 @@ def bench_streams(
     m: int = 4,
     n: int = 2,
     n_ticks: int = 50,
-    use_pallas: bool = False,
     reps: int = 3,
+    block_p: Optional[int] = None,
 ) -> Dict[str, float]:
     ecfg = EASIConfig(n_components=n, n_features=m, mu=1e-3)
     ocfg = SMBGDConfig(batch_size=P, mu=1e-3, beta=0.9, gamma=0.5)
     key = jax.random.PRNGKey(0)
     X = jax.random.normal(jax.random.fold_in(key, 1), (S, P, m))
 
-    # fused bank: one jitted step advances all S sessions
-    bank = SeparatorBank(ecfg, ocfg, n_streams=S, use_pallas=use_pallas)
+    # fused bank: one jitted step advances all S sessions (vmap XLA baseline)
+    bank = SeparatorBank(ecfg, ocfg, n_streams=S)
     bank_step = jax.jit(bank.step)
     state0 = bank.init(key)
     jax.block_until_ready(bank_step(state0, X))  # compile
-    t_bank = float("inf")
-    for _ in range(reps):
-        st = state0
-        t0 = time.perf_counter()
-        for _ in range(n_ticks):
-            st, _ = bank_step(st, X)
-        jax.block_until_ready(st)
-        t_bank = min(t_bank, (time.perf_counter() - t0) / n_ticks)
+    t_bank = _time_step_loop(bank_step, state0, n_ticks, reps, X)
+
+    # PR-1 Pallas path: gradient-sum kernel, XLA Y/commit around it
+    pbank = SeparatorBank(ecfg, ocfg, n_streams=S, use_pallas=True)
+    pbank_step = jax.jit(pbank.step)
+    jax.block_until_ready(pbank_step(state0, X))
+    t_pallas = _time_step_loop(pbank_step, state0, n_ticks, reps, X)
+
+    # whole-step megakernel: persistent padded state, block-aligned X,
+    # donation per backend default — the zero-copy serving configuration
+    fused = SeparatorBank(ecfg, ocfg, n_streams=S, fused=True, block_p=block_p)
+    fstep = fused.make_step()
+    state0f = fused.init(key)
+    Xp = jax.block_until_ready(fused.pad_batch(X))
+    act = jnp.ones((S,), jnp.int32)
+    warm = jax.tree.map(jnp.copy, state0f)
+    jax.block_until_ready(fstep(warm, Xp, act))  # compile
+    t_fused = _time_step_loop(
+        lambda st, x: fstep(st, x, act), state0f, n_ticks, reps, Xp,
+        copy_state=True,
+    )
 
     # naive engine: Python loop of S single-stream jitted steps per tick
     # (the jit cache is shared across sessions — the loop pays dispatch,
@@ -85,34 +131,124 @@ def bench_streams(
     samples_per_tick = S * P
     row = {
         "S": S, "P": P, "m": m, "n": n, "n_ticks": n_ticks,
-        "use_pallas": use_pallas,
+        "fused_block_p": fused.layout.block_p,
         "bank_tick_s": t_bank,
+        "bank_pallas_tick_s": t_pallas,
+        "fused_tick_s": t_fused,
         "loop_tick_s": t_loop,
         "bank_samples_per_s": samples_per_tick / t_bank,
+        "bank_pallas_samples_per_s": samples_per_tick / t_pallas,
+        "fused_samples_per_s": samples_per_tick / t_fused,
         "loop_samples_per_s": samples_per_tick / t_loop,
         "bank_over_loop": t_loop / t_bank,
+        "fused_over_bank_pallas": t_pallas / t_fused,
     }
     print(
         f"streams,S={S},bank={row['bank_samples_per_s']:.3g}sps"
+        f",pr1_pallas={row['bank_pallas_samples_per_s']:.3g}sps"
+        f",fused={row['fused_samples_per_s']:.3g}sps"
         f",loop={row['loop_samples_per_s']:.3g}sps"
         f",bank/loop={row['bank_over_loop']:.1f}x"
+        f",fused/pr1={row['fused_over_bank_pallas']:.2f}x"
     )
     return row
 
 
+def autotune_block_p(
+    S: int, P: int = 32, m: int = 4, n: int = 2, n_ticks: int = 20, reps: int = 2
+) -> List[Dict[str, float]]:
+    """Sweep the megakernel's P-tile size and report per-tick time for each.
+
+    Times ONLY the fused path (the other engines don't depend on block_p).
+    Interpret-mode numbers steer nothing on real hardware — this is the
+    harness ROADMAP asks for (run with REPRO_PALLAS_INTERPRET=0 on TPU)."""
+    ecfg = EASIConfig(n_components=n, n_features=m, mu=1e-3)
+    ocfg = SMBGDConfig(batch_size=P, mu=1e-3, beta=0.9, gamma=0.5)
+    key = jax.random.PRNGKey(0)
+    X = jax.random.normal(jax.random.fold_in(key, 1), (S, P, m))
+    candidates = [bp for bp in (8, 16, 32, 64, 128, 256, 512) if bp <= P] or [P]
+    rows = []
+    for bp in candidates:
+        fused = SeparatorBank(ecfg, ocfg, n_streams=S, fused=True, block_p=bp)
+        fstep = fused.make_step()
+        state0 = fused.init(key)
+        Xp = jax.block_until_ready(fused.pad_batch(X))
+        act = jnp.ones((S,), jnp.int32)
+        warm = jax.tree.map(jnp.copy, state0)
+        jax.block_until_ready(fstep(warm, Xp, act))  # compile
+        t = _time_step_loop(
+            lambda st, x: fstep(st, x, act), state0, n_ticks, reps, Xp,
+            copy_state=True,
+        )
+        rows.append({"S": S, "P": P, "block_p": bp, "fused_tick_s": t})
+    best = min(rows, key=lambda r: r["fused_tick_s"])
+    print(f"autotune,S={S},P={P}: best block_p={best['block_p']} "
+          f"({best['fused_tick_s']*1e6:.1f}us/tick)")
+    return rows
+
+
+def smoke_check(baseline_path: Path) -> int:
+    """CI regression gate: re-measure S=SMOKE_S quickly and fail (exit 1) when
+    any tracked per-tick time is > SMOKE_FACTOR x the checked-in number."""
+    baseline_rows = json.loads(baseline_path.read_text())
+    # only default-config sweep rows qualify as a baseline: autotune rows
+    # carry just block_p/fused_tick_s, and legacy --pallas rows measured a
+    # different engine in the bank column
+    base = next(
+        (
+            r
+            for r in baseline_rows
+            if r.get("S") == SMOKE_S
+            and "bank_tick_s" in r
+            and not r.get("use_pallas")
+        ),
+        None,
+    )
+    if base is None:
+        print(
+            f"smoke: FAIL — no default-config S={SMOKE_S} row in "
+            f"{baseline_path}; regenerate it with "
+            f"`python benchmarks/stream_throughput.py`"
+        )
+        return 1
+    # same n_ticks as the checked-in sweep: per-tick numbers amortize the
+    # Python loop overhead identically on both sides of the ratio
+    fresh = bench_streams(SMOKE_S, n_ticks=int(base.get("n_ticks", 50)), reps=2)
+    failed = False
+    for k in SMOKE_KEYS:
+        if k not in base:
+            print(f"smoke: baseline missing {k!r}; regenerate {baseline_path}")
+            failed = True
+            continue
+        ratio = fresh[k] / base[k]
+        verdict = "FAIL" if ratio > SMOKE_FACTOR else "ok"
+        if ratio > SMOKE_FACTOR:
+            failed = True
+        print(f"smoke: {k} {fresh[k]*1e6:.1f}us vs baseline "
+              f"{base[k]*1e6:.1f}us ({ratio:.2f}x) {verdict}")
+    # the acceptance bar rides along: the megakernel must not lose to the
+    # PR-1 pallas path it replaces (0.9 leaves room for shared-runner noise;
+    # the checked-in sweep records ≥ 1.15x on a quiet machine)
+    if fresh["fused_over_bank_pallas"] < 0.9:
+        print(f"smoke: FAIL fused slower than PR-1 pallas path "
+              f"({fresh['fused_over_bank_pallas']:.2f}x)")
+        failed = True
+    return 1 if failed else 0
+
+
 def run(
     quick: bool = False,
-    use_pallas: bool = False,
     out: str | None = None,
+    autotune: bool = False,
 ) -> List[Dict[str, float]]:
     """Sweep S; write the JSON artifact when ``out`` is given."""
     sweep = (1, 8, 64) if quick else (1, 8, 64, 512)
     reps = 2 if quick else 3
     ticks = 20 if quick else 50
-    rows = [
-        bench_streams(S, use_pallas=use_pallas, reps=reps, n_ticks=ticks)
-        for S in sweep
-    ]
+    rows = [bench_streams(S, reps=reps, n_ticks=ticks) for S in sweep]
+    if autotune:
+        for S in (8, 64):
+            rows.extend(autotune_block_p(S, reps=reps, n_ticks=ticks))
     if out:
         Path(out).write_text(json.dumps(rows, indent=2) + "\n")
         print(f"wrote {out}")
@@ -122,12 +258,17 @@ def run(
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true", help="S ≤ 64, fewer reps (CI)")
-    ap.add_argument("--pallas", action="store_true", help="fused Pallas bank kernel")
+    ap.add_argument("--autotune", action="store_true",
+                    help="sweep the megakernel block_p tile size at S=8,64")
+    ap.add_argument("--smoke", action="store_true",
+                    help="regression gate vs the checked-in result file (no write)")
     ap.add_argument(
-        "--out", default="BENCH_streams.json", help="result file (JSON rows)"
+        "--out", default=str(DEFAULT_OUT), help="result file (JSON rows)"
     )
     args = ap.parse_args()
-    run(quick=args.quick, use_pallas=args.pallas, out=args.out)
+    if args.smoke:
+        sys.exit(smoke_check(Path(args.out)))
+    run(quick=args.quick, out=args.out, autotune=args.autotune)
 
 
 if __name__ == "__main__":

@@ -68,6 +68,38 @@ class SMBGDState(NamedTuple):
     step: jnp.ndarray  # scalar int32 mini-batch counter k
 
 
+class BankHyperparams(NamedTuple):
+    """Per-stream SMBGD hyper-parameters for a heterogeneous separator bank.
+
+    The scaling-limit analysis (arXiv:1710.05384) motivates sweeping step
+    sizes across otherwise identical problems; carrying ``(μ, β, γ)`` as
+    ``(S,)`` arrays lets one bank launch run the whole sweep.  A plain pytree
+    of arrays so it threads through jit/vmap/shard_map (sharded over the
+    stream axis like the bank state itself).
+    """
+
+    mu: jnp.ndarray  # (S,) learning rates
+    beta: jnp.ndarray  # (S,) within-batch decays
+    gamma: jnp.ndarray  # (S,) cross-batch momenta
+
+    @classmethod
+    def broadcast(cls, cfg: "SMBGDConfig", n_streams: int) -> "BankHyperparams":
+        """Homogeneous bank: every stream carries ``cfg``'s scalars."""
+        full = lambda v: jnp.full((n_streams,), v, dtype=jnp.float32)
+        return cls(mu=full(cfg.mu), beta=full(cfg.beta), gamma=full(cfg.gamma))
+
+    def within_batch_weights(self, P: int, dtype=jnp.float32) -> jnp.ndarray:
+        """Per-stream weight rows ``w[s, p] = μ_s β_s^{P-1-p}`` — shape (S, P)."""
+        p = jnp.arange(P, dtype=dtype)
+        beta = jnp.asarray(self.beta, dtype)[:, None]
+        return jnp.asarray(self.mu, dtype)[:, None] * beta ** ((P - 1) - p)[None, :]
+
+    def effective_momentum(self, P: int, dtype=jnp.float32) -> jnp.ndarray:
+        """Per-stream closed-form momentum ``γ̂_s = γ_s β_s^{P-1}`` — shape (S,)."""
+        beta = jnp.asarray(self.beta, dtype)
+        return jnp.asarray(self.gamma, dtype) * beta ** (P - 1)
+
+
 def init_state(cfg: EASIConfig, key: jax.Array) -> SMBGDState:
     B0 = easi_lib.init_separation_matrix(cfg, key)
     n = cfg.n_components
@@ -114,6 +146,8 @@ def smbgd_commit(
     S: jnp.ndarray,
     B: jnp.ndarray,
     cfg: SMBGDConfig,
+    *,
+    gamma_hat: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """The closed-form commit shared by every batched driver:
 
@@ -121,10 +155,15 @@ def smbgd_commit(
 
     Shape-polymorphic: scalar ``step`` with ``(n, n)``/``(n, m)`` operands
     (single stream), or ``step (S,)`` with a leading stream axis on all mats
-    (``SeparatorBank``).  Keeping this in ONE place means a change to the
-    update rule cannot silently skip the sharded or Pallas-bank paths.
+    (``SeparatorBank``).  ``gamma_hat`` overrides ``cfg.effective_momentum``
+    for heterogeneous banks — a ``(S,)`` array of per-stream γ̂ (see
+    ``BankHyperparams.effective_momentum``).  Keeping this in ONE place means
+    a change to the update rule cannot silently skip the sharded or
+    Pallas-bank paths.
     """
-    gamma_hat = jnp.where(step == 0, 0.0, cfg.effective_momentum).astype(B.dtype)
+    if gamma_hat is None:
+        gamma_hat = cfg.effective_momentum
+    gamma_hat = jnp.where(step == 0, 0.0, gamma_hat).astype(B.dtype)
     if gamma_hat.ndim:
         gamma_hat = gamma_hat[:, None, None]
     H_hat = gamma_hat * H_prev + S.astype(B.dtype)

@@ -18,10 +18,44 @@ kernel dispatch instead of S.  The stream axis is the majormost grid dim, so
 for each stream the tile index still iterates innermost and the per-stream
 (n, n) accumulator pattern is unchanged.
 
+The *whole-step* variant (``smbgd_step_bank_pallas``) is the megakernel: the
+same ``(streams, P-tiles)`` grid, but each grid step also computes its tile of
+``Y = X Bᵀ`` in VMEM (X never leaves the kernel as Y in HBM until the output
+write), and each stream's LAST tile performs the SMBGD commit in-register:
+
+    Ĥ' = γ̂·Ĥ + Σ_tiles S_tile      (γ̂ gated to 0 where step == 0)
+    B' = B + Ĥ'·B ;  step' = step + 1
+
+so one kernel dispatch per bank tick reads ``X, B, Ĥ, step`` and writes
+``Y, B', Ĥ', step'`` — no intermediate ``Y``/``S_grad`` round-trips HBM.
+Per-stream weight rows ``W (S, P, 1)`` and momentum coefficients
+``γ̂ (S, 1)`` make the bank heterogeneous (per-stream μ, β, γ) inside a single
+launch, and ``active (S, 1)`` freezes evicted/idle slots in-kernel (their
+``B``/``Ĥ``/``step`` are written back unchanged; their Y is still produced).
+``block_s`` streams ride each grid cell as a leading batch dimension of every
+block (batched ``dot_general``s inside the cell), so the grid is
+``(S / block_s, P / block_p)`` — per-cell launch/loop overhead amortizes over
+the stream block while the math stays per-stream independent.
+
 Layout notes (TPU target; validated on CPU via interpret=True):
-  * last dim n is padded to a multiple of 128 (lane width) by ops.py,
+  * last dims (n for Y/Ĥ, m for X/B) are padded to a multiple of 128 (lane
+    width) by ops.py — 8 (f32 sublane) in interpret mode,
   * block_p is a multiple of 8 (f32 sublane) — default 512,
-  * accumulation in fp32 regardless of input dtype (preferred_element_type).
+  * accumulation in fp32 regardless of input dtype (preferred_element_type),
+  * the whole-step kernel's gradient accumulator is a VMEM scratch buffer
+    (``(n, n)`` fp32) that persists across the sequential grid: tiles iterate
+    innermost, so it is re-initialized at each stream's tile 0 and consumed by
+    the commit at tile T-1; ``B``/``Ĥ`` blocks are revisited (index map pins
+    them per stream) and written once, on the commit tile,
+  * per-stream scalars (``step``, ``γ̂``, ``active``) ride as (1, 1) blocks —
+    on real TPU these are natural SMEM residents; interpret mode does not
+    distinguish,
+  * zero padding is exact end-to-end: padded m-columns of X/B keep padded Y
+    zero (g(0) = 0 for every registered nonlinearity), padded w rows add
+    nothing, and the only nonzero the commit writes into the padded region is
+    the Σw diagonal of the identity term, which stays confined there (padded
+    rows of B are zero, so it never couples back into the logical block —
+    persistent padded state does not need re-zeroing between ticks).
 """
 from __future__ import annotations
 
@@ -31,6 +65,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.nonlinearities import NONLINEARITIES
 
@@ -147,3 +182,143 @@ def easi_gradient_bank_pallas(
         out_shape=jax.ShapeDtypeStruct((S, n, n), jnp.float32),
         interpret=interpret,
     )(Y, w)
+
+
+def _fold_tile_batched(y, w, nonlin: str):
+    """Batched ``_fold_tile``: fold a (bs, bp, n) block of Y tiles — one per
+    stream in the stream-block — into (bs, n, n) gradient contributions."""
+    g = NONLIN_KERNELS[nonlin](y)
+    yw = y * w  # (bs, bp, n) * (bs, bp, 1)
+    dims = (((1,), (1,)), ((0,), (0,)))  # contract bp, batch over streams
+    gram = jax.lax.dot_general(y, yw, dims, preferred_element_type=jnp.float32)
+    cross = jax.lax.dot_general(g, yw, dims, preferred_element_type=jnp.float32)
+    n = gram.shape[-1]
+    eye = jnp.eye(n, dtype=jnp.float32)[None] * jnp.sum(w, axis=1, keepdims=True)
+    return eye - gram - cross + cross.transpose(0, 2, 1)
+
+
+def _smbgd_step_bank_kernel(
+    x_ref,
+    w_ref,
+    b_ref,
+    h_ref,
+    step_ref,
+    gamma_hat_ref,
+    active_ref,
+    y_ref,
+    b_out_ref,
+    h_out_ref,
+    step_out_ref,
+    acc_ref,
+    *,
+    nonlin: str,
+    n_tiles: int,
+):
+    """One grid step of the whole-step megakernel (grid = (stream-blocks,
+    tiles): each cell carries ``block_s`` streams as a batch dimension).
+
+    Every tile: Y-tile batch-matmul + nonlinearity + weighted gradient fold
+    into the VMEM scratch accumulator.  The stream-block's last tile
+    additionally commits the SMBGD update and writes ``B'``/``Ĥ'``/``step'``
+    for its streams.
+    """
+    i = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)  # (bs, bp, m)
+    b = b_ref[...].astype(jnp.float32)  # (bs, n, m)
+    y = jax.lax.dot_general(
+        x, b, (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )  # (bs, bp, n) — these streams' Y tiles, never re-read from HBM
+    y_ref[...] = y.astype(y_ref.dtype)
+    w = w_ref[...].astype(jnp.float32)  # (bs, bp, 1) — per-stream weight rows
+    s_tile = _fold_tile_batched(y, w, nonlin)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = s_tile
+
+    @pl.when(i > 0)
+    def _acc():
+        acc_ref[...] += s_tile
+
+    @pl.when(i == n_tiles - 1)
+    def _commit():
+        step = step_ref[...]  # (bs, 1)
+        active = (active_ref[...] != 0)[:, :, None]  # (bs, 1, 1)
+        # the paper's first-batch rule, per stream: γ̂ gated off at step 0
+        gamma_hat = jnp.where(step == 0, 0.0, gamma_hat_ref[...])[:, :, None]
+        h_prev = h_ref[...].astype(jnp.float32)  # (bs, n, n)
+        h_new = gamma_hat * h_prev + acc_ref[...]
+        b_new = b + jax.lax.dot_general(
+            h_new, b, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        )
+        h_out_ref[...] = jnp.where(active, h_new, h_prev).astype(h_out_ref.dtype)
+        b_out_ref[...] = jnp.where(active, b_new, b).astype(b_out_ref.dtype)
+        step_out_ref[...] = step + jnp.where(active[:, :, 0], 1, 0).astype(
+            step.dtype
+        )
+
+
+def smbgd_step_bank_pallas(
+    X: jnp.ndarray,
+    W: jnp.ndarray,
+    B: jnp.ndarray,
+    H_hat: jnp.ndarray,
+    step: jnp.ndarray,
+    gamma_hat: jnp.ndarray,
+    active: jnp.ndarray,
+    *,
+    nonlinearity: str = "cubic",
+    block_p: int = 512,
+    block_s: int = 1,
+    interpret: bool = True,
+):
+    """Whole-step fused SMBGD bank tick: ONE ``(stream-blocks, P-tiles)``
+    launch.
+
+    Expects pre-padded persistent-layout inputs (see ops.bank_layout):
+    ``X (S, P, m)``, ``W (S, P, 1)``, ``B (S, n, m)``, ``H_hat (S, n, n)``,
+    ``step (S, 1) int32``, ``gamma_hat (S, 1) f32``, ``active (S, 1) int32``.
+    ``block_s`` streams ride one grid cell as a batch dimension (S % block_s
+    == 0) — per-stream math is independent, so the result is block_s
+    invariant; larger blocks amortize per-cell grid overhead.  Returns
+    ``(Y (S, P, n), B', H_hat', step')`` — the full next bank state plus
+    outputs, with no intermediate tensors materialized in HBM.
+    """
+    S, P, m = X.shape
+    n = B.shape[1]
+    assert P % block_p == 0, (P, block_p)
+    assert S % block_s == 0, (S, block_s)
+    assert B.shape == (S, n, m) and H_hat.shape == (S, n, n)
+    n_tiles = P // block_p
+    kernel = functools.partial(
+        _smbgd_step_bank_kernel, nonlin=nonlinearity, n_tiles=n_tiles
+    )
+    bs = block_s
+    return pl.pallas_call(
+        kernel,
+        grid=(S // bs, n_tiles),
+        in_specs=[
+            pl.BlockSpec((bs, block_p, m), lambda s, i: (s, i, 0)),
+            pl.BlockSpec((bs, block_p, 1), lambda s, i: (s, i, 0)),
+            pl.BlockSpec((bs, n, m), lambda s, i: (s, 0, 0)),
+            pl.BlockSpec((bs, n, n), lambda s, i: (s, 0, 0)),
+            pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
+            pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
+            pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bs, block_p, n), lambda s, i: (s, i, 0)),
+            pl.BlockSpec((bs, n, m), lambda s, i: (s, 0, 0)),
+            pl.BlockSpec((bs, n, n), lambda s, i: (s, 0, 0)),
+            pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, P, n), X.dtype),
+            jax.ShapeDtypeStruct((S, n, m), B.dtype),
+            jax.ShapeDtypeStruct((S, n, n), H_hat.dtype),
+            jax.ShapeDtypeStruct((S, 1), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bs, n, n), jnp.float32)],
+        interpret=interpret,
+    )(X, W, B, H_hat, step, gamma_hat, active)

@@ -8,9 +8,18 @@ Both entry points honour it:
 
   * ``easi_gradient``       — single stream,   ``Y (P, n)``    → ``S (n, n)``
   * ``easi_gradient_bank``  — S streams fused, ``Y (S, P, n)`` → ``S (S, n, n)``
+  * ``smbgd_step_bank``     — whole-step megakernel: one launch computes
+    ``Y = X Bᵀ``, the weighted gradient sum AND the SMBGD commit for all S
+    streams, on persistent-padded state (``BankLayout``).
+
+Block-aligned inputs take the zero-copy fast path: when an array already
+matches its padded geometry the ``zeros().at[].set()`` staging copy is skipped
+entirely — persistent-layout callers (``stream.SeparatorBank`` in fused mode)
+pay no per-step padding.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import os
 
@@ -20,6 +29,7 @@ import jax.numpy as jnp
 from repro.kernels.easi_gradient.easi_gradient import (
     easi_gradient_bank_pallas,
     easi_gradient_pallas,
+    smbgd_step_bank_pallas,
 )
 
 _LANE = 128  # TPU lane width (last-dim alignment)
@@ -42,6 +52,49 @@ def _pad_geometry(P: int, n: int, block_p: int | None, interpret: bool):
     return P_pad, n_pad, block_p
 
 
+@dataclasses.dataclass(frozen=True)
+class BankLayout:
+    """Persistent padded layout of a separator bank's state and batches.
+
+    Established once (at ``SeparatorBank.init``); every per-tick tensor is
+    carried at these padded shapes so the steady-state serving path never
+    re-pads.  Pad/unpad happen only at the API boundary (admission, eviction,
+    diagnostics).  ``interpret`` relaxes lane alignment to the f32 sublane so
+    CPU interpret-mode tests exercise realistic (non-trivial) padding.
+    """
+
+    n: int  # logical components
+    m: int  # logical features
+    P: int  # logical mini-batch
+    n_pad: int
+    m_pad: int
+    P_pad: int
+    block_p: int
+
+
+def bank_layout(
+    n: int,
+    m: int,
+    P: int,
+    *,
+    block_p: int | None = None,
+    interpret: bool | None = None,
+) -> BankLayout:
+    """Compute the lane/sublane-aligned persistent layout for ``(n, m, P)``.
+
+    One geometry rule for the whole stack: ``n`` (last dim of Y/Ĥ) and ``m``
+    (last dim of X/B) are lane-aligned; ``P`` rounds up to a whole number of
+    ``block_p`` tiles.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    P_pad, n_pad, block_p = _pad_geometry(P, n, block_p, interpret)
+    m_pad = _round_up(max(m, _SUBLANE), _LANE if not interpret else _SUBLANE)
+    return BankLayout(
+        n=n, m=m, P=P, n_pad=n_pad, m_pad=m_pad, P_pad=P_pad, block_p=block_p
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("nonlinearity", "block_p", "interpret"))
 def easi_gradient(
     Y: jnp.ndarray,
@@ -62,8 +115,12 @@ def easi_gradient(
         interpret = _interpret_default()
     P, n = Y.shape
     P_pad, n_pad, block_p = _pad_geometry(P, n, block_p, interpret)
-    Yp = jnp.zeros((P_pad, n_pad), Y.dtype).at[:P, :n].set(Y)
-    wp = jnp.zeros((P_pad, 1), jnp.float32).at[:P, 0].set(w.reshape(-1))
+    if (P_pad, n_pad) == (P, n):  # block-aligned: no staging copy
+        Yp = Y
+        wp = w.reshape(P, 1).astype(jnp.float32)
+    else:
+        Yp = jnp.zeros((P_pad, n_pad), Y.dtype).at[:P, :n].set(Y)
+        wp = jnp.zeros((P_pad, 1), jnp.float32).at[:P, 0].set(w.reshape(-1))
     S = easi_gradient_pallas(
         Yp, wp, nonlinearity=nonlinearity, block_p=block_p, interpret=interpret
     )
@@ -91,9 +148,95 @@ def easi_gradient_bank(
         interpret = _interpret_default()
     S_streams, P, n = Y.shape
     P_pad, n_pad, block_p = _pad_geometry(P, n, block_p, interpret)
-    Yp = jnp.zeros((S_streams, P_pad, n_pad), Y.dtype).at[:, :P, :n].set(Y)
-    wp = jnp.zeros((P_pad, 1), jnp.float32).at[:P, 0].set(w.reshape(-1))
+    if (P_pad, n_pad) == (P, n):  # block-aligned: no per-step staging copy
+        Yp = Y
+        wp = w.reshape(P, 1).astype(jnp.float32)
+    else:
+        Yp = jnp.zeros((S_streams, P_pad, n_pad), Y.dtype).at[:, :P, :n].set(Y)
+        wp = jnp.zeros((P_pad, 1), jnp.float32).at[:P, 0].set(w.reshape(-1))
     S = easi_gradient_bank_pallas(
         Yp, wp, nonlinearity=nonlinearity, block_p=block_p, interpret=interpret
     )
     return S[:, :n, :n]
+
+
+def _default_block_s(S: int, cap: int) -> int:
+    """Largest divisor of S ≤ cap — streams batched per grid cell.  Per-cell
+    launch overhead (and, in interpret mode, the per-cell grid-loop cost)
+    amortizes over the stream block; per-stream math is independent so any
+    divisor is numerically equivalent (tested).  The cap is backend-aware at
+    the call site: compiled kernels budget VMEM (block_s scales every resident
+    block), the interpreter only pays grid-loop iterations."""
+    for bs in range(min(S, cap), 0, -1):
+        if S % bs == 0:
+            return bs
+    return 1
+
+
+@functools.partial(
+    jax.jit, static_argnames=("nonlinearity", "block_p", "block_s", "interpret")
+)
+def smbgd_step_bank(
+    X: jnp.ndarray,
+    W: jnp.ndarray,
+    B: jnp.ndarray,
+    H_hat: jnp.ndarray,
+    step: jnp.ndarray,
+    gamma_hat: jnp.ndarray,
+    active: jnp.ndarray,
+    *,
+    nonlinearity: str = "cubic",
+    block_p: int | None = None,
+    block_s: int | None = None,
+    interpret: bool | None = None,
+):
+    """Whole-step fused bank tick on persistent-padded state (zero staging).
+
+    All tensor inputs must already be in the ``bank_layout`` geometry — this
+    is the steady-state serving hot path and it refuses to silently pad:
+
+      * ``X (S, P_pad, m_pad)``, ``W (S, P_pad, 1)`` f32 weight rows
+        (per-stream w_p = μ_s β_s^{P-1-p}, zero in padded rows),
+      * ``B (S, n_pad, m_pad)``, ``H_hat (S, n_pad, n_pad)``,
+      * ``step (S,)`` or ``(S, 1)`` int32, ``gamma_hat (S,)`` or ``(S, 1)``
+        f32 (γ̂_s = γ_s β_s^{P-1}), ``active (S,)`` or ``(S, 1)`` bool/int.
+
+    ``block_s`` batches that many streams per grid cell (default: largest
+    divisor of S ≤ 8 compiled / ≤ 32 interpreted).  Returns
+    ``(Y (S, P_pad, n_pad), B', H_hat', step' (S,))``.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    S_streams, P_pad, m_pad = X.shape
+    n_pad = B.shape[1]
+    if block_p is None:
+        block_p = min(512, _round_up(P_pad, _SUBLANE))
+    if block_s is None:
+        block_s = _default_block_s(S_streams, cap=32 if interpret else 8)
+    if P_pad % block_p or n_pad % _SUBLANE or m_pad % _SUBLANE:
+        raise ValueError(
+            f"smbgd_step_bank requires persistent-layout inputs; got "
+            f"P={P_pad} (block_p={block_p}), n={n_pad}, m={m_pad}"
+        )
+    if S_streams % block_s:
+        raise ValueError(
+            f"block_s={block_s} must divide the stream count {S_streams}"
+        )
+    Wp = W.reshape(S_streams, P_pad, 1).astype(jnp.float32)
+    step2 = step.reshape(S_streams, 1).astype(jnp.int32)
+    gamma2 = gamma_hat.reshape(S_streams, 1).astype(jnp.float32)
+    active2 = active.reshape(S_streams, 1).astype(jnp.int32)
+    Y, B_new, H_new, step_new = smbgd_step_bank_pallas(
+        X,
+        Wp,
+        B,
+        H_hat,
+        step2,
+        gamma2,
+        active2,
+        nonlinearity=nonlinearity,
+        block_p=block_p,
+        block_s=block_s,
+        interpret=interpret,
+    )
+    return Y, B_new, H_new, step_new.reshape(S_streams)

@@ -15,6 +15,7 @@ between steps):
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, Hashable, List, Optional, Tuple
 
 import jax
@@ -78,6 +79,20 @@ class Engine:
         return jnp.concatenate(out, axis=1), []
 
 
+@dataclasses.dataclass
+class SessionStats:
+    """Per-session serving counters (host-side bookkeeping)."""
+
+    admitted_at: float  # time.perf_counter() at admission
+    ticks: int = 0
+    samples: int = 0
+
+    def samples_per_s(self, now: Optional[float] = None) -> float:
+        """Throughput since admission (wall-clock)."""
+        now = time.perf_counter() if now is None else now
+        return self.samples / max(now - self.admitted_at, 1e-9)
+
+
 class SeparationService:
     """Continuous-batching front door for a ``SeparatorBank``.
 
@@ -91,15 +106,49 @@ class SeparationService:
         svc.admit("user-a"); svc.admit("user-b")
         outs = svc.step({"user-a": xa, "user-b": xb})   # one fused launch
         final = svc.evict("user-a")                     # SMBGDState handed back
+
+    The tick is zero-copy on a fused bank (``SeparatorBank(fused=True)``):
+    mini-batches are staged host-side into ONE preallocated block-aligned
+    buffer (``bank.layout``; reused every tick — stale slots are masked
+    inactive and the padding region is never written, so no re-zeroing), the
+    jitted step donates the persistent padded state back to the kernel
+    outputs (accelerator backends), and per-session slices are cut from the
+    padded Y at return — steady-state serving allocates no device state per
+    tick (the host→device transfer of the staging buffer remains).
+
+    Metrics (the backpressure/observability hook): ``metrics`` reports
+    per-tick latency (last/mean) and aggregate samples/sec; ``session_stats``
+    reports per-session tick/sample counters and samples/sec since admission.
+    ``block_ticks=True`` synchronizes on the device result before stopping the
+    tick clock, so latencies measure compute, not dispatch.
     """
 
-    def __init__(self, bank: SeparatorBank, seed: int = 0):
+    def __init__(
+        self, bank: SeparatorBank, seed: int = 0, block_ticks: bool = False
+    ):
         self.bank = bank
         self.key = jax.random.PRNGKey(seed)
         self.state: BankState = bank.init(self.key)
         self._free: List[int] = list(range(bank.n_streams - 1, -1, -1))  # pop() → slot 0 first
         self._slot_of: Dict[Hashable, int] = {}
-        self._step = jax.jit(lambda st, X, act: bank.step(st, X, active=act))
+        # donated state on accelerators: the runtime reuses the old state
+        # buffers for the new state — the steady-state tick performs no state
+        # allocation (CPU backend opts out; see SeparatorBank.make_step)
+        self._step = bank.make_step()
+        # one staging buffer for every tick: jnp.asarray copies host→device,
+        # so the numpy side is free to be overwritten next tick
+        if bank.fused:
+            lay = bank.layout
+            stage_shape = (bank.n_streams, lay.P_pad, lay.m_pad)
+        else:
+            stage_shape = (bank.n_streams, bank.opt.batch_size, bank.easi.n_features)
+        self._stage = np.zeros(stage_shape, dtype=np.float32)
+        self.block_ticks = block_ticks
+        self._stats: Dict[Hashable, SessionStats] = {}
+        self._n_ticks = 0
+        self._total_samples = 0
+        self._total_tick_s = 0.0
+        self._last_tick_s = float("nan")
 
     @property
     def n_active(self) -> int:
@@ -108,6 +157,33 @@ class SeparationService:
     @property
     def n_free(self) -> int:
         return len(self._free)
+
+    # -- metrics -----------------------------------------------------------
+    @property
+    def metrics(self) -> Dict[str, float]:
+        """Service-level serving counters (one dict, cheap to scrape)."""
+        return {
+            "n_active": float(self.n_active),
+            "n_free": float(self.n_free),
+            "n_ticks": float(self._n_ticks),
+            "total_samples": float(self._total_samples),
+            "last_tick_s": self._last_tick_s,
+            "mean_tick_s": self._total_tick_s / self._n_ticks
+            if self._n_ticks
+            else float("nan"),
+            "samples_per_s": self._total_samples / self._total_tick_s
+            if self._total_tick_s > 0
+            else float("nan"),
+        }
+
+    def session_stats(self, session_id: Hashable) -> Dict[str, float]:
+        """Per-session counters: ticks, samples, samples/sec since admit."""
+        st = self._stats[session_id]
+        return {
+            "ticks": float(st.ticks),
+            "samples": float(st.samples),
+            "samples_per_s": st.samples_per_s(),
+        }
 
     def admit(self, session_id: Hashable) -> int:
         """Assign ``session_id`` a fresh separator in a free slot; returns the
@@ -122,12 +198,14 @@ class SeparationService:
         self.key, k = jax.random.split(self.key)
         self.state = self.bank.init_slot(self.state, slot, k)
         self._slot_of[session_id] = slot
+        self._stats[session_id] = SessionStats(admitted_at=time.perf_counter())
         return slot
 
     def evict(self, session_id: Hashable) -> SMBGDState:
         """Release the session's slot back to the free list; returns its final
         single-stream state (B is the session's learned separation matrix)."""
         slot = self._slot_of.pop(session_id)
+        self._stats.pop(session_id, None)
         final = self.bank.slot_state(self.state, slot)
         self._free.append(slot)
         return final
@@ -138,6 +216,10 @@ class SeparationService:
         ``batches`` maps session_id → ``(P, m)`` mini-batch.  Sessions without
         data (and free slots) are masked inactive — state untouched.  Returns
         session_id → separated ``(P, n)`` outputs from one fused bank step.
+
+        On a fused bank the staging buffer is allocated block-aligned
+        (``(S, P_pad, m_pad)``) so the jitted step consumes it with no
+        re-padding copy; outputs are sliced back to ``(P, n)`` per session.
         """
         if not batches:
             return {}
@@ -147,7 +229,11 @@ class SeparationService:
         S = self.bank.n_streams
         P = self.bank.opt.batch_size
         m = self.bank.easi.n_features
-        X = np.zeros((S, P, m), dtype=np.float32)
+        n = self.bank.easi.n_components
+        # reused staging buffer (block-aligned on fused banks): stale data in
+        # slots not written this tick only feeds masked-out streams, and the
+        # padding region is never written, so it stays zero from __init__
+        X = self._stage
         active = np.zeros((S,), dtype=bool)
         for sid, xb in batches.items():
             xb = np.asarray(xb, dtype=np.float32)
@@ -157,10 +243,22 @@ class SeparationService:
                     f"(P={P}, m={m})"
                 )
             slot = self._slot_of[sid]
-            X[slot] = xb
+            X[slot, :P, :m] = xb
             active[slot] = True
+        t0 = time.perf_counter()
         self.state, Y = self._step(self.state, jnp.asarray(X), jnp.asarray(active))
-        return {sid: Y[self._slot_of[sid]] for sid in batches}
+        if self.block_ticks:
+            jax.block_until_ready((self.state, Y))
+        dt = time.perf_counter() - t0
+        self._n_ticks += 1
+        self._last_tick_s = dt
+        self._total_tick_s += dt
+        self._total_samples += P * len(batches)
+        for sid in batches:
+            st = self._stats[sid]
+            st.ticks += 1
+            st.samples += P
+        return {sid: Y[self._slot_of[sid], :P, :n] for sid in batches}
 
     # -- persistence -------------------------------------------------------
     # The bank state is a plain pytree, so the array side round-trips through
@@ -208,6 +306,14 @@ class SeparationService:
         self.key = tree.pop("rng_key")
         self.state = BankState(**tree)
         self._slot_of = dict(sessions)
+        # serving counters restart at restore time — per-session AND aggregate
+        # (metrics must describe the restored epoch, not blend the old run)
+        now = time.perf_counter()
+        self._stats = {sid: SessionStats(admitted_at=now) for sid in sessions}
+        self._n_ticks = 0
+        self._total_samples = 0
+        self._total_tick_s = 0.0
+        self._last_tick_s = float("nan")
         taken = set(sessions.values())
         self._free = [s for s in range(self.bank.n_streams - 1, -1, -1) if s not in taken]
         return got

@@ -13,19 +13,27 @@ Public API:
                           the three historical epoch drivers
                           (``sgd | smbgd_sequential | smbgd_batched``).
   * ``SeparatorBank``   — S-stream bank; same algorithms, batched state.
-  * ``BankState``       — ``B (S, n, m)``, ``H_hat (S, n, n)``, ``step (S,)``.
+                          ``fused=True`` runs the whole-step Pallas megakernel
+                          on persistent padded state (``bank.layout``);
+                          ``hyperparams=BankHyperparams(...)`` makes the bank
+                          heterogeneous (per-stream μ, β, γ in one launch).
+  * ``BankState``       — ``B (S, n, m)``, ``H_hat (S, n, n)``, ``step (S,)``
+                          (padded shapes on the fused path).
+  * ``BankHyperparams`` — per-stream ``(S,)`` SMBGD hyper-parameter arrays.
   * ``make_sharded_bank_step`` / ``bank_sharding`` — stream-axis device
     parallelism (streams are independent: no collectives in the hot path).
 
 Pallas kernels run through the interpreter by default so the CPU container can
 execute them; set ``REPRO_PALLAS_INTERPRET=0`` on real TPU hardware.
 """
+from repro.core.smbgd import BankHyperparams
 from repro.stream.bank import BankState, SeparatorBank
 from repro.stream.separator import ALGORITHMS, Separator
 from repro.stream.sharding import bank_sharding, make_sharded_bank_step
 
 __all__ = [
     "ALGORITHMS",
+    "BankHyperparams",
     "BankState",
     "Separator",
     "SeparatorBank",

@@ -9,15 +9,31 @@ State carries a leading stream axis — ``B (S, n, m)``, ``H_hat (S, n, n)``,
   * the Pallas path routes the weighted gradient sum of ALL streams through
     one ``(streams, P-tiles)`` grid launch of the fused EASI-gradient kernel
     (``kernels.easi_gradient.ops.easi_gradient_bank``) — S kernel dispatches
-    collapse into one.
+    collapse into one,
+  * ``fused=True`` goes further: the WHOLE step (``Y = X Bᵀ``, nonlinearity,
+    weighted gradient sum, SMBGD commit) is one ``(streams, P-tiles)``
+    megakernel launch (``ops.smbgd_step_bank``) on **persistent padded
+    state**: ``init`` establishes a lane-aligned layout once (``bank.layout``)
+    and every tick runs at padded shapes — pad/unpad happen only at the API
+    boundary (admission, eviction, diagnostics, ``unpad_state``/``unpad_y``).
+    Pair with ``make_step(donate=True)`` and steady-state serving allocates
+    nothing: state buffers are donated back to the kernel's outputs and a
+    block-aligned ``X`` (see ``pad_batch``/``SeparationService``) skips every
+    staging copy.
+
+Heterogeneous banks: ``hyperparams=BankHyperparams(mu, beta, gamma)`` carries
+per-stream ``(S,)`` step sizes/decays/momenta (the arXiv:1710.05384 sweep) —
+the fused path feeds them to the megakernel as per-stream weight rows; the
+non-fused path falls back to an equivalent vmap program.
 
 Per-stream ``step`` counters make the bank admission-friendly: a freshly
 admitted stream has ``step == 0`` and its first mini-batch gates γ off (the
 paper's first-batch rule) regardless of what the other streams are doing.
 ``step(..., active=mask)`` freezes masked-out slots entirely — the
-continuous-batching hook used by ``serve.engine.SeparationService``.
+continuous-batching hook used by ``serve.engine.SeparationService``; the
+megakernel applies the mask in-register at commit time.
 
-Checkpointing: ``BankState`` is a plain pytree of arrays, so
+Checkpointing: ``BankState`` is a plain pytree of arrays (padded or not), so
 ``checkpoint.Checkpointer`` round-trips it unmodified (tested).
 """
 from __future__ import annotations
@@ -31,27 +47,43 @@ import jax.numpy as jnp
 from repro.core import metrics as metrics_lib
 from repro.core import smbgd as smbgd_lib
 from repro.core.easi import EASIConfig
-from repro.core.smbgd import SMBGDConfig, SMBGDState
+from repro.core.smbgd import BankHyperparams, SMBGDConfig, SMBGDState
 from repro.stream.separator import Separator
 
 
 class BankState(NamedTuple):
-    """Batched carry for S separator sessions (leading stream axis)."""
+    """Batched carry for S separator sessions (leading stream axis).
 
-    B: jnp.ndarray  # (S, n, m)
-    H_hat: jnp.ndarray  # (S, n, n)
+    Shapes are logical — ``B (S, n, m)``, ``H_hat (S, n, n)`` — for the vmap
+    paths, or persistent-padded — ``B (S, n_pad, m_pad)``, ``H_hat (S, n_pad,
+    n_pad)`` per ``SeparatorBank.layout`` — for the fused megakernel path.
+    """
+
+    B: jnp.ndarray  # (S, n, m) or (S, n_pad, m_pad)
+    H_hat: jnp.ndarray  # (S, n, n) or (S, n_pad, n_pad)
     step: jnp.ndarray  # (S,) int32 — per-stream mini-batch counter
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class SeparatorBank:
-    """S-stream separation engine; same ``algorithm`` knob as ``Separator``."""
+    """S-stream separation engine; same ``algorithm`` knob as ``Separator``.
+
+    ``fused=True`` selects the whole-step megakernel on persistent padded
+    state (requires ``algorithm="smbgd_batched"``); ``block_p`` overrides the
+    kernel's P-tile size (autotune knob; default picks ``min(512, P)``
+    rounded to the sublane) and ``block_s`` the number of streams batched per
+    grid cell (must divide ``n_streams``; default: largest divisor ≤ 8).
+    """
 
     easi: EASIConfig
     opt: SMBGDConfig
     n_streams: int
     algorithm: str = "smbgd_batched"
     use_pallas: bool = False
+    fused: bool = False
+    hyperparams: Optional[BankHyperparams] = None
+    block_p: Optional[int] = None
+    block_s: Optional[int] = None
 
     def __post_init__(self) -> None:
         if self.n_streams < 1:
@@ -59,38 +91,143 @@ class SeparatorBank:
         # reuse Separator's alias resolution + validation
         sep = Separator(self.easi, self.opt, self.algorithm, self.use_pallas)
         object.__setattr__(self, "algorithm", sep.algorithm)
+        if self.fused and self.algorithm != "smbgd_batched":
+            raise ValueError(
+                f"fused=True requires algorithm='smbgd_batched', "
+                f"got {self.algorithm!r}"
+            )
+        if self.hyperparams is not None:
+            if self.algorithm != "smbgd_batched":
+                raise ValueError(
+                    "per-stream hyperparams require algorithm='smbgd_batched'"
+                )
+            for name, v in self.hyperparams._asdict().items():
+                shape = jnp.shape(v)
+                if shape != (self.n_streams,):
+                    raise ValueError(
+                        f"hyperparams.{name} must have shape "
+                        f"({self.n_streams},), got {shape}"
+                    )
 
     @property
     def _sep(self) -> Separator:
         return Separator(self.easi, self.opt, self.algorithm, self.use_pallas)
 
+    # -- persistent padded layout ------------------------------------------
+    @property
+    def layout(self):
+        """Lane-aligned persistent layout (``kernels.easi_gradient.ops
+        .BankLayout``) for this bank's (n, m, P) — the fused path's contract."""
+        from repro.kernels.easi_gradient import ops as easi_ops
+
+        return easi_ops.bank_layout(
+            self.easi.n_components,
+            self.easi.n_features,
+            self.opt.batch_size,
+            block_p=self.block_p,
+        )
+
+    def pad_state(self, state: BankState) -> BankState:
+        """Logical → persistent-padded state (no-op if already padded)."""
+        lay = self.layout
+        if state.B.shape[-2:] == (lay.n_pad, lay.m_pad):
+            return state
+        S = state.B.shape[0]
+        B = (
+            jnp.zeros((S, lay.n_pad, lay.m_pad), state.B.dtype)
+            .at[:, : lay.n, : lay.m]
+            .set(state.B)
+        )
+        H = (
+            jnp.zeros((S, lay.n_pad, lay.n_pad), state.H_hat.dtype)
+            .at[:, : lay.n, : lay.n]
+            .set(state.H_hat)
+        )
+        return BankState(B=B, H_hat=H, step=state.step)
+
+    def unpad_state(self, state: BankState) -> BankState:
+        """Persistent-padded → logical state (no-op if already logical)."""
+        lay = self.layout
+        if state.B.shape[-2:] == (lay.n, lay.m):
+            return state
+        return BankState(
+            B=state.B[:, : lay.n, : lay.m],
+            H_hat=state.H_hat[:, : lay.n, : lay.n],
+            step=state.step,
+        )
+
+    def pad_batch(self, X: jnp.ndarray) -> jnp.ndarray:
+        """``X (S, P, m)`` → ``(S, P_pad, m_pad)`` (no-op if already padded).
+        Serving callers that stage into a padded buffer directly (see
+        ``SeparationService``) skip this copy entirely."""
+        lay = self.layout
+        if X.shape[-2:] == (lay.P_pad, lay.m_pad):
+            return X
+        S = X.shape[0]
+        return (
+            jnp.zeros((S, lay.P_pad, lay.m_pad), X.dtype)
+            .at[:, : lay.P, : lay.m]
+            .set(X)
+        )
+
+    def unpad_y(self, Y: jnp.ndarray) -> jnp.ndarray:
+        """Fused-path outputs ``Y (S, P_pad, n_pad)`` → logical ``(S, P, n)``."""
+        lay = self.layout
+        if Y.shape[-2:] == (lay.P, lay.n):
+            return Y
+        return Y[:, : lay.P, : lay.n]
+
     # -- state ------------------------------------------------------------
     def init(self, key: jax.Array) -> BankState:
         """Independent per-stream inits from ``jax.random.split(key, S)`` —
-        stream s's state equals ``Separator.init(split_keys[s])`` exactly."""
+        stream s's state equals ``Separator.init(split_keys[s])`` exactly.
+        Fused banks return the state already in the persistent padded layout.
+        """
         keys = jax.random.split(key, self.n_streams)
         sub = jax.vmap(lambda k: smbgd_lib.init_state(self.easi, k))(keys)
-        return BankState(B=sub.B, H_hat=sub.H_hat, step=sub.step)
+        state = BankState(B=sub.B, H_hat=sub.H_hat, step=sub.step)
+        return self.pad_state(state) if self.fused else state
 
     def init_slot(self, state: BankState, slot, key: jax.Array) -> BankState:
-        """Reset one stream slot to a fresh session (admission path)."""
+        """Reset one stream slot to a fresh session (admission path).  On a
+        padded bank the whole padded slot is cleared, so no stale accumulator
+        junk from the previous occupant survives."""
         sub = smbgd_lib.init_state(self.easi, key)
+        if self._is_padded(state):
+            lay = self.layout
+            B_slot = (
+                jnp.zeros((lay.n_pad, lay.m_pad), state.B.dtype)
+                .at[: lay.n, : lay.m]
+                .set(sub.B)
+            )
+            H_slot = jnp.zeros((lay.n_pad, lay.n_pad), state.H_hat.dtype)
+            return BankState(
+                B=state.B.at[slot].set(B_slot),
+                H_hat=state.H_hat.at[slot].set(H_slot),
+                step=state.step.at[slot].set(sub.step),
+            )
         return BankState(
             B=state.B.at[slot].set(sub.B),
             H_hat=state.H_hat.at[slot].set(sub.H_hat),
             step=state.step.at[slot].set(sub.step),
         )
 
-    @staticmethod
-    def slot_state(state: BankState, slot: int) -> SMBGDState:
-        """Extract one stream's state as a single-stream ``SMBGDState``."""
+    def slot_state(self, state: BankState, slot: int) -> SMBGDState:
+        """Extract one stream's state as a single-stream ``SMBGDState``
+        (always logical shapes — unpads the eviction boundary)."""
+        state = self.unpad_state(state)  # no-op on logical state
         return SMBGDState(
             B=state.B[slot], H_hat=state.H_hat[slot], step=state.step[slot]
         )
 
+    def _is_padded(self, state: BankState) -> bool:
+        n, m = self.easi.n_components, self.easi.n_features
+        return state.B.shape[-2:] != (n, m)
+
     @staticmethod
     def stack_states(states) -> BankState:
-        """Stack S single-stream ``SMBGDState``s into a ``BankState``."""
+        """Stack S single-stream ``SMBGDState``s into a (logical) ``BankState``
+        — feed through ``pad_state`` to enter a fused bank."""
         return BankState(
             B=jnp.stack([s.B for s in states]),
             H_hat=jnp.stack([s.H_hat for s in states]),
@@ -109,7 +246,14 @@ class SeparatorBank:
         ``X (S, P, m)`` → ``Y (S, P, n)``.  ``active (S,)`` bool (optional)
         freezes masked-out slots: their state is returned unchanged (their Y
         rows are still computed — garbage-in/garbage-out for free slots).
+
+        Fused banks run on padded shapes: ``X`` may be logical (padded here)
+        or already ``(S, P_pad, m_pad)`` (zero-copy), and the returned state
+        and ``Y (S, P_pad, n_pad)`` stay padded — ``unpad_state``/``unpad_y``
+        at the boundary.
         """
+        if self.fused:
+            return self._step_fused(state, X, active)
         new_state, Y = self._step_all(state, X)
         if active is not None:
             a3 = active[:, None, None]
@@ -120,7 +264,74 @@ class SeparatorBank:
             )
         return new_state, Y
 
+    @staticmethod
+    def _donate_default(donate: Optional[bool]) -> bool:
+        # On accelerators donation lets the runtime alias the persistent state
+        # buffers into the kernel outputs (zero steady-state allocation).  On
+        # the CPU backend XLA instead inserts defensive copies for donated
+        # params — measurably slower at bank sizes — so default it off there.
+        if donate is None:
+            return jax.default_backend() != "cpu"
+        return donate
+
+    def make_step(self, donate: Optional[bool] = None):
+        """Jitted ``step(state, X, active) -> (state, Y)``; with donation
+        (default on accelerators) the state buffers are reused for the
+        outputs, so a steady-state tick allocates nothing (the serving hot
+        loop)."""
+        fn = lambda st, X, active: self.step(st, X, active=active)
+        donate = self._donate_default(donate)
+        return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+    def make_epoch(self, donate: Optional[bool] = None):
+        """Jitted ``epoch(state, X) -> (state, Y)`` with donated state
+        (default on accelerators; see ``make_step``)."""
+        donate = self._donate_default(donate)
+        return jax.jit(self.epoch, donate_argnums=(0,) if donate else ())
+
+    def _bank_hyperparams(self) -> BankHyperparams:
+        if self.hyperparams is not None:
+            return self.hyperparams
+        return BankHyperparams.broadcast(self.opt, self.n_streams)
+
+    def _step_fused(
+        self, state: BankState, X: jnp.ndarray, active: Optional[jnp.ndarray]
+    ):
+        """Whole-step megakernel tick: one (streams, P-tiles) launch computes
+        Y, the weighted gradient sum AND the commit on persistent padded
+        state — nothing intermediate is materialized in HBM."""
+        from repro.kernels.easi_gradient import ops as easi_ops
+
+        lay = self.layout
+        state = self.pad_state(state)  # no-op on the persistent layout
+        X = self.pad_batch(X)  # no-op when staged block-aligned
+        hp = self._bank_hyperparams()
+        # weight rows at padded P: padded samples carry zero weight
+        W = (
+            jnp.zeros((self.n_streams, lay.P_pad), jnp.float32)
+            .at[:, : lay.P]
+            .set(hp.within_batch_weights(lay.P))
+        )
+        gamma_hat = hp.effective_momentum(lay.P)
+        if active is None:
+            active = jnp.ones((self.n_streams,), dtype=jnp.int32)
+        Y, B_new, H_new, step_new = easi_ops.smbgd_step_bank(
+            X,
+            W,
+            state.B,
+            state.H_hat,
+            state.step,
+            gamma_hat,
+            active,
+            nonlinearity=self.easi.nonlinearity,
+            block_p=lay.block_p,
+            block_s=self.block_s,
+        )
+        return BankState(B=B_new, H_hat=H_new, step=step_new), Y
+
     def _step_all(self, state: BankState, X: jnp.ndarray):
+        if self.hyperparams is not None:
+            return self._step_hetero(state, X)
         if self.algorithm == "smbgd_batched" and self.use_pallas:
             return self._step_pallas(state, X)
         sep = self._sep
@@ -128,9 +339,33 @@ class SeparatorBank:
         new_sub, Y = jax.vmap(sep.step)(sub, X)
         return BankState(B=new_sub.B, H_hat=new_sub.H_hat, step=new_sub.step), Y
 
+    def _step_hetero(self, state: BankState, X: jnp.ndarray):
+        """vmap fallback for per-stream (μ, β, γ) without the megakernel —
+        the reference semantics the fused path is tested against."""
+        from repro.core import easi as easi_lib
+
+        hp = self._bank_hyperparams()
+        P = self.opt.batch_size
+        W = hp.within_batch_weights(P)  # (S, P)
+        gamma_hat = hp.effective_momentum(P)  # (S,)
+        g = self.easi.g
+
+        def one(st: SMBGDState, x, w, gh):
+            Y = x @ st.B.T
+            S_grad = easi_lib.batched_relative_gradient(Y, w, g)
+            H_hat, B_next = smbgd_lib.smbgd_commit(
+                st.step, st.H_hat, S_grad, st.B, self.opt, gamma_hat=gh
+            )
+            return SMBGDState(B=B_next, H_hat=H_hat, step=st.step + 1), Y
+
+        sub = SMBGDState(B=state.B, H_hat=state.H_hat, step=state.step)
+        new_sub, Y = jax.vmap(one)(sub, X, W.astype(state.B.dtype), gamma_hat)
+        return BankState(B=new_sub.B, H_hat=new_sub.H_hat, step=new_sub.step), Y
+
     def _step_pallas(self, state: BankState, X: jnp.ndarray):
         """Closed-form SMBGD step with the gradient sum of all S streams fused
-        into one (streams, P-tiles) Pallas launch."""
+        into one (streams, P-tiles) Pallas launch (PR-1 path: Y and the
+        commit remain XLA ops around the gradient kernel)."""
         from repro.kernels.easi_gradient import ops as easi_ops
 
         B, H_prev = state.B, state.H_hat
@@ -148,7 +383,9 @@ class SeparatorBank:
         self, state: BankState, X: jnp.ndarray
     ) -> Tuple[BankState, jnp.ndarray]:
         """One pass over ``X (S, T, m)`` for every stream; returns
-        ``(state, Y (S, T', n))`` with T' = K·P (SMBGD) or T (SGD)."""
+        ``(state, Y (S, T', n))`` with T' = K·P (SMBGD) or T (SGD).  Fused
+        banks carry padded state through the scan (and return it padded) but
+        Y is returned logical."""
         if self.algorithm == "sgd":
             sep = self._sep
             sub = SMBGDState(B=state.B, H_hat=state.H_hat, step=state.step)
@@ -158,9 +395,12 @@ class SeparatorBank:
         P = self.opt.batch_size
         K = T // P
         Xb = X[:, : K * P].reshape(S, K, P, m).transpose(1, 0, 2, 3)  # (K, S, P, m)
+        if self.fused:
+            state = self.pad_state(state)
 
         def body(st, xb):
-            return self._step_all(st, xb)
+            st, Y = self.step(st, xb)
+            return st, self.unpad_y(Y) if self.fused else Y
 
         state, Yb = jax.lax.scan(body, state, Xb)  # Yb (K, S, P, n)
         return state, Yb.transpose(1, 0, 2, 3).reshape(S, K * P, -1)
@@ -168,11 +408,13 @@ class SeparatorBank:
     # -- deployment / diagnostics -----------------------------------------
     def transform(self, state: BankState, X: jnp.ndarray) -> jnp.ndarray:
         """Per-stream separation: ``X (S, ..., m)`` → ``Y (S, ..., n)``."""
-        return jnp.einsum("s...m,snm->s...n", X, state.B)
+        B = self.unpad_state(state).B  # no-op on logical state
+        return jnp.einsum("s...m,snm->s...n", X, B)
 
     def performance_index(self, state: BankState, A: jnp.ndarray) -> jnp.ndarray:
         """Per-stream Amari index against mixing ``A (m, n)`` or ``(S, m, n)``."""
+        B = self.unpad_state(state).B  # no-op on logical state
         if A.ndim == 2:
             A = jnp.broadcast_to(A, (self.n_streams,) + A.shape)
-        gs = jax.vmap(metrics_lib.global_system)(state.B, A)
+        gs = jax.vmap(metrics_lib.global_system)(B, A)
         return jax.vmap(metrics_lib.amari_index)(gs)

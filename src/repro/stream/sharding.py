@@ -5,15 +5,25 @@ collectives in the hot path — each device steps its local slice of the bank
 with the same fused program (``shard_map`` with everything partitioned over
 the stream axis).  This is the "rack of FPGAs" layout: bank state and the
 incoming mini-batches live sharded; only diagnostics ever gather.
+
+Works for every bank flavour: the vmap paths, the PR-1 gradient-kernel path,
+and the fused whole-step megakernel (``fused=True`` — persistent padded state
+shards over its leading axis like any other; each device launches its own
+``(local_streams, P-tiles)`` grid).  Per-stream ``BankHyperparams`` are
+threaded through ``shard_map`` as explicit sharded operands (NOT closure
+captures, which would silently replicate them and break the local shapes);
+each device rebuilds a local-width bank around its slice.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.smbgd import BankHyperparams
 from repro.stream.bank import BankState, SeparatorBank
 
 
@@ -28,13 +38,17 @@ def bank_sharding(mesh, axis: str = "stream") -> BankState:
     )
 
 
-def make_sharded_bank_step(bank: SeparatorBank, mesh, axis: str = "stream"):
+def make_sharded_bank_step(
+    bank: SeparatorBank, mesh, axis: str = "stream", donate: bool = False
+):
     """Build a jitted ``step(state, X[, active]) -> (state, Y)`` where the
     bank's stream axis is sharded over mesh axis ``axis``.
 
     Each device runs the fused bank step on its local streams; there are no
     cross-device collectives (streams are independent).  Requires
-    ``bank.n_streams %% mesh.shape[axis] == 0``.
+    ``bank.n_streams %% mesh.shape[axis] == 0``.  ``donate=True`` donates the
+    state buffers (persistent-padded fused banks: zero steady-state allocs
+    per device).
     """
     from jax.experimental.shard_map import shard_map
 
@@ -44,26 +58,35 @@ def make_sharded_bank_step(bank: SeparatorBank, mesh, axis: str = "stream"):
             f"n_streams {bank.n_streams} not divisible by {n_dev} devices on "
             f"axis {axis!r}"
         )
+    local_streams = bank.n_streams // n_dev
+    local_bank = dataclasses.replace(
+        bank, n_streams=local_streams, hyperparams=None
+    )
+    hetero = bank.hyperparams is not None
 
-    def local_step(B, H_hat, step, X, active):
-        st, Y = bank.step(BankState(B, H_hat, step), X, active=active)
+    def local_step(B, H_hat, step, X, active, hp):
+        lb = local_bank
+        if hetero:
+            lb = dataclasses.replace(lb, hyperparams=BankHyperparams(*hp))
+        st, Y = lb.step(BankState(B, H_hat, step), X, active=active)
         return st.B, st.H_hat, st.step, Y
 
+    hp_spec = (P(axis),) * 3 if hetero else ()
     sharded = shard_map(
         local_step,
         mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
+        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), hp_spec),
         out_specs=(P(axis), P(axis), P(axis), P(axis)),
         check_rep=False,
     )
 
-    @jax.jit
     def step(
         state: BankState, X: jnp.ndarray, active: Optional[jnp.ndarray] = None
     ) -> Tuple[BankState, jnp.ndarray]:
         if active is None:
             active = jnp.ones((bank.n_streams,), dtype=bool)
-        B, H_hat, stp, Y = sharded(state.B, state.H_hat, state.step, X, active)
+        hp = tuple(bank.hyperparams) if hetero else ()
+        B, H_hat, stp, Y = sharded(state.B, state.H_hat, state.step, X, active, hp)
         return BankState(B, H_hat, stp), Y
 
-    return step
+    return jax.jit(step, donate_argnums=(0,) if donate else ())

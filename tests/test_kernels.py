@@ -57,6 +57,29 @@ class TestEASIGradientKernel:
         the hand-copied table let `relu` drift once already)."""
         assert NONLIN_KERNELS is NONLINEARITIES
 
+    def test_aligned_fast_path_bit_identical(self):
+        """Block-aligned inputs skip the zeros().at[].set() staging copy —
+        the fast path must be bit-identical to the padding path's math.
+        (Aligned here means P divisible by the block and n sublane-aligned in
+        interpret mode; (513, 17) in the sweep above covers the slow path.)"""
+        key = jax.random.PRNGKey(42)
+        Y = jax.random.normal(key, (256, 8))  # aligned: P % block == 0, n % 8 == 0
+        w = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (256,))) * 0.01
+        np.testing.assert_array_equal(
+            np.asarray(easi_gradient(Y, w, block_p=64)),
+            np.asarray(easi_gradient(jnp.pad(Y, ((0, 0), (0, 0))), w, block_p=64)),
+        )
+        # and it still matches the oracle (i.e. the skip really fed the kernel
+        # the same operands, not a stale/transposed view)
+        S_r = easi_gradient_ref(Y, w)
+        assert float(jnp.max(jnp.abs(easi_gradient(Y, w, block_p=64) - S_r))) < 1e-3
+        # bank form
+        Yb = jax.random.normal(jax.random.fold_in(key, 2), (3, 256, 8))
+        S_k = easi_gradient_bank(Yb, w, block_p=64)
+        S_rb = easi_gradient_bank_ref(Yb, w)
+        scale = max(1.0, float(jnp.max(jnp.abs(S_rb))))
+        assert float(jnp.max(jnp.abs(S_k - S_rb))) < 1e-3 * scale
+
 
 class TestEASIGradientBankKernel:
     """The (streams, P-tiles) batched grid: one launch folds all streams."""
