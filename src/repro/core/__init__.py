@@ -9,7 +9,13 @@ from repro.core.easi import (
     transform,
 )
 from repro.core.ica import AdaptiveICA
-from repro.core.metrics import amari_index, global_system, iterations_to_converge
+from repro.core.metrics import (
+    amari_index,
+    ema_update,
+    global_system,
+    iterations_to_converge,
+    update_magnitude,
+)
 from repro.core.smbgd import (
     SMBGDConfig,
     SMBGDState,
@@ -27,6 +33,7 @@ __all__ = [
     "AdaptiveICA",
     "amari_index",
     "batched_relative_gradient",
+    "ema_update",
     "easi_sgd_scan",
     "easi_sgd_step",
     "global_system",
@@ -38,5 +45,6 @@ __all__ = [
     "smbgd_epoch",
     "smbgd_epoch_sequential",
     "smbgd_sequential_step",
+    "update_magnitude",
     "transform",
 ]

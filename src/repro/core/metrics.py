@@ -66,6 +66,46 @@ def iterations_to_converge(
     return jnp.where(jnp.any(below), idx, T)
 
 
+def update_magnitude(
+    B_new: jnp.ndarray, B_old: jnp.ndarray, eps: float = 1e-12
+) -> jnp.ndarray:
+    """Relative Frobenius update magnitude ``‖B_new − B_old‖_F / ‖B_old‖_F``.
+
+    The *blind* convergence statistic of an SMBGD separator: at a stationary
+    point the relative gradient sum vanishes, so ``ΔB = Ĥ′B → 0`` while ``B``
+    stays O(1).  Unlike the Amari index it needs no ground-truth mixing
+    matrix, and it is exactly what the whole-step megakernel computes
+    in-register at commit time (``ΔB = Ĥ′B`` — padding-exact, because padded
+    rows/columns of ``B`` are zero).  Shape-polymorphic: reduces the trailing
+    two axes, so ``(n, m)`` → scalar and ``(S, n, m)`` → ``(S,)``.
+    """
+    d = (B_new - B_old).astype(jnp.float32)
+    num = jnp.sqrt(jnp.sum(d * d, axis=(-2, -1)))
+    b = B_old.astype(jnp.float32)
+    den = jnp.sqrt(jnp.sum(b * b, axis=(-2, -1)))
+    return num / jnp.maximum(den, eps)
+
+
+def ema_update(
+    smoothed: jnp.ndarray, value: jnp.ndarray, decay: float
+) -> jnp.ndarray:
+    """One step of an inf-aware exponential moving average.
+
+    ``smoothed' = decay·smoothed + (1−decay)·value``, except that a
+    non-finite ``smoothed`` (the ``inf`` "never measured" init used by
+    ``BankState.conv`` and the serving monitors) is *replaced* by the first
+    observation instead of poisoning the average forever.  ``decay == 0``
+    passes the raw value through.  jit/vmap-safe and shape-broadcasting —
+    the in-graph counterpart of ``serve.engine.ConvergenceMonitor.update``'s
+    host-side recurrence (a parity test pins the two to the same values),
+    for callers that want the smoothing fused into the device step.
+    """
+    smoothed = jnp.asarray(smoothed, dtype=jnp.float32)
+    value = jnp.asarray(value, dtype=jnp.float32)
+    blended = decay * smoothed + (1.0 - decay) * value
+    return jnp.where(jnp.isfinite(smoothed), blended, value)
+
+
 def whiteness_error(Y: jnp.ndarray) -> jnp.ndarray:
     """‖cov(Y) − I‖_F / n — how well the symmetric EASI term has whitened the
     outputs.  EASI merges whitening with separation, so this must → 0 too."""

@@ -26,8 +26,12 @@ write), and each stream's LAST tile performs the SMBGD commit in-register:
     Ĥ' = γ̂·Ĥ + Σ_tiles S_tile      (γ̂ gated to 0 where step == 0)
     B' = B + Ĥ'·B ;  step' = step + 1
 
-so one kernel dispatch per bank tick reads ``X, B, Ĥ, step`` and writes
-``Y, B', Ĥ', step'`` — no intermediate ``Y``/``S_grad`` round-trips HBM.
+so one kernel dispatch per bank tick reads ``X, B, Ĥ, step, conv`` and writes
+``Y, B', Ĥ', step', conv'`` — no intermediate ``Y``/``S_grad`` round-trips
+HBM.  ``conv'`` is the per-stream convergence statistic ``‖Ĥ′B‖_F/‖B‖_F``
+(relative update magnitude) folded from the commit's own ΔB, so the serving
+layer's eviction policy reads an (S,)-float side channel instead of pulling
+state matrices back to the host.
 Per-stream weight rows ``W (S, P, 1)`` and momentum coefficients
 ``γ̂ (S, 1)`` make the bank heterogeneous (per-stream μ, β, γ) inside a single
 launch, and ``active (S, 1)`` freezes evicted/idle slots in-kernel (their
@@ -205,10 +209,12 @@ def _smbgd_step_bank_kernel(
     step_ref,
     gamma_hat_ref,
     active_ref,
+    conv_ref,
     y_ref,
     b_out_ref,
     h_out_ref,
     step_out_ref,
+    conv_out_ref,
     acc_ref,
     *,
     nonlin: str,
@@ -248,15 +254,24 @@ def _smbgd_step_bank_kernel(
         gamma_hat = jnp.where(step == 0, 0.0, gamma_hat_ref[...])[:, :, None]
         h_prev = h_ref[...].astype(jnp.float32)  # (bs, n, n)
         h_new = gamma_hat * h_prev + acc_ref[...]
-        b_new = b + jax.lax.dot_general(
+        db = jax.lax.dot_general(
             h_new, b, (((2,), (1,)), ((0,), (0,))),
             preferred_element_type=jnp.float32,
-        )
+        )  # ΔB = Ĥ′B (bs, n, m)
+        b_new = b + db
+        # per-stream convergence statistic ‖ΔB‖_F / ‖B‖_F, in-register — no
+        # extra HBM round-trip.  Padding-exact: padded rows/cols of B are
+        # zero, so the padded Σw diagonal of Ĥ′ never reaches ΔB.
+        num = jnp.sqrt(jnp.sum(db * db, axis=(1, 2)))  # (bs,)
+        den = jnp.sqrt(jnp.sum(b * b, axis=(1, 2)))
+        delta = (num / jnp.maximum(den, 1e-12))[:, None]  # (bs, 1)
+        conv_prev = conv_ref[...].astype(jnp.float32)  # (bs, 1)
         h_out_ref[...] = jnp.where(active, h_new, h_prev).astype(h_out_ref.dtype)
         b_out_ref[...] = jnp.where(active, b_new, b).astype(b_out_ref.dtype)
         step_out_ref[...] = step + jnp.where(active[:, :, 0], 1, 0).astype(
             step.dtype
         )
+        conv_out_ref[...] = jnp.where(active[:, :, 0], delta, conv_prev)
 
 
 def smbgd_step_bank_pallas(
@@ -267,6 +282,7 @@ def smbgd_step_bank_pallas(
     step: jnp.ndarray,
     gamma_hat: jnp.ndarray,
     active: jnp.ndarray,
+    conv: jnp.ndarray,
     *,
     nonlinearity: str = "cubic",
     block_p: int = 512,
@@ -278,12 +294,15 @@ def smbgd_step_bank_pallas(
 
     Expects pre-padded persistent-layout inputs (see ops.bank_layout):
     ``X (S, P, m)``, ``W (S, P, 1)``, ``B (S, n, m)``, ``H_hat (S, n, n)``,
-    ``step (S, 1) int32``, ``gamma_hat (S, 1) f32``, ``active (S, 1) int32``.
-    ``block_s`` streams ride one grid cell as a batch dimension (S % block_s
-    == 0) — per-stream math is independent, so the result is block_s
-    invariant; larger blocks amortize per-cell grid overhead.  Returns
-    ``(Y (S, P, n), B', H_hat', step')`` — the full next bank state plus
-    outputs, with no intermediate tensors materialized in HBM.
+    ``step (S, 1) int32``, ``gamma_hat (S, 1) f32``, ``active (S, 1) int32``,
+    ``conv (S, 1) f32`` (previous per-stream convergence statistic — carried
+    through unchanged for frozen streams).  ``block_s`` streams ride one grid
+    cell as a batch dimension (S % block_s == 0) — per-stream math is
+    independent, so the result is block_s invariant; larger blocks amortize
+    per-cell grid overhead.  Returns ``(Y (S, P, n), B', H_hat', step',
+    conv')`` — the full next bank state plus outputs, with no intermediate
+    tensors materialized in HBM; ``conv'`` is the relative update magnitude
+    ``‖Ĥ′B‖_F/‖B‖_F`` computed at commit time.
     """
     S, P, m = X.shape
     n = B.shape[1]
@@ -306,11 +325,13 @@ def smbgd_step_bank_pallas(
             pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
             pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
             pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
+            pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
         ],
         out_specs=[
             pl.BlockSpec((bs, block_p, n), lambda s, i: (s, i, 0)),
             pl.BlockSpec((bs, n, m), lambda s, i: (s, 0, 0)),
             pl.BlockSpec((bs, n, n), lambda s, i: (s, 0, 0)),
+            pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
             pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
         ],
         out_shape=[
@@ -318,7 +339,8 @@ def smbgd_step_bank_pallas(
             jax.ShapeDtypeStruct((S, n, m), B.dtype),
             jax.ShapeDtypeStruct((S, n, n), H_hat.dtype),
             jax.ShapeDtypeStruct((S, 1), jnp.int32),
+            jax.ShapeDtypeStruct((S, 1), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((bs, n, n), jnp.float32)],
         interpret=interpret,
-    )(X, W, B, H_hat, step, gamma_hat, active)
+    )(X, W, B, H_hat, step, gamma_hat, active, conv)

@@ -9,7 +9,8 @@ Both entry points honour it:
   * ``easi_gradient``       — single stream,   ``Y (P, n)``    → ``S (n, n)``
   * ``easi_gradient_bank``  — S streams fused, ``Y (S, P, n)`` → ``S (S, n, n)``
   * ``smbgd_step_bank``     — whole-step megakernel: one launch computes
-    ``Y = X Bᵀ``, the weighted gradient sum AND the SMBGD commit for all S
+    ``Y = X Bᵀ``, the weighted gradient sum, the SMBGD commit AND the
+    per-stream convergence statistic (relative update magnitude) for all S
     streams, on persistent-padded state (``BankLayout``).
 
 Block-aligned inputs take the zero-copy fast path: when an array already
@@ -184,6 +185,7 @@ def smbgd_step_bank(
     step: jnp.ndarray,
     gamma_hat: jnp.ndarray,
     active: jnp.ndarray,
+    conv: jnp.ndarray | None = None,
     *,
     nonlinearity: str = "cubic",
     block_p: int | None = None,
@@ -199,11 +201,17 @@ def smbgd_step_bank(
         (per-stream w_p = μ_s β_s^{P-1-p}, zero in padded rows),
       * ``B (S, n_pad, m_pad)``, ``H_hat (S, n_pad, n_pad)``,
       * ``step (S,)`` or ``(S, 1)`` int32, ``gamma_hat (S,)`` or ``(S, 1)``
-        f32 (γ̂_s = γ_s β_s^{P-1}), ``active (S,)`` or ``(S, 1)`` bool/int.
+        f32 (γ̂_s = γ_s β_s^{P-1}), ``active (S,)`` or ``(S, 1)`` bool/int,
+      * ``conv (S,)`` or ``(S, 1)`` f32 — previous per-stream convergence
+        statistic, carried through for frozen streams (defaults to +inf,
+        "never measured").
 
     ``block_s`` batches that many streams per grid cell (default: largest
     divisor of S ≤ 8 compiled / ≤ 32 interpreted).  Returns
-    ``(Y (S, P_pad, n_pad), B', H_hat', step' (S,))``.
+    ``(Y (S, P_pad, n_pad), B', H_hat', step' (S,), conv' (S,))`` where
+    ``conv'`` is the relative update magnitude ``‖Ĥ′B‖_F/‖B‖_F`` computed
+    inside the commit (see ``core.metrics.update_magnitude`` for the
+    reference formula).
     """
     if interpret is None:
         interpret = _interpret_default()
@@ -226,7 +234,10 @@ def smbgd_step_bank(
     step2 = step.reshape(S_streams, 1).astype(jnp.int32)
     gamma2 = gamma_hat.reshape(S_streams, 1).astype(jnp.float32)
     active2 = active.reshape(S_streams, 1).astype(jnp.int32)
-    Y, B_new, H_new, step_new = smbgd_step_bank_pallas(
+    if conv is None:
+        conv = jnp.full((S_streams, 1), jnp.inf, jnp.float32)
+    conv2 = conv.reshape(S_streams, 1).astype(jnp.float32)
+    Y, B_new, H_new, step_new, conv_new = smbgd_step_bank_pallas(
         X,
         Wp,
         B,
@@ -234,9 +245,10 @@ def smbgd_step_bank(
         step2,
         gamma2,
         active2,
+        conv2,
         nonlinearity=nonlinearity,
         block_p=block_p,
         block_s=block_s,
         interpret=interpret,
     )
-    return Y, B_new, H_new, step_new.reshape(S_streams)
+    return Y, B_new, H_new, step_new.reshape(S_streams), conv_new.reshape(S_streams)

@@ -46,29 +46,46 @@ def smbgd_step_bank_ref(
     step: jnp.ndarray,
     gamma_hat: jnp.ndarray,
     active: jnp.ndarray,
+    conv=None,
     nonlinearity: str = "cubic",
 ):
     """Whole-step oracle for the megakernel: a plain per-stream Python loop of
     naive single-stream steps (``Y = X Bᵀ``, per-sample outer-product gradient
     sum via ``easi_gradient_ref``, then the literal commit with the step-0 γ
-    gate and active-mask freeze).  Same signature/shapes as
-    ``ops.smbgd_step_bank`` minus the padding requirement."""
+    gate and active-mask freeze) plus the per-stream convergence statistic
+    ``‖Ĥ′B‖_F/‖B‖_F`` (carried through unchanged for frozen streams; ``conv``
+    defaults to +inf).  Same signature/shapes as ``ops.smbgd_step_bank`` minus
+    the padding requirement."""
     S = X.shape[0]
     W = jnp.asarray(W).reshape(S, -1)
     step = jnp.asarray(step).reshape(S)
     gamma_hat = jnp.asarray(gamma_hat).reshape(S)
     active = jnp.asarray(active).reshape(S)
-    Ys, Bs, Hs, steps = [], [], [], []
+    if conv is None:
+        conv = jnp.full((S,), jnp.inf, jnp.float32)
+    conv = jnp.asarray(conv).reshape(S).astype(jnp.float32)
+    Ys, Bs, Hs, steps, convs = [], [], [], [], []
     for s in range(S):
         B_s = B[s].astype(jnp.float32)
         Y_s = X[s].astype(jnp.float32) @ B_s.T
         S_s = easi_gradient_ref(Y_s, W[s], nonlinearity)
         gam = jnp.where(step[s] == 0, 0.0, gamma_hat[s])
         H_new = gam * H_hat[s].astype(jnp.float32) + S_s
-        B_new = B_s + H_new @ B_s
+        dB = H_new @ B_s
+        B_new = B_s + dB
+        delta = jnp.sqrt(jnp.sum(dB * dB)) / jnp.maximum(
+            jnp.sqrt(jnp.sum(B_s * B_s)), 1e-12
+        )
         act = bool(active[s])
         Ys.append(Y_s.astype(X.dtype))
         Bs.append((B_new if act else B[s].astype(jnp.float32)).astype(B.dtype))
         Hs.append((H_new if act else H_hat[s].astype(jnp.float32)).astype(H_hat.dtype))
         steps.append(step[s] + (1 if act else 0))
-    return jnp.stack(Ys), jnp.stack(Bs), jnp.stack(Hs), jnp.stack(steps)
+        convs.append(delta if act else conv[s])
+    return (
+        jnp.stack(Ys),
+        jnp.stack(Bs),
+        jnp.stack(Hs),
+        jnp.stack(steps),
+        jnp.stack(convs),
+    )

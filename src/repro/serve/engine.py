@@ -11,18 +11,58 @@ between steps):
     into the slots of a ``repro.stream.SeparatorBank``; every tick steps all
     live sessions with one fused bank program (the multi-stream analogue of
     the paper's single always-on FPGA datapath).
+
+Session lifecycle state machine (``SeparationService``)::
+
+        admit()                 admit() [no free slot]
+           │                        │
+           ▼                        ▼
+        ACTIVE ◄── backfill ──── QUEUED ──── evict() ──► (dequeued, None)
+           │                        ▲
+           │  step(): conv stat     │ bounded by max_queue — a full queue
+           │  < threshold for       │ raises (backpressure: the caller
+           │  `patience` ticks      │ must retry / shed load)
+           ▼                        │
+        CONVERGED (auto-evict) ─────┘ freed slot backfilled from the queue
+           │                          head IN THE SAME TICK
+           ▼
+        EVICTED — final ``SMBGDState`` + serving stats retained in
+        ``finished`` (drain with ``pop_finished()``); manual ``evict()``
+        takes the ACTIVE→EVICTED edge directly and returns the state.
+
+Backpressure semantics: ``admit`` NEVER silently drops a session.  With a
+free slot it activates immediately (returns the slot index); otherwise it
+enqueues FIFO up to ``max_queue`` deep (returns ``None``) and past that
+raises ``RuntimeError``.  Queued sessions hold no device state — their
+separator is initialized at activation time, so the γ step-0 gate applies at
+the tick they actually start, and a queued session cancelled via ``evict``
+costs nothing.
+
+Convergence detection rides the bank's in-kernel statistic
+(``BankState.conv`` — relative update magnitude ``‖ΔB‖_F/‖B‖_F``, computed at
+commit time inside the megakernel, so detection costs one (S,)-float host
+read per tick, not a state round-trip).  ``ConvergencePolicy`` turns the raw
+statistic into an eviction decision: optional EMA smoothing, a threshold the
+smoothed statistic must stay under for ``patience`` consecutive data ticks,
+a ``min_ticks`` floor, and an optional Amari-index confirmation for sessions
+whose true mixing matrix was registered via ``set_mixing`` (the blind
+statistic can dip early; the Amari check vetoes eviction until the separator
+actually separates).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import math
 import time
-from typing import Any, Dict, Hashable, List, Optional, Tuple
+from typing import Any, Callable, Deque, Dict, Hashable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import metrics as metrics_lib
 from repro.core.smbgd import SMBGDState
 from repro.models import model as M
 from repro.stream.bank import BankState, SeparatorBank
@@ -93,6 +133,77 @@ class SessionStats:
         return self.samples / max(now - self.admitted_at, 1e-9)
 
 
+@dataclasses.dataclass(frozen=True)
+class ConvergencePolicy:
+    """When is a session done?  Threshold + patience + floor over the bank's
+    in-step convergence statistic (``BankState.conv``), with optional EMA
+    smoothing and an optional ground-truth Amari confirmation.
+
+    A session auto-evicts at the first data tick where ALL of:
+      * it has received at least ``min_ticks`` mini-batches,
+      * its (EMA-smoothed when ``ema > 0``) update magnitude has been below
+        ``threshold`` for ``patience`` consecutive data ticks,
+      * if ``amari_threshold`` is set AND the session's mixing matrix was
+        registered via ``SeparationService.set_mixing``: the Amari index of
+        ``B·A`` is below ``amari_threshold`` (unknown mixing → the blind
+        statistic alone decides).
+    """
+
+    threshold: float = 1e-3  # conv stat must stay under this ...
+    patience: int = 3  # ... for this many consecutive data ticks
+    min_ticks: int = 8  # never evict younger sessions (γ warm-up)
+    ema: float = 0.0  # smoothing: s' = ema·s + (1−ema)·x (0 → raw)
+    amari_threshold: Optional[float] = None  # optional ground-truth gate
+
+    def __post_init__(self) -> None:
+        if self.patience < 1:
+            raise ValueError("patience must be >= 1")
+        if not (0.0 <= self.ema < 1.0):
+            raise ValueError("ema must be in [0, 1)")
+
+
+@dataclasses.dataclass
+class ConvergenceMonitor:
+    """Per-session streaming state of the convergence decision (host-side;
+    serializable via ``dataclasses.asdict`` for checkpoint round-trips).
+
+    Carries its own data-tick counter so the ``min_ticks`` floor survives a
+    checkpoint round-trip exactly (``SessionStats`` deliberately restarts its
+    counters at restore — observability describes the restored epoch, the
+    convergence decision must not).  The EMA recurrence is the host-side
+    twin of ``core.metrics.ema_update`` (kept in plain Python floats — this
+    runs per served session per tick; a parity test pins the two)."""
+
+    stat: float = float("inf")  # EMA-smoothed statistic (raw when ema == 0)
+    below: int = 0  # consecutive data ticks with stat < threshold
+    ticks: int = 0  # data ticks observed (min_ticks floor)
+
+    def update(self, x: float, policy: ConvergencePolicy) -> None:
+        if policy.ema and math.isfinite(self.stat):
+            self.stat = policy.ema * self.stat + (1.0 - policy.ema) * x
+        else:
+            self.stat = x
+        self.below = self.below + 1 if self.stat < policy.threshold else 0
+        self.ticks += 1
+
+
+@dataclasses.dataclass
+class EvictionRecord:
+    """What the service hands back (or retains) when a session leaves a slot.
+
+    The evicted ``SMBGDState`` is sliced out of the bank *before* the slot is
+    re-initialized for a backfill, so ``state`` is exactly the session's state
+    at eviction time; ``stats``/``monitor`` preserve the per-session serving
+    counters across the eviction (the churn observability surface).
+    """
+
+    state: SMBGDState
+    stats: SessionStats
+    monitor: Optional[ConvergenceMonitor]
+    reason: str  # "converged" (auto) or "evicted" (manual)
+    tick: int  # service tick counter at eviction
+
+
 class SeparationService:
     """Continuous-batching front door for a ``SeparatorBank``.
 
@@ -121,16 +232,43 @@ class SeparationService:
     reports per-session tick/sample counters and samples/sec since admission.
     ``block_ticks=True`` synchronizes on the device result before stopping the
     tick clock, so latencies measure compute, not dispatch.
+
+    Lifecycle (see the module docstring for the full state machine): with
+    ``max_queue > 0`` a full bank enqueues admissions instead of raising
+    (bounded backpressure), and with a ``ConvergencePolicy`` the service
+    watches each active session's in-bank convergence statistic and
+    auto-evicts converged sessions at the end of the tick — their final
+    ``SMBGDState`` (+ stats) lands in ``finished`` / ``pop_finished()`` and
+    the freed slot is backfilled from the queue within the same tick.
+    ``on_admit(sid, slot)`` / ``on_evict(sid, record)`` callbacks observe
+    both transitions (backfills and auto-evictions included).
     """
 
     def __init__(
-        self, bank: SeparatorBank, seed: int = 0, block_ticks: bool = False
+        self,
+        bank: SeparatorBank,
+        seed: int = 0,
+        block_ticks: bool = False,
+        policy: Optional[ConvergencePolicy] = None,
+        max_queue: int = 0,
+        on_admit: Optional[Callable[[Hashable, int], None]] = None,
+        on_evict: Optional[Callable[[Hashable, EvictionRecord], None]] = None,
     ):
         self.bank = bank
         self.key = jax.random.PRNGKey(seed)
         self.state: BankState = bank.init(self.key)
+        self.policy = policy
+        self.max_queue = max_queue
+        self.on_admit = on_admit
+        self.on_evict = on_evict
         self._free: List[int] = list(range(bank.n_streams - 1, -1, -1))  # pop() → slot 0 first
         self._slot_of: Dict[Hashable, int] = {}
+        self._queue: Deque[Hashable] = collections.deque()
+        self._monitors: Dict[Hashable, ConvergenceMonitor] = {}
+        self._mixing: Dict[Hashable, jnp.ndarray] = {}
+        self._finished: Dict[Hashable, EvictionRecord] = {}
+        self._n_evicted = 0
+        self._n_auto_evicted = 0
         # donated state on accelerators: the runtime reuses the old state
         # buffers for the new state — the steady-state tick performs no state
         # allocation (CPU backend opts out; see SeparatorBank.make_step)
@@ -158,6 +296,45 @@ class SeparationService:
     def n_free(self) -> int:
         return len(self._free)
 
+    @property
+    def n_queued(self) -> int:
+        return len(self._queue)
+
+    @property
+    def queued(self) -> Tuple[Hashable, ...]:
+        """FIFO snapshot of the admission queue (head first)."""
+        return tuple(self._queue)
+
+    @property
+    def finished(self) -> Dict[Hashable, EvictionRecord]:
+        """Retained eviction records (read-only view; drain with
+        ``pop_finished``)."""
+        return dict(self._finished)
+
+    def pop_finished(self) -> Dict[Hashable, EvictionRecord]:
+        """Drain and return the eviction records accumulated so far."""
+        out, self._finished = self._finished, {}
+        return out
+
+    def status(self, session_id: Hashable) -> str:
+        """Lifecycle state: ``"active" | "queued" | "finished" | "unknown"``."""
+        if session_id in self._slot_of:
+            return "active"
+        if session_id in self._queue:
+            return "queued"
+        if session_id in self._finished:
+            return "finished"
+        return "unknown"
+
+    def set_mixing(self, session_id: Hashable, A: jnp.ndarray) -> None:
+        """Register the session's ground-truth mixing matrix ``A (m, n)`` so
+        ``ConvergencePolicy.amari_threshold`` can confirm convergence on the
+        global system ``B·A`` (benchmarks / synthetic workloads; production
+        sessions without ground truth simply never register one)."""
+        if session_id not in self._slot_of and session_id not in self._queue:
+            raise KeyError(f"session {session_id!r} is neither active nor queued")
+        self._mixing[session_id] = jnp.asarray(A)
+
     # -- metrics -----------------------------------------------------------
     @property
     def metrics(self) -> Dict[str, float]:
@@ -165,6 +342,9 @@ class SeparationService:
         return {
             "n_active": float(self.n_active),
             "n_free": float(self.n_free),
+            "n_queued": float(self.n_queued),
+            "n_evicted": float(self._n_evicted),
+            "n_auto_evicted": float(self._n_auto_evicted),
             "n_ticks": float(self._n_ticks),
             "total_samples": float(self._total_samples),
             "last_tick_s": self._last_tick_s,
@@ -177,38 +357,98 @@ class SeparationService:
         }
 
     def session_stats(self, session_id: Hashable) -> Dict[str, float]:
-        """Per-session counters: ticks, samples, samples/sec since admit."""
+        """Per-session counters: ticks, samples, samples/sec since admit —
+        plus the convergence monitor (smoothed stat, consecutive below-count)
+        when a policy is attached."""
         st = self._stats[session_id]
-        return {
+        out = {
             "ticks": float(st.ticks),
             "samples": float(st.samples),
             "samples_per_s": st.samples_per_s(),
         }
+        mon = self._monitors.get(session_id)
+        if mon is not None:
+            out["conv_stat"] = mon.stat
+            out["conv_below"] = float(mon.below)
+        return out
 
-    def admit(self, session_id: Hashable) -> int:
-        """Assign ``session_id`` a fresh separator in a free slot; returns the
-        slot index.  Raises when the bank is full or the id is already live."""
-        if session_id in self._slot_of:
+    def admit(self, session_id: Hashable) -> Optional[int]:
+        """Admit ``session_id``: into a free slot (returns the slot index), or
+        — when the bank is full and ``max_queue`` allows — onto the FIFO
+        admission queue (returns ``None``; the session activates when a slot
+        frees).  Raises ``ValueError`` for duplicate ids and ``RuntimeError``
+        when bank AND queue are full (backpressure: the caller must shed
+        load or retry later)."""
+        if session_id in self._slot_of or session_id in self._queue:
             raise ValueError(f"session {session_id!r} already admitted")
         if not self._free:
+            if len(self._queue) < self.max_queue:
+                self._queue.append(session_id)
+                return None
             raise RuntimeError(
-                f"bank full ({self.bank.n_streams} slots); evict before admitting"
+                f"bank full ({self.bank.n_streams} slots, "
+                f"{len(self._queue)}/{self.max_queue} queued); evict before "
+                f"admitting"
             )
+        return self._activate(session_id)
+
+    def _activate(self, session_id: Hashable) -> int:
+        """QUEUED/new → ACTIVE: claim a free slot and initialize it (the
+        session's device state is born here, so the γ step-0 gate applies at
+        its first *served* tick)."""
         slot = self._free.pop()
         self.key, k = jax.random.split(self.key)
         self.state = self.bank.init_slot(self.state, slot, k)
         self._slot_of[session_id] = slot
         self._stats[session_id] = SessionStats(admitted_at=time.perf_counter())
+        self._monitors[session_id] = ConvergenceMonitor()
+        if self.on_admit is not None:
+            self.on_admit(session_id, slot)
         return slot
 
-    def evict(self, session_id: Hashable) -> SMBGDState:
-        """Release the session's slot back to the free list; returns its final
-        single-stream state (B is the session's learned separation matrix)."""
+    def evict(self, session_id: Hashable) -> Optional[SMBGDState]:
+        """ACTIVE → EVICTED: release the slot and return the session's final
+        single-stream state (B is its learned separation matrix), backfilling
+        the freed slot from the admission queue.  A QUEUED session is simply
+        dequeued (returns ``None`` — it never had device state).  An unknown
+        id raises ``KeyError`` without touching the free list."""
+        if session_id not in self._slot_of:
+            try:
+                self._queue.remove(session_id)  # cancellation of a queued session
+            except ValueError:
+                raise KeyError(
+                    f"session {session_id!r} is neither active nor queued"
+                ) from None
+            self._mixing.pop(session_id, None)
+            return None
+        return self._release(session_id, reason="evicted").state
+
+    def _release(self, session_id: Hashable, reason: str) -> EvictionRecord:
+        """ACTIVE → EVICTED edge shared by manual ``evict`` and the policy's
+        auto-eviction: slice the final state out of the bank, free the slot,
+        record the eviction, and backfill from the queue head — all before
+        the next tick touches the bank."""
         slot = self._slot_of.pop(session_id)
-        self._stats.pop(session_id, None)
-        final = self.bank.slot_state(self.state, slot)
+        record = EvictionRecord(
+            state=self.bank.slot_state(self.state, slot),
+            stats=self._stats.pop(session_id),
+            monitor=self._monitors.pop(session_id, None),
+            reason=reason,
+            tick=self._n_ticks,
+        )
+        self._mixing.pop(session_id, None)
         self._free.append(slot)
-        return final
+        self._n_evicted += 1
+        if reason == "converged":
+            self._n_auto_evicted += 1
+        self._finished[session_id] = record
+        if self.on_evict is not None:
+            self.on_evict(session_id, record)
+        # same-tick backfill: the freed slot was appended last, so the queue
+        # head lands exactly in the slot that just opened
+        if self._queue:
+            self._activate(self._queue.popleft())
+        return record
 
     def step(self, batches: Dict[Hashable, jnp.ndarray]) -> Dict[Hashable, jnp.ndarray]:
         """Advance every session that sent data this tick.
@@ -258,18 +498,69 @@ class SeparationService:
             st = self._stats[sid]
             st.ticks += 1
             st.samples += P
-        return {sid: Y[self._slot_of[sid], :P, :n] for sid in batches}
+        # slice outputs BEFORE any auto-eviction mutates the slot map: evicted
+        # sessions still receive this tick's separated output
+        out = {sid: Y[self._slot_of[sid], :P, :n] for sid in batches}
+        if self.policy is not None:
+            self._apply_policy(batches.keys())
+        return out
+
+    def _apply_policy(self, served) -> None:
+        """End-of-tick convergence sweep: update each served session's monitor
+        from the bank's in-step statistic, auto-evict the converged ones and
+        backfill their slots from the queue (same tick).
+
+        One (S,)-float device read per tick — the statistic itself was folded
+        inside the bank step (in-register on the fused path)."""
+        pol = self.policy
+        conv = np.asarray(self.state.conv)  # (S,) f32
+        evict_now: List[Hashable] = []
+        for sid in served:
+            mon = self._monitors[sid]
+            mon.update(float(conv[self._slot_of[sid]]), pol)
+            if mon.ticks < pol.min_ticks or mon.below < pol.patience:
+                continue
+            if pol.amari_threshold is not None and sid in self._mixing:
+                B = self.bank.slot_state(self.state, self._slot_of[sid]).B
+                pi = float(
+                    metrics_lib.amari_index(
+                        metrics_lib.global_system(B, self._mixing[sid])
+                    )
+                )
+                if pi > pol.amari_threshold:
+                    continue  # blind stat dipped early — not separated yet
+            evict_now.append(sid)
+        for sid in evict_now:
+            self._release(sid, reason="converged")
 
     # -- persistence -------------------------------------------------------
     # The bank state is a plain pytree, so the array side round-trips through
-    # any Checkpointer.  The session→slot map is host bookkeeping (arbitrary
-    # hashable ids — not arrays): callers persist it themselves via
-    # ``sessions`` and hand it back to ``restore`` to resume live sessions.
+    # any Checkpointer.  The session→slot map, admission queue and monitor
+    # counters are host bookkeeping (arbitrary hashable ids — not arrays):
+    # callers persist them via ``sessions``/``lifecycle`` and hand them back
+    # to ``restore`` to resume live sessions and queued admissions.
 
     @property
     def sessions(self) -> Dict[Hashable, int]:
         """Snapshot of the live session→slot map (save alongside the arrays)."""
         return dict(self._slot_of)
+
+    @property
+    def lifecycle(self) -> Dict[str, Any]:
+        """JSON-friendly snapshot of the full host-side lifecycle state:
+        session→slot map, FIFO admission queue, and per-session convergence
+        monitors.  Save alongside the arrays; hand back to ``restore`` to
+        resume sessions, queue AND convergence progress in place.  Mixing
+        matrices registered via ``set_mixing`` are arrays and deliberately
+        excluded — re-register them after restore (see ``restore``)."""
+        return {
+            "sessions": dict(self._slot_of),
+            "queue": list(self._queue),
+            "monitors": {
+                sid: dataclasses.asdict(mon)
+                for sid, mon in self._monitors.items()
+            },
+        }
 
     def save(self, checkpointer, step: int) -> None:
         # rng_key rides along so post-restore admissions continue the key
@@ -281,15 +572,28 @@ class SeparationService:
         checkpointer,
         step: Optional[int] = None,
         sessions: Optional[Dict[Hashable, int]] = None,
+        lifecycle: Optional[Dict[str, Any]] = None,
     ) -> int:
-        """Restore bank arrays and (optionally) re-attach live sessions.
+        """Restore bank arrays and (optionally) re-attach host lifecycle state.
 
-        Without ``sessions`` every slot is considered free: restored separator
-        matrices are still in the arrays but will be overwritten as slots are
-        re-admitted.  Pass the ``sessions`` map captured at save time to
-        resume those sessions in place.
+        Without ``sessions``/``lifecycle`` every slot is considered free:
+        restored separator matrices are still in the arrays but will be
+        overwritten as slots are re-admitted.  Pass the ``sessions`` map (or
+        the richer ``lifecycle`` snapshot, which also carries the admission
+        queue and the per-session convergence monitors) captured at save time
+        to resume in place.
+
+        Ground-truth mixing matrices are NOT part of the snapshot (they are
+        arrays, not host bookkeeping, and the snapshot stays JSON-able):
+        callers using ``ConvergencePolicy.amari_threshold`` must re-register
+        them via ``set_mixing`` after restore, or the Amari confirmation is
+        skipped and the blind statistic decides alone.
         """
-        sessions = sessions or {}
+        lifecycle = lifecycle or {}
+        if sessions is None:
+            sessions = lifecycle.get("sessions") or {}
+        queue = list(lifecycle.get("queue") or [])
+        monitors = lifecycle.get("monitors") or {}
         bad = {
             s: slot
             for s, slot in sessions.items()
@@ -299,6 +603,9 @@ class SeparationService:
             raise ValueError(f"session slots out of range: {bad}")
         if len(set(sessions.values())) != len(sessions):
             raise ValueError(f"duplicate slots in session map: {sessions}")
+        overlap = set(queue) & set(sessions)
+        if overlap or len(set(queue)) != len(queue):
+            raise ValueError(f"queue/session overlap or duplicates: {queue}")
         # validate BEFORE mutating: a rejected map must leave the live
         # service untouched
         target = dict(self.state._asdict(), rng_key=self.key)
@@ -306,6 +613,17 @@ class SeparationService:
         self.key = tree.pop("rng_key")
         self.state = BankState(**tree)
         self._slot_of = dict(sessions)
+        self._queue = collections.deque(queue)
+        # convergence progress resumes exactly; sessions without a saved
+        # monitor restart their decision state (but not their separator)
+        self._monitors = {
+            sid: ConvergenceMonitor(**monitors[sid])
+            if sid in monitors
+            else ConvergenceMonitor()
+            for sid in sessions
+        }
+        self._mixing = {}
+        self._finished = {}
         # serving counters restart at restore time — per-session AND aggregate
         # (metrics must describe the restored epoch, not blend the old run)
         now = time.perf_counter()
@@ -314,6 +632,8 @@ class SeparationService:
         self._total_samples = 0
         self._total_tick_s = 0.0
         self._last_tick_s = float("nan")
+        self._n_evicted = 0
+        self._n_auto_evicted = 0
         taken = set(sessions.values())
         self._free = [s for s in range(self.bank.n_streams - 1, -1, -1) if s not in taken]
         return got

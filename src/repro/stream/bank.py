@@ -33,6 +33,14 @@ paper's first-batch rule) regardless of what the other streams are doing.
 continuous-batching hook used by ``serve.engine.SeparationService``; the
 megakernel applies the mask in-register at commit time.
 
+Convergence statistics: every step path also produces ``BankState.conv`` —
+the per-stream relative update magnitude ``‖ΔB‖_F/‖B‖_F`` of the committed
+tick (identical formula in the megakernel, the PR-1 Pallas path, the vmap
+path and the hetero-vmap fallback, matching the ref oracle).  The fused path
+computes it in-register from the commit's own ``Ĥ′B`` product, so the serving
+layer's eviction policy (``serve.ConvergencePolicy``) reads an (S,)-float
+side channel per tick instead of pulling ``B``/``Ĥ`` back to the host.
+
 Checkpointing: ``BankState`` is a plain pytree of arrays (padded or not), so
 ``checkpoint.Checkpointer`` round-trips it unmodified (tested).
 """
@@ -57,11 +65,21 @@ class BankState(NamedTuple):
     Shapes are logical — ``B (S, n, m)``, ``H_hat (S, n, n)`` — for the vmap
     paths, or persistent-padded — ``B (S, n_pad, m_pad)``, ``H_hat (S, n_pad,
     n_pad)`` per ``SeparatorBank.layout`` — for the fused megakernel path.
+
+    ``conv`` is the per-stream convergence statistic of the last committed
+    tick — the relative update magnitude ``‖ΔB‖_F/‖B‖_F`` (see
+    ``core.metrics.update_magnitude``), +inf for never-stepped streams.  It is
+    produced *inside* every step path (the megakernel folds it in-register at
+    commit time — no extra HBM round-trip), frozen with the rest of the slot
+    under the active mask, and checkpoints/shards like any other leaf.
+    ``conv=None`` (the default, for states built by legacy callers) is
+    normalized to +inf on the first step.
     """
 
     B: jnp.ndarray  # (S, n, m) or (S, n_pad, m_pad)
     H_hat: jnp.ndarray  # (S, n, n) or (S, n_pad, n_pad)
     step: jnp.ndarray  # (S,) int32 — per-stream mini-batch counter
+    conv: Optional[jnp.ndarray] = None  # (S,) f32 — last-tick ‖ΔB‖_F/‖B‖_F
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -143,7 +161,7 @@ class SeparatorBank:
             .at[:, : lay.n, : lay.n]
             .set(state.H_hat)
         )
-        return BankState(B=B, H_hat=H, step=state.step)
+        return BankState(B=B, H_hat=H, step=state.step, conv=state.conv)
 
     def unpad_state(self, state: BankState) -> BankState:
         """Persistent-padded → logical state (no-op if already logical)."""
@@ -154,6 +172,7 @@ class SeparatorBank:
             B=state.B[:, : lay.n, : lay.m],
             H_hat=state.H_hat[:, : lay.n, : lay.n],
             step=state.step,
+            conv=state.conv,
         )
 
     def pad_batch(self, X: jnp.ndarray) -> jnp.ndarray:
@@ -185,7 +204,12 @@ class SeparatorBank:
         """
         keys = jax.random.split(key, self.n_streams)
         sub = jax.vmap(lambda k: smbgd_lib.init_state(self.easi, k))(keys)
-        state = BankState(B=sub.B, H_hat=sub.H_hat, step=sub.step)
+        state = BankState(
+            B=sub.B,
+            H_hat=sub.H_hat,
+            step=sub.step,
+            conv=jnp.full((self.n_streams,), jnp.inf, jnp.float32),
+        )
         return self.pad_state(state) if self.fused else state
 
     def init_slot(self, state: BankState, slot, key: jax.Array) -> BankState:
@@ -193,6 +217,7 @@ class SeparatorBank:
         padded bank the whole padded slot is cleared, so no stale accumulator
         junk from the previous occupant survives."""
         sub = smbgd_lib.init_state(self.easi, key)
+        conv = self._conv_or_default(state).at[slot].set(jnp.inf)
         if self._is_padded(state):
             lay = self.layout
             B_slot = (
@@ -205,11 +230,13 @@ class SeparatorBank:
                 B=state.B.at[slot].set(B_slot),
                 H_hat=state.H_hat.at[slot].set(H_slot),
                 step=state.step.at[slot].set(sub.step),
+                conv=conv,
             )
         return BankState(
             B=state.B.at[slot].set(sub.B),
             H_hat=state.H_hat.at[slot].set(sub.H_hat),
             step=state.step.at[slot].set(sub.step),
+            conv=conv,
         )
 
     def slot_state(self, state: BankState, slot: int) -> SMBGDState:
@@ -225,13 +252,23 @@ class SeparatorBank:
         return state.B.shape[-2:] != (n, m)
 
     @staticmethod
+    def _conv_or_default(state: BankState) -> jnp.ndarray:
+        """``state.conv``, or the +inf "never measured" init for states built
+        by legacy callers that predate the convergence statistic."""
+        if state.conv is not None:
+            return state.conv
+        return jnp.full((state.B.shape[0],), jnp.inf, jnp.float32)
+
+    @staticmethod
     def stack_states(states) -> BankState:
         """Stack S single-stream ``SMBGDState``s into a (logical) ``BankState``
-        — feed through ``pad_state`` to enter a fused bank."""
+        — feed through ``pad_state`` to enter a fused bank.  Single-stream
+        states carry no convergence statistic, so ``conv`` restarts at +inf."""
         return BankState(
             B=jnp.stack([s.B for s in states]),
             H_hat=jnp.stack([s.H_hat for s in states]),
             step=jnp.stack([s.step for s in states]),
+            conv=jnp.full((len(states),), jnp.inf, jnp.float32),
         )
 
     # -- stepping ----------------------------------------------------------
@@ -261,6 +298,9 @@ class SeparatorBank:
                 B=jnp.where(a3, new_state.B, state.B),
                 H_hat=jnp.where(a3, new_state.H_hat, state.H_hat),
                 step=jnp.where(active, new_state.step, state.step),
+                conv=jnp.where(
+                    active != 0, new_state.conv, self._conv_or_default(state)
+                ),
             )
         return new_state, Y
 
@@ -315,7 +355,7 @@ class SeparatorBank:
         gamma_hat = hp.effective_momentum(lay.P)
         if active is None:
             active = jnp.ones((self.n_streams,), dtype=jnp.int32)
-        Y, B_new, H_new, step_new = easi_ops.smbgd_step_bank(
+        Y, B_new, H_new, step_new, conv_new = easi_ops.smbgd_step_bank(
             X,
             W,
             state.B,
@@ -323,11 +363,12 @@ class SeparatorBank:
             state.step,
             gamma_hat,
             active,
+            self._conv_or_default(state),
             nonlinearity=self.easi.nonlinearity,
             block_p=lay.block_p,
             block_s=self.block_s,
         )
-        return BankState(B=B_new, H_hat=H_new, step=step_new), Y
+        return BankState(B=B_new, H_hat=H_new, step=step_new, conv=conv_new), Y
 
     def _step_all(self, state: BankState, X: jnp.ndarray):
         if self.hyperparams is not None:
@@ -337,7 +378,15 @@ class SeparatorBank:
         sep = self._sep
         sub = SMBGDState(B=state.B, H_hat=state.H_hat, step=state.step)
         new_sub, Y = jax.vmap(sep.step)(sub, X)
-        return BankState(B=new_sub.B, H_hat=new_sub.H_hat, step=new_sub.step), Y
+        return (
+            BankState(
+                B=new_sub.B,
+                H_hat=new_sub.H_hat,
+                step=new_sub.step,
+                conv=metrics_lib.update_magnitude(new_sub.B, state.B),
+            ),
+            Y,
+        )
 
     def _step_hetero(self, state: BankState, X: jnp.ndarray):
         """vmap fallback for per-stream (μ, β, γ) without the megakernel —
@@ -360,7 +409,15 @@ class SeparatorBank:
 
         sub = SMBGDState(B=state.B, H_hat=state.H_hat, step=state.step)
         new_sub, Y = jax.vmap(one)(sub, X, W.astype(state.B.dtype), gamma_hat)
-        return BankState(B=new_sub.B, H_hat=new_sub.H_hat, step=new_sub.step), Y
+        return (
+            BankState(
+                B=new_sub.B,
+                H_hat=new_sub.H_hat,
+                step=new_sub.step,
+                conv=metrics_lib.update_magnitude(new_sub.B, state.B),
+            ),
+            Y,
+        )
 
     def _step_pallas(self, state: BankState, X: jnp.ndarray):
         """Closed-form SMBGD step with the gradient sum of all S streams fused
@@ -377,7 +434,15 @@ class SeparatorBank:
         H_hat, B_next = smbgd_lib.smbgd_commit(
             state.step, H_prev, S_grad, B, self.opt
         )
-        return BankState(B=B_next, H_hat=H_hat, step=state.step + 1), Y
+        return (
+            BankState(
+                B=B_next,
+                H_hat=H_hat,
+                step=state.step + 1,
+                conv=metrics_lib.update_magnitude(B_next, B),
+            ),
+            Y,
+        )
 
     def epoch(
         self, state: BankState, X: jnp.ndarray
@@ -385,18 +450,35 @@ class SeparatorBank:
         """One pass over ``X (S, T, m)`` for every stream; returns
         ``(state, Y (S, T', n))`` with T' = K·P (SMBGD) or T (SGD).  Fused
         banks carry padded state through the scan (and return it padded) but
-        Y is returned logical."""
+        Y is returned logical.
+
+        ``conv`` semantics: the SMBGD paths scan ``step``, so the returned
+        statistic is the LAST mini-batch's ``‖ΔB‖_F/‖B‖_F`` (same scale as
+        the serving tick path).  The SGD path has no mini-batch structure —
+        its conv is the whole-epoch aggregate ``‖B_end−B_start‖_F/‖B_start‖_F``,
+        typically far larger; don't compare it against tick-tuned thresholds.
+        """
         if self.algorithm == "sgd":
             sep = self._sep
             sub = SMBGDState(B=state.B, H_hat=state.H_hat, step=state.step)
             new_sub, Y = jax.vmap(sep.epoch)(sub, X)
-            return BankState(new_sub.B, new_sub.H_hat, new_sub.step), Y
+            return (
+                BankState(
+                    new_sub.B,
+                    new_sub.H_hat,
+                    new_sub.step,
+                    conv=metrics_lib.update_magnitude(new_sub.B, state.B),
+                ),
+                Y,
+            )
         S, T, m = X.shape
         P = self.opt.batch_size
         K = T // P
         Xb = X[:, : K * P].reshape(S, K, P, m).transpose(1, 0, 2, 3)  # (K, S, P, m)
         if self.fused:
             state = self.pad_state(state)
+        # the scan carry must be structure-stable: normalize a legacy conv=None
+        state = state._replace(conv=self._conv_or_default(state))
 
         def body(st, xb):
             st, Y = self.step(st, xb)

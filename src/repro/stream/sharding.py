@@ -30,11 +30,16 @@ from repro.stream.bank import BankState, SeparatorBank
 def bank_sharding(mesh, axis: str = "stream") -> BankState:
     """NamedSharding pytree for a BankState: every leaf partitioned over
     ``axis`` on its leading (stream) dimension.  Feed to ``jax.device_put`` or
-    ``Checkpointer.restore(shardings=...)`` for reshard-on-load."""
+    ``Checkpointer.restore(shardings=...)`` for reshard-on-load.
+
+    Expects a conv-bearing state (anything ``SeparatorBank.init`` produced);
+    a legacy ``conv=None`` state has a different pytree structure — normalize
+    it first with ``state._replace(conv=jnp.full((S,), jnp.inf))``."""
     return BankState(
         B=NamedSharding(mesh, P(axis)),
         H_hat=NamedSharding(mesh, P(axis)),
         step=NamedSharding(mesh, P(axis)),
+        conv=NamedSharding(mesh, P(axis)),
     )
 
 
@@ -64,19 +69,19 @@ def make_sharded_bank_step(
     )
     hetero = bank.hyperparams is not None
 
-    def local_step(B, H_hat, step, X, active, hp):
+    def local_step(B, H_hat, step, conv, X, active, hp):
         lb = local_bank
         if hetero:
             lb = dataclasses.replace(lb, hyperparams=BankHyperparams(*hp))
-        st, Y = lb.step(BankState(B, H_hat, step), X, active=active)
-        return st.B, st.H_hat, st.step, Y
+        st, Y = lb.step(BankState(B, H_hat, step, conv), X, active=active)
+        return st.B, st.H_hat, st.step, st.conv, Y
 
     hp_spec = (P(axis),) * 3 if hetero else ()
     sharded = shard_map(
         local_step,
         mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), hp_spec),
-        out_specs=(P(axis), P(axis), P(axis), P(axis)),
+        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis), hp_spec),
+        out_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
         check_rep=False,
     )
 
@@ -86,7 +91,12 @@ def make_sharded_bank_step(
         if active is None:
             active = jnp.ones((bank.n_streams,), dtype=bool)
         hp = tuple(bank.hyperparams) if hetero else ()
-        B, H_hat, stp, Y = sharded(state.B, state.H_hat, state.step, X, active, hp)
-        return BankState(B, H_hat, stp), Y
+        conv = state.conv
+        if conv is None:  # legacy states: normalize before entering shard_map
+            conv = jnp.full((bank.n_streams,), jnp.inf, jnp.float32)
+        B, H_hat, stp, conv, Y = sharded(
+            state.B, state.H_hat, state.step, conv, X, active, hp
+        )
+        return BankState(B, H_hat, stp, conv), Y
 
     return jax.jit(step, donate_argnums=(0,) if donate else ())

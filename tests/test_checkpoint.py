@@ -62,6 +62,89 @@ class TestRoundtrip:
             ckpt.restore(bad)
 
 
+class TestServiceLifecycleRoundtrip:
+    """Queue + convergence-policy state across a checkpoint boundary: the
+    arrays ride the Checkpointer, the host-side lifecycle snapshot rides
+    alongside (JSON-able), and a restored service resumes the SAME lifecycle
+    trajectory — monitors, queue order and all."""
+
+    def _svc(self, **kw):
+        from repro.core import EASIConfig, SMBGDConfig
+        from repro.serve.engine import ConvergencePolicy, SeparationService
+        from repro.stream import SeparatorBank
+
+        ecfg = EASIConfig(n_components=2, n_features=4, mu=2e-3)
+        ocfg = SMBGDConfig(batch_size=8, mu=2e-3, beta=0.9, gamma=0.5)
+        return SeparationService(
+            SeparatorBank(ecfg, ocfg, n_streams=2),
+            seed=0,
+            policy=ConvergencePolicy(threshold=10.0, patience=3, min_ticks=4),
+            max_queue=4,
+            **kw,
+        )
+
+    def test_queue_and_policy_state_roundtrip(self, tmp_path):
+        svc = self._svc()
+        for sid in ("a", "b", "q1", "q2"):
+            svc.admit(sid)
+        X = jax.random.normal(jax.random.PRNGKey(0), (8, 4))
+        for k in range(2):  # part-way to convergence: monitors mid-flight
+            svc.step({"a": X, "b": X})
+        ckpt = Checkpointer(tmp_path)
+        svc.save(ckpt, step=3)
+        snap = json.loads(json.dumps(svc.lifecycle))  # must survive JSON
+
+        svc2 = self._svc()
+        got = svc2.restore(ckpt, lifecycle=snap)
+        assert got == 3
+        assert svc2.sessions == svc.sessions
+        assert svc2.queued == ("q1", "q2")
+        assert svc2.session_stats("a")["conv_below"] == 2
+        # the restored service reaches convergence on the same tick as the
+        # original, evicting + backfilling identically
+        for k in range(2):
+            o1 = svc.step({"a": X, "b": X})
+            o2 = svc2.step({"a": X, "b": X})
+            for sid in o1:
+                np.testing.assert_array_equal(np.asarray(o1[sid]), np.asarray(o2[sid]))
+        for s in (svc, svc2):
+            assert s.status("a") == "finished" and s.status("q1") == "active"
+        np.testing.assert_allclose(
+            np.asarray(svc.finished["a"].state.B),
+            np.asarray(svc2.finished["a"].state.B),
+            rtol=1e-6, atol=1e-7,
+        )
+
+    def test_restore_rejects_queue_session_overlap(self, tmp_path):
+        svc = self._svc()
+        svc.admit("a")
+        ckpt = Checkpointer(tmp_path)
+        svc.save(ckpt, step=0)
+        svc2 = self._svc()
+        with pytest.raises(ValueError, match="overlap"):
+            svc2.restore(
+                ckpt, lifecycle={"sessions": {"a": 0}, "queue": ["a"]}
+            )
+        with pytest.raises(ValueError, match="overlap"):
+            svc2.restore(
+                ckpt, lifecycle={"sessions": {}, "queue": ["q", "q"]}
+            )
+
+    def test_bank_conv_statistic_roundtrips(self, tmp_path):
+        """BankState.conv is a first-class leaf: exact across save/restore."""
+        svc = self._svc()
+        svc.admit("a")
+        svc.step({"a": jax.random.normal(jax.random.PRNGKey(1), (8, 4))})
+        ckpt = Checkpointer(tmp_path)
+        svc.save(ckpt, step=1)
+        svc2 = self._svc()
+        svc2.restore(ckpt, lifecycle=svc.lifecycle)
+        np.testing.assert_array_equal(
+            np.asarray(svc.state.conv), np.asarray(svc2.state.conv)
+        )
+        assert np.all(np.isfinite(np.asarray(svc2.state.conv)[:1]))
+
+
 class TestElasticRestore:
     def test_reshard_on_load(self, tmp_path):
         """Checkpoints are topology-independent: restore with explicit

@@ -67,14 +67,23 @@ class TestMegakernelVsRefOracle:
         step = jnp.arange(S, dtype=jnp.int32)  # stream 0 is at step 0 (γ gate)
         gamma_hat = 0.1 + 0.8 * jax.random.uniform(jax.random.fold_in(key, 4), (S,))
         active = (jnp.arange(S) % 3 != 2).astype(jnp.int32)  # freeze every 3rd
-        Y, B2, H2, s2 = easi_ops.smbgd_step_bank(
-            X, W, B, H, step, gamma_hat, active, block_p=lay.block_p
+        conv0 = jnp.arange(1.0, S + 1.0)  # distinct: frozen carry is visible
+        Y, B2, H2, s2, c2 = easi_ops.smbgd_step_bank(
+            X, W, B, H, step, gamma_hat, active, conv0, block_p=lay.block_p
         )
-        Yr, Br, Hr, sr = smbgd_step_bank_ref(X, W, B, H, step, gamma_hat, active)
+        Yr, Br, Hr, sr, cr = smbgd_step_bank_ref(
+            X, W, B, H, step, gamma_hat, active, conv0
+        )
         np.testing.assert_allclose(np.asarray(Y), np.asarray(Yr), rtol=1e-5, atol=1e-5)
         np.testing.assert_allclose(np.asarray(B2), np.asarray(Br), rtol=1e-5, atol=1e-5)
         np.testing.assert_allclose(np.asarray(H2), np.asarray(Hr), rtol=1e-5, atol=1e-5)
         np.testing.assert_array_equal(np.asarray(s2), np.asarray(sr))
+        np.testing.assert_allclose(np.asarray(c2), np.asarray(cr), rtol=1e-5, atol=1e-6)
+        # frozen streams carry their previous statistic through unchanged
+        np.testing.assert_array_equal(
+            np.asarray(c2)[np.asarray(active) == 0],
+            np.asarray(conv0)[np.asarray(active) == 0],
+        )
 
     def test_block_p_tiling_invariance(self):
         """Different P-tile sizes fold the same sum — results must agree."""
@@ -108,6 +117,145 @@ class TestMegakernelVsRefOracle:
                 jnp.zeros((2,), jnp.int32),
                 jnp.zeros((2,)),
                 jnp.ones((2,), jnp.int32),
+            )
+
+
+@pytest.mark.property
+class TestMegakernelPropertySweep:
+    """Hypothesis sweep: ``ops.smbgd_step_bank`` against the naive per-stream
+    ref oracle over random (S, P, n, m, block_p, block_s, nonlinearity,
+    hetero-vs-uniform hyperparams) — including ragged logical shapes that
+    exercise the pad/unpad boundaries, random active masks, and mixed step
+    counters (the γ step-0 gate)."""
+
+    @staticmethod
+    def _padded_inputs(lay, S, P, n, m, key):
+        """Persistent-layout tensors with real content only in the logical
+        block (padding must stay exactly zero — the kernel's contract)."""
+        X = jnp.zeros((S, lay.P_pad, lay.m_pad)).at[:, :P, :m].set(
+            jax.random.normal(key, (S, P, m))
+        )
+        B = jnp.zeros((S, lay.n_pad, lay.m_pad)).at[:, :n, :m].set(
+            jax.random.normal(jax.random.fold_in(key, 1), (S, n, m)) * 0.3
+        )
+        H = jnp.zeros((S, lay.n_pad, lay.n_pad)).at[:, :n, :n].set(
+            jax.random.normal(jax.random.fold_in(key, 2), (S, n, n)) * 0.1
+        )
+        return X, B, H
+
+    @given(
+        S=st.integers(1, 6),
+        P=st.integers(1, 40),
+        n=st.integers(2, 12),
+        m_extra=st.integers(0, 5),
+        block_p=st.sampled_from([8, 16, 32]),
+        block_s_req=st.integers(1, 4),
+        nonlinearity=st.sampled_from(sorted(NONLINEARITIES)),
+        hetero=st.sampled_from([False, True]),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_kernel_matches_ref_oracle(
+        self, S, P, n, m_extra, block_p, block_s_req, nonlinearity, hetero
+    ):
+        m = n + m_extra
+        lay = easi_ops.bank_layout(n, m, P, block_p=block_p)
+        assert lay.P_pad % lay.block_p == 0 and lay.P_pad >= P
+        # largest divisor of S ≤ the requested stream block
+        block_s = max(b for b in range(1, block_s_req + 1) if S % b == 0)
+        key = jax.random.PRNGKey(S * 7919 + P * 101 + n * 13 + m_extra)
+        X, B, H = self._padded_inputs(lay, S, P, n, m, key)
+        if hetero:
+            hp = _hetero(S, jax.random.fold_in(key, 9))
+        else:
+            hp = BankHyperparams.broadcast(
+                SMBGDConfig(batch_size=max(P, 1), mu=2e-3, beta=0.9, gamma=0.5), S
+            )
+        W = jnp.zeros((S, lay.P_pad)).at[:, :P].set(hp.within_batch_weights(P))
+        gamma_hat = hp.effective_momentum(P)
+        step = jax.random.randint(jax.random.fold_in(key, 3), (S,), 0, 3)
+        active = jax.random.bernoulli(jax.random.fold_in(key, 4), 0.7, (S,)).astype(
+            jnp.int32
+        )
+        conv0 = jax.random.uniform(jax.random.fold_in(key, 5), (S,)) + 0.5
+        out_k = easi_ops.smbgd_step_bank(
+            X, W, B, H, step, gamma_hat, active, conv0,
+            nonlinearity=nonlinearity, block_p=lay.block_p, block_s=block_s,
+        )
+        out_r = smbgd_step_bank_ref(
+            X, W, B, H, step, gamma_hat, active, conv0, nonlinearity=nonlinearity
+        )
+        names = ("Y", "B", "H_hat", "step", "conv")
+        for name, a, b in zip(names, out_k, out_r):
+            if name == "step":
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            else:
+                np.testing.assert_allclose(
+                    np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5,
+                    err_msg=f"{name} S={S} P={P} n={n} m={m} bp={block_p} "
+                    f"bs={block_s} g={nonlinearity} hetero={hetero}",
+                )
+        # padded B region must stay exactly zero (persistent-state contract)
+        pad_B = np.array(out_k[1])
+        pad_B[:, :n, :m] = 0.0
+        np.testing.assert_array_equal(pad_B, np.zeros_like(pad_B))
+
+    @given(
+        S=st.integers(1, 5),
+        P=st.integers(2, 24),
+        n=st.integers(2, 9),
+        nonlinearity=st.sampled_from(sorted(NONLINEARITIES)),
+        hetero=st.sampled_from([False, True]),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_all_paths_report_identical_conv_stats(
+        self, S, P, n, nonlinearity, hetero
+    ):
+        """The acceptance bar: fused / pallas / vmap / hetero bank steps all
+        report the same per-stream convergence statistic as the ref oracle."""
+        m = n + 2
+        ecfg, ocfg = _cfgs(P=P, n=n, m=m, nonlinearity=nonlinearity)
+        key = jax.random.PRNGKey(S * 1009 + P * 31 + n)
+        hp = _hetero(S, jax.random.fold_in(key, 9)) if hetero else None
+        banks = {
+            "fused": SeparatorBank(
+                ecfg, ocfg, n_streams=S, fused=True, hyperparams=hp
+            ),
+            "hetero_vmap": SeparatorBank(ecfg, ocfg, n_streams=S, hyperparams=hp)
+            if hetero
+            else SeparatorBank(
+                ecfg, ocfg, n_streams=S,
+                hyperparams=BankHyperparams.broadcast(ocfg, S),
+            ),
+        }
+        if not hetero:  # these two paths take shared scalar hyperparams only
+            banks["vmap"] = SeparatorBank(ecfg, ocfg, n_streams=S)
+            banks["pallas"] = SeparatorBank(ecfg, ocfg, n_streams=S, use_pallas=True)
+        st0 = SeparatorBank(ecfg, ocfg, n_streams=S).init(key)
+        X = jax.random.normal(jax.random.fold_in(key, 1), (S, P, m))
+        convs = {}
+        for name, bank in banks.items():
+            state = bank.pad_state(st0) if bank.fused else st0
+            new_state, _ = bank.step(state, X)
+            convs[name] = np.asarray(new_state.conv)
+            assert convs[name].shape == (S,)
+        # ref oracle on the logical shapes with the same per-stream weights
+        ehp = hp if hp is not None else BankHyperparams.broadcast(ocfg, S)
+        _, _, _, _, conv_ref = smbgd_step_bank_ref(
+            X,
+            ehp.within_batch_weights(P),
+            st0.B,
+            st0.H_hat,
+            st0.step,
+            ehp.effective_momentum(P),
+            jnp.ones((S,), jnp.int32),
+            nonlinearity=nonlinearity,
+        )
+        conv_ref = np.asarray(conv_ref)
+        for name, c in convs.items():
+            np.testing.assert_allclose(
+                c, conv_ref, rtol=1e-4, atol=1e-5,
+                err_msg=f"path={name} S={S} P={P} n={n} g={nonlinearity} "
+                f"hetero={hetero}",
             )
 
 
@@ -145,6 +293,7 @@ class TestFusedBankVsVmapOracle:
             assert float(jnp.max(jnp.abs(fused.unpad_y(Y_f) - Y_r))) <= 1e-5
             np.testing.assert_array_equal(np.asarray(u.step), np.asarray(st_r.step))
 
+    @pytest.mark.property
     @given(S=st.integers(1, 6), P=st.integers(1, 40), n=st.integers(2, 12))
     @settings(max_examples=10, deadline=None)
     def test_property_random_shapes(self, S, P, n):

@@ -9,9 +9,15 @@ import pytest
 
 from repro.configs.registry import get_config
 from repro.core import AdaptiveICA, EASIConfig, SMBGDConfig, amari_index, global_system
+from repro.core import smbgd as smbgd_lib
 from repro.data.pipeline import MixedSignals
 from repro.models import model as M
-from repro.serve.engine import Engine, SeparationService, ServeConfig
+from repro.serve.engine import (
+    ConvergencePolicy,
+    Engine,
+    SeparationService,
+    ServeConfig,
+)
 from repro.stream import SeparatorBank
 
 
@@ -257,6 +263,272 @@ class TestSeparationService:
         )
 
 
+def _mk_svc(S=2, P=8, fused=False, **kw):
+    ecfg = EASIConfig(n_components=2, n_features=4, mu=2e-3)
+    ocfg = SMBGDConfig(batch_size=P, mu=2e-3, beta=0.9, gamma=0.5)
+    return SeparationService(
+        SeparatorBank(ecfg, ocfg, n_streams=S, fused=fused), seed=0, **kw
+    )
+
+
+def _batch(seed, P=8, m=4):
+    return jax.random.normal(jax.random.PRNGKey(seed), (P, m))
+
+
+class TestAdmissionQueue:
+    """Bounded backpressure: admit() enqueues instead of raising."""
+
+    def test_queue_fifo_order_under_backpressure(self):
+        svc = _mk_svc(S=2, max_queue=3)
+        assert svc.admit("a") is not None and svc.admit("b") is not None
+        assert svc.admit("c") is None and svc.admit("d") is None
+        assert svc.admit("e") is None
+        assert svc.queued == ("c", "d", "e")
+        assert svc.status("c") == "queued" and svc.metrics["n_queued"] == 3
+        with pytest.raises(RuntimeError, match="bank full"):
+            svc.admit("f")  # queue full too → backpressure raises
+        with pytest.raises(ValueError, match="already admitted"):
+            svc.admit("c")  # queued ids are already admitted
+        # manual evictions drain the queue head-first into the freed slots
+        slot_a = svc.sessions["a"]
+        svc.evict("a")
+        assert svc.status("c") == "active" and svc.sessions["c"] == slot_a
+        svc.evict("b")
+        assert svc.status("d") == "active"
+        assert svc.queued == ("e",)
+
+    def test_zero_queue_keeps_legacy_backpressure(self):
+        svc = _mk_svc(S=1)  # max_queue defaults to 0
+        svc.admit("a")
+        with pytest.raises(RuntimeError, match="bank full"):
+            svc.admit("b")
+
+    def test_queued_session_activates_with_gamma_gate(self):
+        """A backfilled session's separator is born at activation: step==0, so
+        its first served tick gates γ (the paper's first-batch rule)."""
+        svc = _mk_svc(S=1, max_queue=1)
+        svc.admit("a")
+        svc.admit("b")
+        for k in range(3):
+            svc.step({"a": _batch(k)})
+        svc.evict("a")
+        slot = svc.sessions["b"]
+        assert int(svc.bank.slot_state(svc.state, slot).step) == 0
+
+    def test_evict_queued_dequeues(self):
+        svc = _mk_svc(S=1, max_queue=2)
+        svc.admit("a")
+        svc.admit("q1")
+        svc.admit("q2")
+        assert svc.evict("q1") is None  # cancellation: no device state
+        assert svc.queued == ("q2",)
+        assert svc.status("q1") == "unknown"
+        # the free list was untouched: evicting the active session now
+        # backfills q2 into the single slot
+        svc.evict("a")
+        assert svc.status("q2") == "active" and svc.n_free == 0
+
+    def test_evict_unknown_raises_keyerror_and_corrupts_nothing(self):
+        """The bugfix: an unknown id must raise KeyError without touching the
+        free list (previously .pop(...) raised but a later variant could have
+        appended a bogus slot)."""
+        svc = _mk_svc(S=2, max_queue=1)
+        svc.admit("a")
+        free_before, sessions_before = svc.n_free, svc.sessions
+        with pytest.raises(KeyError, match="neither active nor queued"):
+            svc.evict("ghost")
+        assert svc.n_free == free_before and svc.sessions == sessions_before
+        # the service still serves and admits normally afterwards
+        svc.admit("b")
+        out = svc.step({"a": _batch(0), "b": _batch(1)})
+        assert set(out) == {"a", "b"}
+
+
+class TestConvergenceLifecycle:
+    """Auto-eviction on convergence + same-tick backfill."""
+
+    # random normal data keeps the separator jittering around a small but
+    # finite update magnitude, so a generous threshold makes "convergence"
+    # deterministic after min_ticks/patience — the machinery under test is
+    # the lifecycle, not the ICA (tests/test_convergence.py covers that)
+    POLICY = ConvergencePolicy(threshold=10.0, patience=2, min_ticks=3)
+
+    @pytest.mark.parametrize("fused", [False, True])
+    def test_auto_evict_and_same_tick_backfill(self, fused):
+        events = []
+        svc = _mk_svc(
+            S=2, fused=fused, policy=self.POLICY, max_queue=2,
+            on_admit=lambda sid, slot: events.append(("admit", sid, slot)),
+            on_evict=lambda sid, rec: events.append(("evict", sid, rec.reason)),
+        )
+        for sid in ("a", "b", "c", "d"):
+            svc.admit(sid)
+        assert svc.queued == ("c", "d")
+        ticks_to_evict = None
+        for k in range(6):
+            served = [s for s in ("a", "b") if svc.status(s) == "active"]
+            if not served:
+                break
+            svc.step({sid: _batch(10 * k + i) for i, sid in enumerate(served)})
+            if svc.status("a") == "finished" and ticks_to_evict is None:
+                ticks_to_evict = k + 1
+        # converged exactly when min_ticks AND patience were first satisfied
+        assert ticks_to_evict == max(self.POLICY.min_ticks, self.POLICY.patience)
+        rec = svc.finished["a"]
+        assert rec.reason == "converged"
+        assert rec.stats.ticks == ticks_to_evict
+        assert rec.monitor.below >= self.POLICY.patience
+        # same-tick backfill: at the eviction tick the queue head was already
+        # active (events interleave evict→admit within one step() call)
+        i_evict = events.index(("evict", "a", "converged"))
+        backfills = [e for e in events[i_evict:] if e[0] == "admit"]
+        assert backfills and backfills[0][1] == "c"
+        assert svc.status("c") == "active"
+        assert svc.metrics["n_auto_evicted"] >= 1
+
+    def test_evicted_state_fidelity(self):
+        """The auto-evicted SMBGDState must equal slot_state at eviction: a
+        session stepped through churn follows exactly the trajectory of a
+        standalone separator with the same init."""
+        svc = _mk_svc(S=2, policy=self.POLICY, max_queue=2)
+        svc.admit("only")
+        slot = svc.sessions["only"]
+        st_ref = svc.bank.slot_state(svc.state, slot)
+        ecfg, ocfg = svc.bank.easi, svc.bank.opt
+        k = 0
+        while svc.status("only") == "active":
+            X = _batch(100 + k)
+            svc.step({"only": X})
+            st_ref, _ = smbgd_lib.smbgd_batched_step(st_ref, X, ecfg, ocfg)
+            k += 1
+            assert k < 20, "policy never fired"
+        final = svc.finished["only"].state
+        np.testing.assert_allclose(
+            np.asarray(final.B), np.asarray(st_ref.B), rtol=1e-5, atol=1e-6
+        )
+        np.testing.assert_allclose(
+            np.asarray(final.H_hat), np.asarray(st_ref.H_hat), rtol=1e-5, atol=1e-6
+        )
+        assert int(final.step) == int(st_ref.step)
+
+    def test_min_ticks_and_patience_gate_eviction(self):
+        svc = _mk_svc(
+            S=1, policy=ConvergencePolicy(threshold=10.0, patience=3, min_ticks=5)
+        )
+        svc.admit("a")
+        for k in range(4):
+            svc.step({"a": _batch(k)})
+            assert svc.status("a") == "active"  # min_ticks floor holds
+        svc.step({"a": _batch(99)})
+        assert svc.status("a") == "finished"
+
+    def test_idle_ticks_do_not_advance_convergence(self):
+        """Only data ticks count: an idle session's monitor must not move."""
+        svc = _mk_svc(S=2, policy=self.POLICY)
+        svc.admit("busy")
+        svc.admit("idle")
+        k = 0
+        while svc.status("busy") == "active":
+            svc.step({"busy": _batch(k)})
+            k += 1
+            assert k < 10, "policy never fired"
+        assert svc.status("busy") == "finished"
+        assert svc.status("idle") == "active"
+        assert svc.session_stats("idle")["conv_below"] == 0
+
+    def test_amari_gate_vetoes_blind_eviction(self):
+        """With a registered mixing matrix and an unreachable Amari bar, the
+        blind statistic alone must NOT evict."""
+        svc = _mk_svc(
+            S=1,
+            policy=ConvergencePolicy(
+                threshold=10.0, patience=2, min_ticks=2, amari_threshold=1e-9
+            ),
+        )
+        svc.admit("a")
+        svc.set_mixing("a", jnp.eye(4)[:, :2])
+        for k in range(6):
+            svc.step({"a": _batch(k)})
+        assert svc.status("a") == "active"  # vetoed every tick
+        # unknown mixing → the blind statistic decides (same policy)
+        svc2 = _mk_svc(
+            S=1,
+            policy=ConvergencePolicy(
+                threshold=10.0, patience=2, min_ticks=2, amari_threshold=1e-9
+            ),
+        )
+        svc2.admit("a")
+        k = 0
+        while svc2.status("a") == "active":
+            svc2.step({"a": _batch(k)})
+            k += 1
+            assert k < 10, "policy never fired"
+        assert svc2.status("a") == "finished"
+
+    def test_seeded_churn_scenario(self):
+        """Admissions interleaved with convergence-driven evictions: every
+        session is served, evicted exactly once, keeps its stats, and the
+        bank never over- or under-fills."""
+        svc = _mk_svc(S=2, fused=True, policy=self.POLICY, max_queue=8)
+        all_sids = [f"s{i}" for i in range(8)]
+        pending = list(all_sids)
+        for sid in pending[:4]:
+            svc.admit(sid)
+        pending = pending[4:]
+        rng = np.random.default_rng(0)
+        for tick in range(40):
+            if pending and rng.random() < 0.5:  # interleaved arrivals
+                svc.admit(pending.pop(0))
+            served = [s for s in all_sids if svc.status(s) == "active"]
+            if not served and not pending and not svc.queued:
+                break
+            if served:
+                svc.step(
+                    {s: _batch(1000 + 31 * tick + i) for i, s in enumerate(served)}
+                )
+            assert svc.n_active + svc.n_free == 2  # slots conserved
+        finished = svc.pop_finished()
+        assert sorted(finished) == sorted(all_sids)
+        for sid, rec in finished.items():
+            assert rec.reason == "converged"
+            # per-session stats preserved through eviction
+            assert rec.stats.ticks >= self.POLICY.min_ticks
+            assert rec.stats.samples == rec.stats.ticks * 8
+            assert rec.monitor.below >= self.POLICY.patience
+        assert svc.metrics["n_auto_evicted"] == len(all_sids)
+        assert svc.pop_finished() == {}  # drained
+
+    def test_monitor_ema_matches_metrics_ema_update(self):
+        """ConvergenceMonitor's host-side EMA must track core.metrics'
+        jit-safe ema_update exactly (the two implementations are twins and
+        must not drift)."""
+        from repro.core import ema_update
+        from repro.serve.engine import ConvergenceMonitor
+
+        pol = ConvergencePolicy(threshold=0.1, patience=2, min_ticks=1, ema=0.7)
+        mon = ConvergenceMonitor()
+        smoothed = jnp.asarray(float("inf"))
+        for x in (0.8, 0.4, 0.2, 0.05, 0.03):
+            mon.update(x, pol)
+            smoothed = ema_update(smoothed, x, pol.ema)
+            np.testing.assert_allclose(mon.stat, float(smoothed), rtol=1e-6)
+        # ema=0 passes raw values through in both
+        mon0 = ConvergenceMonitor()
+        pol0 = ConvergencePolicy(threshold=0.1, ema=0.0)
+        mon0.update(0.25, pol0)
+        assert mon0.stat == 0.25 == float(ema_update(jnp.inf, 0.25, 0.0))
+
+    def test_lifecycle_snapshot_roundtrip_in_memory(self):
+        svc = _mk_svc(S=2, policy=self.POLICY, max_queue=3)
+        for sid in ("a", "b", "c"):
+            svc.admit(sid)
+        svc.step({"a": _batch(0), "b": _batch(1)})
+        snap = svc.lifecycle
+        assert snap["sessions"] == {"a": 0, "b": 1}
+        assert snap["queue"] == ["c"]
+        assert snap["monitors"]["a"]["ticks"] == 1
+
+
 class TestServiceMetrics:
     """Per-tick latency and per-session samples/sec counters (the ROADMAP
     metrics stub): counted on every flavour of bank."""
@@ -329,6 +601,7 @@ class TestAdaptiveICADeployment:
     """The paper's deployment story: train+deploy in one system, tracking
     non-stationary mixing."""
 
+    @pytest.mark.slow
     def test_streaming_partial_fit_tracks_drift(self):
         ecfg = EASIConfig(n_components=2, n_features=4, mu=3e-3)
         ocfg = SMBGDConfig(batch_size=16, mu=3e-3, beta=0.9, gamma=0.5)

@@ -22,10 +22,13 @@ from repro.stream import BankHyperparams, SeparatorBank, bank_sharding, make_sha
 
 N_DEV = 8
 
-pytestmark = pytest.mark.skipif(
-    jax.device_count() < N_DEV,
-    reason=f"needs {N_DEV} devices (XLA_FLAGS=--xla_force_host_platform_device_count={N_DEV})",
-)
+pytestmark = [
+    pytest.mark.multidevice,
+    pytest.mark.skipif(
+        jax.device_count() < N_DEV,
+        reason=f"needs {N_DEV} devices (XLA_FLAGS=--xla_force_host_platform_device_count={N_DEV})",
+    ),
+]
 
 
 def _cfgs(P=8, n=2, m=4):
@@ -71,6 +74,10 @@ def test_8dev_sharded_step_matches_unsharded(kwargs):
     )
     np.testing.assert_array_equal(np.asarray(st_sh.step), np.asarray(st_lo.step))
     np.testing.assert_allclose(np.asarray(Y_sh), np.asarray(Y_lo), rtol=1e-6, atol=1e-6)
+    # the convergence statistic shards with its streams and matches exactly
+    np.testing.assert_allclose(
+        np.asarray(st_sh.conv), np.asarray(st_lo.conv), rtol=1e-6, atol=1e-7
+    )
     # the state really is laid out over 8 devices
     assert len(st_sh.B.sharding.device_set) == N_DEV
 

@@ -164,6 +164,7 @@ class TestBankEquivalence:
             assert same != bool(a)
             assert stepped == bool(a)
 
+    @pytest.mark.slow
     def test_bank_converges_per_stream(self):
         """Every stream of a bank fed its own separation problem converges."""
         ecfg, ocfg = _cfgs(P=16, mu=3e-3)
