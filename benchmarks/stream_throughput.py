@@ -295,6 +295,115 @@ def churn_bench(
     return row
 
 
+def drift_bench(
+    S: int = 4,
+    P: int = 16,
+    m: int = 4,
+    n: int = 2,
+    jump_tick: int = 250,
+    n_ticks: int = 600,
+) -> Dict[str, float]:
+    """Drift scenario: ``S`` sessions under rotating mixing (an abrupt ≈1.2
+    rad rotation at ``jump_tick``), served via ``run_tick`` from per-session
+    ``SyntheticSource``s — watchdog ON vs OFF.
+
+      * ``watchdog`` — ``DriftPolicy(mode="boost")``: converged sessions stay
+        hot, the conv-statistic watchdog flags the rotation and μ-boosts the
+        re-adaptation; separators end re-converged on the NEW mixing.
+      * ``baseline`` — convergence lifecycle only (the PR-3 deployment):
+        sessions converge, auto-evict, and their frozen separators go stale
+        the moment the mixing moves.
+
+    The figure of merit is the mean/max Amari index of each session's final
+    separation matrix against the mixing at END of wall time — the quality
+    of what the service would actually be serving."""
+    from repro.core import metrics as metrics_lib
+    from repro.data.pipeline import MixedSignals
+    from repro.data.sources import SyntheticSource
+    from repro.serve import ConvergencePolicy, DriftPolicy, SeparationService
+
+    ecfg = EASIConfig(n_components=n, n_features=m, mu=3e-3)
+    ocfg = SMBGDConfig(batch_size=P, mu=3e-3, beta=0.9, gamma=0.5)
+    policy = ConvergencePolicy(threshold=0.025, patience=5, min_ticks=50, ema=0.9)
+    dpol = DriftPolicy(
+        retrigger=0.03, patience=2, ema=0.8, cooldown=3,
+        mode="boost", boost=4.0, boost_ticks=40,
+    )
+    sids = [f"s{i}" for i in range(S)]
+
+    def sources():
+        # one distinct separation problem per session, same drift schedule
+        return {
+            sid: SyntheticSource(
+                MixedSignals(m=m, n=n, batch=P, seed=i, drift_rate=1.2 / (5 * P)),
+                drift_start=jump_tick,
+                drift_stop=jump_tick + 5,
+            )
+            for i, sid in enumerate(sids)
+        }
+
+    def final_amari(svc, srcs):
+        out = []
+        for sid, src in srcs.items():
+            if svc.status(sid) in ("active", "converged"):
+                B = svc.bank.slot_state(svc.state, svc.sessions[sid]).B
+            else:  # evicted: the frozen separator the service would serve
+                B = svc.finished[sid].state.B
+            A = src.mixing_at(n_ticks)  # mixing at END of wall time
+            out.append(
+                float(
+                    metrics_lib.amari_index(
+                        metrics_lib.global_system(B, jnp.asarray(A))
+                    )
+                )
+            )
+        return out
+
+    def run_one(watchdog: bool):
+        svc = SeparationService(
+            SeparatorBank(ecfg, ocfg, n_streams=S),
+            seed=0,
+            policy=policy,
+            drift_policy=dpol if watchdog else None,
+        )
+        srcs = sources()
+        for sid in sids:
+            svc.admit(sid, source=srcs[sid])
+        t0 = time.perf_counter()
+        for _ in range(n_ticks):
+            svc.run_tick()
+        jax.block_until_ready(svc.state)
+        return svc, srcs, time.perf_counter() - t0
+
+    svc_w, srcs_w, dt_w = run_one(watchdog=True)
+    svc_b, srcs_b, dt_b = run_one(watchdog=False)
+    pi_w, pi_b = final_amari(svc_w, srcs_w), final_amari(svc_b, srcs_b)
+    row = {
+        "drift": True,
+        "S": S, "P": P, "m": m, "n": n,
+        "jump_tick": jump_tick, "n_ticks": n_ticks,
+        "watchdog_final_amari_mean": sum(pi_w) / S,
+        "watchdog_final_amari_max": max(pi_w),
+        "baseline_final_amari_mean": sum(pi_b) / S,
+        "baseline_final_amari_max": max(pi_b),
+        "watchdog_drift_events": svc_w.metrics["n_drift_events"],
+        "watchdog_wall_s": dt_w,
+        "baseline_wall_s": dt_b,
+        # how much staler the baseline's served separators end up
+        "stale_amari_ratio": (sum(pi_b) / S) / max(sum(pi_w) / S, 1e-9),
+    }
+    print(
+        f"drift,S={S},jump@{jump_tick}: watchdog amari "
+        f"mean={row['watchdog_final_amari_mean']:.4f} "
+        f"max={row['watchdog_final_amari_max']:.4f} "
+        f"({int(row['watchdog_drift_events'])} events) vs baseline (stale) "
+        f"mean={row['baseline_final_amari_mean']:.4f} "
+        f"max={row['baseline_final_amari_max']:.4f} "
+        f"→ {row['stale_amari_ratio']:.1f}x staler without the watchdog"
+    )
+    return row
+
+
 def smoke_check(baseline_path: Path) -> int:
     """CI regression gate: re-measure S=SMOKE_S quickly and fail (exit 1) when
     any tracked per-tick time is > SMOKE_FACTOR x the checked-in number."""
@@ -349,6 +458,7 @@ def run(
     out: str | None = None,
     autotune: bool = False,
     churn: bool = False,
+    drift: bool = False,
 ) -> List[Dict[str, float]]:
     """Sweep S; write the JSON artifact when ``out`` is given."""
     sweep = (1, 8, 64) if quick else (1, 8, 64, 512)
@@ -363,6 +473,11 @@ def run(
             churn_bench(n_sessions=16 if quick else 32,
                         converge_ticks=10 if quick else 20,
                         sweep_every=30 if quick else 60)
+        )
+    if drift:
+        rows.append(
+            drift_bench(S=2 if quick else 4,
+                        jump_tick=250, n_ticks=450 if quick else 600)
         )
     if out:
         Path(out).write_text(json.dumps(rows, indent=2) + "\n")
@@ -379,17 +494,23 @@ def main() -> None:
                     help="regression gate vs the checked-in result file (no write)")
     ap.add_argument("--churn", action="store_true",
                     help="lifecycle churn scenario: auto-eviction vs periodic sweep")
+    ap.add_argument("--drift", action="store_true",
+                    help="drift scenario: rotating mixing, watchdog on vs off")
     ap.add_argument(
         "--out", default=str(DEFAULT_OUT), help="result file (JSON rows)"
     )
     args = ap.parse_args()
     if args.smoke:
         sys.exit(smoke_check(Path(args.out)))
-    if args.churn and not (args.quick or args.autotune):
-        # standalone churn run: print only, leave the sweep artifact alone
-        churn_bench()
+    if (args.churn or args.drift) and not (args.quick or args.autotune):
+        # standalone scenario run: print only, leave the sweep artifact alone
+        if args.churn:
+            churn_bench()
+        if args.drift:
+            drift_bench()
         return
-    run(quick=args.quick, out=args.out, autotune=args.autotune, churn=args.churn)
+    run(quick=args.quick, out=args.out, autotune=args.autotune,
+        churn=args.churn, drift=args.drift)
 
 
 if __name__ == "__main__":

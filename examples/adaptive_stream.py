@@ -22,6 +22,16 @@ auto-evicts converged separators, backfilling their slots from the bounded
 admission queue within the same tick — converged sessions stop wasting
 hardware, exactly the utilization knob the paper's always-on datapath needs
 at rack scale.
+
+Part 4 (the drift-aware pipeline): a CORTEX-style ``ChannelBankSource``
+session — a multi-channel ``.npy`` recording served through ``run_tick()``'s
+pull loop — whose mixing rotates abruptly mid-recording.  The service has NO
+ground truth (real recordings don't ship their mixing matrix): the
+``DriftPolicy`` watchdog sees the in-kernel conv statistic rise on the
+converged-hot session, fires a ``DriftEvent``, μ-boosts the stream through
+the bank's per-stream hyperparameter rows, and the separator re-converges on
+the new mixing — while the no-watchdog deployment would keep serving the
+stale separator.
 """
 import sys
 from pathlib import Path
@@ -102,6 +112,79 @@ def run_service(n_slots: int = 4, n_sessions: int = 10, max_ticks: int = 1500):
     return events, svc.pop_finished(), svc.metrics
 
 
+def run_drift_recording(n_ticks: int = 700, jump_tick: int = 300):
+    """Part 4: serve a channel-bank recording whose mixing jumps mid-run.
+
+    Returns (events, trace, first_converged) — the lifecycle/drift log,
+    (tick, amari) samples against the recording's true piecewise mixing,
+    and the tick the session first converged (= when a policy-only service
+    would have evicted it).
+    """
+    import os
+    import tempfile
+
+    from repro.data import signals
+    from repro.data.sources import ChannelBankSource, _givens
+    from repro.serve import DriftPolicy
+
+    P, m, n = 16, 4, 2
+    T = n_ticks * P
+    # synthesize the "recording": sub-Gaussian sources through a mixing that
+    # is stationary, rotates ~1.2 rad abruptly at jump_tick, then stationary
+    key = jax.random.PRNGKey(0)
+    S = signals.source_bank(jax.random.PRNGKey(1), n, T)
+    A0 = signals.random_mixing_matrix(key, m, n)
+    A1 = _givens(m, 1.2) @ A0  # the same rotation plane the watchdog drills use
+    t_jump = jump_tick * P
+    At = jnp.where(
+        (jnp.arange(T) < t_jump)[:, None, None],
+        jnp.broadcast_to(A0, (T, m, n)),
+        jnp.broadcast_to(A1, (T, m, n)),
+    )
+    X = signals.mix_nonstationary(At, S)  # (T, m)
+    rec_fd, rec_path = tempfile.mkstemp(suffix=".npy")
+    os.close(rec_fd)
+    np.save(rec_path, np.asarray(X).T.astype(np.float32))  # channel-major
+
+    ecfg = EASIConfig(n_components=n, n_features=m, mu=3e-3)
+    ocfg = SMBGDConfig(batch_size=P, mu=3e-3, beta=0.9, gamma=0.5)
+    events = []
+    svc = SeparationService(
+        SeparatorBank(ecfg, ocfg, n_streams=2),
+        seed=0,
+        policy=ConvergencePolicy(threshold=0.025, patience=5, min_ticks=50, ema=0.9),
+        drift_policy=DriftPolicy(
+            retrigger=0.03, patience=2, ema=0.8, cooldown=3,
+            mode="boost", boost=4.0, boost_ticks=40,
+        ),
+        on_drift=lambda sid, ev: events.append(
+            (int(svc.metrics["n_ticks"]), "drift", sid, f"μ×4 (stat {ev.stat:.3f})")
+        ),
+        on_evict=lambda sid, r: events.append(
+            (int(svc.metrics["n_ticks"]), "evict", sid, r.reason)
+        ),
+    )
+    # the session IS the recording: memory-mapped windowed reads, no ground
+    # truth exposed — the blind conv statistic alone drives the lifecycle
+    svc.admit("eeg-0", source=ChannelBankSource(rec_path, center=False))
+    first_converged = None
+    trace = []
+    try:
+        for tick in range(n_ticks - 1):
+            svc.run_tick()
+            st = svc.status("eeg-0")
+            if st == "converged" and first_converged is None:
+                first_converged = tick
+                events.append((tick, "hot", "eeg-0", "converged, kept hot"))
+            if tick % 50 == 49 and st in ("active", "converged"):
+                B = svc.bank.slot_state(svc.state, svc.sessions["eeg-0"]).B
+                A = A0 if tick < jump_tick else A1
+                trace.append((tick, float(amari_index(global_system(B, A)))))
+    finally:
+        os.unlink(rec_path)
+    return events, trace, first_converged
+
+
 def main():
     print("streaming 4000 mini-batches with a slowly rotating mixing matrix")
     print(f"{'step':>6} | {'SGD':>8} | {'SMBGD γ=0.5':>12}")
@@ -134,6 +217,21 @@ def main():
           f"{int(metrics['n_ticks'])} ticks "
           f"(per-session data ticks: min {min(ticks.values())}, "
           f"max {max(ticks.values())}); queue drained via same-tick backfill")
+
+    print("\nDrift-aware pipeline: a channel-bank recording (memory-mapped "
+          ".npy,\nno ground truth) whose mixing rotates ~1.2 rad mid-run")
+    events, trace, first_converged = run_drift_recording()
+    for tick, kind, sid, extra in events:
+        print(f"  tick {tick:4d}  {kind:<5}  {sid:<8}  {extra}")
+    pre = [pi for t, pi in trace if t < 300]
+    post_jump = [pi for t, pi in trace if 300 <= t < 400]
+    final = trace[-1][1]
+    print(f"tracking Amari index: {pre[-1]:.3f} just before the jump → "
+          f"{max(post_jump):.3f} at the jump → {final:.3f} after "
+          f"watchdog-boosted re-adaptation")
+    print("(a policy-only service would have evicted at tick "
+          f"{first_converged} and served the stale separator forever — "
+          "see `stream_throughput.py --drift` for the measured gap)")
 
 
 if __name__ == "__main__":

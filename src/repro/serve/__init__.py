@@ -1,0 +1,55 @@
+"""Serving: LM decode engine + the drift-aware separation pipeline.
+
+Public API of the separation side (the paper's "deployment in hardware"
+mandate, grown into an end-to-end adaptive service):
+
+  * ``SeparationService``   — continuous-batching front door for a
+    ``stream.SeparatorBank``: admission, scheduling, convergence lifecycle,
+    drift watchdog, ``run_tick()`` pull ingestion.
+  * ``ConvergencePolicy`` / ``ConvergenceMonitor`` — when is a session done.
+  * ``DriftPolicy`` / ``DriftMonitor`` / ``DriftEvent`` — when has a done
+    session drifted, and what to do about it (μ boost / warm re-admission).
+  * ``AdmissionScheduler`` (FIFO) / ``PriorityScheduler`` /
+    ``DeadlineScheduler`` + ``SessionMeta`` — who waits, who activates.
+  * ``EvictionRecord`` / ``ParkedSession`` — what leaves a slot carries.
+
+Signal feeds (``data.sources``): bind a ``SignalSource`` at ``admit`` time
+and drive the whole pipeline with ``run_tick()``.
+"""
+from repro.serve.drift import DriftEvent, DriftMonitor, DriftPolicy
+from repro.serve.engine import (
+    ConvergenceMonitor,
+    ConvergencePolicy,
+    Engine,
+    EvictionRecord,
+    ParkedSession,
+    SeparationService,
+    ServeConfig,
+    SessionStats,
+)
+from repro.serve.scheduling import (
+    AdmissionScheduler,
+    DeadlineScheduler,
+    PriorityScheduler,
+    SchedulerContext,
+    SessionMeta,
+)
+
+__all__ = [
+    "AdmissionScheduler",
+    "ConvergenceMonitor",
+    "ConvergencePolicy",
+    "DeadlineScheduler",
+    "DriftEvent",
+    "DriftMonitor",
+    "DriftPolicy",
+    "Engine",
+    "EvictionRecord",
+    "ParkedSession",
+    "PriorityScheduler",
+    "SchedulerContext",
+    "SeparationService",
+    "ServeConfig",
+    "SessionMeta",
+    "SessionStats",
+]

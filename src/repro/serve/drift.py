@@ -1,0 +1,121 @@
+"""Drift watchdog: automatic re-adaptation on distribution shift.
+
+The paper's whole case for *adaptive* ICA is tracking non-stationary mixing —
+yet a convergence-aware service (PR-3) converges a session once, evicts it,
+and happily serves the stale separator forever after.  The other tail of the
+``BankState.conv`` statistic flags exactly this: a separator whose relative
+update magnitude ``‖ΔB‖_F/‖B‖_F`` *rises* again after convergence is seeing
+its mixing drift (arXiv:2509.15127 motivates the response: scale the
+effective step size up when the input statistics shift).
+
+``DriftPolicy`` configures the watchdog ``SeparationService`` runs over that
+statistic; ``DriftMonitor`` is the per-session streaming state (EMA + rise
+counter — the mirror image of ``ConvergenceMonitor``); ``DriftEvent`` is the
+observability record handed to ``on_drift`` callbacks and kept in
+``SeparationService.drift_events``.
+
+Two response modes:
+  * ``mode="boost"``   — converged sessions stay HOT: they keep their bank
+    slot (status ``"converged"``), keep being served, and the watchdog reads
+    their live conv statistic.  On re-trigger the session returns to ACTIVE
+    with its per-stream μ multiplied by ``boost`` for ``boost_ticks`` ticks
+    (through the megakernel's per-stream ``BankHyperparams`` rows — no
+    retrace, the hyperparams are a traced operand).  Hot sessions are
+    preemptible: a waiting admission evicts the most-converged hot session,
+    so keeping sessions warm never starves the queue.
+  * ``mode="readmit"`` — converged sessions evict normally (the slot frees
+    for the queue) but sessions with a bound ``SignalSource`` are PARKED:
+    every ``probe_every`` ``run_tick``s the watchdog pulls one block from the
+    parked source and computes the *virtual* conv statistic — the update
+    magnitude a bank step WOULD have committed from the frozen state (same
+    formula, out of band, no slot occupied).  On re-trigger the session is
+    re-admitted through the scheduler, warm-started from its frozen state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Hashable, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftPolicy:
+    """When has a converged separator drifted, and what do we do about it?
+
+    The watchdog fires for a session at the first observation where ALL of:
+      * at least ``cooldown`` observations have passed since the watch began
+        (the statistic needs a few ticks to settle at its converged floor),
+      * the (EMA-smoothed when ``ema > 0``) statistic has been ABOVE
+        ``retrigger`` for ``patience`` consecutive observations.
+
+    ``retrigger`` must sit above the converged jitter floor (the statistic
+    never reaches 0 under stochastic mini-batches) — calibrate it a few ×
+    above the ``ConvergencePolicy.threshold`` that declared convergence.
+    """
+
+    retrigger: float = 0.05  # EMA conv must RISE past this ...
+    patience: int = 2  # ... for this many consecutive observations
+    ema: float = 0.0  # smoothing: s' = ema·s + (1−ema)·x (0 → raw)
+    cooldown: int = 3  # observations ignored right after the watch starts
+    mode: str = "boost"  # "boost" (keep hot, μ boost) | "readmit" (park+probe)
+    boost: float = 4.0  # μ multiplier applied on re-trigger (boost mode)
+    boost_ticks: int = 50  # ticks the boost lasts before μ returns to base
+    probe_every: int = 10  # run_tick period of parked-session probes (readmit)
+
+    def __post_init__(self) -> None:
+        if self.mode not in ("boost", "readmit"):
+            raise ValueError(f"mode must be 'boost' or 'readmit', got {self.mode!r}")
+        if self.patience < 1:
+            raise ValueError("patience must be >= 1")
+        if not (0.0 <= self.ema < 1.0):
+            raise ValueError("ema must be in [0, 1)")
+        if self.retrigger <= 0:
+            raise ValueError("retrigger must be > 0")
+        if self.boost <= 0:
+            raise ValueError("boost must be > 0")
+        if self.probe_every < 1:
+            raise ValueError("probe_every must be >= 1")
+
+
+@dataclasses.dataclass
+class DriftMonitor:
+    """Per-session streaming state of the drift decision (host-side,
+    ``dataclasses.asdict``-serializable — rides ``lifecycle`` snapshots).
+
+    The EMA recurrence is the same inf-aware update as
+    ``ConvergenceMonitor``/``core.metrics.ema_update``: the +inf "unmeasured"
+    init is replaced by the first observation instead of poisoning the
+    average."""
+
+    stat: float = float("inf")  # EMA-smoothed statistic (raw when ema == 0)
+    above: int = 0  # consecutive observations with stat > retrigger
+    seen: int = 0  # observations since the watch started (cooldown floor)
+
+    def update(self, x: float, policy: DriftPolicy) -> bool:
+        """Fold one observation in; returns True when the watchdog fires."""
+        if policy.ema and math.isfinite(self.stat):
+            self.stat = policy.ema * self.stat + (1.0 - policy.ema) * x
+        else:
+            self.stat = x
+        self.seen += 1
+        if self.seen <= policy.cooldown:
+            self.above = 0
+            return False
+        self.above = self.above + 1 if self.stat > policy.retrigger else 0
+        return self.above >= policy.patience
+
+
+@dataclasses.dataclass
+class DriftEvent:
+    """One watchdog firing: who drifted, when, how hard, and the response.
+
+    ``action`` is ``"boost"`` (kept hot, μ boosted in place) or ``"readmit"``
+    (parked session re-admitted through the scheduler, warm-started).
+    ``slot`` is the bank slot for in-place actions, ``None`` for re-admissions
+    that landed on the queue."""
+
+    session_id: Hashable
+    tick: int
+    stat: float
+    action: str
+    slot: Optional[int] = None

@@ -19,24 +19,52 @@ Session lifecycle state machine (``SeparationService``)::
            ▼                        ▼
         ACTIVE ◄── backfill ──── QUEUED ──── evict() ──► (dequeued, None)
            │                        ▲
-           │  step(): conv stat     │ bounded by max_queue — a full queue
-           │  < threshold for       │ raises (backpressure: the caller
-           │  `patience` ticks      │ must retry / shed load)
-           ▼                        │
-        CONVERGED (auto-evict) ─────┘ freed slot backfilled from the queue
-           │                          head IN THE SAME TICK
-           ▼
-        EVICTED — final ``SMBGDState`` + serving stats retained in
-        ``finished`` (drain with ``pop_finished()``); manual ``evict()``
-        takes the ACTIVE→EVICTED edge directly and returns the state.
+           │  step(): conv stat     │ waiting room is a pluggable
+           │  < threshold for       │ ``AdmissionScheduler`` (FIFO default;
+           │  `patience` ticks      │ priority + per-tenant quotas; EDF) —
+           ▼                        │ a full queue raises (backpressure)
+        CONVERGED ──────────────────┘ freed slot backfilled from the
+           │                          scheduler IN THE SAME TICK
+           │
+           ├─ no DriftPolicy ──────────────────────► EVICTED — final
+           │                                         ``SMBGDState`` + stats
+           │                                         retained in ``finished``
+           │
+           ├─ DriftPolicy(mode="boost"), source bound, nobody queued:
+           │    stay HOT in the slot (status ``"converged"``), still served
+           │    every tick; live conv EMA > ``retrigger`` ──► ``DriftEvent``:
+           │    μ × ``boost`` for ``boost_ticks`` ticks (per-stream
+           │    ``BankHyperparams`` row, no retrace) and back to ACTIVE
+           │    (re-adapting).  Waiting admissions PREEMPT the most-converged
+           │    hot session (──► EVICTED, reason ``"preempted"``), so keeping
+           │    sessions warm never starves the queue.
+           │
+           └─ DriftPolicy(mode="readmit"), source bound: slot evicts as
+                usual but the session PARKS (frozen state + its source);
+                every ``probe_every`` ``run_tick``s the watchdog pulls one
+                block and computes the VIRTUAL conv statistic of the frozen
+                separator (same ‖ΔB‖/‖B‖ formula, out of band, no slot);
+                EMA > ``retrigger`` ──► ``DriftEvent``: re-admitted through
+                the scheduler, warm-started from the frozen state (ACTIVE,
+                or QUEUED under backpressure).
+
+Ingestion: ``run_tick()`` is the scheduler-driven pull loop — sessions bind
+a ``data.sources.SignalSource`` at admit time; each tick backfills free
+slots, pulls one channel-major ``(m, P)`` block per bound source, advances
+every pulling session with ONE fused bank step, evicts drained sources
+(reason ``"exhausted"``) and probes parked sessions.  Push-mode ``step()``
+remains for callers that assemble their own batches (both can be mixed:
+sessions without a source are simply never pulled).
 
 Backpressure semantics: ``admit`` NEVER silently drops a session.  With a
-free slot it activates immediately (returns the slot index); otherwise it
-enqueues FIFO up to ``max_queue`` deep (returns ``None``) and past that
-raises ``RuntimeError``.  Queued sessions hold no device state — their
-separator is initialized at activation time, so the γ step-0 gate applies at
-the tick they actually start, and a queued session cancelled via ``evict``
-costs nothing.
+free slot (and an admission the scheduler allows — per-tenant quotas gate
+here too) it activates immediately (returns the slot index); otherwise it
+enqueues up to ``max_queue`` deep (returns ``None``) and past that raises
+``RuntimeError``.  Queued sessions hold no device state — their separator is
+initialized at activation time, so the γ step-0 gate applies at the tick
+they actually start, and a queued session cancelled via ``evict`` costs
+nothing.  (Re-admitted drifters are the exception: they warm-start from
+their frozen separator, step counter and all — no γ re-gate.)
 
 Convergence detection rides the bank's in-kernel statistic
 (``BankState.conv`` — relative update magnitude ``‖ΔB‖_F/‖B‖_F``, computed at
@@ -51,11 +79,10 @@ actually separates).
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import math
 import time
-from typing import Any, Callable, Deque, Dict, Hashable, List, Optional, Tuple
+from typing import Any, Callable, Dict, Hashable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -63,8 +90,16 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import metrics as metrics_lib
-from repro.core.smbgd import SMBGDState
+from repro.core import smbgd as smbgd_lib
+from repro.core.smbgd import BankHyperparams, SMBGDState
+from repro.data import sources as sources_lib
 from repro.models import model as M
+from repro.serve.drift import DriftEvent, DriftMonitor, DriftPolicy
+from repro.serve.scheduling import (
+    AdmissionScheduler,
+    SchedulerContext,
+    SessionMeta,
+)
 from repro.stream.bank import BankState, SeparatorBank
 
 PyTree = Any
@@ -200,8 +235,21 @@ class EvictionRecord:
     state: SMBGDState
     stats: SessionStats
     monitor: Optional[ConvergenceMonitor]
-    reason: str  # "converged" (auto) or "evicted" (manual)
+    reason: str  # "converged" | "evicted" | "exhausted" | "preempted"
     tick: int  # service tick counter at eviction
+
+
+@dataclasses.dataclass
+class ParkedSession:
+    """A converged-and-evicted session kept under drift watch
+    (``DriftPolicy(mode="readmit")``): its eviction record (frozen separator
+    state + stats), its still-bound signal source, the probe monitor, and the
+    scheduling metadata it re-admits with."""
+
+    record: EvictionRecord
+    source: Any
+    monitor: DriftMonitor
+    meta: SessionMeta
 
 
 class SeparationService:
@@ -235,13 +283,23 @@ class SeparationService:
 
     Lifecycle (see the module docstring for the full state machine): with
     ``max_queue > 0`` a full bank enqueues admissions instead of raising
-    (bounded backpressure), and with a ``ConvergencePolicy`` the service
-    watches each active session's in-bank convergence statistic and
-    auto-evicts converged sessions at the end of the tick — their final
-    ``SMBGDState`` (+ stats) lands in ``finished`` / ``pop_finished()`` and
-    the freed slot is backfilled from the queue within the same tick.
-    ``on_admit(sid, slot)`` / ``on_evict(sid, record)`` callbacks observe
-    both transitions (backfills and auto-evictions included).
+    (bounded backpressure) — the waiting room is a pluggable
+    ``AdmissionScheduler`` (FIFO by default; ``PriorityScheduler`` adds
+    strict priorities + per-tenant quotas, ``DeadlineScheduler`` EDF) — and
+    with a ``ConvergencePolicy`` the service watches each active session's
+    in-bank convergence statistic and auto-evicts converged sessions at the
+    end of the tick — their final ``SMBGDState`` (+ stats) lands in
+    ``finished`` / ``pop_finished()`` and the freed slot is backfilled from
+    the scheduler within the same tick.  ``on_admit(sid, slot)`` /
+    ``on_evict(sid, record)`` / ``on_drift(sid, event)`` callbacks observe
+    the transitions (backfills, auto-evictions and watchdog firings
+    included).
+
+    Drift (``DriftPolicy``): sessions admitted with a bound ``SignalSource``
+    get the re-adaptation lifecycle — converged separators are kept hot with
+    a μ boost on re-trigger (``mode="boost"``) or parked and probed
+    out-of-band, re-admitted warm when their mixing drifts
+    (``mode="readmit"``).  ``run_tick()`` is the pull loop that drives it.
     """
 
     def __init__(
@@ -253,26 +311,63 @@ class SeparationService:
         max_queue: int = 0,
         on_admit: Optional[Callable[[Hashable, int], None]] = None,
         on_evict: Optional[Callable[[Hashable, EvictionRecord], None]] = None,
+        scheduler: Optional[AdmissionScheduler] = None,
+        drift_policy: Optional[DriftPolicy] = None,
+        on_drift: Optional[Callable[[Hashable, DriftEvent], None]] = None,
     ):
         self.bank = bank
         self.key = jax.random.PRNGKey(seed)
         self.state: BankState = bank.init(self.key)
         self.policy = policy
-        self.max_queue = max_queue
+        if drift_policy is not None and policy is None:
+            raise ValueError(
+                "drift_policy needs a ConvergencePolicy: the watchdog only "
+                "watches sessions that first converged"
+            )
+        self.drift_policy = drift_policy
+        self.scheduler = (
+            scheduler if scheduler is not None else AdmissionScheduler(max_queue)
+        )
+        self.max_queue = self.scheduler.max_queue
         self.on_admit = on_admit
         self.on_evict = on_evict
+        self.on_drift = on_drift
         self._free: List[int] = list(range(bank.n_streams - 1, -1, -1))  # pop() → slot 0 first
         self._slot_of: Dict[Hashable, int] = {}
-        self._queue: Deque[Hashable] = collections.deque()
         self._monitors: Dict[Hashable, ConvergenceMonitor] = {}
         self._mixing: Dict[Hashable, jnp.ndarray] = {}
         self._finished: Dict[Hashable, EvictionRecord] = {}
         self._n_evicted = 0
         self._n_auto_evicted = 0
+        # scheduling + drift bookkeeping (all host-side)
+        self._meta: Dict[Hashable, SessionMeta] = {}  # ACTIVE sessions only
+        self._seq = 0  # admission sequence counter (SessionMeta.order)
+        self._sources: Dict[Hashable, Any] = {}  # sid → SignalSource
+        self._warm: Dict[Hashable, SMBGDState] = {}  # warm-start states pending activation
+        self._hot: Dict[Hashable, DriftMonitor] = {}  # converged-hot drift watches
+        self._boost_left: Dict[Hashable, int] = {}  # remaining boosted ticks
+        self._mu_scale = np.ones((bank.n_streams,), dtype=np.float32)
+        self._parked: Dict[Hashable, ParkedSession] = {}
+        self._drift_events: List[DriftEvent] = []
+        self._n_drift_events = 0
+        self._probe_ticks = 0  # run_tick counter driving parked probes
+        self._probe_fn = None  # lazily-jitted virtual-conv probe
+        self._restored_positions: Dict[Hashable, int] = {}  # from lifecycle snapshots
+        # μ boost rides per-stream hyperparameter rows as TRACED operands —
+        # only the boost mode pays for the 4-argument step flavour
+        self._hp_step = drift_policy is not None and drift_policy.mode == "boost"
+        if self._hp_step and bank.algorithm != "smbgd_batched":
+            raise ValueError(
+                "DriftPolicy(mode='boost') needs per-stream hyperparams, "
+                "which require algorithm='smbgd_batched'"
+            )
+        self._base_hp: Optional[BankHyperparams] = (
+            bank._bank_hyperparams() if self._hp_step else None
+        )
         # donated state on accelerators: the runtime reuses the old state
         # buffers for the new state — the steady-state tick performs no state
         # allocation (CPU backend opts out; see SeparatorBank.make_step)
-        self._step = bank.make_step()
+        self._step = bank.make_step(with_hyperparams=self._hp_step)
         # one staging buffer for every tick: jnp.asarray copies host→device,
         # so the numpy side is free to be overwritten next tick
         if bank.fused:
@@ -298,12 +393,12 @@ class SeparationService:
 
     @property
     def n_queued(self) -> int:
-        return len(self._queue)
+        return len(self.scheduler)
 
     @property
     def queued(self) -> Tuple[Hashable, ...]:
-        """FIFO snapshot of the admission queue (head first)."""
-        return tuple(self._queue)
+        """Waiting sessions in the scheduler's pop order (head first)."""
+        return self.scheduler.ids()
 
     @property
     def finished(self) -> Dict[Hashable, EvictionRecord]:
@@ -316,12 +411,31 @@ class SeparationService:
         out, self._finished = self._finished, {}
         return out
 
+    @property
+    def parked(self) -> Dict[Hashable, ParkedSession]:
+        """Sessions under out-of-band drift watch (``mode="readmit"``)."""
+        return dict(self._parked)
+
+    @property
+    def drift_events(self) -> List[DriftEvent]:
+        """Watchdog firings so far (read-only view; drain with
+        ``pop_drift_events``)."""
+        return list(self._drift_events)
+
+    def pop_drift_events(self) -> List[DriftEvent]:
+        out, self._drift_events = self._drift_events, []
+        return out
+
     def status(self, session_id: Hashable) -> str:
-        """Lifecycle state: ``"active" | "queued" | "finished" | "unknown"``."""
+        """Lifecycle state: ``"active" | "converged" | "queued" | "parked" |
+        "finished" | "unknown"`` (``"converged"`` = hot in its slot under
+        drift watch)."""
         if session_id in self._slot_of:
-            return "active"
-        if session_id in self._queue:
+            return "converged" if session_id in self._hot else "active"
+        if session_id in self.scheduler:
             return "queued"
+        if session_id in self._parked:
+            return "parked"
         if session_id in self._finished:
             return "finished"
         return "unknown"
@@ -330,10 +444,25 @@ class SeparationService:
         """Register the session's ground-truth mixing matrix ``A (m, n)`` so
         ``ConvergencePolicy.amari_threshold`` can confirm convergence on the
         global system ``B·A`` (benchmarks / synthetic workloads; production
-        sessions without ground truth simply never register one)."""
-        if session_id not in self._slot_of and session_id not in self._queue:
+        sessions without ground truth simply never register one).  Sessions
+        whose bound source exposes ``true_mixing()`` need no registration —
+        the confirmation tracks the source's live mixing instead."""
+        if session_id not in self._slot_of and session_id not in self.scheduler:
             raise KeyError(f"session {session_id!r} is neither active nor queued")
         self._mixing[session_id] = jnp.asarray(A)
+
+    def bind_source(self, session_id: Hashable, source, seek: bool = True) -> None:
+        """Attach (or replace) a session's ``SignalSource`` — the feed
+        ``run_tick`` pulls from.  After ``restore``, re-bind sources here:
+        the cursor positions recorded in the lifecycle snapshot are re-applied
+        (``seek=True``, sources exposing ``seek``) so the feed resumes exactly
+        where the checkpointed one stopped."""
+        if session_id not in self._slot_of and session_id not in self.scheduler:
+            raise KeyError(f"session {session_id!r} is neither active nor queued")
+        pos = self._restored_positions.pop(session_id, None) if seek else None
+        if pos is not None and hasattr(source, "seek"):
+            source.seek(pos)
+        self._sources[session_id] = source
 
     # -- metrics -----------------------------------------------------------
     @property
@@ -343,6 +472,9 @@ class SeparationService:
             "n_active": float(self.n_active),
             "n_free": float(self.n_free),
             "n_queued": float(self.n_queued),
+            "n_hot": float(len(self._hot)),
+            "n_parked": float(len(self._parked)),
+            "n_drift_events": float(self._n_drift_events),
             "n_evicted": float(self._n_evicted),
             "n_auto_evicted": float(self._n_auto_evicted),
             "n_ticks": float(self._n_ticks),
@@ -372,62 +504,152 @@ class SeparationService:
             out["conv_below"] = float(mon.below)
         return out
 
-    def admit(self, session_id: Hashable) -> Optional[int]:
+    def _sched_ctx(self) -> SchedulerContext:
+        return SchedulerContext(tick=self._n_ticks, active=dict(self._meta))
+
+    def admit(
+        self,
+        session_id: Hashable,
+        source=None,
+        state: Optional[SMBGDState] = None,
+        tenant: Optional[str] = None,
+        priority: float = 0.0,
+        deadline: Optional[float] = None,
+    ) -> Optional[int]:
         """Admit ``session_id``: into a free slot (returns the slot index), or
-        — when the bank is full and ``max_queue`` allows — onto the FIFO
-        admission queue (returns ``None``; the session activates when a slot
-        frees).  Raises ``ValueError`` for duplicate ids and ``RuntimeError``
-        when bank AND queue are full (backpressure: the caller must shed
-        load or retry later)."""
-        if session_id in self._slot_of or session_id in self._queue:
+        — when the bank is full and ``max_queue`` allows — into the
+        scheduler's waiting room (returns ``None``; the session activates
+        when a slot frees and the scheduler picks it).  Raises ``ValueError``
+        for duplicate ids and ``RuntimeError`` when bank AND queue are full
+        (backpressure: the caller must shed load or retry later).
+
+        ``source`` binds a ``SignalSource`` for ``run_tick`` ingestion (and
+        the drift watchdog).  ``state`` warm-starts the session from an
+        existing ``SMBGDState`` instead of a fresh init (the re-admission
+        path).  ``tenant``/``priority``/``deadline`` are scheduling metadata
+        (``SessionMeta``) consumed by the configured ``AdmissionScheduler``.
+
+        When every slot is held but some by HOT (converged, drift-watched)
+        sessions, the least-drifted hot session is preempted to make room —
+        keeping separators warm never starves new work."""
+        if session_id in self._slot_of or session_id in self.scheduler:
             raise ValueError(f"session {session_id!r} already admitted")
-        if not self._free:
-            if len(self._queue) < self.max_queue:
-                self._queue.append(session_id)
-                return None
-            raise RuntimeError(
-                f"bank full ({self.bank.n_streams} slots, "
-                f"{len(self._queue)}/{self.max_queue} queued); evict before "
-                f"admitting"
+        if session_id in self._parked:
+            raise ValueError(
+                f"session {session_id!r} is parked under drift watch; "
+                f"evict it first to force a fresh admission"
             )
-        return self._activate(session_id)
+        meta = SessionMeta(
+            tenant=tenant, priority=float(priority), deadline=deadline,
+            order=self._seq,
+        )
+        self._seq += 1
+        if source is not None:
+            self._sources[session_id] = source
+        if state is not None:
+            self._warm[session_id] = state
+        if not self._free and self._hot:
+            ctx = self._sched_ctx()
+            # preempt a warm separator only for work that can actually take
+            # the slot — a quota-gated admission must not cost anyone warmth
+            if self.scheduler.can_activate(meta, ctx) or self.scheduler.has_eligible(ctx):
+                self._preempt_hot()
+        try:
+            if (
+                self._free
+                and not len(self.scheduler)
+                and self.scheduler.can_activate(meta, self._sched_ctx())
+            ):
+                self._meta[session_id] = meta
+                return self._activate(session_id)
+            if not self._free and self.scheduler.full:
+                raise RuntimeError(
+                    f"bank full ({self.bank.n_streams} slots, "
+                    f"{len(self.scheduler)}/{self.max_queue} queued); evict "
+                    f"before admitting"
+                )
+            # free slots may exist while sessions wait (tenant at quota /
+            # non-empty queue): enqueue and let the scheduler pick
+            self.scheduler.push(session_id, meta)
+        except (RuntimeError, ValueError):
+            self._sources.pop(session_id, None)
+            self._warm.pop(session_id, None)
+            raise
+        self._backfill()
+        return self._slot_of.get(session_id)
 
     def _activate(self, session_id: Hashable) -> int:
         """QUEUED/new → ACTIVE: claim a free slot and initialize it (the
         session's device state is born here, so the γ step-0 gate applies at
-        its first *served* tick)."""
+        its first *served* tick).  Warm-start admissions instead write their
+        carried ``SMBGDState`` into the slot (step counter and all)."""
         slot = self._free.pop()
-        self.key, k = jax.random.split(self.key)
-        self.state = self.bank.init_slot(self.state, slot, k)
+        warm = self._warm.pop(session_id, None)
+        if warm is not None:
+            self.state = self.bank.set_slot(self.state, slot, warm)
+        else:
+            self.key, k = jax.random.split(self.key)
+            self.state = self.bank.init_slot(self.state, slot, k)
         self._slot_of[session_id] = slot
+        self._meta.setdefault(session_id, SessionMeta(order=self._seq))
+        self._mu_scale[slot] = 1.0
         self._stats[session_id] = SessionStats(admitted_at=time.perf_counter())
         self._monitors[session_id] = ConvergenceMonitor()
         if self.on_admit is not None:
             self.on_admit(session_id, slot)
         return slot
 
+    def _backfill(self) -> None:
+        """Fill free slots from the scheduler until it runs out of eligible
+        sessions (``pop`` returning ``None`` = everyone gated, e.g. tenants
+        at quota — the slot stays free and we retry at the next release or
+        ``run_tick``)."""
+        while self._free and len(self.scheduler):
+            popped = self.scheduler.pop(self._sched_ctx())
+            if popped is None:
+                return
+            sid, meta = popped
+            self._meta[sid] = meta
+            self._activate(sid)
+
+    def _preempt_hot(self) -> None:
+        """Evict the least-drifted HOT session to free a slot for waiting
+        work (reason ``"preempted"`` — its record lands in ``finished``)."""
+        conv = np.asarray(self.state.conv)
+        victim = min(
+            self._hot, key=lambda sid: float(conv[self._slot_of[sid]])
+        )
+        self._release(victim, reason="preempted")
+
     def evict(self, session_id: Hashable) -> Optional[SMBGDState]:
         """ACTIVE → EVICTED: release the slot and return the session's final
         single-stream state (B is its learned separation matrix), backfilling
-        the freed slot from the admission queue.  A QUEUED session is simply
-        dequeued (returns ``None`` — it never had device state).  An unknown
-        id raises ``KeyError`` without touching the free list."""
-        if session_id not in self._slot_of:
-            try:
-                self._queue.remove(session_id)  # cancellation of a queued session
-            except ValueError:
-                raise KeyError(
-                    f"session {session_id!r} is neither active nor queued"
-                ) from None
+        the freed slot from the scheduler.  A QUEUED session is simply
+        dequeued (returns ``None`` — it never had device state); a PARKED
+        session is taken off drift watch (its frozen state is returned and
+        its record moves to ``finished``).  An unknown id raises ``KeyError``
+        without touching the free list."""
+        if session_id in self._slot_of:
+            return self._release(session_id, reason="evicted").state
+        if self.scheduler.remove(session_id):  # cancellation of a queued session
             self._mixing.pop(session_id, None)
+            self._sources.pop(session_id, None)
+            self._warm.pop(session_id, None)
             return None
-        return self._release(session_id, reason="evicted").state
+        if session_id in self._parked:
+            ps = self._parked.pop(session_id)
+            self._finished[session_id] = ps.record
+            return ps.record.state
+        raise KeyError(
+            f"session {session_id!r} is neither active nor queued (nor parked)"
+        )
 
     def _release(self, session_id: Hashable, reason: str) -> EvictionRecord:
-        """ACTIVE → EVICTED edge shared by manual ``evict`` and the policy's
-        auto-eviction: slice the final state out of the bank, free the slot,
-        record the eviction, and backfill from the queue head — all before
-        the next tick touches the bank."""
+        """ACTIVE → EVICTED edge shared by manual ``evict``, the policy's
+        auto-eviction, hot-session preemption, source exhaustion and the
+        readmit-mode park: slice the final state out of the bank, free the
+        slot, record the eviction, and backfill from the scheduler — all
+        before the next tick touches the bank."""
         slot = self._slot_of.pop(session_id)
         record = EvictionRecord(
             state=self.bank.slot_state(self.state, slot),
@@ -437,17 +659,36 @@ class SeparationService:
             tick=self._n_ticks,
         )
         self._mixing.pop(session_id, None)
+        meta = self._meta.pop(session_id, None)
+        self._hot.pop(session_id, None)
+        self._boost_left.pop(session_id, None)
+        self._mu_scale[slot] = 1.0
         self._free.append(slot)
         self._n_evicted += 1
         if reason == "converged":
             self._n_auto_evicted += 1
-        self._finished[session_id] = record
+        source = self._sources.pop(session_id, None)
+        if (
+            reason == "converged"
+            and source is not None
+            and self.drift_policy is not None
+            and self.drift_policy.mode == "readmit"
+        ):
+            # PARK instead of finishing: the frozen separator + its source
+            # stay under out-of-band drift watch (see _probe_parked)
+            self._parked[session_id] = ParkedSession(
+                record=record,
+                source=source,
+                monitor=DriftMonitor(),
+                meta=meta if meta is not None else SessionMeta(),
+            )
+        else:
+            self._finished[session_id] = record
         if self.on_evict is not None:
             self.on_evict(session_id, record)
-        # same-tick backfill: the freed slot was appended last, so the queue
-        # head lands exactly in the slot that just opened
-        if self._queue:
-            self._activate(self._queue.popleft())
+        # same-tick backfill: the freed slot was appended last, so the
+        # scheduler's pick lands exactly in the slot that just opened
+        self._backfill()
         return record
 
     def step(self, batches: Dict[Hashable, jnp.ndarray]) -> Dict[Hashable, jnp.ndarray]:
@@ -465,7 +706,20 @@ class SeparationService:
             return {}
         unknown = set(batches) - set(self._slot_of)
         if unknown:
-            raise KeyError(f"sessions not admitted: {sorted(map(str, unknown))}")
+            # never silently drop data: queued/parked sessions hold no slot
+            # (their batch would corrupt nothing but vanish), unknown ids are
+            # caller bugs — name each class so the fix is obvious
+            queued = sorted(str(s) for s in unknown if s in self.scheduler)
+            parked = sorted(str(s) for s in unknown if s in self._parked)
+            msg = f"sessions not active: {sorted(map(str, unknown))}"
+            if queued:
+                msg += (
+                    f"; queued with no slot yet (wait for activation or raise "
+                    f"capacity): {queued}"
+                )
+            if parked:
+                msg += f"; parked under drift watch (evict to detach): {parked}"
+            raise KeyError(msg)
         S = self.bank.n_streams
         P = self.bank.opt.batch_size
         m = self.bank.easi.n_features
@@ -486,7 +740,12 @@ class SeparationService:
             X[slot, :P, :m] = xb
             active[slot] = True
         t0 = time.perf_counter()
-        self.state, Y = self._step(self.state, jnp.asarray(X), jnp.asarray(active))
+        if self._hp_step:
+            self.state, Y = self._step(
+                self.state, jnp.asarray(X), jnp.asarray(active), self._current_hp()
+            )
+        else:
+            self.state, Y = self._step(self.state, jnp.asarray(X), jnp.asarray(active))
         if self.block_ticks:
             jax.block_until_ready((self.state, Y))
         dt = time.perf_counter() - t0
@@ -506,32 +765,242 @@ class SeparationService:
         return out
 
     def _apply_policy(self, served) -> None:
-        """End-of-tick convergence sweep: update each served session's monitor
-        from the bank's in-step statistic, auto-evict the converged ones and
-        backfill their slots from the queue (same tick).
+        """End-of-tick convergence + drift sweep: update each served session's
+        monitor from the bank's in-step statistic, auto-evict (or park / keep
+        hot) the converged ones, fire the drift watchdog for hot sessions,
+        and backfill freed slots from the scheduler (same tick).
 
         One (S,)-float device read per tick — the statistic itself was folded
         inside the bank step (in-register on the fused path)."""
         pol = self.policy
+        dpol = self.drift_policy
         conv = np.asarray(self.state.conv)  # (S,) f32
         evict_now: List[Hashable] = []
         for sid in served:
+            slot = self._slot_of[sid]
+            x = float(conv[slot])
+            if sid in self._hot:
+                # converged-hot: the DRIFT watchdog owns this session now
+                if self._hot[sid].update(x, dpol):
+                    self._fire_boost(sid, slot)
+                continue
+            if sid in self._boost_left:
+                # re-adapting under μ boost: count the boost down
+                self._boost_left[sid] -= 1
+                if self._boost_left[sid] <= 0:
+                    del self._boost_left[sid]
+                    self._mu_scale[slot] = 1.0
             mon = self._monitors[sid]
-            mon.update(float(conv[self._slot_of[sid]]), pol)
+            mon.update(x, pol)
             if mon.ticks < pol.min_ticks or mon.below < pol.patience:
                 continue
-            if pol.amari_threshold is not None and sid in self._mixing:
-                B = self.bank.slot_state(self.state, self._slot_of[sid]).B
-                pi = float(
-                    metrics_lib.amari_index(
-                        metrics_lib.global_system(B, self._mixing[sid])
+            if pol.amari_threshold is not None:
+                A = self._mixing.get(sid)
+                if A is None and sid in self._sources:
+                    # drifting synthetic sources report their live mixing
+                    A = sources_lib.true_mixing_of(self._sources[sid])
+                if A is not None:
+                    B = self.bank.slot_state(self.state, slot).B
+                    pi = float(
+                        metrics_lib.amari_index(
+                            metrics_lib.global_system(B, jnp.asarray(A))
+                        )
                     )
-                )
-                if pi > pol.amari_threshold:
-                    continue  # blind stat dipped early — not separated yet
+                    if pi > pol.amari_threshold:
+                        continue  # blind stat dipped early — not separated yet
+            if (
+                dpol is not None
+                and dpol.mode == "boost"
+                and sid in self._sources
+                and not self.scheduler.has_eligible(self._sched_ctx())
+            ):
+                # keep HOT: hold the slot, keep serving, watch for drift
+                # (capacity pressure wins over warmth — but only a waiting
+                # session that could actually take the slot counts)
+                self._hot[sid] = DriftMonitor()
+                if sid in self._boost_left:
+                    # re-converged before the boost ran out: the boost did
+                    # its job — μ returns to base for the hot watch
+                    del self._boost_left[sid]
+                    self._mu_scale[slot] = 1.0
+                continue
             evict_now.append(sid)
         for sid in evict_now:
             self._release(sid, reason="converged")
+
+    # -- drift watchdog ----------------------------------------------------
+    def _record_drift(self, event: DriftEvent) -> None:
+        self._drift_events.append(event)
+        self._n_drift_events += 1
+        if self.on_drift is not None:
+            self.on_drift(event.session_id, event)
+
+    def _fire_boost(self, session_id: Hashable, slot: int) -> None:
+        """HOT → ACTIVE: the watchdog saw the conv statistic rise — boost the
+        session's per-stream μ and make it re-earn convergence."""
+        mon = self._hot.pop(session_id)
+        dpol = self.drift_policy
+        self._monitors[session_id] = ConvergenceMonitor()
+        if dpol.boost != 1.0:
+            self._mu_scale[slot] = dpol.boost
+            self._boost_left[session_id] = dpol.boost_ticks
+        self._record_drift(
+            DriftEvent(
+                session_id=session_id,
+                tick=self._n_ticks,
+                stat=mon.stat,
+                action="boost",
+                slot=slot,
+            )
+        )
+
+    def _current_hp(self) -> BankHyperparams:
+        """Per-stream hyperparameter rows for THIS tick: the bank's base
+        (μ, β, γ) with the watchdog's μ multipliers folded in.  Traced
+        operands — varying them tick to tick costs no retrace."""
+        hp = self._base_hp
+        if self._boost_left:
+            return BankHyperparams(
+                mu=hp.mu * jnp.asarray(self._mu_scale),
+                beta=hp.beta,
+                gamma=hp.gamma,
+            )
+        return hp
+
+    def _virtual_conv(self, state: SMBGDState, X: jnp.ndarray) -> float:
+        """The conv statistic a bank step WOULD commit from ``state`` on
+        ``X (P, m)`` — same ``‖ΔB‖_F/‖B‖_F`` formula, computed out of band
+        without touching the bank (the parked-session drift probe)."""
+        if self._probe_fn is None:
+            ecfg, ocfg = self.bank.easi, self.bank.opt
+
+            def probe(st, x):
+                st2, _ = smbgd_lib.smbgd_batched_step(st, x, ecfg, ocfg)
+                return metrics_lib.update_magnitude(st2.B, st.B)
+
+            self._probe_fn = jax.jit(probe)
+        return float(self._probe_fn(state, X))
+
+    def _probe_parked(self) -> None:
+        """Every ``probe_every`` run_ticks, pull one block from each parked
+        session's source and fold the virtual conv statistic into its drift
+        monitor; re-admit (warm-started, through the scheduler) the sessions
+        whose mixing has drifted.  A parked source that drains moves the
+        session to ``finished``.
+
+        Probes treat the source as LIVE: a parked session is not consuming
+        its feed, so the samples that arrived between probes are skipped
+        (``seek`` past them, for sources exposing a cursor) — the probe sees
+        the present, and parked time advances at service time."""
+        dpol = self.drift_policy
+        if not self._parked or dpol is None or dpol.mode != "readmit":
+            return
+        self._probe_ticks += 1
+        if self._probe_ticks % dpol.probe_every:
+            return
+        P = self.bank.opt.batch_size
+        skip = (dpol.probe_every - 1) * P
+        for sid in list(self._parked):
+            ps = self._parked[sid]
+            if skip and hasattr(ps.source, "seek") and hasattr(ps.source, "position"):
+                target = ps.source.position + skip
+                limit = getattr(ps.source, "n_samples", None)
+                if limit is not None and getattr(ps.source, "loop", False):
+                    target %= max(limit, 1)  # looping feed: modular live time
+                elif limit is not None:
+                    # finite feed near its end: clamp to the last full block
+                    # so the probe still measures the PRESENT, not a window
+                    # from (probe_every-1) ticks ago — but never move the
+                    # cursor backward (a fully drained feed must exhaust,
+                    # not re-probe its final block forever)
+                    target = max(
+                        min(target, max(limit - P, 0)), ps.source.position
+                    )
+                try:
+                    ps.source.seek(target)
+                except ValueError:
+                    pass  # source without absolute seek semantics: best effort
+            try:
+                blk = np.asarray(ps.source.next_block(P), dtype=np.float32)
+            except sources_lib.SourceExhausted:
+                self._finished[sid] = ps.record
+                del self._parked[sid]
+                continue
+            x = self._virtual_conv(ps.record.state, jnp.asarray(blk.T))
+            if ps.monitor.update(x, dpol):
+                self._readmit(sid, ps)
+
+    def _readmit(self, session_id: Hashable, ps: ParkedSession) -> None:
+        """PARKED → ACTIVE on watchdog fire: back through the scheduler's
+        admission gate, warm-started from the frozen separator.  The
+        re-admission only proceeds when it can ACTIVATE immediately (a free
+        slot, or a preemptable hot session); if it would merely queue —
+        backpressure, tenant quota — the session stays parked and the next
+        probe retries.  A queued re-admission would hold its warm-start
+        state as an un-snapshotable pending array; parked-until-activatable
+        keeps checkpoints exact."""
+        del self._parked[session_id]
+        try:
+            slot = self.admit(
+                session_id,
+                source=ps.source,
+                state=ps.record.state,
+                tenant=ps.meta.tenant,
+                priority=ps.meta.priority,
+                deadline=ps.meta.deadline,
+            )
+        except RuntimeError:  # bank AND queue full: stay parked, retry later
+            self._parked[session_id] = ps
+            return
+        if slot is None:  # would queue (gated/contended): back out, stay parked
+            self.evict(session_id)  # dequeues; detaches the source/warm bindings
+            self._parked[session_id] = ps
+            return
+        self._record_drift(
+            DriftEvent(
+                session_id=session_id,
+                tick=self._n_ticks,
+                stat=ps.monitor.stat,
+                action="readmit",
+                slot=slot,
+            )
+        )
+
+    # -- scheduler-driven ingestion ---------------------------------------
+    def run_tick(self) -> Dict[Hashable, jnp.ndarray]:
+        """One pull tick: backfill free slots from the scheduler, pull a
+        channel-major ``(m, P)`` block from every active session's bound
+        ``SignalSource``, advance them all with ONE fused bank step, evict
+        sessions whose source drained (reason ``"exhausted"``), and probe
+        parked sessions for drift.  Returns session_id → separated ``(P, n)``
+        outputs (sessions without a source are skipped — push their batches
+        through ``step`` instead; both modes mix freely)."""
+        self._backfill()  # deadline/quota gates may have reopened
+        P = self.bank.opt.batch_size
+        m = self.bank.easi.n_features
+        batches: Dict[Hashable, np.ndarray] = {}
+        drained: List[Hashable] = []
+        for sid in list(self._slot_of):
+            src = self._sources.get(sid)
+            if src is None:
+                continue
+            try:
+                blk = np.asarray(src.next_block(P), dtype=np.float32)
+            except sources_lib.SourceExhausted:
+                drained.append(sid)
+                continue
+            if blk.shape != (m, P):
+                raise ValueError(
+                    f"source for session {sid!r}: block shape {blk.shape} != "
+                    f"(m={m}, n_samples={P})"
+                )
+            batches[sid] = blk.T
+        out = self.step(batches) if batches else {}
+        for sid in drained:
+            if sid in self._slot_of:
+                self._release(sid, reason="exhausted")
+        self._probe_parked()
+        return out
 
     # -- persistence -------------------------------------------------------
     # The bank state is a plain pytree, so the array side round-trips through
@@ -548,17 +1017,40 @@ class SeparationService:
     @property
     def lifecycle(self) -> Dict[str, Any]:
         """JSON-friendly snapshot of the full host-side lifecycle state:
-        session→slot map, FIFO admission queue, and per-session convergence
-        monitors.  Save alongside the arrays; hand back to ``restore`` to
-        resume sessions, queue AND convergence progress in place.  Mixing
-        matrices registered via ``set_mixing`` are arrays and deliberately
-        excluded — re-register them after restore (see ``restore``)."""
+        session→slot map, the scheduler's waiting room (ids + scheduling
+        metadata), per-session convergence monitors, active-session metadata,
+        and the drift watchdog (hot-session monitors, remaining boost ticks,
+        per-slot μ multipliers, bound-source cursor positions).  Save
+        alongside the arrays; hand back to ``restore`` to resume sessions,
+        queue, convergence progress AND drift watch in place.
+
+        Deliberately excluded (arrays / live objects, not JSON): mixing
+        matrices registered via ``set_mixing`` (re-register after restore),
+        the ``SignalSource`` objects themselves (re-attach via
+        ``bind_source``, which seeks them to the recorded positions), PARKED
+        sessions (their frozen state is out-of-bank by design — evict or
+        re-admit them before checkpointing, or re-park after restore), and
+        pending warm-start states of QUEUED sessions (a caller's
+        ``admit(state=...)`` under backpressure activates FRESH after a
+        restore; the watchdog itself never queues a warm re-admission —
+        see ``_readmit``)."""
         return {
             "sessions": dict(self._slot_of),
-            "queue": list(self._queue),
+            "queue": self.scheduler.snapshot(),
             "monitors": {
                 sid: dataclasses.asdict(mon)
                 for sid, mon in self._monitors.items()
+            },
+            "meta": {sid: meta.asdict() for sid, meta in self._meta.items()},
+            "hot": {
+                sid: dataclasses.asdict(mon) for sid, mon in self._hot.items()
+            },
+            "boost": dict(self._boost_left),
+            "mu_scale": [float(v) for v in self._mu_scale],
+            "sources": {
+                sid: int(src.position)
+                for sid, src in self._sources.items()
+                if hasattr(src, "position")
             },
         }
 
@@ -592,8 +1084,19 @@ class SeparationService:
         lifecycle = lifecycle or {}
         if sessions is None:
             sessions = lifecycle.get("sessions") or {}
-        queue = list(lifecycle.get("queue") or [])
+        queue_entries = list(lifecycle.get("queue") or [])
+        # entries are [sid, meta] pairs (new) or plain sids (PR-3 snapshots)
+        queue_ids = [
+            e[0]
+            if isinstance(e, (list, tuple)) and len(e) == 2 and isinstance(e[1], dict)
+            else e
+            for e in queue_entries
+        ]
         monitors = lifecycle.get("monitors") or {}
+        meta_snap = lifecycle.get("meta") or {}
+        hot_snap = lifecycle.get("hot") or {}
+        boost_snap = lifecycle.get("boost") or {}
+        mu_scale = lifecycle.get("mu_scale")
         bad = {
             s: slot
             for s, slot in sessions.items()
@@ -603,9 +1106,31 @@ class SeparationService:
             raise ValueError(f"session slots out of range: {bad}")
         if len(set(sessions.values())) != len(sessions):
             raise ValueError(f"duplicate slots in session map: {sessions}")
-        overlap = set(queue) & set(sessions)
-        if overlap or len(set(queue)) != len(queue):
-            raise ValueError(f"queue/session overlap or duplicates: {queue}")
+        overlap = set(queue_ids) & set(sessions)
+        if overlap or len(set(queue_ids)) != len(queue_ids):
+            raise ValueError(f"queue/session overlap or duplicates: {queue_ids}")
+        if mu_scale is not None and len(mu_scale) != self.bank.n_streams:
+            raise ValueError(
+                f"mu_scale length {len(mu_scale)} != n_streams "
+                f"{self.bank.n_streams}"
+            )
+        # drift-watch state needs the drift machinery to run: re-arming hot
+        # monitors without a policy would crash the next served tick, and μ
+        # multipliers without the hyperparam step would be silently inert
+        if (hot_snap or boost_snap) and self.drift_policy is None:
+            raise ValueError(
+                "lifecycle snapshot carries drift-watch state (hot/boost) "
+                "but this service has no drift_policy"
+            )
+        if (
+            mu_scale is not None
+            and not self._hp_step
+            and any(float(v) != 1.0 for v in mu_scale)
+        ):
+            raise ValueError(
+                "lifecycle snapshot carries μ multipliers but this service "
+                "cannot apply them (no boost-mode drift_policy)"
+            )
         # validate BEFORE mutating: a rejected map must leave the live
         # service untouched
         target = dict(self.state._asdict(), rng_key=self.key)
@@ -613,7 +1138,7 @@ class SeparationService:
         self.key = tree.pop("rng_key")
         self.state = BankState(**tree)
         self._slot_of = dict(sessions)
-        self._queue = collections.deque(queue)
+        self.scheduler.load(queue_entries)
         # convergence progress resumes exactly; sessions without a saved
         # monitor restart their decision state (but not their separator)
         self._monitors = {
@@ -622,6 +1147,43 @@ class SeparationService:
             else ConvergenceMonitor()
             for sid in sessions
         }
+        self._meta = {
+            sid: SessionMeta(**meta_snap[sid])
+            if sid in meta_snap
+            else SessionMeta()
+            for sid in sessions
+        }
+        # drift watch resumes exactly: hot monitors, boost countdowns, μ rows
+        self._hot = {
+            sid: DriftMonitor(**mon)
+            for sid, mon in hot_snap.items()
+            if sid in sessions
+        }
+        self._boost_left = {
+            sid: int(v) for sid, v in boost_snap.items() if sid in sessions
+        }
+        self._mu_scale = (
+            np.asarray(mu_scale, dtype=np.float32)
+            if mu_scale is not None
+            else np.ones((self.bank.n_streams,), dtype=np.float32)
+        )
+        self._parked = {}
+        self._sources = {}
+        self._warm = {}
+        self._drift_events = []
+        self._n_drift_events = 0
+        self._probe_ticks = 0
+        # bind_source(seek=True) replays these cursors into re-bound sources
+        self._restored_positions = dict(lifecycle.get("sources") or {})
+        queue_meta_orders = [
+            e[1].get("order", 0)
+            for e in queue_entries
+            if isinstance(e, (list, tuple)) and len(e) == 2 and isinstance(e[1], dict)
+        ]
+        self._seq = 1 + max(
+            [m.order for m in self._meta.values()] + queue_meta_orders,
+            default=-1,
+        )
         self._mixing = {}
         self._finished = {}
         # serving counters restart at restore time — per-session AND aggregate

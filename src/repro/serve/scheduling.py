@@ -1,0 +1,204 @@
+"""Pluggable admission scheduling for ``serve.SeparationService``.
+
+PR-3's bounded FIFO queue treated every waiting session identically; real
+multi-tenant serving wants *policy* between "bank is full" and "who activates
+next".  This module factors the queue into an ``AdmissionScheduler`` object
+the service delegates to:
+
+  * ``AdmissionScheduler``  — the base class IS the FIFO policy (insertion
+    order, unconditional activation) — exactly PR-3's behavior, so a service
+    built with ``max_queue=`` alone is unchanged.
+  * ``PriorityScheduler``   — strict priority (higher first; FIFO within a
+    priority level) with optional per-tenant quotas on ACTIVE sessions: a
+    tenant at quota is skipped at pop time *and* blocked from direct
+    admission into a free slot (its sessions queue until an own slot frees).
+  * ``DeadlineScheduler``   — earliest-deadline-first over the ``deadline``
+    field of ``SessionMeta`` (deadline-less sessions sort last, FIFO among
+    themselves).
+
+The scheduler owns ONLY the waiting room.  The service asks two questions:
+``can_activate(meta, ctx)`` ("may this session take a free slot right now?")
+and ``pop(ctx)`` ("who activates into the slot that just freed?").  ``ctx``
+carries the live view (tick counter + active sessions' metadata) so policies
+can reason about occupancy without reaching into the service.
+
+Scheduler state is JSON-able (``snapshot``/``load``) and rides the service's
+``lifecycle`` checkpoint snapshot, so a restored service resumes the same
+queue — order, priorities, deadlines and all.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, Hashable, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class SessionMeta:
+    """Scheduling metadata carried per session (active or queued).
+
+    ``order`` is the service-assigned admission sequence number — the FIFO
+    tiebreak every policy falls back to, so scheduling is deterministic.
+    """
+
+    tenant: Optional[str] = None
+    priority: float = 0.0
+    deadline: Optional[float] = None
+    order: int = 0
+
+    def asdict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerContext:
+    """Live view handed to scheduling decisions: the service tick counter and
+    the metadata of currently ACTIVE sessions (slot holders)."""
+
+    tick: int
+    active: Dict[Hashable, SessionMeta]
+
+    def active_per_tenant(self) -> Dict[Optional[str], int]:
+        counts: Dict[Optional[str], int] = collections.Counter()
+        for meta in self.active.values():
+            counts[meta.tenant] += 1
+        return counts
+
+
+class AdmissionScheduler:
+    """Bounded FIFO waiting room — the base class is the default policy.
+
+    Subclasses override ``_rank`` (pop order) and/or ``can_activate``
+    (admission gating); the bookkeeping (bounded capacity, membership,
+    snapshots) is shared.
+    """
+
+    def __init__(self, max_queue: int = 0):
+        if max_queue < 0:
+            raise ValueError("max_queue must be >= 0")
+        self.max_queue = max_queue
+        self._entries: "collections.OrderedDict[Hashable, SessionMeta]" = (
+            collections.OrderedDict()
+        )
+
+    # -- policy hooks ------------------------------------------------------
+    def _rank(self, sid: Hashable, meta: SessionMeta) -> Tuple:
+        """Sort key: the LOWEST-ranked eligible entry pops first."""
+        return (meta.order,)
+
+    def can_activate(self, meta: SessionMeta, ctx: SchedulerContext) -> bool:
+        """May a session with ``meta`` take a free slot right now?  Applies
+        both to direct admissions and to queue pops."""
+        return True
+
+    # -- waiting-room bookkeeping -----------------------------------------
+    @property
+    def full(self) -> bool:
+        return len(self._entries) >= self.max_queue
+
+    def push(self, sid: Hashable, meta: SessionMeta) -> None:
+        if sid in self._entries:
+            raise ValueError(f"session {sid!r} already queued")
+        if self.full:
+            raise RuntimeError(
+                f"admission queue full ({len(self._entries)}/{self.max_queue})"
+            )
+        self._entries[sid] = meta
+
+    def pop(self, ctx: SchedulerContext) -> Optional[Tuple[Hashable, SessionMeta]]:
+        """Best eligible waiting ``(sid, meta)`` (or ``None`` — e.g. every
+        queued tenant is at quota; the slot stays free and the service
+        retries at the next release/tick)."""
+        best = None
+        for sid, meta in self._entries.items():
+            if not self.can_activate(meta, ctx):
+                continue
+            if best is None or self._rank(sid, meta) < self._rank(*best):
+                best = (sid, meta)
+        if best is None:
+            return None
+        del self._entries[best[0]]
+        return best
+
+    def has_eligible(self, ctx: SchedulerContext) -> bool:
+        """Would ``pop`` return a session right now?  (Used by the service
+        to decide whether a waiting admission justifies evicting a hot
+        session — a fully gated queue does not.)"""
+        return any(
+            self.can_activate(meta, ctx) for meta in self._entries.values()
+        )
+
+    def remove(self, sid: Hashable) -> bool:
+        return self._entries.pop(sid, None) is not None
+
+    def meta_of(self, sid: Hashable) -> SessionMeta:
+        return self._entries[sid]
+
+    def ids(self) -> Tuple[Hashable, ...]:
+        """Queued ids in pop order (ignoring eligibility gates)."""
+        ranked = sorted(self._entries.items(), key=lambda kv: self._rank(*kv))
+        return tuple(sid for sid, _ in ranked)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, sid: Hashable) -> bool:
+        return sid in self._entries
+
+    # -- persistence -------------------------------------------------------
+    def snapshot(self) -> List:
+        """JSON-able queue contents in insertion order: ``[[sid, meta], ...]``
+        (hashable sids must themselves be JSON-able, as in PR-3)."""
+        return [[sid, meta.asdict()] for sid, meta in self._entries.items()]
+
+    def load(self, entries: List) -> None:
+        """Restore queue contents from ``snapshot()`` output — also accepts
+        the PR-3 plain-sid list (metadata defaults).  Replaces the current
+        contents; capacity is NOT re-checked (the snapshot was legal when
+        taken, and restores must not drop sessions)."""
+        self._entries.clear()
+        for entry in entries:
+            if isinstance(entry, (list, tuple)) and len(entry) == 2 and isinstance(entry[1], dict):
+                sid, meta = entry[0], SessionMeta(**entry[1])
+            else:
+                sid, meta = entry, SessionMeta()
+            self._entries[sid] = meta
+
+
+class PriorityScheduler(AdmissionScheduler):
+    """Strict priority with per-tenant quotas on active sessions.
+
+    ``quotas`` maps tenant → max simultaneously ACTIVE sessions; ``default
+    _quota`` applies to tenants not listed (``None`` = unlimited).  A session
+    whose tenant is at quota neither takes a free slot at admission nor pops
+    from the queue — it waits for one of its own tenant's slots, however many
+    bank slots are free (the noisy-neighbour fence)."""
+
+    def __init__(
+        self,
+        max_queue: int = 0,
+        quotas: Optional[Dict[Optional[str], int]] = None,
+        default_quota: Optional[int] = None,
+    ):
+        super().__init__(max_queue)
+        self.quotas = dict(quotas or {})
+        self.default_quota = default_quota
+
+    def _rank(self, sid: Hashable, meta: SessionMeta) -> Tuple:
+        return (-meta.priority, meta.order)
+
+    def can_activate(self, meta: SessionMeta, ctx: SchedulerContext) -> bool:
+        quota = self.quotas.get(meta.tenant, self.default_quota)
+        if quota is None:
+            return True
+        return ctx.active_per_tenant().get(meta.tenant, 0) < quota
+
+
+class DeadlineScheduler(AdmissionScheduler):
+    """Earliest-deadline-first: the queued session with the smallest
+    ``deadline`` (service-tick units by convention) pops first; sessions
+    without a deadline rank after every dated one, FIFO among themselves."""
+
+    def _rank(self, sid: Hashable, meta: SessionMeta) -> Tuple:
+        dated = meta.deadline is not None
+        return (0 if dated else 1, meta.deadline if dated else 0.0, meta.order)

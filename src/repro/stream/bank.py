@@ -247,6 +247,38 @@ class SeparatorBank:
             B=state.B[slot], H_hat=state.H_hat[slot], step=state.step[slot]
         )
 
+    def set_slot(self, state: BankState, slot, sub: SMBGDState) -> BankState:
+        """Write a single-stream ``SMBGDState`` (logical shapes) into one
+        slot — the warm-start admission path: a re-admitted session resumes
+        from its frozen separator (``B``, ``Ĥ``, step counter all carried, so
+        the γ step-0 gate does NOT re-apply).  ``conv`` restarts at +inf —
+        the statistic describes steps taken *in this slot*."""
+        conv = self._conv_or_default(state).at[slot].set(jnp.inf)
+        if self._is_padded(state):
+            lay = self.layout
+            B_slot = (
+                jnp.zeros((lay.n_pad, lay.m_pad), state.B.dtype)
+                .at[: lay.n, : lay.m]
+                .set(sub.B)
+            )
+            H_slot = (
+                jnp.zeros((lay.n_pad, lay.n_pad), state.H_hat.dtype)
+                .at[: lay.n, : lay.n]
+                .set(sub.H_hat)
+            )
+            return BankState(
+                B=state.B.at[slot].set(B_slot),
+                H_hat=state.H_hat.at[slot].set(H_slot),
+                step=state.step.at[slot].set(sub.step),
+                conv=conv,
+            )
+        return BankState(
+            B=state.B.at[slot].set(sub.B),
+            H_hat=state.H_hat.at[slot].set(sub.H_hat),
+            step=state.step.at[slot].set(sub.step),
+            conv=conv,
+        )
+
     def _is_padded(self, state: BankState) -> bool:
         n, m = self.easi.n_components, self.easi.n_features
         return state.B.shape[-2:] != (n, m)
@@ -277,6 +309,7 @@ class SeparatorBank:
         state: BankState,
         X: jnp.ndarray,
         active: Optional[jnp.ndarray] = None,
+        hyperparams: Optional[BankHyperparams] = None,
     ) -> Tuple[BankState, jnp.ndarray]:
         """One fused mini-batch update for all streams.
 
@@ -284,14 +317,25 @@ class SeparatorBank:
         freezes masked-out slots: their state is returned unchanged (their Y
         rows are still computed — garbage-in/garbage-out for free slots).
 
+        ``hyperparams`` (optional) overrides the bank's per-stream (μ, β, γ)
+        for THIS step — as ``(S,)`` array operands, not closure constants, so
+        a jitted step can vary them tick to tick without retracing (the
+        serving layer's drift-watchdog μ boost rides this).  Overrides route
+        non-fused banks through the hetero-vmap path and require
+        ``algorithm="smbgd_batched"``.
+
         Fused banks run on padded shapes: ``X`` may be logical (padded here)
         or already ``(S, P_pad, m_pad)`` (zero-copy), and the returned state
         and ``Y (S, P_pad, n_pad)`` stay padded — ``unpad_state``/``unpad_y``
         at the boundary.
         """
+        if hyperparams is not None and self.algorithm != "smbgd_batched":
+            raise ValueError(
+                "per-stream hyperparams require algorithm='smbgd_batched'"
+            )
         if self.fused:
-            return self._step_fused(state, X, active)
-        new_state, Y = self._step_all(state, X)
+            return self._step_fused(state, X, active, hyperparams)
+        new_state, Y = self._step_all(state, X, hyperparams)
         if active is not None:
             a3 = active[:, None, None]
             new_state = BankState(
@@ -314,12 +358,21 @@ class SeparatorBank:
             return jax.default_backend() != "cpu"
         return donate
 
-    def make_step(self, donate: Optional[bool] = None):
+    def make_step(
+        self, donate: Optional[bool] = None, with_hyperparams: bool = False
+    ):
         """Jitted ``step(state, X, active) -> (state, Y)``; with donation
         (default on accelerators) the state buffers are reused for the
         outputs, so a steady-state tick allocates nothing (the serving hot
-        loop)."""
-        fn = lambda st, X, active: self.step(st, X, active=active)
+        loop).  ``with_hyperparams=True`` builds the 4-argument flavour
+        ``step(state, X, active, hyperparams)`` — per-stream (μ, β, γ) as
+        traced operands, the drift-watchdog's no-retrace μ-boost hook."""
+        if with_hyperparams:
+            fn = lambda st, X, active, hp: self.step(
+                st, X, active=active, hyperparams=hp
+            )
+        else:
+            fn = lambda st, X, active: self.step(st, X, active=active)
         donate = self._donate_default(donate)
         return jax.jit(fn, donate_argnums=(0,) if donate else ())
 
@@ -335,7 +388,11 @@ class SeparatorBank:
         return BankHyperparams.broadcast(self.opt, self.n_streams)
 
     def _step_fused(
-        self, state: BankState, X: jnp.ndarray, active: Optional[jnp.ndarray]
+        self,
+        state: BankState,
+        X: jnp.ndarray,
+        active: Optional[jnp.ndarray],
+        hyperparams: Optional[BankHyperparams] = None,
     ):
         """Whole-step megakernel tick: one (streams, P-tiles) launch computes
         Y, the weighted gradient sum AND the commit on persistent padded
@@ -345,7 +402,7 @@ class SeparatorBank:
         lay = self.layout
         state = self.pad_state(state)  # no-op on the persistent layout
         X = self.pad_batch(X)  # no-op when staged block-aligned
-        hp = self._bank_hyperparams()
+        hp = hyperparams if hyperparams is not None else self._bank_hyperparams()
         # weight rows at padded P: padded samples carry zero weight
         W = (
             jnp.zeros((self.n_streams, lay.P_pad), jnp.float32)
@@ -370,9 +427,14 @@ class SeparatorBank:
         )
         return BankState(B=B_new, H_hat=H_new, step=step_new, conv=conv_new), Y
 
-    def _step_all(self, state: BankState, X: jnp.ndarray):
-        if self.hyperparams is not None:
-            return self._step_hetero(state, X)
+    def _step_all(
+        self,
+        state: BankState,
+        X: jnp.ndarray,
+        hyperparams: Optional[BankHyperparams] = None,
+    ):
+        if hyperparams is not None or self.hyperparams is not None:
+            return self._step_hetero(state, X, hyperparams)
         if self.algorithm == "smbgd_batched" and self.use_pallas:
             return self._step_pallas(state, X)
         sep = self._sep
@@ -388,12 +450,17 @@ class SeparatorBank:
             Y,
         )
 
-    def _step_hetero(self, state: BankState, X: jnp.ndarray):
+    def _step_hetero(
+        self,
+        state: BankState,
+        X: jnp.ndarray,
+        hyperparams: Optional[BankHyperparams] = None,
+    ):
         """vmap fallback for per-stream (μ, β, γ) without the megakernel —
         the reference semantics the fused path is tested against."""
         from repro.core import easi as easi_lib
 
-        hp = self._bank_hyperparams()
+        hp = hyperparams if hyperparams is not None else self._bank_hyperparams()
         P = self.opt.batch_size
         W = hp.within_batch_weights(P)  # (S, P)
         gamma_hat = hp.effective_momentum(P)  # (S,)

@@ -1,4 +1,5 @@
 """Checkpointing: atomicity, GC, resume, reshard-on-load (elastic restart)."""
+import dataclasses
 import json
 import os
 import threading
@@ -143,6 +144,146 @@ class TestServiceLifecycleRoundtrip:
             np.asarray(svc.state.conv), np.asarray(svc2.state.conv)
         )
         assert np.all(np.isfinite(np.asarray(svc2.state.conv)[:1]))
+
+
+class TestDriftLifecycleRoundtrip:
+    """Scheduler + drift-watchdog state across a checkpoint boundary, taken
+    MID-DRIFT: hot monitors, boost countdowns, per-slot μ multipliers,
+    scheduling metadata and source cursors all resume, and the restored
+    service replays the original's exact trajectory."""
+
+    def _svc(self):
+        from repro.core import EASIConfig, SMBGDConfig
+        from repro.serve import (
+            ConvergencePolicy,
+            DriftPolicy,
+            PriorityScheduler,
+            SeparationService,
+        )
+        from repro.stream import SeparatorBank
+
+        ecfg = EASIConfig(n_components=2, n_features=4, mu=3e-3)
+        ocfg = SMBGDConfig(batch_size=16, mu=3e-3, beta=0.9, gamma=0.5)
+        return SeparationService(
+            SeparatorBank(ecfg, ocfg, n_streams=1),
+            seed=0,
+            policy=ConvergencePolicy(
+                threshold=0.025, patience=5, min_ticks=50, ema=0.9
+            ),
+            drift_policy=DriftPolicy(
+                retrigger=0.03, patience=2, ema=0.8, cooldown=3,
+                mode="boost", boost=4.0, boost_ticks=60,
+            ),
+            # tenant "suspended" has quota 0: its sessions ride the queue
+            # (through the checkpoint) without ever contending for the slot
+            scheduler=PriorityScheduler(max_queue=4, quotas={"suspended": 0}),
+        )
+
+    def _source(self):
+        from repro.data.pipeline import MixedSignals
+        from repro.data.sources import SyntheticSource
+
+        pipe = MixedSignals(m=4, n=2, batch=16, seed=0, drift_rate=1.2 / 80)
+        return SyntheticSource(pipe, drift_start=80, drift_stop=85)
+
+    def test_mid_drift_roundtrip_resumes_exact_trajectory(self, tmp_path):
+        svc = self._svc()
+        src = svc_src = self._source()
+        svc.admit("u", source=src, tenant="acme", priority=5.0)
+        # rides the queue through the ckpt (quota-gated, so "u" stays hot)
+        svc.admit("waiting", tenant="suspended", priority=1.0)
+        # serve through convergence → hot → drift fires → μ boost engaged
+        for _ in range(95):
+            svc.run_tick()
+        assert svc.drift_events and "u" in svc._boost_left  # mid-re-adaptation
+        boost_left_at_save = dict(svc._boost_left)
+        ckpt = Checkpointer(tmp_path)
+        svc.save(ckpt, step=7)
+        snap = json.loads(json.dumps(svc.lifecycle))  # must survive JSON
+
+        svc2 = self._svc()
+        got = svc2.restore(ckpt, lifecycle=snap)
+        assert got == 7
+        # scheduler state: queue order AND metadata resumed
+        assert svc2.queued == ("waiting",)
+        assert svc2.scheduler.meta_of("waiting").priority == 1.0
+        # watchdog state: boost countdown + μ row resumed exactly
+        assert svc2._boost_left == boost_left_at_save
+        np.testing.assert_array_equal(svc2._mu_scale, svc._mu_scale)
+        # source re-binds and seeks to the recorded cursor
+        src2 = self._source()
+        svc2.bind_source("u", src2)
+        assert src2.position == svc_src.position
+        # both services now walk the identical trajectory (boost expiry and
+        # re-convergence included)
+        for _ in range(120):
+            o1, o2 = svc.run_tick(), svc2.run_tick()
+            for sid in o1:
+                np.testing.assert_allclose(
+                    np.asarray(o1[sid]), np.asarray(o2[sid]), rtol=1e-6, atol=1e-7
+                )
+        assert svc.status("u") == svc2.status("u") == "converged"
+        assert svc2._boost_left == svc._boost_left == {}
+        np.testing.assert_array_equal(svc2._mu_scale, svc._mu_scale)
+
+    def test_hot_monitor_roundtrips(self, tmp_path):
+        svc = self._svc()
+        svc.admit("u", source=self._source())
+        for _ in range(70):
+            svc.run_tick()
+        assert svc.status("u") == "converged"  # hot under drift watch
+        ckpt = Checkpointer(tmp_path)
+        svc.save(ckpt, step=1)
+        snap = json.loads(json.dumps(svc.lifecycle))
+        assert snap["hot"]["u"]["seen"] > 0
+
+        svc2 = self._svc()
+        svc2.restore(ckpt, lifecycle=snap)
+        assert svc2.status("u") == "converged"
+        assert dataclasses.asdict(svc2._hot["u"]) == snap["hot"]["u"]
+
+    def test_restore_rejects_bad_mu_scale(self, tmp_path):
+        svc = self._svc()
+        svc.admit("u")
+        ckpt = Checkpointer(tmp_path)
+        svc.save(ckpt, step=0)
+        svc2 = self._svc()
+        with pytest.raises(ValueError, match="mu_scale"):
+            svc2.restore(
+                ckpt,
+                lifecycle={"sessions": {"u": 0}, "mu_scale": [1.0, 1.0, 1.0]},
+            )
+
+    def test_restore_rejects_drift_state_without_drift_policy(self, tmp_path):
+        """A snapshot carrying hot/boost/μ state must not restore into a
+        service that cannot run it (it would crash or silently drift from
+        the original trajectory)."""
+        from repro.core import EASIConfig, SMBGDConfig
+        from repro.serve import ConvergencePolicy, SeparationService
+        from repro.stream import SeparatorBank
+
+        svc = self._svc()
+        svc.admit("u", source=self._source())
+        for _ in range(95):  # through convergence → hot → boost engaged
+            svc.run_tick()
+        ckpt = Checkpointer(tmp_path)
+        svc.save(ckpt, step=2)
+        snap = json.loads(json.dumps(svc.lifecycle))
+        assert snap["boost"] or snap["hot"]  # the snapshot carries drift state
+
+        ecfg = EASIConfig(n_components=2, n_features=4, mu=3e-3)
+        ocfg = SMBGDConfig(batch_size=16, mu=3e-3, beta=0.9, gamma=0.5)
+        plain = SeparationService(
+            SeparatorBank(ecfg, ocfg, n_streams=1),
+            seed=0,
+            policy=ConvergencePolicy(threshold=0.025, patience=5, min_ticks=50),
+        )
+        with pytest.raises(ValueError, match="drift"):
+            plain.restore(ckpt, lifecycle=snap)
+        # dropping the watch state restores fine (arrays are still valid)
+        snap2 = dict(snap, hot={}, boost={}, mu_scale=None)
+        plain.restore(ckpt, lifecycle=snap2)
+        assert plain.sessions == svc.sessions
 
 
 class TestElasticRestore:

@@ -112,3 +112,67 @@ class TestSignalBank:
         S = signals.source_bank(jax.random.PRNGKey(4), 2, 100)
         X = signals.mix_nonstationary(At, S)
         assert X.shape == (100, 4)
+
+
+class TestDriftingMixing:
+    """``drifting_mixing_matrix``/``mix_nonstationary``: rotation-rate
+    correctness and determinism — the ground truth the drift pipeline's
+    watchdog is measured against."""
+
+    def test_rotation_rate_is_exact(self):
+        """A(t) must equal R(rate·t)·A(0) — rotation by exactly ``rate``
+        radians per step in the (0, 1) plane."""
+        rate, T = 3e-3, 200
+        At = np.asarray(
+            signals.drifting_mixing_matrix(jax.random.PRNGKey(0), 4, 2, T, rate=rate)
+        )
+        for t in (1, 57, T - 1):
+            theta = rate * t
+            R = np.eye(4, dtype=np.float32)
+            R[0, 0] = R[1, 1] = np.cos(theta)
+            R[0, 1], R[1, 0] = -np.sin(theta), np.sin(theta)
+            np.testing.assert_allclose(At[t], R @ At[0], rtol=1e-4, atol=1e-5)
+
+    def test_rotation_preserves_conditioning(self):
+        """Rotations are orthogonal: singular values of A(t) never change —
+        the drifting problem stays exactly as solvable as the original."""
+        At = np.asarray(
+            signals.drifting_mixing_matrix(jax.random.PRNGKey(1), 4, 2, 300, rate=5e-3)
+        )
+        sv0 = np.linalg.svd(At[0], compute_uv=False)
+        svT = np.linalg.svd(At[-1], compute_uv=False)
+        np.testing.assert_allclose(sv0, svT, rtol=1e-4)
+
+    def test_zero_rate_is_stationary(self):
+        At = np.asarray(
+            signals.drifting_mixing_matrix(jax.random.PRNGKey(2), 4, 2, 50, rate=0.0)
+        )
+        np.testing.assert_allclose(At, np.broadcast_to(At[0], At.shape), atol=1e-7)
+
+    def test_deterministic_per_seed_distinct_across_seeds(self):
+        a1 = np.asarray(signals.drifting_mixing_matrix(jax.random.PRNGKey(7), 4, 2, 40))
+        a2 = np.asarray(signals.drifting_mixing_matrix(jax.random.PRNGKey(7), 4, 2, 40))
+        b = np.asarray(signals.drifting_mixing_matrix(jax.random.PRNGKey(8), 4, 2, 40))
+        np.testing.assert_array_equal(a1, a2)
+        assert np.abs(a1 - b).max() > 1e-3
+
+    def test_mix_nonstationary_matches_per_step_matmul(self):
+        key = jax.random.PRNGKey(3)
+        At = signals.drifting_mixing_matrix(key, 4, 2, 30, rate=1e-2)
+        S = signals.source_bank(jax.random.PRNGKey(4), 2, 30)
+        X = np.asarray(signals.mix_nonstationary(At, S))
+        expected = np.stack(
+            [np.asarray(At[t]) @ np.asarray(S[t]) for t in range(30)]
+        )
+        np.testing.assert_allclose(X, expected, rtol=1e-5, atol=1e-6)
+
+    def test_mix_nonstationary_constant_equals_stationary_mix(self):
+        A = signals.random_mixing_matrix(jax.random.PRNGKey(5), 4, 2)
+        S = signals.source_bank(jax.random.PRNGKey(6), 2, 25)
+        At = jnp.broadcast_to(A, (25, 4, 2))
+        np.testing.assert_allclose(
+            np.asarray(signals.mix_nonstationary(At, S)),
+            np.asarray(signals.mix(A, S)),
+            rtol=1e-5,
+            atol=1e-6,
+        )

@@ -1,0 +1,457 @@
+"""Drift watchdog: detection, μ boost, park/probe/re-admit, and the
+end-to-end converge → drift → re-adapt → re-converge regression.
+
+Threshold calibration (seed 0, jax CPU, μ=3e-3, P=16): the converged conv
+statistic jitters around a ≈0.017 mean (EMA-0.8 never above 0.024 over 250
+ticks), while an abrupt 1.2 rad mixing rotation lifts the EMA past 0.032 —
+so ``ConvergencePolicy(threshold=0.025)`` converges and
+``DriftPolicy(retrigger=0.03)`` separates drift from jitter with margin on
+both sides.  The checked-in Amari bars ride the same measurement: ≈0.01–0.03
+at convergence, so 0.15 only trips on real regressions."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EASIConfig, SMBGDConfig, amari_index, ema_update, global_system
+from repro.data.pipeline import MixedSignals
+from repro.data.sources import ReplaySource, SourceExhausted, SyntheticSource
+from repro.serve import (
+    ConvergencePolicy,
+    DriftMonitor,
+    DriftPolicy,
+    SeparationService,
+)
+from repro.stream import SeparatorBank
+
+P = 16
+# calibrated against the measured conv floor — see module docstring
+CONV_POLICY = ConvergencePolicy(threshold=0.025, patience=5, min_ticks=50, ema=0.9)
+DRIFT_POLICY = DriftPolicy(
+    retrigger=0.03, patience=2, ema=0.8, cooldown=3, boost=4.0, boost_ticks=40,
+    probe_every=5,
+)
+# checked-in e2e bars: converged Amari ≈0.01–0.03 in calibration runs
+AMARI_CONVERGED = 0.15
+JUMP_TICK = 400
+
+
+def _svc(mode="boost", S=2, fused=False, max_queue=4, **kw):
+    ecfg = EASIConfig(n_components=2, n_features=4, mu=3e-3)
+    ocfg = SMBGDConfig(batch_size=P, mu=3e-3, beta=0.9, gamma=0.5)
+    return SeparationService(
+        SeparatorBank(ecfg, ocfg, n_streams=S, fused=fused),
+        seed=0,
+        policy=CONV_POLICY,
+        drift_policy=dataclasses.replace(DRIFT_POLICY, mode=mode),
+        max_queue=max_queue,
+        **kw,
+    )
+
+
+def _jump_source(seed=0, jump_tick=JUMP_TICK):
+    """Stationary mixing, then an abrupt ≈1.2 rad rotation over 5 blocks at
+    ``jump_tick``, then stationary again — the distribution-shift drill."""
+    pipe = MixedSignals(m=4, n=2, batch=P, seed=seed, drift_rate=1.2 / (5 * P))
+    return SyntheticSource(pipe, drift_start=jump_tick, drift_stop=jump_tick + 5)
+
+
+def _amari(svc, sid, src):
+    B = svc.bank.slot_state(svc.state, svc.sessions[sid]).B
+    return float(amari_index(global_system(B, jnp.asarray(src.true_mixing()))))
+
+
+class TestDriftMonitor:
+    def test_ema_matches_metrics_ema_update(self):
+        pol = DriftPolicy(retrigger=0.5, patience=1, ema=0.7, cooldown=0)
+        mon = DriftMonitor()
+        smoothed = jnp.asarray(float("inf"))
+        for x in (0.1, 0.4, 0.9, 0.2):
+            mon.update(x, pol)
+            smoothed = ema_update(smoothed, x, pol.ema)
+            np.testing.assert_allclose(mon.stat, float(smoothed), rtol=1e-6)
+
+    def test_cooldown_then_patience(self):
+        pol = DriftPolicy(retrigger=0.1, patience=2, cooldown=2)
+        mon = DriftMonitor()
+        # above threshold from the start — cooldown must absorb the first 2
+        assert mon.update(0.5, pol) is False  # cooldown 1
+        assert mon.update(0.5, pol) is False  # cooldown 2
+        assert mon.update(0.5, pol) is False  # patience 1
+        assert mon.update(0.5, pol) is True  # patience 2 → fire
+        # a dip resets the consecutive counter
+        mon2 = DriftMonitor(seen=10)
+        assert mon2.update(0.5, pol) is False
+        assert mon2.update(0.01, pol) is False
+        assert mon2.update(0.5, pol) is False
+        assert mon2.update(0.5, pol) is True
+
+    def test_policy_validation(self):
+        for kw in (
+            dict(mode="explode"),
+            dict(patience=0),
+            dict(ema=1.0),
+            dict(retrigger=0.0),
+            dict(boost=0.0),
+            dict(probe_every=0),
+        ):
+            with pytest.raises(ValueError):
+                DriftPolicy(**kw)
+
+    def test_drift_policy_requires_convergence_policy(self):
+        ecfg = EASIConfig(n_components=2, n_features=4)
+        with pytest.raises(ValueError, match="ConvergencePolicy"):
+            SeparationService(
+                SeparatorBank(ecfg, SMBGDConfig(batch_size=P), n_streams=1),
+                drift_policy=DriftPolicy(),
+            )
+
+
+class TestBoostLifecycle:
+    def test_converged_session_stays_hot_and_served(self):
+        svc = _svc("boost")
+        svc.admit("u", source=_jump_source())
+        for _ in range(80):
+            svc.run_tick()
+        assert svc.status("u") == "converged"  # hot, not evicted
+        assert svc.metrics["n_hot"] == 1 and svc.metrics["n_evicted"] == 0
+        ticks_before = svc.session_stats("u")["ticks"]
+        svc.run_tick()
+        assert svc.session_stats("u")["ticks"] == ticks_before + 1  # still fed
+
+    def test_drift_fires_boost_and_reconverges(self):
+        events = []
+        svc = _svc("boost", on_drift=lambda sid, ev: events.append((sid, ev)))
+        src = _jump_source()
+        svc.admit("u", source=src)
+        for _ in range(JUMP_TICK - 1):
+            svc.run_tick()
+        assert svc.status("u") == "converged"
+        pi_pre = _amari(svc, "u", src)
+        assert pi_pre < AMARI_CONVERGED
+        fired_at = None
+        for t in range(JUMP_TICK - 1, JUMP_TICK + 500):
+            svc.run_tick()
+            if events and fired_at is None:
+                fired_at = t
+                slot = svc.sessions["u"]
+                assert svc._mu_scale[slot] == DRIFT_POLICY.boost  # μ boosted
+                assert svc.status("u") == "active"  # re-earning convergence
+        assert fired_at is not None and fired_at < JUMP_TICK + 40
+        (sid, ev), = events[:1]
+        assert sid == "u" and ev.action == "boost" and ev.stat > DRIFT_POLICY.retrigger
+        # boost expired and the session re-converged on the NEW mixing
+        assert svc.status("u") == "converged"
+        assert svc._mu_scale[svc.sessions["u"]] == 1.0
+        assert _amari(svc, "u", src) < AMARI_CONVERGED
+        assert svc.metrics["n_drift_events"] == len(events) == 1
+
+    def test_hot_session_preempted_by_new_admission(self):
+        svc = _svc("boost", S=1)
+        svc.admit("u", source=_jump_source())
+        for _ in range(80):
+            svc.run_tick()
+        assert svc.status("u") == "converged"
+        slot = svc.admit("newcomer")
+        assert slot is not None  # hot session preempted, not queued
+        assert svc.status("u") == "finished"
+        assert svc.finished["u"].reason == "preempted"
+
+    def test_capacity_pressure_beats_warmth(self):
+        """With sessions queued, a converging session evicts instead of going
+        hot — warmth never starves the queue."""
+        svc = _svc("boost", S=1, max_queue=2)
+        svc.admit("u", source=_jump_source())
+        svc.admit("waiting")
+        for _ in range(80):
+            svc.run_tick()
+            if svc.status("u") == "finished":
+                break
+        assert svc.status("u") == "finished"
+        assert svc.finished["u"].reason == "converged"
+        assert svc.status("waiting") == "active"
+
+    @pytest.mark.parametrize("fused", [False, True])
+    def test_boost_changes_trajectory_no_retrace(self, fused):
+        """The μ boost must actually reach the kernel: after a forced boost,
+        the boosted service's state diverges from an unboosted clone within
+        one tick (per-stream hyperparam rows as traced operands)."""
+        svc_a = _svc("boost", fused=fused)
+        svc_b = _svc("boost", fused=fused)
+        src_a, src_b = _jump_source(), _jump_source()
+        svc_a.admit("u", source=src_a)
+        svc_b.admit("u", source=src_b)
+        for _ in range(10):
+            svc_a.run_tick()
+            svc_b.run_tick()
+        # force a boost on A only (white-box: what _fire_boost applies)
+        slot = svc_a.sessions["u"]
+        svc_a._mu_scale[slot] = 4.0
+        svc_a._boost_left["u"] = 5
+        svc_a.run_tick()
+        svc_b.run_tick()
+        Ba = np.asarray(svc_a.bank.slot_state(svc_a.state, slot).B)
+        Bb = np.asarray(svc_b.bank.slot_state(svc_b.state, svc_b.sessions["u"]).B)
+        assert not np.allclose(Ba, Bb)
+
+
+class TestWatchdogEdgeCases:
+    """Regression coverage for the review findings: boost cleanup on
+    re-convergence, preemption eligibility, and backpressure during
+    re-admission."""
+
+    def test_boost_cleared_when_reconverging_hot(self):
+        """A session that re-converges to HOT while its boost is still
+        counting down must return to base μ — the boost must not ride the
+        hot state (or lifecycle snapshots) forever."""
+        svc = _svc("boost")
+        svc.drift_policy = dataclasses.replace(
+            DRIFT_POLICY, boost=1.2, boost_ticks=10_000
+        )
+        src = _jump_source()
+        svc.admit("u", source=src)
+        for _ in range(10):
+            svc.run_tick()
+        slot = svc.sessions["u"]
+        # white-box: engage a mild boost that cannot expire by countdown
+        svc._mu_scale[slot] = 1.2
+        svc._boost_left["u"] = 10_000
+        svc._monitors["u"] = type(svc._monitors["u"])()
+        for _ in range(120):
+            svc.run_tick()
+            if svc.status("u") == "converged":
+                break
+        assert svc.status("u") == "converged"
+        assert "u" not in svc._boost_left
+        assert svc._mu_scale[slot] == 1.0
+        assert svc.lifecycle["boost"] == {}
+
+    def test_gated_admission_does_not_preempt_hot(self):
+        """A quota-gated admission cannot take the slot, so it must not cost
+        a hot session its warmth (it queues; the separator stays warm)."""
+        from repro.serve import PriorityScheduler
+
+        ecfg = EASIConfig(n_components=2, n_features=4, mu=3e-3)
+        ocfg = SMBGDConfig(batch_size=P, mu=3e-3, beta=0.9, gamma=0.5)
+        svc = SeparationService(
+            SeparatorBank(ecfg, ocfg, n_streams=1),
+            seed=0,
+            policy=CONV_POLICY,
+            drift_policy=DRIFT_POLICY,
+            scheduler=PriorityScheduler(max_queue=2, quotas={"acme": 0}),
+        )
+        svc.admit("warm", source=_jump_source())
+        for _ in range(80):
+            svc.run_tick()
+        assert svc.status("warm") == "converged"  # hot
+        assert svc.admit("gated", tenant="acme") is None  # queued, not placed
+        assert svc.status("warm") == "converged"  # still warm: no preemption
+        assert svc.n_free == 0
+        # an eligible admission DOES preempt (warmth yields to usable work)
+        assert svc.admit("eligible") is not None
+        assert svc.finished["warm"].reason == "preempted"
+
+    def test_probe_seeks_to_live_edge_of_finite_source(self):
+        """Near the end of a finite feed the probe clamps its skip to the
+        last full block — it must measure the present, not a window from
+        (probe_every−1) ticks ago."""
+        from repro.core import smbgd as smbgd_lib
+        from repro.serve import DriftMonitor, ParkedSession, SessionMeta
+        from repro.serve.engine import EvictionRecord, SessionStats
+
+        svc = _svc("readmit")
+        X = np.zeros((40, 4), np.float32)  # 2.5 blocks of P=16
+        src = ReplaySource(X)
+        frozen = smbgd_lib.init_state(svc.bank.easi, jax.random.PRNGKey(0))
+        svc._parked["p"] = ParkedSession(
+            record=EvictionRecord(
+                state=frozen, stats=SessionStats(admitted_at=0.0),
+                monitor=None, reason="converged", tick=0,
+            ),
+            source=src, monitor=DriftMonitor(), meta=SessionMeta(),
+        )
+        for _ in range(DRIFT_POLICY.probe_every):
+            svc._probe_parked()
+        # skip would be 64 > 40−16: clamped to 24, probed [24:40] — the edge
+        assert src.position == 40
+
+    def test_readmit_backs_off_under_contention(self):
+        """A drifted parked session whose re-admission would only QUEUE stays
+        parked instead (a queued warm-start would be un-snapshotable pending
+        state) and re-admits warm once a slot actually frees."""
+        svc = _svc("readmit", S=1, max_queue=2)
+        src = _jump_source()
+        svc.admit("u", source=src)
+        for _ in range(80):
+            svc.run_tick()
+        assert svc.status("u") == "parked"
+        svc.admit("blocker")  # holds the only slot; no source → never served
+        for _ in range(JUMP_TICK):
+            svc.run_tick()
+        # drift long since visible to the probes, but no slot to take
+        assert svc.status("u") == "parked"
+        assert svc.n_queued == 0 and not svc.drift_events
+        svc.evict("blocker")
+        for _ in range(3 * DRIFT_POLICY.probe_every):
+            svc.run_tick()
+        assert svc.status("u") == "active"  # warm re-admission went through
+        assert [e.action for e in svc.drift_events] == ["readmit"]
+        assert int(svc.bank.slot_state(svc.state, svc.sessions["u"]).step) > 0
+
+
+class TestReadmitLifecycle:
+    def test_converged_session_parks_with_its_source(self):
+        svc = _svc("readmit")
+        svc.admit("u", source=_jump_source())
+        for _ in range(80):
+            svc.run_tick()
+        assert svc.status("u") == "parked"
+        assert svc.metrics["n_parked"] == 1
+        assert svc.n_free == 2  # the slot was really freed
+        assert "u" not in svc.finished  # parked ≠ finished
+
+    def test_probe_detects_drift_and_readmits_warm(self):
+        events = []
+        svc = _svc("readmit", on_drift=lambda sid, ev: events.append(ev))
+        src = _jump_source()
+        svc.admit("u", source=src)
+        parked_state = None
+        readmit_at = None
+        for t in range(JUMP_TICK + 120):
+            svc.run_tick()
+            if svc.status("u") == "parked" and parked_state is None:
+                parked_state = svc.parked["u"].record.state
+            if svc.status("u") == "active" and readmit_at is None and parked_state is not None:
+                readmit_at = t
+                # warm start: the slot carries the frozen separator onward,
+                # step counter included (no γ re-gate)
+                st = svc.bank.slot_state(svc.state, svc.sessions["u"])
+                assert int(st.step) > 0
+        assert parked_state is not None
+        assert readmit_at is not None and readmit_at >= JUMP_TICK
+        assert [e.action for e in events] == ["readmit"]
+        # probes ran at service time: the source skipped ahead while parked
+        assert src.position >= JUMP_TICK * P
+
+    def test_full_cycle_reconverges_and_reparks(self):
+        # Amari confirmation (against the source's LIVE mixing — no
+        # set_mixing call) vetoes parking until the session truly separates,
+        # so the re-parked separator is genuinely re-converged
+        svc = _svc("readmit")
+        svc.policy = dataclasses.replace(CONV_POLICY, amari_threshold=0.1)
+        src = _jump_source()
+        svc.admit("u", source=src)
+        for _ in range(JUMP_TICK + 400):
+            svc.run_tick()
+        # drift → warm re-admission → re-convergence → parked again
+        assert svc.status("u") == "parked"
+        assert svc.metrics["n_drift_events"] == 1
+        B = svc.parked["u"].record.state.B
+        pi = float(amari_index(global_system(B, jnp.asarray(src.true_mixing()))))
+        assert pi < AMARI_CONVERGED
+
+    def test_exhausted_parked_source_finishes(self):
+        svc = _svc("readmit")
+        # enough for convergence (~55 ticks) plus a few probes, then dry
+        X = np.asarray(
+            jax.random.normal(jax.random.PRNGKey(0), (70 * P, 4)), np.float32
+        )
+        svc.admit("u", source=ReplaySource(X))
+        for _ in range(200):
+            svc.run_tick()
+            if svc.status("u") == "finished":
+                break
+        assert svc.status("u") == "finished"
+
+    def test_manual_evict_unparks(self):
+        svc = _svc("readmit")
+        svc.admit("u", source=_jump_source())
+        for _ in range(80):
+            svc.run_tick()
+        assert svc.status("u") == "parked"
+        final = svc.evict("u")
+        assert final.B.shape == (2, 4)
+        assert svc.status("u") == "finished"
+        with pytest.raises(ValueError, match="parked"):
+            # (a fresh park, then admitting the parked id is refused)
+            svc2 = _svc("readmit")
+            svc2.admit("u", source=_jump_source())
+            for _ in range(80):
+                svc2.run_tick()
+            svc2.admit("u")
+
+
+class TestRunTickIngestion:
+    """The pull loop itself (independent of drift)."""
+
+    def test_pull_matches_push(self):
+        """run_tick over a bound source == step() fed the same blocks."""
+        ecfg = EASIConfig(n_components=2, n_features=4, mu=2e-3)
+        ocfg = SMBGDConfig(batch_size=P, mu=2e-3, beta=0.9, gamma=0.5)
+        pull = SeparationService(SeparatorBank(ecfg, ocfg, n_streams=2), seed=0)
+        push = SeparationService(SeparatorBank(ecfg, ocfg, n_streams=2), seed=0)
+        pipe = MixedSignals(m=4, n=2, batch=P, seed=3)
+        pull.admit("u", source=SyntheticSource(pipe))
+        push.admit("u")
+        feed = SyntheticSource(pipe)
+        for _ in range(5):
+            o_pull = pull.run_tick()
+            o_push = push.step({"u": feed.next_block(P).T})
+            np.testing.assert_allclose(
+                np.asarray(o_pull["u"]), np.asarray(o_push["u"]), rtol=1e-6
+            )
+
+    def test_sourceless_sessions_skipped(self):
+        svc = _svc("boost")
+        svc.admit("manual")  # no source: push-mode session
+        assert svc.run_tick() == {}
+        assert svc.session_stats("manual")["ticks"] == 0
+
+    def test_exhausted_source_evicts_with_reason(self):
+        svc = _svc("boost")
+        X = np.asarray(jax.random.normal(jax.random.PRNGKey(1), (3 * P, 4)))
+        svc.admit("u", source=ReplaySource(X))
+        for _ in range(4):
+            svc.run_tick()
+        assert svc.status("u") == "finished"
+        assert svc.finished["u"].reason == "exhausted"
+        assert svc.finished["u"].stats.ticks == 3
+
+    def test_wrong_channel_count_rejected(self):
+        svc = _svc("boost")
+        svc.admit("u", source=ReplaySource(np.zeros((64, 3), np.float32)))
+        with pytest.raises(ValueError, match="block shape"):
+            svc.run_tick()
+
+    def test_bind_source_after_admit(self):
+        svc = _svc("boost")
+        svc.admit("u")
+        svc.bind_source("u", ReplaySource(np.zeros((P, 4), np.float32)))
+        out = svc.run_tick()
+        assert out["u"].shape == (P, 2)
+        with pytest.raises(KeyError):
+            svc.bind_source("ghost", ReplaySource(np.zeros((P, 4), np.float32)))
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_e2e_drift_regression(fused):
+    """The acceptance path, on both the vmap bank and the megakernel: a
+    session served via run_tick converges under a stationary mixing, the
+    mixing jumps, the watchdog flags it (DriftEvent), the μ boost re-adapts
+    it, and it re-converges — final Amari within the checked-in threshold."""
+    svc = _svc("boost", fused=fused)
+    src = _jump_source()
+    svc.admit("u", source=src)
+    seen_converged = seen_drift = False
+    for _ in range(JUMP_TICK + 500):
+        svc.run_tick()
+        seen_converged = seen_converged or svc.status("u") == "converged"
+        seen_drift = seen_drift or bool(svc.drift_events)
+    assert seen_converged, "never converged pre-drift"
+    assert seen_drift, "watchdog never fired"
+    assert svc.drift_events[0].action == "boost"
+    assert svc.status("u") == "converged", "did not re-converge after drift"
+    pi = _amari(svc, "u", src)
+    assert pi < AMARI_CONVERGED, f"stale separator after drift: Amari {pi:.4f}"

@@ -328,6 +328,22 @@ class TestAdmissionQueue:
         svc.evict("a")
         assert svc.status("q2") == "active" and svc.n_free == 0
 
+    def test_step_rejects_queued_and_unknown_ids(self):
+        """The bugfix: a batch for a session with no slot must raise a
+        KeyError that names the id's actual state (queued vs unknown) —
+        never silently drop the data (mirrors the PR-3 ``evict`` fix)."""
+        svc = _mk_svc(S=1, max_queue=2)
+        svc.admit("active")
+        svc.admit("waiting")
+        with pytest.raises(KeyError, match="queued with no slot yet.*waiting"):
+            svc.step({"active": _batch(0), "waiting": _batch(1)})
+        with pytest.raises(KeyError, match="not active.*ghost"):
+            svc.step({"ghost": _batch(2)})
+        # the rejected tick touched nothing: the active session still serves
+        assert svc.session_stats("active")["ticks"] == 0
+        out = svc.step({"active": _batch(3)})
+        assert set(out) == {"active"}
+
     def test_evict_unknown_raises_keyerror_and_corrupts_nothing(self):
         """The bugfix: an unknown id must raise KeyError without touching the
         free list (previously .pop(...) raised but a later variant could have
@@ -342,6 +358,101 @@ class TestAdmissionQueue:
         svc.admit("b")
         out = svc.step({"a": _batch(0), "b": _batch(1)})
         assert set(out) == {"a", "b"}
+
+
+class TestSchedulers:
+    """Pluggable admission policy: priority + per-tenant quotas, EDF."""
+
+    def _svc(self, scheduler, S=2, **kw):
+        from repro.serve import SeparationService
+        from repro.stream import SeparatorBank
+
+        ecfg = EASIConfig(n_components=2, n_features=4, mu=2e-3)
+        ocfg = SMBGDConfig(batch_size=8, mu=2e-3, beta=0.9, gamma=0.5)
+        return SeparationService(
+            SeparatorBank(ecfg, ocfg, n_streams=S), seed=0,
+            scheduler=scheduler, **kw,
+        )
+
+    def test_priority_orders_backfill(self):
+        from repro.serve import PriorityScheduler
+
+        svc = self._svc(PriorityScheduler(max_queue=4), S=1)
+        svc.admit("running")
+        svc.admit("low", priority=1.0)
+        svc.admit("high", priority=9.0)
+        svc.admit("mid", priority=5.0)
+        assert svc.queued == ("high", "mid", "low")  # pop order, not FIFO
+        svc.evict("running")
+        assert svc.status("high") == "active"
+        svc.evict("high")
+        assert svc.status("mid") == "active"
+
+    def test_priority_fifo_within_level(self):
+        from repro.serve import PriorityScheduler
+
+        svc = self._svc(PriorityScheduler(max_queue=4), S=1)
+        svc.admit("running")
+        svc.admit("first", priority=3.0)
+        svc.admit("second", priority=3.0)
+        svc.evict("running")
+        assert svc.status("first") == "active"
+        assert svc.queued == ("second",)
+
+    def test_tenant_quota_gates_direct_admission_and_pop(self):
+        from repro.serve import PriorityScheduler
+
+        svc = self._svc(
+            PriorityScheduler(max_queue=4, quotas={"acme": 1}), S=3
+        )
+        assert svc.admit("a1", tenant="acme") is not None
+        # free slots exist, but acme is at quota → queued, not activated
+        assert svc.admit("a2", tenant="acme") is None
+        assert svc.status("a2") == "queued"
+        # another tenant sails through
+        assert svc.admit("b1", tenant="bravo") is not None
+        # a2 activates only when acme's own slot frees
+        svc.evict("b1")
+        assert svc.status("a2") == "queued"  # b's slot freed: still gated
+        svc.evict("a1")
+        assert svc.status("a2") == "active"
+
+    def test_deadline_scheduler_is_edf(self):
+        from repro.serve import DeadlineScheduler
+
+        svc = self._svc(DeadlineScheduler(max_queue=4), S=1)
+        svc.admit("running")
+        svc.admit("lax", deadline=90.0)
+        svc.admit("urgent", deadline=10.0)
+        svc.admit("whenever")  # no deadline: sorts last
+        assert svc.queued == ("urgent", "lax", "whenever")
+        svc.evict("running")
+        assert svc.status("urgent") == "active"
+
+    def test_scheduler_snapshot_roundtrip_preserves_meta(self):
+        from repro.serve import PriorityScheduler, SessionMeta
+
+        sched = PriorityScheduler(max_queue=4)
+        sched.push("a", SessionMeta(tenant="t", priority=2.0, order=0))
+        sched.push("b", SessionMeta(priority=7.0, order=1))
+        snap = sched.snapshot()
+        fresh = PriorityScheduler(max_queue=4)
+        fresh.load(snap)
+        assert fresh.ids() == ("b", "a")
+        assert fresh.meta_of("a").tenant == "t"
+        # PR-3 plain-sid lists still load (metadata defaults)
+        legacy = PriorityScheduler(max_queue=4)
+        legacy.load(["x", "y"])
+        assert legacy.ids() == ("x", "y")
+
+    def test_backpressure_still_raises_when_full(self):
+        from repro.serve import PriorityScheduler
+
+        svc = self._svc(PriorityScheduler(max_queue=1), S=1)
+        svc.admit("a")
+        svc.admit("b", priority=1.0)
+        with pytest.raises(RuntimeError, match="bank full"):
+            svc.admit("c", priority=99.0)  # priority buys order, not capacity
 
 
 class TestConvergenceLifecycle:
@@ -525,7 +636,9 @@ class TestConvergenceLifecycle:
         svc.step({"a": _batch(0), "b": _batch(1)})
         snap = svc.lifecycle
         assert snap["sessions"] == {"a": 0, "b": 1}
-        assert snap["queue"] == ["c"]
+        # queue entries carry scheduling metadata now ([sid, meta] pairs);
+        # restore() still also accepts the PR-3 plain-sid list format
+        assert [sid for sid, _meta in snap["queue"]] == ["c"]
         assert snap["monitors"]["a"]["ticks"] == 1
 
 

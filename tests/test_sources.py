@@ -1,0 +1,231 @@
+"""Signal sources: the pluggable feeds behind ``SeparationService.run_tick``.
+
+Covers the ``SignalSource`` protocol contract ((m, n_samples) channel-major
+blocks, exhaustion, cursors) and each adapter: ``SyntheticSource`` parity
+with ``MixedSignals``, drift windows, ``ReplaySource`` determinism/looping,
+``ChannelBankSource`` windowed + memory-mapped ``.npy`` reads."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.data.pipeline import MixedSignals
+from repro.data import signals
+from repro.data.sources import (
+    ChannelBankSource,
+    ReplaySource,
+    SignalSource,
+    SourceExhausted,
+    SyntheticSource,
+    true_mixing_of,
+)
+
+
+class TestSyntheticSource:
+    def _pipe(self, **kw):
+        base = dict(m=4, n=2, batch=8, seed=0)
+        base.update(kw)
+        return MixedSignals(**base)
+
+    def test_blocks_are_channel_major_and_deterministic(self):
+        a = SyntheticSource(self._pipe())
+        b = SyntheticSource(self._pipe())
+        x1, x2 = a.next_block(8), a.next_block(8)
+        assert x1.shape == (4, 8) and x1.dtype == np.float32
+        assert not np.array_equal(x1, x2)  # the cursor advanced
+        np.testing.assert_array_equal(b.next_block(8), x1)  # replayable
+        np.testing.assert_array_equal(b.next_block(8), x2)
+
+    def test_matches_mixed_signals_stream(self):
+        """With no drift window, blocks are exactly the pipe's per-stream
+        mini-batches (the adapter adds a cursor, not new data)."""
+        pipe = self._pipe(streams=3, drift_rate=2e-4)
+        src = SyntheticSource(pipe, stream=1)
+        for step in range(4):
+            expected = np.asarray(pipe.batch_for_step(step))[1]  # (P, m)
+            np.testing.assert_allclose(
+                src.next_block(8), expected.T, rtol=1e-6, atol=1e-6
+            )
+        np.testing.assert_allclose(
+            np.asarray(src.true_mixing()),
+            np.asarray(pipe.mixing_at(4, stream=1)),
+            rtol=1e-6,
+            atol=1e-6,
+        )
+
+    def test_multi_stream_pipe_requires_stream(self):
+        with pytest.raises(ValueError, match="stream"):
+            SyntheticSource(self._pipe(streams=2))
+
+    def test_wrong_block_size_rejected(self):
+        src = SyntheticSource(self._pipe(batch=8))
+        with pytest.raises(ValueError, match="fixed blocks"):
+            src.next_block(16)
+
+    def test_drift_window_holds_then_rotates_then_settles(self):
+        pipe = self._pipe(drift_rate=1e-2)
+        src = SyntheticSource(pipe, drift_start=3, drift_stop=6)
+        A_pre = src.true_mixing()
+        for _ in range(3):
+            src.next_block(8)
+        np.testing.assert_array_equal(src.true_mixing(), A_pre)  # pre-onset
+        for _ in range(3):
+            src.next_block(8)
+        A_post = src.true_mixing()
+        assert np.abs(A_post - A_pre).max() > 1e-3  # rotated
+        for _ in range(5):
+            src.next_block(8)
+        np.testing.assert_array_equal(src.true_mixing(), A_post)  # settled
+
+    def test_drift_stop_before_start_rejected(self):
+        with pytest.raises(ValueError, match="drift_stop"):
+            SyntheticSource(self._pipe(drift_rate=1e-3), drift_start=5, drift_stop=4)
+
+    def test_seek_resumes_exactly(self):
+        src = SyntheticSource(self._pipe())
+        blocks = [src.next_block(8) for _ in range(4)]
+        assert src.position == 32
+        src.seek(16)
+        np.testing.assert_array_equal(src.next_block(8), blocks[2])
+        with pytest.raises(ValueError, match="multiple"):
+            src.seek(13)
+
+    def test_protocol_conformance(self):
+        src = SyntheticSource(self._pipe())
+        assert isinstance(src, SignalSource)
+        assert true_mixing_of(src).shape == (4, 2)
+
+
+class TestReplaySource:
+    def test_sequential_blocks_then_exhausted(self):
+        X = np.arange(20, dtype=np.float32).reshape(10, 2)
+        src = ReplaySource(X)
+        b1 = src.next_block(4)
+        assert b1.shape == (2, 4)
+        np.testing.assert_array_equal(b1, X[:4].T)
+        np.testing.assert_array_equal(src.next_block(4), X[4:8].T)
+        with pytest.raises(SourceExhausted):
+            src.next_block(4)  # only 2 samples left
+        src.reset()
+        np.testing.assert_array_equal(src.next_block(4), X[:4].T)
+
+    def test_loop_wraps(self):
+        X = np.arange(12, dtype=np.float32).reshape(6, 2)
+        src = ReplaySource(X, loop=True)
+        for _ in range(3):
+            src.next_block(4)  # wraps without raising
+        assert src.position <= 6
+
+    def test_mixing_static_and_per_sample(self):
+        X = np.zeros((6, 4), np.float32)
+        A = np.eye(4)[:, :2]
+        assert true_mixing_of(ReplaySource(X)) is None
+        np.testing.assert_array_equal(
+            ReplaySource(X, mixing=A).true_mixing(), A
+        )
+        At = np.stack([A * (t + 1) for t in range(6)])
+        src = ReplaySource(X, mixing=At)
+        np.testing.assert_array_equal(src.true_mixing(), At[0])
+        src.next_block(3)
+        np.testing.assert_array_equal(src.true_mixing(), At[3])
+        with pytest.raises(ValueError, match="per-sample mixing"):
+            ReplaySource(X, mixing=At[:4])
+
+    def test_rejects_non_2d(self):
+        with pytest.raises(ValueError, match=r"\(T, m\)"):
+            ReplaySource(np.zeros((4, 2, 2)))
+
+    def test_blocks_are_copies(self):
+        """Serving mutates staging buffers; replay blocks must be detached."""
+        X = np.zeros((8, 2), np.float32)
+        src = ReplaySource(X)
+        blk = src.next_block(4)
+        blk[:] = 99.0
+        assert X.max() == 0.0
+
+
+class TestChannelBankSource:
+    def _recording(self, tmp_path, C=6, T=64, layout="ct"):
+        rng = np.random.default_rng(0)
+        data = rng.normal(size=(C, T)).astype(np.float32)
+        path = tmp_path / "rec.npy"
+        np.save(path, data if layout == "ct" else data.T)
+        return path, data
+
+    def test_windowed_reads_match_file(self, tmp_path):
+        path, data = self._recording(tmp_path)
+        src = ChannelBankSource(path, center=False)
+        np.testing.assert_allclose(src.next_block(16), data[:, :16])
+        np.testing.assert_allclose(src.next_block(16), data[:, 16:32])
+        assert src.position == 32 and src.n_channels == 6
+
+    def test_tc_layout_equivalent(self, tmp_path):
+        path_ct, data = self._recording(tmp_path)
+        np.save(tmp_path / "rec_tc.npy", np.load(path_ct).T)
+        a = ChannelBankSource(path_ct, center=False)
+        b = ChannelBankSource(tmp_path / "rec_tc.npy", layout="tc", center=False)
+        np.testing.assert_allclose(a.next_block(16), b.next_block(16))
+
+    def test_channel_selection(self, tmp_path):
+        path, data = self._recording(tmp_path)
+        src = ChannelBankSource(path, channels=[4, 0, 2], center=False)
+        assert src.n_channels == 3
+        np.testing.assert_allclose(src.next_block(8), data[[4, 0, 2], :8])
+        with pytest.raises(ValueError, match="channels"):
+            ChannelBankSource(path, channels=[99])
+
+    def test_mmap_vs_loaded_identical(self, tmp_path):
+        path, _ = self._recording(tmp_path)
+        a = ChannelBankSource(path, mmap=True)
+        b = ChannelBankSource(path, mmap=False)
+        np.testing.assert_array_equal(a.next_block(16), b.next_block(16))
+
+    def test_center_removes_window_mean(self, tmp_path):
+        path, _ = self._recording(tmp_path)
+        blk = ChannelBankSource(path, center=True).next_block(32)
+        np.testing.assert_allclose(blk.mean(axis=1), 0.0, atol=1e-6)
+
+    def test_exhaustion_and_loop(self, tmp_path):
+        path, _ = self._recording(tmp_path, T=40)
+        src = ChannelBankSource(path)
+        src.next_block(32)
+        with pytest.raises(SourceExhausted, match="drained"):
+            src.next_block(16)
+        looping = ChannelBankSource(path, loop=True)
+        for _ in range(5):
+            assert looping.next_block(16).shape == (6, 16)
+
+    def test_accepts_in_memory_array(self):
+        data = np.random.default_rng(1).normal(size=(3, 20)).astype(np.float32)
+        src = ChannelBankSource(data, center=False)
+        np.testing.assert_allclose(src.next_block(10), data[:, :10])
+
+    def test_layout_and_ndim_validated(self, tmp_path):
+        path, _ = self._recording(tmp_path)
+        with pytest.raises(ValueError, match="layout"):
+            ChannelBankSource(path, layout="cc")
+        with pytest.raises(ValueError, match="2-D"):
+            ChannelBankSource(np.zeros((2, 3, 4)))
+
+    def test_true_mixing_absent(self, tmp_path):
+        path, _ = self._recording(tmp_path)
+        assert true_mixing_of(ChannelBankSource(path)) is None
+
+
+class TestMixingAsSource:
+    """A ReplaySource built from ``drifting_mixing_matrix`` +
+    ``mix_nonstationary`` is the signals-module route to a ground-truth-aware
+    drifting feed (what the drift benchmark replays)."""
+
+    def test_replay_of_nonstationary_mix(self):
+        key = jax.random.PRNGKey(0)
+        At = signals.drifting_mixing_matrix(key, 4, 2, 64, rate=1e-3)
+        S = signals.source_bank(jax.random.PRNGKey(1), 2, 64)
+        X = signals.mix_nonstationary(At, S)
+        src = ReplaySource(np.asarray(X), mixing=np.asarray(At))
+        blk = src.next_block(16)
+        assert blk.shape == (4, 16)
+        np.testing.assert_allclose(blk, np.asarray(X[:16]).T, rtol=1e-6)
+        np.testing.assert_allclose(
+            src.true_mixing(), np.asarray(At[16]), rtol=1e-6
+        )
