@@ -30,6 +30,10 @@ trajectory is recorded run over run.
         churn: sessions arriving/converging/evicting through the
         SeparationService admission queue; effective samples/sec of
         convergence-aware auto-eviction vs a periodic-sweep baseline
+    PYTHONPATH=src python benchmarks/stream_throughput.py --probe      # batched
+        out-of-band drift probing: 256 parked sessions probed through the
+        transient probe bank (one launch per probe_batch) vs the PR-4
+        sequential one-dispatch-per-session loop
 """
 from __future__ import annotations
 
@@ -404,6 +408,113 @@ def drift_bench(
     return row
 
 
+def probe_bench(
+    n_parked: int = 256,
+    P: int = 16,
+    m: int = 4,
+    n: int = 2,
+    probe_batch: int = 64,
+    n_probe_ticks: int = 5,
+    reps: int = 2,
+) -> Dict[str, float]:
+    """Watchdog scaling: ``n_parked`` parked sessions under out-of-band drift
+    probe, batched vs sequential.
+
+      * ``batched``    — the transient-probe-bank engine: due sessions are
+        stacked ``probe_batch`` at a time and each chunk's virtual conv
+        statistics come out of ONE no-commit bank launch.
+      * ``sequential`` — the PR-4 loop (``DriftPolicy(probe_batch=0)``): one
+        jitted virtual-conv dispatch per parked session per probe tick.
+
+    The figure of merit is probe launches per tick (the dispatch-bound cost
+    that dominates watchdog reaction latency at serving scale) and the
+    measured per-tick wall clock of ``run_tick`` with every session parked.
+    """
+    from repro.core import smbgd as smbgd_lib
+    from repro.data.sources import ReplaySource
+    from repro.serve import (
+        ConvergencePolicy,
+        DriftMonitor,
+        DriftPolicy,
+        ParkedSession,
+        SeparationService,
+        SessionMeta,
+    )
+    from repro.serve.engine import EvictionRecord, SessionStats
+
+    ecfg = EASIConfig(n_components=n, n_features=m, mu=1e-3)
+    ocfg = SMBGDConfig(batch_size=P, mu=1e-3, beta=0.9, gamma=0.5)
+    key = jax.random.PRNGKey(0)
+    data = jax.device_get(
+        jax.random.normal(jax.random.fold_in(key, 1), (64 * P, m))
+    ).astype("float32")
+
+    def build(batch):
+        svc = SeparationService(
+            SeparatorBank(ecfg, ocfg, n_streams=8),
+            seed=0,
+            policy=ConvergencePolicy(),
+            # retrigger unreachable: a stable parked population (the probe
+            # cost itself is what's being measured, not readmission churn)
+            drift_policy=DriftPolicy(
+                mode="readmit", retrigger=1e9, probe_every=1, probe_batch=batch
+            ),
+        )
+        keys = jax.random.split(key, n_parked)
+        for i in range(n_parked):
+            st = smbgd_lib.init_state(ecfg, keys[i])._replace(
+                step=jnp.asarray(1, jnp.int32)
+            )
+            svc._parked[f"p{i}"] = ParkedSession(
+                record=EvictionRecord(
+                    state=st, stats=SessionStats(admitted_at=0.0),
+                    monitor=None, reason="converged", tick=0,
+                ),
+                source=ReplaySource(data, loop=True),
+                monitor=DriftMonitor(),
+                meta=SessionMeta(order=i),
+            )
+        return svc
+
+    def time_probes(batch):
+        svc = build(batch)
+        svc.run_tick()  # compile / warm the probe programs
+        launches0 = svc.metrics["n_probe_launches"]
+        t_best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            for _ in range(n_probe_ticks):
+                svc.run_tick()
+            t_best = min(t_best, (time.perf_counter() - t0) / n_probe_ticks)
+        launches_per_tick = (svc.metrics["n_probe_launches"] - launches0) / (
+            reps * n_probe_ticks
+        )
+        return t_best, launches_per_tick
+
+    t_seq, l_seq = time_probes(0)
+    t_bat, l_bat = time_probes(probe_batch)
+    row = {
+        "probe": True,
+        "n_parked": n_parked, "P": P, "m": m, "n": n,
+        "probe_batch": probe_batch,
+        "n_probe_ticks": n_probe_ticks,
+        "seq_tick_s": t_seq,
+        "batched_tick_s": t_bat,
+        "seq_launches_per_tick": l_seq,
+        "batched_launches_per_tick": l_bat,
+        "probe_launch_ratio": l_seq / max(l_bat, 1e-9),
+        "probe_speedup": t_seq / t_bat,
+    }
+    print(
+        f"probe,parked={n_parked},batch={probe_batch}: "
+        f"batched={t_bat*1e3:.2f}ms/tick ({l_bat:.0f} launches) vs "
+        f"sequential={t_seq*1e3:.2f}ms/tick ({l_seq:.0f} launches) "
+        f"→ {row['probe_launch_ratio']:.0f}x fewer launches, "
+        f"{row['probe_speedup']:.2f}x faster"
+    )
+    return row
+
+
 def smoke_check(baseline_path: Path) -> int:
     """CI regression gate: re-measure S=SMOKE_S quickly and fail (exit 1) when
     any tracked per-tick time is > SMOKE_FACTOR x the checked-in number."""
@@ -450,6 +561,35 @@ def smoke_check(baseline_path: Path) -> int:
         print(f"smoke: FAIL fused slower than PR-1 pallas path "
               f"({fresh['fused_over_bank_pallas']:.2f}x)")
         failed = True
+    # batched-probe gate: re-measure the parked-probe tick at the checked-in
+    # population and fail on a >2x regression of the batched engine (or on
+    # the launch economics collapsing below the 5x acceptance bar)
+    probe_base = next((r for r in baseline_rows if r.get("probe")), None)
+    if probe_base is not None:
+        fresh_probe = probe_bench(
+            n_parked=int(probe_base["n_parked"]),
+            P=int(probe_base["P"]),
+            m=int(probe_base["m"]),
+            n=int(probe_base["n"]),
+            probe_batch=int(probe_base["probe_batch"]),
+            n_probe_ticks=3,
+            reps=2,
+        )
+        ratio = fresh_probe["batched_tick_s"] / probe_base["batched_tick_s"]
+        verdict = "FAIL" if ratio > SMOKE_FACTOR else "ok"
+        if ratio > SMOKE_FACTOR:
+            failed = True
+        print(
+            f"smoke: batched_tick_s {fresh_probe['batched_tick_s']*1e3:.2f}ms "
+            f"vs baseline {probe_base['batched_tick_s']*1e3:.2f}ms "
+            f"({ratio:.2f}x) {verdict}"
+        )
+        if fresh_probe["probe_launch_ratio"] < 5.0:
+            print(
+                f"smoke: FAIL batched probe saves only "
+                f"{fresh_probe['probe_launch_ratio']:.1f}x launches (< 5x)"
+            )
+            failed = True
     return 1 if failed else 0
 
 
@@ -459,6 +599,7 @@ def run(
     autotune: bool = False,
     churn: bool = False,
     drift: bool = False,
+    probe: bool = False,
 ) -> List[Dict[str, float]]:
     """Sweep S; write the JSON artifact when ``out`` is given."""
     sweep = (1, 8, 64) if quick else (1, 8, 64, 512)
@@ -479,6 +620,8 @@ def run(
             drift_bench(S=2 if quick else 4,
                         jump_tick=250, n_ticks=450 if quick else 600)
         )
+    if probe:
+        rows.append(probe_bench(n_probe_ticks=3 if quick else 5))
     if out:
         Path(out).write_text(json.dumps(rows, indent=2) + "\n")
         print(f"wrote {out}")
@@ -496,21 +639,27 @@ def main() -> None:
                     help="lifecycle churn scenario: auto-eviction vs periodic sweep")
     ap.add_argument("--drift", action="store_true",
                     help="drift scenario: rotating mixing, watchdog on vs off")
+    ap.add_argument("--probe", action="store_true",
+                    help="parked-session probe scenario: batched vs sequential")
     ap.add_argument(
         "--out", default=str(DEFAULT_OUT), help="result file (JSON rows)"
     )
     args = ap.parse_args()
     if args.smoke:
         sys.exit(smoke_check(Path(args.out)))
-    if (args.churn or args.drift) and not (args.quick or args.autotune):
+    if (args.churn or args.drift or args.probe) and not (
+        args.quick or args.autotune
+    ):
         # standalone scenario run: print only, leave the sweep artifact alone
         if args.churn:
             churn_bench()
         if args.drift:
             drift_bench()
+        if args.probe:
+            probe_bench()
         return
     run(quick=args.quick, out=args.out, autotune=args.autotune,
-        churn=args.churn, drift=args.drift)
+        churn=args.churn, drift=args.drift, probe=args.probe)
 
 
 if __name__ == "__main__":

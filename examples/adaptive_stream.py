@@ -32,6 +32,15 @@ converged-hot session, fires a ``DriftEvent``, μ-boosts the stream through
 the bank's per-stream hyperparameter rows, and the separator re-converges on
 the new mixing — while the no-watchdog deployment would keep serving the
 stale separator.
+
+Probe knobs (``DriftPolicy(mode="readmit")``, the parked alternative to the
+hot watch used below): ``probe_every`` sets the out-of-band probe cadence in
+run_ticks, and ``probe_batch`` sets how many parked sessions share one
+no-commit probe-bank launch — at serving scale (thousands parked) the
+watchdog costs O(parked / probe_batch) dispatches per probe tick instead of
+O(parked); ``probe_batch=0`` falls back to the one-dispatch-per-session
+loop.  See ``stream_throughput.py --probe`` for the measured gap at 256
+parked sessions.
 """
 import sys
 from pathlib import Path
@@ -153,6 +162,10 @@ def run_drift_recording(n_ticks: int = 700, jump_tick: int = 300):
         SeparatorBank(ecfg, ocfg, n_streams=2),
         seed=0,
         policy=ConvergencePolicy(threshold=0.025, patience=5, min_ticks=50, ema=0.9),
+        # mode="boost" keeps the session hot in its slot; mode="readmit"
+        # would park it instead and probe the frozen separator out-of-band
+        # every `probe_every` ticks, `probe_batch` parked sessions per
+        # batched probe launch (the rack-scale watchdog configuration)
         drift_policy=DriftPolicy(
             retrigger=0.03, patience=2, ema=0.8, cooldown=3,
             mode="boost", boost=4.0, boost_ticks=40,

@@ -274,6 +274,115 @@ def _smbgd_step_bank_kernel(
         conv_out_ref[...] = jnp.where(active[:, :, 0], delta, conv_prev)
 
 
+def _smbgd_probe_bank_kernel(
+    x_ref,
+    w_ref,
+    b_ref,
+    h_ref,
+    step_ref,
+    gamma_hat_ref,
+    active_ref,
+    conv_ref,
+    conv_out_ref,
+    acc_ref,
+    *,
+    nonlin: str,
+    n_tiles: int,
+):
+    """Freeze-only probe variant of the megakernel: same ``(stream-blocks,
+    tiles)`` grid and the same per-tile math (Y-tile batch-matmul +
+    nonlinearity + weighted gradient fold), but the last tile computes ONLY
+    the convergence statistic the commit WOULD produce — ``‖Ĥ′B‖_F/‖B‖_F``
+    from the virtual ``Ĥ′ = γ̂Ĥ + S`` — and writes nothing else.  No ``Y``,
+    ``B'``, ``Ĥ'`` or ``step'`` ever reach HBM: the out-of-band drift probe
+    of thousands of parked (frozen) separators is one (S,)-float launch."""
+    i = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)  # (bs, bp, m)
+    b = b_ref[...].astype(jnp.float32)  # (bs, n, m)
+    y = jax.lax.dot_general(
+        x, b, (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )  # (bs, bp, n) — stays in VMEM; probes never publish Y
+    w = w_ref[...].astype(jnp.float32)  # (bs, bp, 1)
+    s_tile = _fold_tile_batched(y, w, nonlin)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = s_tile
+
+    @pl.when(i > 0)
+    def _acc():
+        acc_ref[...] += s_tile
+
+    @pl.when(i == n_tiles - 1)
+    def _probe():
+        step = step_ref[...]  # (bs, 1)
+        active = active_ref[...] != 0  # (bs, 1)
+        gamma_hat = jnp.where(step == 0, 0.0, gamma_hat_ref[...])[:, :, None]
+        h_new = gamma_hat * h_ref[...].astype(jnp.float32) + acc_ref[...]
+        db = jax.lax.dot_general(
+            h_new, b, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        )  # virtual ΔB = Ĥ′B (bs, n, m) — computed, never committed
+        num = jnp.sqrt(jnp.sum(db * db, axis=(1, 2)))  # (bs,)
+        den = jnp.sqrt(jnp.sum(b * b, axis=(1, 2)))
+        delta = (num / jnp.maximum(den, 1e-12))[:, None]  # (bs, 1)
+        conv_prev = conv_ref[...].astype(jnp.float32)
+        conv_out_ref[...] = jnp.where(active, delta, conv_prev)
+
+
+def smbgd_probe_bank_pallas(
+    X: jnp.ndarray,
+    W: jnp.ndarray,
+    B: jnp.ndarray,
+    H_hat: jnp.ndarray,
+    step: jnp.ndarray,
+    gamma_hat: jnp.ndarray,
+    active: jnp.ndarray,
+    conv: jnp.ndarray,
+    *,
+    nonlinearity: str = "cubic",
+    block_p: int = 512,
+    block_s: int = 1,
+    interpret: bool = True,
+):
+    """Batched virtual-conv probe: ONE launch over frozen bank state.
+
+    Same pre-padded persistent-layout contract as ``smbgd_step_bank_pallas``
+    but the only output is ``conv' (S, 1)`` — the per-stream statistic a
+    commit would have produced (``conv`` carried through for masked-out
+    streams).  The state operands are read-only: probing never mutates the
+    frozen separators.
+    """
+    S, P, m = X.shape
+    n = B.shape[1]
+    assert P % block_p == 0, (P, block_p)
+    assert S % block_s == 0, (S, block_s)
+    assert B.shape == (S, n, m) and H_hat.shape == (S, n, n)
+    n_tiles = P // block_p
+    kernel = functools.partial(
+        _smbgd_probe_bank_kernel, nonlin=nonlinearity, n_tiles=n_tiles
+    )
+    bs = block_s
+    return pl.pallas_call(
+        kernel,
+        grid=(S // bs, n_tiles),
+        in_specs=[
+            pl.BlockSpec((bs, block_p, m), lambda s, i: (s, i, 0)),
+            pl.BlockSpec((bs, block_p, 1), lambda s, i: (s, i, 0)),
+            pl.BlockSpec((bs, n, m), lambda s, i: (s, 0, 0)),
+            pl.BlockSpec((bs, n, n), lambda s, i: (s, 0, 0)),
+            pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
+            pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
+            pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
+            pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, 1), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bs, n, n), jnp.float32)],
+        interpret=interpret,
+    )(X, W, B, H_hat, step, gamma_hat, active, conv)
+
+
 def smbgd_step_bank_pallas(
     X: jnp.ndarray,
     W: jnp.ndarray,

@@ -12,6 +12,10 @@ Both entry points honour it:
     ``Y = X Bᵀ``, the weighted gradient sum, the SMBGD commit AND the
     per-stream convergence statistic (relative update magnitude) for all S
     streams, on persistent-padded state (``BankLayout``).
+  * ``smbgd_probe_bank``    — freeze-only fast path of the megakernel: the
+    same launch geometry computes ONLY the per-stream convergence statistic
+    a commit WOULD produce — no ``Y``/``B'``/``Ĥ'`` writes.  The batched
+    out-of-band drift probe of parked (frozen) separators.
 
 Block-aligned inputs take the zero-copy fast path: when an array already
 matches its padded geometry the ``zeros().at[].set()`` staging copy is skipped
@@ -30,6 +34,7 @@ import jax.numpy as jnp
 from repro.kernels.easi_gradient.easi_gradient import (
     easi_gradient_bank_pallas,
     easi_gradient_pallas,
+    smbgd_probe_bank_pallas,
     smbgd_step_bank_pallas,
 )
 
@@ -252,3 +257,72 @@ def smbgd_step_bank(
         interpret=interpret,
     )
     return Y, B_new, H_new, step_new.reshape(S_streams), conv_new.reshape(S_streams)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("nonlinearity", "block_p", "block_s", "interpret")
+)
+def smbgd_probe_bank(
+    X: jnp.ndarray,
+    W: jnp.ndarray,
+    B: jnp.ndarray,
+    H_hat: jnp.ndarray,
+    step: jnp.ndarray,
+    gamma_hat: jnp.ndarray,
+    active: jnp.ndarray,
+    conv: jnp.ndarray | None = None,
+    *,
+    nonlinearity: str = "cubic",
+    block_p: int | None = None,
+    block_s: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Freeze-only probe launch: the conv statistic a ``smbgd_step_bank``
+    tick WOULD commit, without committing anything.
+
+    Same persistent-layout contract and block geometry as ``smbgd_step_bank``
+    (it refuses to silently pad); returns only ``conv' (S,)`` — the virtual
+    per-stream relative update magnitude, with ``conv`` (default +inf)
+    carried through for streams masked out by ``active``.  The state
+    operands are never written: this is the batched out-of-band drift probe
+    of parked (frozen) separators, one launch per ``S``-wide probe batch.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    S_streams, P_pad, m_pad = X.shape
+    n_pad = B.shape[1]
+    if block_p is None:
+        block_p = min(512, _round_up(P_pad, _SUBLANE))
+    if block_s is None:
+        block_s = _default_block_s(S_streams, cap=32 if interpret else 8)
+    if P_pad % block_p or n_pad % _SUBLANE or m_pad % _SUBLANE:
+        raise ValueError(
+            f"smbgd_probe_bank requires persistent-layout inputs; got "
+            f"P={P_pad} (block_p={block_p}), n={n_pad}, m={m_pad}"
+        )
+    if S_streams % block_s:
+        raise ValueError(
+            f"block_s={block_s} must divide the stream count {S_streams}"
+        )
+    Wp = W.reshape(S_streams, P_pad, 1).astype(jnp.float32)
+    step2 = step.reshape(S_streams, 1).astype(jnp.int32)
+    gamma2 = gamma_hat.reshape(S_streams, 1).astype(jnp.float32)
+    active2 = active.reshape(S_streams, 1).astype(jnp.int32)
+    if conv is None:
+        conv = jnp.full((S_streams, 1), jnp.inf, jnp.float32)
+    conv2 = conv.reshape(S_streams, 1).astype(jnp.float32)
+    conv_new = smbgd_probe_bank_pallas(
+        X,
+        Wp,
+        B,
+        H_hat,
+        step2,
+        gamma2,
+        active2,
+        conv2,
+        nonlinearity=nonlinearity,
+        block_p=block_p,
+        block_s=block_s,
+        interpret=interpret,
+    )
+    return conv_new.reshape(S_streams)

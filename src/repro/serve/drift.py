@@ -30,6 +30,15 @@ Two response modes:
     magnitude a bank step WOULD have committed from the frozen state (same
     formula, out of band, no slot occupied).  On re-trigger the session is
     re-admitted through the scheduler, warm-started from its frozen state.
+
+Probe execution: the due parked sessions are probed in BATCHES — their frozen
+states are stacked into a transient probe bank and all virtual conv
+statistics of one batch come out of a single launch (``probe_batch`` sessions
+per launch; ragged tails are padded and masked inactive), so the watchdog
+costs O(parked / probe_batch) dispatches per probe tick instead of O(parked).
+``probe_batch=0`` selects the legacy PR-4 per-session loop — one jitted
+dispatch per parked session — kept as the reference the batched engine is
+differentially property-tested against (tests/test_probe.py).
 """
 from __future__ import annotations
 
@@ -61,6 +70,7 @@ class DriftPolicy:
     boost: float = 4.0  # μ multiplier applied on re-trigger (boost mode)
     boost_ticks: int = 50  # ticks the boost lasts before μ returns to base
     probe_every: int = 10  # run_tick period of parked-session probes (readmit)
+    probe_batch: int = 64  # parked sessions per probe launch (0 = sequential)
 
     def __post_init__(self) -> None:
         if self.mode not in ("boost", "readmit"):
@@ -75,6 +85,8 @@ class DriftPolicy:
             raise ValueError("boost must be > 0")
         if self.probe_every < 1:
             raise ValueError("probe_every must be >= 1")
+        if self.probe_batch < 0:
+            raise ValueError("probe_batch must be >= 0 (0 = sequential probes)")
 
 
 @dataclasses.dataclass

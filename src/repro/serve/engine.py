@@ -41,12 +41,20 @@ Session lifecycle state machine (``SeparationService``)::
            │
            └─ DriftPolicy(mode="readmit"), source bound: slot evicts as
                 usual but the session PARKS (frozen state + its source);
-                every ``probe_every`` ``run_tick``s the watchdog pulls one
-                block and computes the VIRTUAL conv statistic of the frozen
-                separator (same ‖ΔB‖/‖B‖ formula, out of band, no slot);
-                EMA > ``retrigger`` ──► ``DriftEvent``: re-admitted through
-                the scheduler, warm-started from the frozen state (ACTIVE,
-                or QUEUED under backpressure).
+                every ``probe_every`` ``run_tick``s the watchdog probes ALL
+                parked sessions in BATCHES: the due sessions' frozen states
+                are stacked into a transient probe bank (``probe_batch``
+                sessions per launch, ragged tails padded + masked inactive)
+                and one no-commit bank launch computes every VIRTUAL conv
+                statistic (same ‖ΔB‖/‖B‖ formula, out of band, no slot,
+                frozen separators never mutated) — O(parked / probe_batch)
+                dispatches per probe tick, not O(parked).  A parked source
+                that drains mid-probe EVICTS the session (reason
+                ``"exhausted"``).  EMA > ``retrigger`` ──► ``DriftEvent``:
+                re-admitted through the scheduler, warm-started from the
+                frozen state (ACTIVE, or back to PARKED under contention).
+                ``probe_batch=0`` selects the legacy one-dispatch-per-session
+                loop (the batched engine's differential-test oracle).
 
 Ingestion: ``run_tick()`` is the scheduler-driven pull loop — sessions bind
 a ``data.sources.SignalSource`` at admit time; each tick backfills free
@@ -80,6 +88,7 @@ actually separates).
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
 import time
 from typing import Any, Callable, Dict, Hashable, List, Optional, Tuple
@@ -243,13 +252,19 @@ class EvictionRecord:
 class ParkedSession:
     """A converged-and-evicted session kept under drift watch
     (``DriftPolicy(mode="readmit")``): its eviction record (frozen separator
-    state + stats), its still-bound signal source, the probe monitor, and the
-    scheduling metadata it re-admits with."""
+    state + stats), its still-bound signal source (``None`` right after a
+    checkpoint restore, until ``bind_source`` re-attaches one — unbound
+    sessions skip probes), the probe monitor, and the scheduling metadata it
+    re-admits with."""
 
     record: EvictionRecord
     source: Any
     monitor: DriftMonitor
     meta: SessionMeta
+    # service-assigned park stamp (unique per park): the batched probe engine
+    # keys its stacked-state cache on it, so an id re-parked with a NEW
+    # frozen state can never alias a stale stack
+    park_seq: int = -1
 
 
 class SeparationService:
@@ -351,7 +366,12 @@ class SeparationService:
         self._drift_events: List[DriftEvent] = []
         self._n_drift_events = 0
         self._probe_ticks = 0  # run_tick counter driving parked probes
-        self._probe_fn = None  # lazily-jitted virtual-conv probe
+        self._probe_fn = None  # lazily-jitted virtual-conv probe (sequential)
+        self._probe_banks: Dict[int, Tuple[SeparatorBank, Any]] = {}  # width → (bank, jitted probe)
+        self._probe_stacks: Dict[Tuple, BankState] = {}  # chunk stamp → stacked frozen states
+        self._park_seq = 0  # monotone park stamp (probe stack-cache keys)
+        self._n_probes = 0  # parked sessions probed (any engine)
+        self._n_probe_launches = 0  # probe dispatches (the O(parked/batch) win)
         self._restored_positions: Dict[Hashable, int] = {}  # from lifecycle snapshots
         # μ boost rides per-stream hyperparameter rows as TRACED operands —
         # only the boost mode pays for the 4-argument step flavour
@@ -453,15 +473,26 @@ class SeparationService:
 
     def bind_source(self, session_id: Hashable, source, seek: bool = True) -> None:
         """Attach (or replace) a session's ``SignalSource`` — the feed
-        ``run_tick`` pulls from.  After ``restore``, re-bind sources here:
-        the cursor positions recorded in the lifecycle snapshot are re-applied
+        ``run_tick`` pulls from (or, for a PARKED session, the feed the drift
+        watchdog probes).  After ``restore``, re-bind sources here: the
+        cursor positions recorded in the lifecycle snapshot are re-applied
         (``seek=True``, sources exposing ``seek``) so the feed resumes exactly
-        where the checkpointed one stopped."""
-        if session_id not in self._slot_of and session_id not in self.scheduler:
-            raise KeyError(f"session {session_id!r} is neither active nor queued")
+        where the checkpointed one stopped — restored parked sessions stay
+        parked (and un-probeable) until their source is re-bound."""
+        if (
+            session_id not in self._slot_of
+            and session_id not in self.scheduler
+            and session_id not in self._parked
+        ):
+            raise KeyError(
+                f"session {session_id!r} is neither active nor queued nor parked"
+            )
         pos = self._restored_positions.pop(session_id, None) if seek else None
         if pos is not None and hasattr(source, "seek"):
             source.seek(pos)
+        if session_id in self._parked:
+            self._parked[session_id].source = source
+            return
         self._sources[session_id] = source
 
     # -- metrics -----------------------------------------------------------
@@ -475,6 +506,8 @@ class SeparationService:
             "n_hot": float(len(self._hot)),
             "n_parked": float(len(self._parked)),
             "n_drift_events": float(self._n_drift_events),
+            "n_probes": float(self._n_probes),
+            "n_probe_launches": float(self._n_probe_launches),
             "n_evicted": float(self._n_evicted),
             "n_auto_evicted": float(self._n_auto_evicted),
             "n_ticks": float(self._n_ticks),
@@ -882,11 +915,23 @@ class SeparationService:
         return float(self._probe_fn(state, X))
 
     def _probe_parked(self) -> None:
-        """Every ``probe_every`` run_ticks, pull one block from each parked
-        session's source and fold the virtual conv statistic into its drift
-        monitor; re-admit (warm-started, through the scheduler) the sessions
-        whose mixing has drifted.  A parked source that drains moves the
-        session to ``finished``.
+        """Every ``probe_every`` run_ticks, probe every parked session: pull
+        one block per parked source, compute the virtual conv statistics (the
+        update a bank step WOULD commit from each frozen state), fold them
+        into the drift monitors, and re-admit (warm-started, through the
+        scheduler) the sessions whose mixing has drifted.  A parked source
+        that drains mid-probe evicts the session (reason ``"exhausted"``).
+
+        The due batch — all parked sessions, in park order — runs through the
+        BATCHED engine by default: frozen states are stacked into a transient
+        probe bank and each ``probe_batch``-wide chunk costs ONE no-commit
+        bank launch (``stream.SeparatorBank.probe``; the megakernel's
+        freeze-only fast path on fused banks), so watchdog latency scales as
+        O(parked / probe_batch) dispatches.  ``DriftPolicy(probe_batch=0)``
+        selects the legacy sequential loop — one jitted dispatch per session
+        — kept as the oracle the batched engine is differentially tested
+        against.  Probe decisions are applied in park order in both engines,
+        so they re-admit identically.
 
         Probes treat the source as LIVE: a parked session is not consuming
         its feed, so the samples that arrived between probes are skipped
@@ -898,37 +943,168 @@ class SeparationService:
         self._probe_ticks += 1
         if self._probe_ticks % dpol.probe_every:
             return
+        due = list(self._parked)  # the due batch: every parked session, in park order
+        if dpol.probe_batch == 0:
+            self._probe_sequential(due)
+        else:
+            self._probe_batched(due)
+
+    def _pull_probe_block(self, sid: Hashable, ps: ParkedSession):
+        """Seek ``sid``'s parked source to service time and pull one probe
+        block ``(m, P)``.  Returns ``None`` when the session cannot be probed
+        this tick: no source bound yet (fresh restore awaiting
+        ``bind_source``), or the source drained — which EVICTS the parked
+        session with reason ``"exhausted"`` (a drained feed is a finished
+        session; the exception must never escape ``run_tick``)."""
+        if ps.source is None:
+            return None
+        dpol = self.drift_policy
         P = self.bank.opt.batch_size
         skip = (dpol.probe_every - 1) * P
-        for sid in list(self._parked):
-            ps = self._parked[sid]
-            if skip and hasattr(ps.source, "seek") and hasattr(ps.source, "position"):
-                target = ps.source.position + skip
-                limit = getattr(ps.source, "n_samples", None)
-                if limit is not None and getattr(ps.source, "loop", False):
-                    target %= max(limit, 1)  # looping feed: modular live time
-                elif limit is not None:
-                    # finite feed near its end: clamp to the last full block
-                    # so the probe still measures the PRESENT, not a window
-                    # from (probe_every-1) ticks ago — but never move the
-                    # cursor backward (a fully drained feed must exhaust,
-                    # not re-probe its final block forever)
-                    target = max(
-                        min(target, max(limit - P, 0)), ps.source.position
-                    )
-                try:
-                    ps.source.seek(target)
-                except ValueError:
-                    pass  # source without absolute seek semantics: best effort
+        if skip and hasattr(ps.source, "seek") and hasattr(ps.source, "position"):
+            target = ps.source.position + skip
+            limit = getattr(ps.source, "n_samples", None)
+            if limit is not None and getattr(ps.source, "loop", False):
+                target %= max(limit, 1)  # looping feed: modular live time
+            elif limit is not None:
+                # finite feed near its end: clamp to the last full block
+                # so the probe still measures the PRESENT, not a window
+                # from (probe_every-1) ticks ago — but never move the
+                # cursor backward (a fully drained feed must exhaust,
+                # not re-probe its final block forever)
+                target = max(
+                    min(target, max(limit - P, 0)), ps.source.position
+                )
             try:
-                blk = np.asarray(ps.source.next_block(P), dtype=np.float32)
-            except sources_lib.SourceExhausted:
-                self._finished[sid] = ps.record
-                del self._parked[sid]
+                ps.source.seek(target)
+            except ValueError:
+                pass  # source without absolute seek semantics: best effort
+        try:
+            return np.asarray(ps.source.next_block(P), dtype=np.float32)
+        except sources_lib.SourceExhausted:
+            del self._parked[sid]
+            record = dataclasses.replace(
+                ps.record, reason="exhausted", tick=self._n_ticks
+            )
+            self._finished[sid] = record
+            self._n_evicted += 1
+            if self.on_evict is not None:
+                self.on_evict(sid, record)
+            return None
+
+    def _probe_sequential(self, due: List[Hashable]) -> None:
+        """The PR-4 probe engine: one jitted virtual-conv dispatch per parked
+        session (``DriftPolicy(probe_batch=0)``) — the differential-test
+        oracle of ``_probe_batched``."""
+        dpol = self.drift_policy
+        for sid in due:
+            ps = self._parked[sid]
+            blk = self._pull_probe_block(sid, ps)
+            if blk is None:
                 continue
             x = self._virtual_conv(ps.record.state, jnp.asarray(blk.T))
+            self._n_probes += 1
+            self._n_probe_launches += 1
             if ps.monitor.update(x, dpol):
                 self._readmit(sid, ps)
+
+    def _probe_batched(self, due: List[Hashable]) -> None:
+        """The batched probe engine: assemble the due batch (one pulled block
+        per parked source), stack the frozen ``(B, Ĥ, step)`` states of each
+        ``probe_batch``-wide chunk into a transient probe bank, and compute
+        the whole chunk's virtual conv statistics with ONE no-commit launch.
+        Ragged chunks are padded to the bank's power-of-two width and masked
+        inactive, so at most log2(probe_batch) distinct programs ever
+        compile.  Frozen states are immutable while a session stays parked,
+        so each chunk's stacked probe-bank state is CACHED (keyed by the
+        sessions' park stamps) — a steady parked population pays the
+        Python-side stacking once, not every probe tick.  Monitor updates /
+        re-admissions are applied in park order, so both engines reach the
+        same decisions and end state (the differential property tests pin
+        this); the one observable ordering difference is that exhaustion
+        evictions surface during the up-front pull phase here, where the
+        sequential loop interleaves them per session."""
+        dpol = self.drift_policy
+        P = self.bank.opt.batch_size
+        m = self.bank.easi.n_features
+        # fused probe banks consume block-aligned X: staging at padded shape
+        # hits pad_batch's zero-copy fast path inside the jitted probe (the
+        # same trick the serving tick's staging buffer plays)
+        if self.bank.fused:
+            lay = self.bank.layout
+            P_stage, m_stage = lay.P_pad, lay.m_pad
+        else:
+            P_stage, m_stage = P, m
+        pulled: List[Tuple[Hashable, ParkedSession, np.ndarray]] = []
+        for sid in due:
+            ps = self._parked[sid]
+            blk = self._pull_probe_block(sid, ps)
+            if blk is not None:
+                pulled.append((sid, ps, blk))
+        stacks: Dict[Tuple, BankState] = {}  # chunks live this tick only
+        for lo in range(0, len(pulled), dpol.probe_batch):
+            chunk = pulled[lo : lo + dpol.probe_batch]
+            width = self._probe_width(len(chunk))
+            bank, probe_fn = self._probe_bank(width)
+            for _, ps, _ in chunk:
+                if ps.park_seq < 0:  # white-box/legacy parks: stamp lazily
+                    ps.park_seq = self._park_seq
+                    self._park_seq += 1
+            stamp = tuple(ps.park_seq for _, ps, _ in chunk)
+            state = self._probe_stacks.get(stamp)
+            if state is None:
+                # pad ragged chunks by repeating the last frozen state
+                # (masked out below — any well-formed state works; repeating
+                # avoids manufacturing degenerate all-zero operands)
+                states = [ps.record.state for _, ps, _ in chunk]
+                states += [states[-1]] * (width - len(chunk))
+                state = SeparatorBank.stack_states(states)
+                if bank.fused:
+                    state = bank.pad_state(state)
+            stacks[stamp] = state
+            X = np.zeros((width, P_stage, m_stage), dtype=np.float32)
+            for j, (_, _, blk) in enumerate(chunk):
+                X[j, :P, :m] = blk.T
+            active = np.zeros((width,), dtype=np.int32)
+            active[: len(chunk)] = 1
+            conv = np.asarray(
+                probe_fn(state, jnp.asarray(X), jnp.asarray(active))
+            )
+            self._n_probes += len(chunk)
+            self._n_probe_launches += 1
+            for j, (sid, ps, _) in enumerate(chunk):
+                if ps.monitor.update(float(conv[j]), dpol):
+                    self._readmit(sid, ps)
+        self._probe_stacks = stacks  # drop stacks of reshuffled/gone chunks
+
+    @staticmethod
+    def _probe_width(k: int) -> int:
+        """Probe-bank width for a chunk of ``k`` sessions: the next power of
+        two — ragged due batches retrace at most log2(probe_batch) widths."""
+        w = 1
+        while w < k:
+            w *= 2
+        return w
+
+    def _probe_bank(self, width: int) -> Tuple[SeparatorBank, Any]:
+        """The (cached) transient probe bank of ``width`` slots: same step
+        geometry as the serving bank (fused / pallas / block_p) with the
+        bank's base hyperparameters — exactly what ``_virtual_conv`` models
+        per session — and its jitted no-commit probe step."""
+        got = self._probe_banks.get(width)
+        if got is None:
+            bank = SeparatorBank(
+                self.bank.easi,
+                self.bank.opt,
+                n_streams=width,
+                algorithm="smbgd_batched",
+                use_pallas=self.bank.use_pallas,
+                fused=self.bank.fused,
+                block_p=self.bank.block_p,
+            )
+            got = (bank, bank.make_probe())
+            self._probe_banks[width] = got
+        return got
 
     def _readmit(self, session_id: Hashable, ps: ParkedSession) -> None:
         """PARKED → ACTIVE on watchdog fire: back through the scheduler's
@@ -1019,18 +1195,24 @@ class SeparationService:
         """JSON-friendly snapshot of the full host-side lifecycle state:
         session→slot map, the scheduler's waiting room (ids + scheduling
         metadata), per-session convergence monitors, active-session metadata,
-        and the drift watchdog (hot-session monitors, remaining boost ticks,
-        per-slot μ multipliers, bound-source cursor positions).  Save
-        alongside the arrays; hand back to ``restore`` to resume sessions,
-        queue, convergence progress AND drift watch in place.
+        the drift watchdog (hot-session monitors, remaining boost ticks,
+        per-slot μ multipliers, bound-source cursor positions), and the
+        parked population under out-of-band probe — each parked session's
+        drift-monitor EMA, scheduling metadata, eviction provenance and
+        source cursor, in park order, plus the probe cadence counter
+        (``probe_ticks``), so a restored watchdog resumes mid-cycle with the
+        exact due-batch membership and phase it left off at.  Save alongside
+        the arrays; hand back to ``restore`` to resume sessions, queue,
+        convergence progress AND drift watch in place.
 
         Deliberately excluded (arrays / live objects, not JSON): mixing
         matrices registered via ``set_mixing`` (re-register after restore),
         the ``SignalSource`` objects themselves (re-attach via
-        ``bind_source``, which seeks them to the recorded positions), PARKED
-        sessions (their frozen state is out-of-bank by design — evict or
-        re-admit them before checkpointing, or re-park after restore), and
-        pending warm-start states of QUEUED sessions (a caller's
+        ``bind_source``, which seeks them to the recorded positions — parked
+        sessions included; an unbound parked session stays parked and simply
+        skips probes), the parked sessions' frozen separator arrays (those
+        ride ``save``/``restore`` as stacked ``parked_*`` checkpoint leaves),
+        and pending warm-start states of QUEUED sessions (a caller's
         ``admit(state=...)`` under backpressure activates FRESH after a
         restore; the watchdog itself never queues a warm re-admission —
         see ``_readmit``)."""
@@ -1052,12 +1234,65 @@ class SeparationService:
                 for sid, src in self._sources.items()
                 if hasattr(src, "position")
             },
+            "probe_ticks": self._probe_ticks,
+            "parked": [
+                [
+                    sid,
+                    {
+                        "monitor": dataclasses.asdict(ps.monitor),
+                        "meta": ps.meta.asdict(),
+                        "reason": ps.record.reason,
+                        "tick": ps.record.tick,
+                        "position": (
+                            int(ps.source.position)
+                            if ps.source is not None
+                            and hasattr(ps.source, "position")
+                            else None
+                        ),
+                    },
+                ]
+                for sid, ps in self._parked.items()
+            ],
         }
+
+    @staticmethod
+    def _parked_fingerprint(sids) -> jnp.ndarray:
+        """Order-sensitive (K,) uint32 fingerprint of parked session ids.
+
+        Saved alongside the stacked ``parked_*`` leaves and recomputed from
+        the ``lifecycle`` snapshot at restore: the arrays and the snapshot
+        are separate artifacts zipped back together BY INDEX, so a snapshot
+        captured at a different moment than ``save`` (same parked count,
+        different membership/order) must fail loudly instead of silently
+        attaching frozen separators to the wrong sessions."""
+        import zlib
+
+        return jnp.asarray(
+            [
+                zlib.crc32(json.dumps(sid, default=str).encode())
+                for sid in sids
+            ],
+            dtype=jnp.uint32,
+        )
 
     def save(self, checkpointer, step: int) -> None:
         # rng_key rides along so post-restore admissions continue the key
-        # sequence instead of replaying pre-save inits
-        checkpointer.save(step, dict(self.state._asdict(), rng_key=self.key))
+        # sequence instead of replaying pre-save inits; parked sessions'
+        # frozen separators ride as stacked leaves (in the ``lifecycle``
+        # snapshot's park order — restore zips the two back together, with
+        # the sid fingerprint guarding the index pairing)
+        tree = dict(self.state._asdict(), rng_key=self.key)
+        if self._parked:
+            frozen = [ps.record.state for ps in self._parked.values()]
+            tree["parked_B"] = jnp.stack([jnp.asarray(s.B) for s in frozen])
+            tree["parked_H_hat"] = jnp.stack(
+                [jnp.asarray(s.H_hat) for s in frozen]
+            )
+            tree["parked_step"] = jnp.stack(
+                [jnp.asarray(s.step) for s in frozen]
+            )
+            tree["parked_ids"] = self._parked_fingerprint(self._parked)
+        checkpointer.save(step, tree)
 
     def restore(
         self,
@@ -1072,8 +1307,13 @@ class SeparationService:
         restored separator matrices are still in the arrays but will be
         overwritten as slots are re-admitted.  Pass the ``sessions`` map (or
         the richer ``lifecycle`` snapshot, which also carries the admission
-        queue and the per-session convergence monitors) captured at save time
-        to resume in place.
+        queue, the per-session convergence monitors AND the parked probe
+        population — frozen separators from the checkpoint's stacked
+        ``parked_*`` leaves, drift-monitor EMAs, probe cadence and due-batch
+        order from the snapshot) captured at save time to resume in place.
+        Restored parked sessions hold no source until ``bind_source``
+        re-attaches one (seeking it to the recorded cursor); until then they
+        stay parked and skip probes.
 
         Ground-truth mixing matrices are NOT part of the snapshot (they are
         arrays, not host bookkeeping, and the snapshot stays JSON-able):
@@ -1097,6 +1337,8 @@ class SeparationService:
         hot_snap = lifecycle.get("hot") or {}
         boost_snap = lifecycle.get("boost") or {}
         mu_scale = lifecycle.get("mu_scale")
+        parked_snap = list(lifecycle.get("parked") or [])
+        parked_ids = [sid for sid, _info in parked_snap]
         bad = {
             s: slot
             for s, slot in sessions.items()
@@ -1109,6 +1351,18 @@ class SeparationService:
         overlap = set(queue_ids) & set(sessions)
         if overlap or len(set(queue_ids)) != len(queue_ids):
             raise ValueError(f"queue/session overlap or duplicates: {queue_ids}")
+        parked_overlap = set(parked_ids) & (set(sessions) | set(queue_ids))
+        if parked_overlap or len(set(parked_ids)) != len(parked_ids):
+            raise ValueError(
+                f"parked/session/queue overlap or duplicates: {parked_ids}"
+            )
+        if parked_snap and (
+            self.drift_policy is None or self.drift_policy.mode != "readmit"
+        ):
+            raise ValueError(
+                "lifecycle snapshot carries parked sessions but this service "
+                "has no readmit-mode drift_policy to probe them"
+            )
         if mu_scale is not None and len(mu_scale) != self.bank.n_streams:
             raise ValueError(
                 f"mu_scale length {len(mu_scale)} != n_streams "
@@ -1134,8 +1388,32 @@ class SeparationService:
         # validate BEFORE mutating: a rejected map must leave the live
         # service untouched
         target = dict(self.state._asdict(), rng_key=self.key)
+        if parked_snap:
+            n = self.bank.easi.n_components
+            m = self.bank.easi.n_features
+            dt = self.bank.easi.dtype
+            K = len(parked_snap)
+            target["parked_B"] = jnp.zeros((K, n, m), dt)
+            target["parked_H_hat"] = jnp.zeros((K, n, n), dt)
+            target["parked_step"] = jnp.zeros((K,), jnp.int32)
+            target["parked_ids"] = jnp.zeros((K,), jnp.uint32)
         tree, got = checkpointer.restore(target, step=step)
+        if parked_snap:
+            # the arrays and the snapshot are zipped by index: the saved sid
+            # fingerprint must match the snapshot's park order exactly
+            want = np.asarray(self._parked_fingerprint(parked_ids))
+            saved = np.asarray(tree.pop("parked_ids"))
+            if not np.array_equal(saved, want):
+                raise ValueError(
+                    "lifecycle['parked'] does not match the checkpoint's "
+                    "parked_* leaves (membership/order changed between save "
+                    "and snapshot?) — frozen separators would attach to the "
+                    "wrong sessions"
+                )
         self.key = tree.pop("rng_key")
+        parked_B = tree.pop("parked_B", None)
+        parked_H = tree.pop("parked_H_hat", None)
+        parked_step = tree.pop("parked_step", None)
         self.state = BankState(**tree)
         self._slot_of = dict(sessions)
         self.scheduler.load(queue_entries)
@@ -1167,21 +1445,51 @@ class SeparationService:
             if mu_scale is not None
             else np.ones((self.bank.n_streams,), dtype=np.float32)
         )
-        self._parked = {}
         self._sources = {}
         self._warm = {}
         self._drift_events = []
         self._n_drift_events = 0
-        self._probe_ticks = 0
+        self._n_probes = 0
+        self._n_probe_launches = 0
+        self._probe_stacks = {}
+        # the probe cadence resumes mid-cycle: a restored watchdog fires its
+        # next probe exactly when the checkpointed one would have
+        self._probe_ticks = int(lifecycle.get("probe_ticks") or 0)
         # bind_source(seek=True) replays these cursors into re-bound sources
         self._restored_positions = dict(lifecycle.get("sources") or {})
+        # parked sessions resume in park order (= due-batch order): frozen
+        # separators from the stacked checkpoint leaves, monitors/meta from
+        # the snapshot, sources re-bound (and re-sought) via bind_source
+        now = time.perf_counter()
+        self._parked = {}
+        for i, (sid, info) in enumerate(parked_snap):
+            frozen = SMBGDState(
+                B=parked_B[i], H_hat=parked_H[i], step=parked_step[i]
+            )
+            self._parked[sid] = ParkedSession(
+                record=EvictionRecord(
+                    state=frozen,
+                    stats=SessionStats(admitted_at=now),
+                    monitor=None,
+                    reason=info.get("reason", "converged"),
+                    tick=int(info.get("tick", 0)),
+                ),
+                source=None,
+                monitor=DriftMonitor(**(info.get("monitor") or {})),
+                meta=SessionMeta(**(info.get("meta") or {})),
+            )
+            pos = info.get("position")
+            if pos is not None:
+                self._restored_positions[sid] = int(pos)
         queue_meta_orders = [
             e[1].get("order", 0)
             for e in queue_entries
             if isinstance(e, (list, tuple)) and len(e) == 2 and isinstance(e[1], dict)
         ]
         self._seq = 1 + max(
-            [m.order for m in self._meta.values()] + queue_meta_orders,
+            [m.order for m in self._meta.values()]
+            + [ps.meta.order for ps in self._parked.values()]
+            + queue_meta_orders,
             default=-1,
         )
         self._mixing = {}

@@ -40,6 +40,10 @@ path and the hetero-vmap fallback, matching the ref oracle).  The fused path
 computes it in-register from the commit's own ``Ĥ′B`` product, so the serving
 layer's eviction policy (``serve.ConvergencePolicy``) reads an (S,)-float
 side channel per tick instead of pulling ``B``/``Ĥ`` back to the host.
+``probe``/``make_probe`` expose the statistic WITHOUT the commit — the
+no-mutation probe mode the serving layer's batched drift watchdog runs over
+transient banks of parked (frozen) separators (``stack_states`` +
+``unstack_states`` are the in/out ramps).
 
 Checkpointing: ``BankState`` is a plain pytree of arrays (padded or not), so
 ``checkpoint.Checkpointer`` round-trips it unmodified (tested).
@@ -297,11 +301,20 @@ class SeparatorBank:
         — feed through ``pad_state`` to enter a fused bank.  Single-stream
         states carry no convergence statistic, so ``conv`` restarts at +inf."""
         return BankState(
-            B=jnp.stack([s.B for s in states]),
-            H_hat=jnp.stack([s.H_hat for s in states]),
-            step=jnp.stack([s.step for s in states]),
+            B=jnp.stack([jnp.asarray(s.B) for s in states]),
+            H_hat=jnp.stack([jnp.asarray(s.H_hat) for s in states]),
+            step=jnp.stack([jnp.asarray(s.step) for s in states]),
             conv=jnp.full((len(states),), jnp.inf, jnp.float32),
         )
+
+    def unstack_states(self, state: BankState) -> list:
+        """Inverse of ``stack_states``: a list of per-stream single-stream
+        ``SMBGDState``s (always logical shapes — unpads fused-bank state)."""
+        state = self.unpad_state(state)
+        return [
+            SMBGDState(B=state.B[s], H_hat=state.H_hat[s], step=state.step[s])
+            for s in range(state.B.shape[0])
+        ]
 
     # -- stepping ----------------------------------------------------------
     def step(
@@ -381,6 +394,62 @@ class SeparatorBank:
         (default on accelerators; see ``make_step``)."""
         donate = self._donate_default(donate)
         return jax.jit(self.epoch, donate_argnums=(0,) if donate else ())
+
+    def probe(
+        self,
+        state: BankState,
+        X: jnp.ndarray,
+        active: Optional[jnp.ndarray] = None,
+    ) -> jnp.ndarray:
+        """No-commit probe step: the per-stream convergence statistic a
+        ``step`` on ``X (S, P, m)`` WOULD commit — ``‖Ĥ′B‖_F/‖B‖_F`` from the
+        virtual ``Ĥ′ = γ̂Ĥ + S`` — without mutating anything.  Returns
+        ``conv (S,)``; streams masked out by ``active`` carry ``state.conv``
+        through (+inf for never-measured states).
+
+        This is the out-of-band drift probe: parked (frozen) separators are
+        stacked into a transient bank (``stack_states``/``pad_state``) and
+        one launch answers "has any of them drifted?" for the whole batch.
+        The fused path routes through the megakernel's freeze-only variant
+        (``kernels.easi_gradient.ops.smbgd_probe_bank``) — no ``Y``/state
+        writes reach HBM at all.
+        """
+        if self.fused:
+            from repro.kernels.easi_gradient import ops as easi_ops
+
+            lay = self.layout
+            state = self.pad_state(state)
+            X = self.pad_batch(X)
+            hp = self._bank_hyperparams()
+            W = (
+                jnp.zeros((self.n_streams, lay.P_pad), jnp.float32)
+                .at[:, : lay.P]
+                .set(hp.within_batch_weights(lay.P))
+            )
+            if active is None:
+                active = jnp.ones((self.n_streams,), dtype=jnp.int32)
+            return easi_ops.smbgd_probe_bank(
+                X,
+                W,
+                state.B,
+                state.H_hat,
+                state.step,
+                hp.effective_momentum(lay.P),
+                active,
+                self._conv_or_default(state),
+                nonlinearity=self.easi.nonlinearity,
+                block_p=lay.block_p,
+                block_s=self.block_s,
+            )
+        new_state, _ = self._step_all(state, X)
+        if active is None:
+            return new_state.conv
+        return jnp.where(active != 0, new_state.conv, self._conv_or_default(state))
+
+    def make_probe(self):
+        """Jitted ``probe(state, X, active) -> conv (S,)`` (no donation — the
+        probe never consumes its state; the frozen operands stay live)."""
+        return jax.jit(lambda st, X, active: self.probe(st, X, active=active))
 
     def _bank_hyperparams(self) -> BankHyperparams:
         if self.hyperparams is not None:

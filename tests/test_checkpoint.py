@@ -286,6 +286,179 @@ class TestDriftLifecycleRoundtrip:
         assert plain.sessions == svc.sessions
 
 
+class TestParkedProbeRoundtrip:
+    """The batched probe engine's in-flight state across a checkpoint
+    boundary: probe cadence counter, due-batch membership (park order),
+    parked drift-monitor EMAs, scheduling metadata and the frozen separator
+    arrays all round-trip exactly, and the restored watchdog walks the same
+    probe trajectory."""
+
+    PROBE_EVERY = 3
+
+    def _svc(self, probe_batch=4):
+        from repro.core import EASIConfig, SMBGDConfig
+        from repro.serve import ConvergencePolicy, DriftPolicy, SeparationService
+        from repro.stream import SeparatorBank
+
+        ecfg = EASIConfig(n_components=2, n_features=4, mu=2e-3)
+        ocfg = SMBGDConfig(batch_size=8, mu=2e-3, beta=0.9, gamma=0.5)
+        return SeparationService(
+            SeparatorBank(ecfg, ocfg, n_streams=2),
+            seed=0,
+            policy=ConvergencePolicy(threshold=0.025),
+            drift_policy=DriftPolicy(
+                mode="readmit", retrigger=1e-12, patience=4, ema=0.6,
+                cooldown=2, probe_every=self.PROBE_EVERY,
+                probe_batch=probe_batch,
+            ),
+            max_queue=4,
+        )
+
+    def _fill(self, svc, k=3):
+        from repro.core import smbgd as smbgd_lib
+        from repro.data.sources import ReplaySource
+        from repro.serve import DriftMonitor, ParkedSession, SessionMeta
+        from repro.serve.engine import EvictionRecord, SessionStats
+
+        keys = jax.random.split(jax.random.PRNGKey(7), k)
+        sources = {}
+        for i in range(k):
+            sid = f"p{i}"
+            rng = np.random.default_rng(100 + i)
+            X = rng.standard_normal((64 * 8, 4)).astype(np.float32)
+            sources[sid] = X
+            st = smbgd_lib.init_state(svc.bank.easi, keys[i])._replace(
+                step=jnp.asarray(i + 1, jnp.int32)
+            )
+            svc._parked[sid] = ParkedSession(
+                record=EvictionRecord(
+                    state=st, stats=SessionStats(admitted_at=0.0),
+                    monitor=None, reason="converged", tick=5 + i,
+                ),
+                source=ReplaySource(X, loop=True),
+                monitor=DriftMonitor(),
+                meta=SessionMeta(tenant="t", priority=float(i), order=i),
+            )
+        return sources
+
+    def test_probe_state_roundtrips_exact(self, tmp_path):
+        from repro.data.sources import ReplaySource
+
+        svc = self._svc()
+        sources = self._fill(svc)
+        # run probes mid-cycle: cadence counter off-phase, monitor EMAs live
+        for _ in range(self.PROBE_EVERY + 1):
+            svc.run_tick()
+        assert svc._probe_ticks == self.PROBE_EVERY + 1
+        assert all(ps.monitor.seen == 1 for ps in svc.parked.values())
+        ckpt = Checkpointer(tmp_path)
+        svc.save(ckpt, step=11)
+        snap = json.loads(json.dumps(svc.lifecycle))  # must survive JSON
+
+        svc2 = self._svc()
+        got = svc2.restore(ckpt, lifecycle=snap)
+        assert got == 11
+        # cadence + due-batch membership (park order) resume exactly
+        assert svc2._probe_ticks == svc._probe_ticks
+        assert list(svc2.parked) == list(svc.parked)
+        for sid, ps in svc.parked.items():
+            ps2 = svc2.parked[sid]
+            assert dataclasses.asdict(ps2.monitor) == dataclasses.asdict(ps.monitor)
+            assert ps2.meta.asdict() == ps.meta.asdict()
+            assert ps2.record.reason == ps.record.reason
+            assert ps2.record.tick == ps.record.tick
+            # frozen separator arrays are exact (stacked checkpoint leaves)
+            np.testing.assert_array_equal(
+                np.asarray(ps2.record.state.B), np.asarray(ps.record.state.B)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(ps2.record.state.H_hat),
+                np.asarray(ps.record.state.H_hat),
+            )
+            assert int(ps2.record.state.step) == int(ps.record.state.step)
+            assert ps2.source is None  # sources are live objects: re-bind
+        # unbound parked sessions stay parked and skip probes (no crash)
+        svc2.run_tick()
+        assert set(svc2.parked) == set(svc.parked)
+        # re-bind fresh sources: cursors re-seek to the recorded positions
+        svc3 = self._svc()
+        svc3.restore(ckpt, lifecycle=snap)
+        for sid, X in sources.items():
+            svc3.bind_source(sid, ReplaySource(X, loop=True))
+            assert svc3.parked[sid].source.position == svc.parked[sid].source.position
+        # both services now walk the identical probe trajectory — monitors,
+        # events, eventual warm re-admissions and all
+        for _ in range(7 * self.PROBE_EVERY):
+            svc.run_tick()
+            svc3.run_tick()
+            assert {s: svc.status(s) for s in sources} == {
+                s: svc3.status(s) for s in sources
+            }
+        assert [e.action for e in svc.drift_events] == [
+            e.action for e in svc3.drift_events
+        ]
+        assert [e.session_id for e in svc.drift_events] == [
+            e.session_id for e in svc3.drift_events
+        ]
+        assert svc.drift_events  # the trajectory actually re-admitted someone
+
+    def test_restore_rejects_parked_without_readmit_policy(self, tmp_path):
+        from repro.core import EASIConfig, SMBGDConfig
+        from repro.serve import ConvergencePolicy, SeparationService
+        from repro.stream import SeparatorBank
+
+        svc = self._svc()
+        self._fill(svc, k=2)
+        ckpt = Checkpointer(tmp_path)
+        svc.save(ckpt, step=0)
+        snap = json.loads(json.dumps(svc.lifecycle))
+        assert snap["parked"]
+
+        ecfg = EASIConfig(n_components=2, n_features=4, mu=2e-3)
+        ocfg = SMBGDConfig(batch_size=8, mu=2e-3, beta=0.9, gamma=0.5)
+        plain = SeparationService(
+            SeparatorBank(ecfg, ocfg, n_streams=2),
+            seed=0,
+            policy=ConvergencePolicy(threshold=0.025),
+        )
+        with pytest.raises(ValueError, match="parked"):
+            plain.restore(ckpt, lifecycle=snap)
+        # overlap between parked and active sessions is rejected too
+        svc2 = self._svc()
+        bad = dict(snap, sessions={"p0": 0})
+        with pytest.raises(ValueError, match="parked"):
+            svc2.restore(ckpt, lifecycle=bad)
+        # dropping the parked section restores fine
+        svc2.restore(ckpt, lifecycle=dict(snap, parked=[]))
+        assert svc2.parked == {}
+
+    def test_restore_rejects_reordered_parked_snapshot(self, tmp_path):
+        """The stacked parked_* leaves and the lifecycle snapshot are zipped
+        by index: a snapshot whose park membership/order diverged from the
+        checkpoint (same count) must be rejected, not silently attach frozen
+        separators to the wrong sessions."""
+        svc = self._svc()
+        self._fill(svc, k=3)
+        ckpt = Checkpointer(tmp_path)
+        svc.save(ckpt, step=0)
+        snap = json.loads(json.dumps(svc.lifecycle))
+        # same count, different order
+        reordered = dict(snap, parked=list(reversed(snap["parked"])))
+        svc2 = self._svc()
+        with pytest.raises(ValueError, match="parked_\\* leaves"):
+            svc2.restore(ckpt, lifecycle=reordered)
+        # same count, different membership
+        swapped = dict(
+            snap,
+            parked=[["ghost", snap["parked"][0][1]]] + snap["parked"][1:],
+        )
+        with pytest.raises(ValueError, match="parked_\\* leaves"):
+            svc2.restore(ckpt, lifecycle=swapped)
+        # the untouched snapshot still restores
+        svc2.restore(ckpt, lifecycle=snap)
+        assert list(svc2.parked) == list(svc.parked)
+
+
 class TestElasticRestore:
     def test_reshard_on_load(self, tmp_path):
         """Checkpoints are topology-independent: restore with explicit

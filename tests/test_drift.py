@@ -96,6 +96,7 @@ class TestDriftMonitor:
             dict(retrigger=0.0),
             dict(boost=0.0),
             dict(probe_every=0),
+            dict(probe_batch=-1),
         ):
             with pytest.raises(ValueError):
                 DriftPolicy(**kw)
@@ -364,6 +365,41 @@ class TestReadmitLifecycle:
             if svc.status("u") == "finished":
                 break
         assert svc.status("u") == "finished"
+        # the bugfix: a probe-time drain is an EVICTION with the honest
+        # reason, not a silently-finished "converged" record
+        assert svc.finished["u"].reason == "exhausted"
+
+    @pytest.mark.parametrize("probe_batch", [0, 4])
+    def test_probe_exhaustion_never_escapes_run_tick(self, probe_batch):
+        """Regression (both probe engines): SourceExhausted raised by a
+        parked source mid-probe must turn into an eviction with reason
+        "exhausted" inside run_tick — on_evict observes it, n_evicted counts
+        it, and the exception never reaches the caller."""
+        from repro.serve import DriftMonitor, ParkedSession, SessionMeta
+        from repro.serve.engine import EvictionRecord, SessionStats
+
+        events = []
+        svc = _svc("readmit", on_evict=lambda sid, rec: events.append((sid, rec.reason)))
+        svc.drift_policy = dataclasses.replace(
+            DRIFT_POLICY, mode="readmit", probe_every=1, probe_batch=probe_batch
+        )
+        from repro.core import smbgd as smbgd_lib
+
+        frozen = smbgd_lib.init_state(svc.bank.easi, jax.random.PRNGKey(0))
+        svc._parked["dry"] = ParkedSession(
+            record=EvictionRecord(
+                state=frozen, stats=SessionStats(admitted_at=0.0),
+                monitor=None, reason="converged", tick=0,
+            ),
+            source=ReplaySource(np.zeros((P - 1, 4), np.float32)),  # < one block
+            monitor=DriftMonitor(), meta=SessionMeta(),
+        )
+        evicted_before = svc.metrics["n_evicted"]
+        svc.run_tick()  # must not raise
+        assert svc.status("dry") == "finished"
+        assert svc.finished["dry"].reason == "exhausted"
+        assert events == [("dry", "exhausted")]
+        assert svc.metrics["n_evicted"] == evicted_before + 1
 
     def test_manual_evict_unparks(self):
         svc = _svc("readmit")

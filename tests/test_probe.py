@@ -1,0 +1,278 @@
+"""Batched out-of-band drift probing.
+
+The batched probe engine stacks the frozen states of all due parked sessions
+into a transient probe bank and computes every virtual conv statistic in one
+no-commit launch (O(parked / probe_batch) dispatches).  The PR-4 sequential
+loop survives behind ``DriftPolicy(probe_batch=0)`` as the oracle, and the
+differential property sweep here proves the two engines produce identical
+virtual conv statistics, DriftEvents and readmit decisions across random
+ragged park populations on both the vmap and megakernel bank paths.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EASIConfig, SMBGDConfig
+from repro.core import smbgd as smbgd_lib
+from repro.data.sources import ReplaySource
+from repro.serve import (
+    ConvergencePolicy,
+    DriftMonitor,
+    DriftPolicy,
+    ParkedSession,
+    SeparationService,
+    SessionMeta,
+)
+from repro.serve.engine import EvictionRecord, SessionStats
+from repro.stream import SeparatorBank
+from _hypothesis_compat import given, settings, st
+
+P = 8
+
+
+def _park(svc, sid, state, source, order=0):
+    """White-box park injection: the probe engines only read ParkedSession
+    fields, so parking directly (instead of converging a served session)
+    keeps the sweep fast without changing what is under test."""
+    svc._parked[sid] = ParkedSession(
+        record=EvictionRecord(
+            state=state,
+            stats=SessionStats(admitted_at=0.0),
+            monitor=None,
+            reason="converged",
+            tick=0,
+        ),
+        source=source,
+        monitor=DriftMonitor(),
+        meta=SessionMeta(order=order),
+    )
+
+
+def _mk_svc(m, n, fused, probe_batch, retrigger, S=3, seed=0, probe_every=2):
+    ecfg = EASIConfig(n_components=n, n_features=m, mu=2e-3)
+    ocfg = SMBGDConfig(batch_size=P, mu=2e-3, beta=0.9, gamma=0.5)
+    return SeparationService(
+        SeparatorBank(ecfg, ocfg, n_streams=S, fused=fused),
+        seed=seed,
+        policy=ConvergencePolicy(threshold=0.025),
+        drift_policy=DriftPolicy(
+            mode="readmit",
+            retrigger=retrigger,
+            patience=1,
+            ema=0.6,
+            cooldown=1,
+            probe_every=probe_every,
+            probe_batch=probe_batch,
+        ),
+        max_queue=2,
+    )
+
+
+def _populate(svc, k, data_seed):
+    """Park ``k`` sessions with deterministic frozen states and looping
+    replay feeds — identical across services built with the same seed."""
+    m = svc.bank.easi.n_features
+    keys = jax.random.split(jax.random.PRNGKey(data_seed), max(k, 2))
+    for i in range(k):
+        st_i = smbgd_lib.init_state(svc.bank.easi, keys[i])._replace(
+            step=jnp.asarray(i % 3, jnp.int32)
+        )
+        rng = np.random.default_rng(1000 * data_seed + i)
+        X = rng.standard_normal((32 * P, m)).astype(np.float32)
+        _park(svc, f"p{i}", st_i, ReplaySource(X, loop=True), order=i)
+
+
+class TestBankProbeMode:
+    """The no-commit probe step itself (stream/bank.py + the megakernel's
+    freeze-only fast path)."""
+
+    @pytest.mark.parametrize("fused", [False, True])
+    def test_probe_matches_step_conv(self, fused):
+        ecfg = EASIConfig(n_components=2, n_features=4, mu=2e-3)
+        ocfg = SMBGDConfig(batch_size=P, mu=2e-3, beta=0.9, gamma=0.5)
+        bank = SeparatorBank(ecfg, ocfg, n_streams=4, fused=fused)
+        state = bank.init(jax.random.PRNGKey(0))
+        X = jax.random.normal(jax.random.PRNGKey(1), (4, P, 4))
+        stepped, _ = bank.step(state, X)
+        conv = bank.probe(state, X)
+        np.testing.assert_allclose(
+            np.asarray(conv), np.asarray(stepped.conv), rtol=1e-5, atol=1e-6
+        )
+
+    @pytest.mark.parametrize("fused", [False, True])
+    def test_probe_never_mutates_and_masks_inactive(self, fused):
+        ecfg = EASIConfig(n_components=2, n_features=4, mu=2e-3)
+        ocfg = SMBGDConfig(batch_size=P, mu=2e-3, beta=0.9, gamma=0.5)
+        bank = SeparatorBank(ecfg, ocfg, n_streams=4, fused=fused)
+        state = bank.init(jax.random.PRNGKey(0))
+        before = jax.tree.map(np.asarray, state._asdict())
+        X = jax.random.normal(jax.random.PRNGKey(1), (4, P, 4))
+        conv = np.asarray(
+            bank.probe(state, X, active=jnp.asarray([1, 0, 1, 0], jnp.int32))
+        )
+        # inactive lanes carry the previous statistic (+inf = never measured)
+        assert np.isfinite(conv[0]) and np.isfinite(conv[2])
+        assert np.isinf(conv[1]) and np.isinf(conv[3])
+        for k, v in state._asdict().items():
+            np.testing.assert_array_equal(np.asarray(v), before[k])
+
+    def test_unstack_states_inverts_stack(self):
+        ecfg = EASIConfig(n_components=2, n_features=4, mu=2e-3)
+        ocfg = SMBGDConfig(batch_size=P, mu=2e-3, beta=0.9, gamma=0.5)
+        bank = SeparatorBank(ecfg, ocfg, n_streams=3, fused=True)
+        state = bank.init(jax.random.PRNGKey(0))  # padded layout
+        subs = bank.unstack_states(state)
+        assert len(subs) == 3 and subs[0].B.shape == (2, 4)  # logical shapes
+        restacked = bank.pad_state(SeparatorBank.stack_states(subs))
+        np.testing.assert_array_equal(
+            np.asarray(restacked.B), np.asarray(state.B)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(restacked.H_hat), np.asarray(state.H_hat)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(restacked.step), np.asarray(state.step)
+        )
+
+
+class TestProbeEngine:
+    """The serving layer's batched due-batch assembly."""
+
+    def test_launch_economics(self):
+        """10 parked sessions, probe_batch=4 → 3 launches (the O(parked /
+        batch) contract) vs 10 sequential dispatches."""
+        bat = _mk_svc(4, 2, False, probe_batch=4, retrigger=1e9, probe_every=1)
+        seq = _mk_svc(4, 2, False, probe_batch=0, retrigger=1e9, probe_every=1)
+        for svc in (bat, seq):
+            _populate(svc, 10, data_seed=3)
+            svc.run_tick()
+        assert bat.metrics["n_probes"] == seq.metrics["n_probes"] == 10
+        assert seq.metrics["n_probe_launches"] == 10
+        assert bat.metrics["n_probe_launches"] == math.ceil(10 / 4)
+
+    def test_ragged_chunks_share_pow2_programs(self):
+        """Ragged due batches land on power-of-two probe-bank widths, so the
+        width cache stays logarithmic in probe_batch."""
+        svc = _mk_svc(4, 2, False, probe_batch=8, retrigger=1e9, probe_every=1)
+        _populate(svc, 11, data_seed=5)  # chunks of 8 + 3 → widths 8 and 4
+        svc.run_tick()
+        assert sorted(svc._probe_banks) == [4, 8]
+        assert svc.metrics["n_probe_launches"] == 2
+        # shrinking population reuses cached widths — no new programs
+        for sid in [f"p{i}" for i in range(6)]:
+            svc.evict(sid)
+        svc.run_tick()
+        assert sorted(svc._probe_banks) == [4, 8]
+
+    def test_probe_exhaustion_evicts_with_reason(self):
+        """Satellite bugfix: a parked source draining during a probe must
+        evict the session with reason "exhausted" inside run_tick — never
+        escape it, never mislabel the record as "converged"."""
+        records = []
+        svc = _mk_svc(4, 2, False, probe_batch=4, retrigger=1e9, probe_every=1)
+        svc.on_evict = lambda sid, rec: records.append((sid, rec.reason))
+        frozen = smbgd_lib.init_state(svc.bank.easi, jax.random.PRNGKey(0))
+        # fewer than one block left: the very first probe pull drains it
+        _park(svc, "dry", frozen, ReplaySource(np.zeros((P - 1, 4), np.float32)))
+        _populate(svc, 2, data_seed=9)  # healthy neighbours keep probing
+        svc.run_tick()  # must not raise
+        assert svc.status("dry") == "finished"
+        assert svc.finished["dry"].reason == "exhausted"
+        assert records == [("dry", "exhausted")]
+        assert svc.metrics["n_parked"] == 2  # neighbours unaffected
+        assert svc.metrics["n_probes"] == 2  # drained session never probed
+
+
+def _run_pair(k, m, n, fused, fire, probe_batch, ticks=6):
+    retrigger = 1e-9 if fire else 1e9
+    seq = _mk_svc(m, n, fused, probe_batch=0, retrigger=retrigger)
+    bat = _mk_svc(m, n, fused, probe_batch=probe_batch, retrigger=retrigger)
+    for svc in (seq, bat):
+        _populate(svc, k, data_seed=k * 13 + m + 3 * n)
+    for _ in range(ticks):
+        seq.run_tick()
+        bat.run_tick()
+    return seq, bat
+
+
+@pytest.mark.property
+class TestDifferentialProbe:
+    """Batched probe ≡ PR-4 sequential probe, across random ragged park
+    populations (1..S+7 parked), mixed (m, n) shapes (exercising the padded
+    probe-bank geometry) and both bank execution paths."""
+
+    @given(
+        k=st.integers(1, 10),
+        shape=st.sampled_from([(4, 2), (5, 3), (6, 2)]),
+        fused=st.sampled_from([False, True]),
+        fire=st.sampled_from([True, False]),
+        probe_batch=st.sampled_from([1, 3, 4, 8]),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_batched_matches_sequential(self, k, shape, fused, fire, probe_batch):
+        m, n = shape
+        seq, bat = _run_pair(k, m, n, fused, fire, probe_batch)
+        sids = [f"p{i}" for i in range(k)]
+        # identical readmit decisions: same lifecycle states, same slots
+        for sid in sids:
+            assert seq.status(sid) == bat.status(sid), sid
+        assert seq.sessions == bat.sessions
+        assert set(seq.parked) == set(bat.parked)
+        # identical DriftEvents (who fired, what happened, where they landed)
+        ev_s = [(e.session_id, e.action, e.slot, e.tick) for e in seq.drift_events]
+        ev_b = [(e.session_id, e.action, e.slot, e.tick) for e in bat.drift_events]
+        assert ev_s == ev_b
+        for es, eb in zip(seq.drift_events, bat.drift_events):
+            np.testing.assert_allclose(es.stat, eb.stat, rtol=1e-4, atol=1e-6)
+        # identical virtual conv statistics folded into the monitors
+        for sid, ps in seq.parked.items():
+            mb = bat.parked[sid].monitor
+            assert ps.monitor.seen == mb.seen
+            assert ps.monitor.above == mb.above
+            np.testing.assert_allclose(
+                ps.monitor.stat, mb.stat, rtol=1e-4, atol=1e-6
+            )
+        # probes advanced every source to the same service time
+        for sid, ps in seq.parked.items():
+            if bat.parked[sid].source is not None:
+                assert ps.source.position == bat.parked[sid].source.position
+        # the whole point: fewer launches, same probes (probe_batch=1 chunks
+        # one session per launch — no win, but still the batched code path)
+        assert seq.metrics["n_probes"] == bat.metrics["n_probes"]
+        if k > probe_batch > 1:
+            assert (
+                bat.metrics["n_probe_launches"]
+                < seq.metrics["n_probe_launches"]
+            )
+
+    @given(
+        k=st.integers(1, 7),
+        fire=st.sampled_from([True, False]),
+    )
+    @settings(max_examples=8, deadline=None)
+    def test_differential_with_served_traffic(self, k, fire):
+        """The equivalence holds with live sessions sharing run_tick: served
+        traffic, parked probes and readmissions interleave identically."""
+        retrigger = 1e-9 if fire else 1e9
+        seq = _mk_svc(4, 2, False, probe_batch=0, retrigger=retrigger)
+        bat = _mk_svc(4, 2, False, probe_batch=2, retrigger=retrigger)
+        for svc in (seq, bat):
+            _populate(svc, k, data_seed=17 * k)
+            rng = np.random.default_rng(99)
+            X = rng.standard_normal((64 * P, 4)).astype(np.float32)
+            svc.admit("live", source=ReplaySource(X, loop=True))
+        for _ in range(6):
+            o_s = seq.run_tick()
+            o_b = bat.run_tick()
+            assert set(o_s) == set(o_b)
+            for sid in o_s:
+                np.testing.assert_allclose(
+                    np.asarray(o_s[sid]), np.asarray(o_b[sid]), rtol=1e-5,
+                    atol=1e-6,
+                )
+        assert seq.sessions == bat.sessions
+        for sid in [f"p{i}" for i in range(k)] + ["live"]:
+            assert seq.status(sid) == bat.status(sid)

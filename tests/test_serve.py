@@ -19,6 +19,7 @@ from repro.serve.engine import (
     ServeConfig,
 )
 from repro.stream import SeparatorBank
+from _hypothesis_compat import given, settings, st
 
 
 @pytest.mark.parametrize("arch", ["smollm-135m", "xlstm-1.3b", "musicgen-large"])
@@ -453,6 +454,140 @@ class TestSchedulers:
         svc.admit("b", priority=1.0)
         with pytest.raises(RuntimeError, match="bank full"):
             svc.admit("c", priority=99.0)  # priority buys order, not capacity
+
+
+class TestSchedulerPropertyInvariants:
+    """Satellite property sweep: random admit/evict/park/readmit traffic
+    against the pluggable schedulers must never exceed tenant quotas, never
+    drop or duplicate a session id, and always pop in EDF/priority order."""
+
+    QUOTAS = {"t0": 1, "t1": 2}
+
+    def _mk(self, kind):
+        from repro.serve import (
+            DeadlineScheduler,
+            DriftPolicy,
+            PriorityScheduler,
+            SeparationService,
+        )
+        from repro.stream import SeparatorBank
+
+        ecfg = EASIConfig(n_components=2, n_features=4, mu=2e-3)
+        ocfg = SMBGDConfig(batch_size=8, mu=2e-3, beta=0.9, gamma=0.5)
+        sched = (
+            PriorityScheduler(max_queue=6, quotas=dict(self.QUOTAS))
+            if kind == "priority"
+            else DeadlineScheduler(max_queue=6)
+        )
+        return SeparationService(
+            SeparatorBank(ecfg, ocfg, n_streams=3),
+            seed=0,
+            # trivially-satisfiable convergence → sessions park quickly, and
+            # an always-above retrigger readmits them — maximum lifecycle
+            # churn through the scheduler per tick
+            policy=ConvergencePolicy(threshold=1e9, patience=1, min_ticks=2),
+            drift_policy=DriftPolicy(
+                mode="readmit", retrigger=1e-12, patience=1, cooldown=0,
+                probe_every=1, probe_batch=4,
+            ),
+            scheduler=sched,
+        )
+
+    def _check_invariants(self, svc, kind, admitted, cancelled, meta_of):
+        S = svc.bank.n_streams
+        # slots conserved, never double-booked
+        assert svc.n_active + svc.n_free == S
+        slots = list(svc._slot_of.values())
+        assert len(set(slots)) == len(slots)
+        # no sid dropped or duplicated: every admitted sid is in exactly one
+        # lifecycle bucket (cancelled queued sessions leave the system)
+        buckets = {
+            "active": set(svc.sessions),
+            "queued": set(svc.queued),
+            "parked": set(svc.parked),
+            "finished": set(svc.finished),
+        }
+        seen = set()
+        for ids in buckets.values():
+            assert not ids & seen, f"sid in two buckets: {ids & seen}"
+            seen |= ids
+        for sid in admitted:
+            if sid in cancelled:
+                assert sid not in seen
+            else:
+                assert sid in seen, f"sid dropped: {sid}"
+        # tenant quotas bound ACTIVE sessions at all times
+        if kind == "priority":
+            counts = {}
+            for sid in svc.sessions:
+                t = meta_of[sid][0]
+                counts[t] = counts.get(t, 0) + 1
+            for t, q in self.QUOTAS.items():
+                assert counts.get(t, 0) <= q, f"tenant {t} over quota"
+        # pop order: queued ids sorted by the policy's advertised key
+        queued = svc.queued
+        if kind == "priority":
+            prios = [meta_of[sid][1] for sid in queued]
+            assert prios == sorted(prios, reverse=True)
+        else:
+            deadlines = [meta_of[sid][2] for sid in queued]
+            dated = [d for d in deadlines if d is not None]
+            # every dated session pops before every dateless one, EDF inside
+            assert deadlines[: len(dated)] == sorted(dated)
+            assert all(d is None for d in deadlines[len(dated):])
+
+    @pytest.mark.property
+    @given(
+        seed=st.integers(0, 10_000),
+        kind=st.sampled_from(["priority", "deadline"]),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_random_lifecycle_preserves_invariants(self, seed, kind):
+        from repro.data.sources import ReplaySource
+
+        rng = np.random.default_rng(seed)
+        svc = self._mk(kind)
+        data = rng.standard_normal((64 * 8, 4)).astype(np.float32)
+        admitted, cancelled = [], set()
+        meta_of = {}
+        next_id = 0
+        for _ in range(40):
+            op = ("admit", "evict", "tick", "tick")[rng.integers(4)]
+            if op == "admit":
+                sid = f"s{next_id}"
+                next_id += 1
+                tenant = (None, "t0", "t1")[rng.integers(3)]
+                priority = float(rng.integers(10))
+                deadline = (
+                    None if rng.integers(2) else float(rng.integers(100))
+                )
+                try:
+                    svc.admit(
+                        sid,
+                        source=ReplaySource(data, loop=True),
+                        tenant=tenant,
+                        priority=priority,
+                        deadline=deadline,
+                    )
+                except RuntimeError:
+                    pass  # backpressure: sid never entered the system
+                else:
+                    admitted.append(sid)
+                    meta_of[sid] = (tenant, priority, deadline)
+            elif op == "evict" and admitted:
+                sid = admitted[rng.integers(len(admitted))]
+                status = svc.status(sid)
+                try:
+                    out = svc.evict(sid)
+                except KeyError:
+                    assert status in ("finished", "unknown")
+                else:
+                    if status == "queued":
+                        assert out is None
+                        cancelled.add(sid)
+            else:
+                svc.run_tick()
+            self._check_invariants(svc, kind, admitted, cancelled, meta_of)
 
 
 class TestConvergenceLifecycle:
