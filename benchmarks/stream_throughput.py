@@ -22,10 +22,17 @@ every tick.  samples/sec vs S goes to ``BENCH_streams.json`` so the perf
 trajectory is recorded run over run.
 
     PYTHONPATH=src python benchmarks/stream_throughput.py [--quick]
-    PYTHONPATH=src python benchmarks/stream_throughput.py --autotune   # block_p sweep
+    PYTHONPATH=src python benchmarks/stream_throughput.py --autotune   # 2-D sweep:
+        (block_p, block_s) x prefetch, bf16 measured at the winning
+        geometry; winners persist to AUTOTUNE.json (stream.autotune),
+        which SeparatorBank loads by default
+    PYTHONPATH=src python benchmarks/stream_throughput.py --autotune-smoke  # CI:
+        fails when AUTOTUNE.json is stale for the S=8 key on this backend
+        or the persistent bytes/session implied by the current layout
+        regress >10% vs the recorded numbers
     PYTHONPATH=src python benchmarks/stream_throughput.py --smoke      # CI gate:
         re-measures S=8 and exits 1 on a >2x per-tick regression vs the
-        checked-in BENCH_streams.json
+        checked-in BENCH_streams.json (plus the S=1 crossover floor)
     PYTHONPATH=src python benchmarks/stream_throughput.py --churn      # lifecycle
         churn: sessions arriving/converging/evicting through the
         SeparationService admission queue; effective samples/sec of
@@ -52,12 +59,24 @@ import jax.numpy as jnp
 from repro.core import smbgd as smbgd_lib
 from repro.core.easi import EASIConfig
 from repro.core.smbgd import SMBGDConfig
+from repro.kernels.easi_gradient import ops as easi_ops
 from repro.stream import SeparatorBank
+from repro.stream import autotune as autotune_lib
 
 DEFAULT_OUT = Path(__file__).parent.parent / "BENCH_streams.json"
 SMOKE_S = 8
 SMOKE_FACTOR = 2.0  # CI fails when a tick gets this much slower
 SMOKE_KEYS = ("bank_tick_s", "fused_tick_s")
+# Known interpret-mode crossover, documented rather than papered over: at S=1
+# the megakernel's per-launch fixed costs aren't amortized over streams, so
+# the PR-1 pallas path wins (checked-in fused/pr1 ≈ 0.72x; fused wins from
+# S≥8 and widens with S).  The smoke gate only fails if the ratio COLLAPSES
+# below this floor — i.e. someone added per-launch overhead, not the known
+# constant.
+S1_CROSSOVER_FLOOR = 0.45
+# --autotune-smoke: recorded persistent bytes/session may grow at most 10%
+PERSISTENT_BYTES_SLACK = 1.10
+BF16_REDUCTION_BAR = 1.5  # acceptance: bf16 persistent bytes cut ≥ 1.5x
 
 
 def _time_step_loop(step, state0, n_ticks, reps, *args, copy_state=False):
@@ -76,6 +95,20 @@ def _time_step_loop(step, state0, n_ticks, reps, *args, copy_state=False):
         jax.block_until_ready(st)
         t_best = min(t_best, (time.perf_counter() - t0) / n_ticks)
     return t_best
+
+
+def _measured_tick_bytes(jitted_step, *args) -> Optional[float]:
+    """XLA's own bytes-moved estimate for one tick ("bytes accessed" from the
+    compiled program's cost_analysis), or None where the backend doesn't
+    report it — callers fall back to the layout's analytic floor."""
+    try:
+        cost = jitted_step.lower(*args).compile().cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        val = cost.get("bytes accessed")
+        return float(val) if val is not None else None
+    except Exception:
+        return None
 
 
 def bench_streams(
@@ -119,6 +152,32 @@ def bench_streams(
         copy_state=True,
     )
 
+    # bytes-moved accounting: the bandwidth claim as numbers, not a story.
+    # Analytic per-stream estimates read off the layout; the measured total
+    # is XLA's own cost model for the whole compiled tick (None on backends
+    # that don't report it).
+    lay = fused.layout
+    lay_bf16 = easi_ops.bank_layout(
+        n, m, P, block_p=lay.block_p, dtype_policy="bf16"
+    )
+    measured_bytes = _measured_tick_bytes(fstep, state0f, Xp, act)
+
+    # bf16 storage + prefetch at the SAME resolved geometry as the f32 fused
+    # bank — the reduced-footprint serving configuration
+    fused_bf = SeparatorBank(
+        ecfg, ocfg, n_streams=S, fused=True,
+        block_p=lay.block_p, block_s=fused.block_s,
+        dtype_policy="bf16", prefetch=True, autotune=False,
+    )
+    fstep_bf = fused_bf.make_step()
+    state0bf = fused_bf.init(key)
+    warm = jax.tree.map(jnp.copy, state0bf)
+    jax.block_until_ready(fstep_bf(warm, Xp, act))  # compile
+    t_fused_bf = _time_step_loop(
+        lambda st, x: fstep_bf(st, x, act), state0bf, n_ticks, reps, Xp,
+        copy_state=True,
+    )
+
     # naive engine: Python loop of S single-stream jitted steps per tick
     # (the jit cache is shared across sessions — the loop pays dispatch,
     # not recompilation)
@@ -139,59 +198,128 @@ def bench_streams(
     samples_per_tick = S * P
     row = {
         "S": S, "P": P, "m": m, "n": n, "n_ticks": n_ticks,
-        "fused_block_p": fused.layout.block_p,
+        "fused_block_p": lay.block_p,
+        "fused_prefetch": bool(fused.prefetch),
         "bank_tick_s": t_bank,
         "bank_pallas_tick_s": t_pallas,
         "fused_tick_s": t_fused,
+        "fused_bf16_prefetch_tick_s": t_fused_bf,
         "loop_tick_s": t_loop,
         "bank_samples_per_s": samples_per_tick / t_bank,
         "bank_pallas_samples_per_s": samples_per_tick / t_pallas,
         "fused_samples_per_s": samples_per_tick / t_fused,
+        "fused_bf16_prefetch_samples_per_s": samples_per_tick / t_fused_bf,
         "loop_samples_per_s": samples_per_tick / t_loop,
         "bank_over_loop": t_loop / t_bank,
         "fused_over_bank_pallas": t_pallas / t_fused,
+        # bytes-per-tick columns (analytic floor per stream; measured = XLA
+        # cost model for the whole tick, null where unreported)
+        "est_tick_hbm_bytes_per_stream": lay.tick_hbm_bytes_per_stream,
+        "est_tick_hbm_bytes_per_stream_bf16": lay_bf16.tick_hbm_bytes_per_stream,
+        "measured_tick_bytes": measured_bytes,
+        "persistent_bytes_per_session_f32": lay.persistent_bytes_per_session,
+        "persistent_bytes_per_session_bf16": lay_bf16.persistent_bytes_per_session,
+        "persistent_bytes_reduction": (
+            lay.persistent_bytes_per_session
+            / lay_bf16.persistent_bytes_per_session
+        ),
     }
     print(
         f"streams,S={S},bank={row['bank_samples_per_s']:.3g}sps"
         f",pr1_pallas={row['bank_pallas_samples_per_s']:.3g}sps"
         f",fused={row['fused_samples_per_s']:.3g}sps"
+        f",bf16+pf={row['fused_bf16_prefetch_samples_per_s']:.3g}sps"
         f",loop={row['loop_samples_per_s']:.3g}sps"
         f",bank/loop={row['bank_over_loop']:.1f}x"
         f",fused/pr1={row['fused_over_bank_pallas']:.2f}x"
+        f",persist={row['persistent_bytes_per_session_f32']}B"
+        f"→{row['persistent_bytes_per_session_bf16']}B"
+        f" ({row['persistent_bytes_reduction']:.2f}x)"
     )
     return row
 
 
-def autotune_block_p(
-    S: int, P: int = 32, m: int = 4, n: int = 2, n_ticks: int = 20, reps: int = 2
+def autotune_bank(
+    S: int,
+    P: int = 32,
+    m: int = 4,
+    n: int = 2,
+    n_ticks: int = 20,
+    reps: int = 2,
+    write_cache: bool = True,
 ) -> List[Dict[str, float]]:
-    """Sweep the megakernel's P-tile size and report per-tick time for each.
+    """2-D ``(block_p, block_s)`` sweep of the megakernel, toggling prefetch
+    at every geometry, with bf16 storage measured at the winning geometry.
 
-    Times ONLY the fused path (the other engines don't depend on block_p).
-    Interpret-mode numbers steer nothing on real hardware — this is the
-    harness ROADMAP asks for (run with REPRO_PALLAS_INTERPRET=0 on TPU)."""
+    Times ONLY the fused path (the other engines don't depend on the tile
+    geometry).  The winner persists to the autotune cache (``AUTOTUNE.json``,
+    keyed by ``(S, P, m, n, backend)``) where ``SeparatorBank`` picks it up
+    by default; ``dtype_policy`` numbers are recorded but never auto-applied.
+    Interpret-mode numbers steer nothing on real hardware — the cache key's
+    backend tag keeps them apart (run with REPRO_PALLAS_INTERPRET=0 on TPU).
+    """
     ecfg = EASIConfig(n_components=n, n_features=m, mu=1e-3)
     ocfg = SMBGDConfig(batch_size=P, mu=1e-3, beta=0.9, gamma=0.5)
     key = jax.random.PRNGKey(0)
     X = jax.random.normal(jax.random.fold_in(key, 1), (S, P, m))
-    candidates = [bp for bp in (8, 16, 32, 64, 128, 256, 512) if bp <= P] or [P]
-    rows = []
-    for bp in candidates:
-        fused = SeparatorBank(ecfg, ocfg, n_streams=S, fused=True, block_p=bp)
+    act = jnp.ones((S,), jnp.int32)
+
+    def time_cfg(bp, bs, prefetch, policy=None):
+        fused = SeparatorBank(
+            ecfg, ocfg, n_streams=S, fused=True,
+            block_p=bp, block_s=bs, prefetch=prefetch,
+            dtype_policy=policy, autotune=False,
+        )
         fstep = fused.make_step()
         state0 = fused.init(key)
         Xp = jax.block_until_ready(fused.pad_batch(X))
-        act = jnp.ones((S,), jnp.int32)
         warm = jax.tree.map(jnp.copy, state0)
         jax.block_until_ready(fstep(warm, Xp, act))  # compile
-        t = _time_step_loop(
+        return _time_step_loop(
             lambda st, x: fstep(st, x, act), state0, n_ticks, reps, Xp,
             copy_state=True,
         )
-        rows.append({"S": S, "P": P, "block_p": bp, "fused_tick_s": t})
+
+    bp_candidates = [bp for bp in (8, 16, 32, 64, 128, 256, 512) if bp <= P] or [P]
+    bs_candidates = [d for d in range(1, S + 1) if S % d == 0]
+    rows = []
+    for bp in bp_candidates:
+        for bs in bs_candidates:
+            for pf in (False, True):
+                t = time_cfg(bp, bs, pf)
+                rows.append({
+                    "autotune": True, "S": S, "P": P, "m": m, "n": n,
+                    "block_p": bp, "block_s": bs, "prefetch": pf,
+                    "fused_tick_s": t,
+                })
     best = min(rows, key=lambda r: r["fused_tick_s"])
-    print(f"autotune,S={S},P={P}: best block_p={best['block_p']} "
-          f"({best['fused_tick_s']*1e6:.1f}us/tick)")
+    # bf16 at the winning geometry: recorded for the capacity story, never
+    # auto-applied (precision stays a caller decision)
+    t_bf16 = time_cfg(
+        best["block_p"], best["block_s"], best["prefetch"], "bf16"
+    )
+    lay_f32 = easi_ops.bank_layout(n, m, P, block_p=best["block_p"])
+    lay_bf16 = easi_ops.bank_layout(
+        n, m, P, block_p=best["block_p"], dtype_policy="bf16"
+    )
+    entry = {
+        "block_p": best["block_p"],
+        "block_s": best["block_s"],
+        "prefetch": best["prefetch"],
+        "fused_tick_s": best["fused_tick_s"],
+        "bf16_fused_tick_s": t_bf16,
+        "persistent_bytes_per_session": lay_f32.persistent_bytes_per_session,
+        "bf16_persistent_bytes_per_session": lay_bf16.persistent_bytes_per_session,
+        "tuned_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    }
+    if write_cache:
+        path = autotune_lib.store(S, P, m, n, entry)
+        print(f"autotune: wrote {autotune_lib.cache_key(S, P, m, n)} → {path}")
+    print(
+        f"autotune,S={S},P={P}: best block_p={best['block_p']} "
+        f"block_s={best['block_s']} prefetch={best['prefetch']} "
+        f"({best['fused_tick_s']*1e6:.1f}us/tick; bf16 {t_bf16*1e6:.1f}us)"
+    )
     return rows
 
 
@@ -561,6 +689,31 @@ def smoke_check(baseline_path: Path) -> int:
         print(f"smoke: FAIL fused slower than PR-1 pallas path "
               f"({fresh['fused_over_bank_pallas']:.2f}x)")
         failed = True
+    # S=1 crossover gate: the single-stream fused/pr1 loss is a KNOWN,
+    # documented interpret-mode constant (see S1_CROSSOVER_FLOOR) — gate it
+    # against collapsing further, which would mean new per-launch overhead
+    # snuck into the megakernel path.
+    s1_base = next(
+        (
+            r
+            for r in baseline_rows
+            if r.get("S") == 1
+            and "bank_tick_s" in r
+            and not r.get("use_pallas")
+        ),
+        None,
+    )
+    if s1_base is not None:
+        fresh1 = bench_streams(1, n_ticks=int(s1_base.get("n_ticks", 50)), reps=2)
+        ratio1 = fresh1["fused_over_bank_pallas"]
+        verdict = "FAIL" if ratio1 < S1_CROSSOVER_FLOOR else "ok"
+        if ratio1 < S1_CROSSOVER_FLOOR:
+            failed = True
+        print(
+            f"smoke: S=1 fused/pr1 crossover {ratio1:.2f}x "
+            f"(documented floor {S1_CROSSOVER_FLOOR}, checked-in "
+            f"{s1_base.get('fused_over_bank_pallas', float('nan')):.2f}x) {verdict}"
+        )
     # batched-probe gate: re-measure the parked-probe tick at the checked-in
     # population and fail on a >2x regression of the batched engine (or on
     # the launch economics collapsing below the 5x acceptance bar)
@@ -593,6 +746,80 @@ def smoke_check(baseline_path: Path) -> int:
     return 1 if failed else 0
 
 
+def autotune_smoke(S: int = SMOKE_S, P: int = 32, m: int = 4, n: int = 2) -> int:
+    """CI gate for the persisted autotune cache (exit 1 on failure):
+
+      * ``AUTOTUNE.json`` must hold an entry for the swept ``S=8`` key on
+        THIS backend — a missing/stale key means the sweep wasn't re-run
+        after a geometry-affecting change,
+      * a default ``SeparatorBank`` must actually resolve that geometry,
+      * the persistent bytes/session implied by the CURRENT layout code must
+        not exceed the recorded numbers by >10% (the capacity number is the
+        point of the overhaul; silent growth fails CI),
+      * the recorded bf16 reduction must hold the ≥1.5x acceptance bar.
+    """
+    ckey = autotune_lib.cache_key(S, P, m, n)
+    path = autotune_lib.cache_path()
+    entry = autotune_lib.lookup(S, P, m, n)
+    if entry is None:
+        print(
+            f"autotune-smoke: FAIL — {path} has no entry for {ckey!r}; "
+            f"regenerate with `python benchmarks/stream_throughput.py --autotune`"
+        )
+        return 1
+    failed = False
+    for field in ("block_p", "block_s", "prefetch",
+                  "persistent_bytes_per_session",
+                  "bf16_persistent_bytes_per_session"):
+        if field not in entry:
+            print(f"autotune-smoke: FAIL — {ckey!r} missing {field!r} "
+                  f"(stale schema); re-run --autotune")
+            failed = True
+    if failed:
+        return 1
+    ecfg = EASIConfig(n_components=n, n_features=m, mu=1e-3)
+    ocfg = SMBGDConfig(batch_size=P, mu=1e-3, beta=0.9, gamma=0.5)
+    bank = SeparatorBank(ecfg, ocfg, n_streams=S, fused=True)  # autotune=True
+    resolved = (bank.block_p, bank.block_s, bool(bank.prefetch))
+    recorded = (
+        int(entry["block_p"]), int(entry["block_s"]), bool(entry["prefetch"])
+    )
+    if resolved != recorded:
+        print(
+            f"autotune-smoke: FAIL — default bank resolved "
+            f"(block_p, block_s, prefetch)={resolved} but {ckey!r} records "
+            f"{recorded}; cache resolution is broken or the key is stale"
+        )
+        failed = True
+    lay_f32 = easi_ops.bank_layout(n, m, P, block_p=int(entry["block_p"]))
+    lay_bf16 = easi_ops.bank_layout(
+        n, m, P, block_p=int(entry["block_p"]), dtype_policy="bf16"
+    )
+    for field, lay in (
+        ("persistent_bytes_per_session", lay_f32),
+        ("bf16_persistent_bytes_per_session", lay_bf16),
+    ):
+        now = lay.persistent_bytes_per_session
+        rec = int(entry[field])
+        verdict = "FAIL" if now > rec * PERSISTENT_BYTES_SLACK else "ok"
+        if now > rec * PERSISTENT_BYTES_SLACK:
+            failed = True
+        print(f"autotune-smoke: {field} now={now}B recorded={rec}B {verdict}")
+    reduction = (
+        lay_f32.persistent_bytes_per_session
+        / lay_bf16.persistent_bytes_per_session
+    )
+    if reduction < BF16_REDUCTION_BAR:
+        print(
+            f"autotune-smoke: FAIL — bf16 persistent-byte reduction "
+            f"{reduction:.2f}x below the {BF16_REDUCTION_BAR}x bar"
+        )
+        failed = True
+    else:
+        print(f"autotune-smoke: bf16 reduction {reduction:.2f}x ok")
+    return 1 if failed else 0
+
+
 def run(
     quick: bool = False,
     out: str | None = None,
@@ -608,7 +835,7 @@ def run(
     rows = [bench_streams(S, reps=reps, n_ticks=ticks) for S in sweep]
     if autotune:
         for S in (8, 64):
-            rows.extend(autotune_block_p(S, reps=reps, n_ticks=ticks))
+            rows.extend(autotune_bank(S, reps=reps, n_ticks=ticks))
     if churn:
         rows.append(
             churn_bench(n_sessions=16 if quick else 32,
@@ -632,7 +859,11 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true", help="S ≤ 64, fewer reps (CI)")
     ap.add_argument("--autotune", action="store_true",
-                    help="sweep the megakernel block_p tile size at S=8,64")
+                    help="2-D (block_p, block_s) x prefetch sweep at S=8,64; "
+                         "persists winners to AUTOTUNE.json")
+    ap.add_argument("--autotune-smoke", action="store_true",
+                    help="CI gate: AUTOTUNE.json fresh for the S=8 key and no "
+                         ">10%% persistent bytes/session regression (no write)")
     ap.add_argument("--smoke", action="store_true",
                     help="regression gate vs the checked-in result file (no write)")
     ap.add_argument("--churn", action="store_true",
@@ -645,6 +876,8 @@ def main() -> None:
         "--out", default=str(DEFAULT_OUT), help="result file (JSON rows)"
     )
     args = ap.parse_args()
+    if args.autotune_smoke:
+        sys.exit(autotune_smoke())
     if args.smoke:
         sys.exit(smoke_check(Path(args.out)))
     if (args.churn or args.drift or args.probe) and not (

@@ -41,6 +41,27 @@ watchdog costs O(parked / probe_batch) dispatches per probe tick instead of
 O(parked); ``probe_batch=0`` falls back to the one-dispatch-per-session
 loop.  See ``stream_throughput.py --probe`` for the measured gap at 256
 parked sessions.
+
+Memory-system knobs (the bank's bandwidth/capacity levers; all optional):
+
+* ``SeparatorBank(..., dtype_policy="bf16")`` stores the persistent separator
+  state (B, Ĥ) in bfloat16 while every gradient and commit still accumulates
+  in f32 inside the kernel — casts happen only at the load/commit boundary.
+  Capacity doubles per byte of HBM: ``bank.layout.persistent_bytes_per_session``
+  drops 520 → 264 bytes for the paper's 4→2 shape.  Per-stream hyperparameter
+  rows stay f32 regardless of policy.  The default (``None``) follows
+  ``easi.dtype`` so existing configs keep their storage contract.
+* ``SeparatorBank(..., prefetch=True)`` double-buffers the X mini-batch DMA in
+  the fused megakernel: while stream-block t computes, t+1's tile is already
+  in flight.  Bit-identical to the sync path (tested); it's a real-TPU
+  latency-hiding win — on CPU interpret mode it just adds bookkeeping, so
+  leave it off locally.
+* Geometry (``block_p``, ``block_s``, prefetch) resolves from the checked-in
+  ``AUTOTUNE.json`` when the bank's (S, P, m, n, backend) key was swept —
+  run ``benchmarks/stream_throughput.py --autotune`` once per deployment
+  shape to refresh it.  Explicitly-passed knobs always win, and
+  ``dtype_policy`` is recorded but never auto-applied (a numerics contract
+  stays an explicit opt-in).  ``autotune=False`` opts out entirely.
 """
 import sys
 from pathlib import Path

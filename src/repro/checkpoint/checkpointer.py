@@ -151,6 +151,12 @@ class Checkpointer:
                 raise ValueError(
                     f"checkpoint leaf {name}: shape {arr.shape} != expected {ref.shape}"
                 )
+            # np.save round-trips extension dtypes (bfloat16 and friends) as
+            # raw void bytes; reinterpret against the target's dtype — the
+            # bits on disk ARE the storage-dtype bits, not a cast source
+            ref_np = np.dtype(ref.dtype)
+            if arr.dtype.kind == "V" and arr.dtype.itemsize == ref_np.itemsize:
+                arr = arr.view(ref_np)
             if sh_leaves is not None:
                 out.append(jax.device_put(arr, sh_leaves[i]))
             else:

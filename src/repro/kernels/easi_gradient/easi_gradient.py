@@ -23,6 +23,23 @@ same ``(streams, P-tiles)`` grid, but each grid step also computes its tile of
 ``Y = X Bᵀ`` in VMEM (X never leaves the kernel as Y in HBM until the output
 write), and each stream's LAST tile performs the SMBGD commit in-register:
 
+``prefetch=True`` swaps the X operand's block pipeline for an explicit
+double-buffered DMA: X stays in ``pltpu.ANY`` (HBM on TPU) and the kernel
+overlaps the NEXT tile's ``make_async_copy`` with the CURRENT tile's gradient
+fold — the paper's "compute never waits on memory" pipelining one level
+deeper than BlockSpec auto-pipelining, with the prefetch window crossing
+stream-block boundaries (the last tile of stream-block s prefetches tile 0 of
+stream-block s+1, so the only un-overlapped DMA is the very first one).  The
+synchronous path stays the fallback/oracle: on the interpret path the two are
+bit-identical (tested), so prefetch is purely a memory-system knob.
+
+Reduced-precision persistent state rides the same launches for free: the
+kernels cast every operand to f32 at load (``.astype`` below) and back to the
+output ref's dtype at commit, so a bank whose ``B``/``Ĥ`` live in bf16 (see
+``ops.BankLayout.dtype_policy``) runs the gradient fold and the commit
+accumulation entirely in f32 — casts happen ONLY at the load/commit
+boundaries, and frozen (inactive) slots round-trip bf16→f32→bf16 exactly.
+
     Ĥ' = γ̂·Ĥ + Σ_tiles S_tile      (γ̂ gated to 0 where step == 0)
     B' = B + Ĥ'·B ;  step' = step + 1
 
@@ -201,6 +218,50 @@ def _fold_tile_batched(y, w, nonlin: str):
     return eye - gram - cross + cross.transpose(0, 2, 1)
 
 
+def _commit_streams(
+    b,
+    h_ref,
+    step_ref,
+    gamma_hat_ref,
+    active_ref,
+    conv_ref,
+    b_out_ref,
+    h_out_ref,
+    step_out_ref,
+    conv_out_ref,
+    acc_ref,
+):
+    """The SMBGD commit tail shared by the sync and prefetch step kernels:
+    fold the accumulated gradient into ``Ĥ'``/``B'``/``step'``/``conv'`` for
+    one stream-block.  ``b`` is the block's B already cast to f32; all math
+    runs in f32 and casts back to the output refs' (storage) dtype only at
+    the final writes — frozen slots round-trip bf16→f32→bf16 exactly."""
+    step = step_ref[...]  # (bs, 1)
+    active = (active_ref[...] != 0)[:, :, None]  # (bs, 1, 1)
+    # the paper's first-batch rule, per stream: γ̂ gated off at step 0
+    gamma_hat = jnp.where(step == 0, 0.0, gamma_hat_ref[...])[:, :, None]
+    h_prev = h_ref[...].astype(jnp.float32)  # (bs, n, n)
+    h_new = gamma_hat * h_prev + acc_ref[...]
+    db = jax.lax.dot_general(
+        h_new, b, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )  # ΔB = Ĥ′B (bs, n, m)
+    b_new = b + db
+    # per-stream convergence statistic ‖ΔB‖_F / ‖B‖_F, in-register — no
+    # extra HBM round-trip.  Padding-exact: padded rows/cols of B are
+    # zero, so the padded Σw diagonal of Ĥ′ never reaches ΔB.
+    num = jnp.sqrt(jnp.sum(db * db, axis=(1, 2)))  # (bs,)
+    den = jnp.sqrt(jnp.sum(b * b, axis=(1, 2)))
+    delta = (num / jnp.maximum(den, 1e-12))[:, None]  # (bs, 1)
+    conv_prev = conv_ref[...].astype(jnp.float32)  # (bs, 1)
+    h_out_ref[...] = jnp.where(active, h_new, h_prev).astype(h_out_ref.dtype)
+    b_out_ref[...] = jnp.where(active, b_new, b).astype(b_out_ref.dtype)
+    step_out_ref[...] = step + jnp.where(active[:, :, 0], 1, 0).astype(
+        step.dtype
+    )
+    conv_out_ref[...] = jnp.where(active[:, :, 0], delta, conv_prev)
+
+
 def _smbgd_step_bank_kernel(
     x_ref,
     w_ref,
@@ -248,30 +309,99 @@ def _smbgd_step_bank_kernel(
 
     @pl.when(i == n_tiles - 1)
     def _commit():
-        step = step_ref[...]  # (bs, 1)
-        active = (active_ref[...] != 0)[:, :, None]  # (bs, 1, 1)
-        # the paper's first-batch rule, per stream: γ̂ gated off at step 0
-        gamma_hat = jnp.where(step == 0, 0.0, gamma_hat_ref[...])[:, :, None]
-        h_prev = h_ref[...].astype(jnp.float32)  # (bs, n, n)
-        h_new = gamma_hat * h_prev + acc_ref[...]
-        db = jax.lax.dot_general(
-            h_new, b, (((2,), (1,)), ((0,), (0,))),
-            preferred_element_type=jnp.float32,
-        )  # ΔB = Ĥ′B (bs, n, m)
-        b_new = b + db
-        # per-stream convergence statistic ‖ΔB‖_F / ‖B‖_F, in-register — no
-        # extra HBM round-trip.  Padding-exact: padded rows/cols of B are
-        # zero, so the padded Σw diagonal of Ĥ′ never reaches ΔB.
-        num = jnp.sqrt(jnp.sum(db * db, axis=(1, 2)))  # (bs,)
-        den = jnp.sqrt(jnp.sum(b * b, axis=(1, 2)))
-        delta = (num / jnp.maximum(den, 1e-12))[:, None]  # (bs, 1)
-        conv_prev = conv_ref[...].astype(jnp.float32)  # (bs, 1)
-        h_out_ref[...] = jnp.where(active, h_new, h_prev).astype(h_out_ref.dtype)
-        b_out_ref[...] = jnp.where(active, b_new, b).astype(b_out_ref.dtype)
-        step_out_ref[...] = step + jnp.where(active[:, :, 0], 1, 0).astype(
-            step.dtype
+        _commit_streams(
+            b, h_ref, step_ref, gamma_hat_ref, active_ref, conv_ref,
+            b_out_ref, h_out_ref, step_out_ref, conv_out_ref, acc_ref,
         )
-        conv_out_ref[...] = jnp.where(active[:, :, 0], delta, conv_prev)
+
+
+def _x_tile_dma(x_hbm, xbuf_ref, sem_ref, slot, t, n_tiles, block_s, block_p):
+    """Async-copy descriptor for global tile ``t``'s X block (stream-block
+    ``t // n_tiles``, tile ``t % n_tiles``) into double-buffer ``slot``."""
+    sb = t // n_tiles
+    i = jax.lax.rem(t, n_tiles)
+    return pltpu.make_async_copy(
+        x_hbm.at[
+            pl.ds(sb * block_s, block_s), pl.ds(i * block_p, block_p), :
+        ],
+        xbuf_ref.at[slot],
+        sem_ref.at[slot],
+    )
+
+
+def _smbgd_step_bank_kernel_prefetch(
+    x_hbm,
+    w_ref,
+    b_ref,
+    h_ref,
+    step_ref,
+    gamma_hat_ref,
+    active_ref,
+    conv_ref,
+    y_ref,
+    b_out_ref,
+    h_out_ref,
+    step_out_ref,
+    conv_out_ref,
+    acc_ref,
+    xbuf_ref,
+    sem_ref,
+    *,
+    nonlin: str,
+    n_tiles: int,
+    n_sblocks: int,
+    block_s: int,
+    block_p: int,
+):
+    """Double-buffered variant of ``_smbgd_step_bank_kernel``: X rides in
+    ``pltpu.ANY`` (HBM) and each grid step starts the NEXT tile's DMA before
+    folding the CURRENT tile, alternating two VMEM buffers.  The prefetch
+    window runs over the GLOBAL tile counter ``t = sb·n_tiles + i``, so it
+    crosses stream-block boundaries — only tile 0 of the whole launch pays an
+    un-overlapped DMA.  Everything downstream of the X load is byte-for-byte
+    the synchronous kernel (bit-identity on the interpret path is tested)."""
+    sb = pl.program_id(0)
+    i = pl.program_id(1)
+    t = sb * n_tiles + i  # global tile counter — the prefetch clock
+    total = n_sblocks * n_tiles
+
+    def dma(slot, t_idx):
+        return _x_tile_dma(
+            x_hbm, xbuf_ref, sem_ref, slot, t_idx, n_tiles, block_s, block_p
+        )
+
+    @pl.when(t == 0)
+    def _warmup():  # the one DMA nothing can hide
+        dma(0, 0).start()
+
+    @pl.when(t + 1 < total)
+    def _prefetch_next():  # overlap the next tile's DMA with this fold
+        dma(jax.lax.rem(t + 1, 2), t + 1).start()
+
+    dma(jax.lax.rem(t, 2), t).wait()
+    x = xbuf_ref[jax.lax.rem(t, 2)].astype(jnp.float32)  # (bs, bp, m)
+    b = b_ref[...].astype(jnp.float32)  # (bs, n, m)
+    y = jax.lax.dot_general(
+        x, b, (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )
+    y_ref[...] = y.astype(y_ref.dtype)
+    w = w_ref[...].astype(jnp.float32)
+    s_tile = _fold_tile_batched(y, w, nonlin)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = s_tile
+
+    @pl.when(i > 0)
+    def _acc():
+        acc_ref[...] += s_tile
+
+    @pl.when(i == n_tiles - 1)
+    def _commit():
+        _commit_streams(
+            b, h_ref, step_ref, gamma_hat_ref, active_ref, conv_ref,
+            b_out_ref, h_out_ref, step_out_ref, conv_out_ref, acc_ref,
+        )
 
 
 def _smbgd_probe_bank_kernel(
@@ -315,19 +445,103 @@ def _smbgd_probe_bank_kernel(
 
     @pl.when(i == n_tiles - 1)
     def _probe():
-        step = step_ref[...]  # (bs, 1)
-        active = active_ref[...] != 0  # (bs, 1)
-        gamma_hat = jnp.where(step == 0, 0.0, gamma_hat_ref[...])[:, :, None]
-        h_new = gamma_hat * h_ref[...].astype(jnp.float32) + acc_ref[...]
-        db = jax.lax.dot_general(
-            h_new, b, (((2,), (1,)), ((0,), (0,))),
-            preferred_element_type=jnp.float32,
-        )  # virtual ΔB = Ĥ′B (bs, n, m) — computed, never committed
-        num = jnp.sqrt(jnp.sum(db * db, axis=(1, 2)))  # (bs,)
-        den = jnp.sqrt(jnp.sum(b * b, axis=(1, 2)))
-        delta = (num / jnp.maximum(den, 1e-12))[:, None]  # (bs, 1)
-        conv_prev = conv_ref[...].astype(jnp.float32)
-        conv_out_ref[...] = jnp.where(active, delta, conv_prev)
+        _probe_streams(
+            b, h_ref, step_ref, gamma_hat_ref, active_ref, conv_ref,
+            conv_out_ref, acc_ref,
+        )
+
+
+def _probe_streams(
+    b,
+    h_ref,
+    step_ref,
+    gamma_hat_ref,
+    active_ref,
+    conv_ref,
+    conv_out_ref,
+    acc_ref,
+):
+    """The freeze-only probe tail shared by the sync and prefetch probe
+    kernels: the conv statistic a commit WOULD produce, and nothing else."""
+    step = step_ref[...]  # (bs, 1)
+    active = active_ref[...] != 0  # (bs, 1)
+    gamma_hat = jnp.where(step == 0, 0.0, gamma_hat_ref[...])[:, :, None]
+    h_new = gamma_hat * h_ref[...].astype(jnp.float32) + acc_ref[...]
+    db = jax.lax.dot_general(
+        h_new, b, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )  # virtual ΔB = Ĥ′B (bs, n, m) — computed, never committed
+    num = jnp.sqrt(jnp.sum(db * db, axis=(1, 2)))  # (bs,)
+    den = jnp.sqrt(jnp.sum(b * b, axis=(1, 2)))
+    delta = (num / jnp.maximum(den, 1e-12))[:, None]  # (bs, 1)
+    conv_prev = conv_ref[...].astype(jnp.float32)
+    conv_out_ref[...] = jnp.where(active, delta, conv_prev)
+
+
+def _smbgd_probe_bank_kernel_prefetch(
+    x_hbm,
+    w_ref,
+    b_ref,
+    h_ref,
+    step_ref,
+    gamma_hat_ref,
+    active_ref,
+    conv_ref,
+    conv_out_ref,
+    acc_ref,
+    xbuf_ref,
+    sem_ref,
+    *,
+    nonlin: str,
+    n_tiles: int,
+    n_sblocks: int,
+    block_s: int,
+    block_p: int,
+):
+    """Double-buffered variant of ``_smbgd_probe_bank_kernel`` — the same
+    global-tile-counter prefetch window as the step kernel's prefetch
+    variant, with the freeze-only probe tail (no ``Y``/state writes)."""
+    sb = pl.program_id(0)
+    i = pl.program_id(1)
+    t = sb * n_tiles + i
+    total = n_sblocks * n_tiles
+
+    def dma(slot, t_idx):
+        return _x_tile_dma(
+            x_hbm, xbuf_ref, sem_ref, slot, t_idx, n_tiles, block_s, block_p
+        )
+
+    @pl.when(t == 0)
+    def _warmup():
+        dma(0, 0).start()
+
+    @pl.when(t + 1 < total)
+    def _prefetch_next():
+        dma(jax.lax.rem(t + 1, 2), t + 1).start()
+
+    dma(jax.lax.rem(t, 2), t).wait()
+    x = xbuf_ref[jax.lax.rem(t, 2)].astype(jnp.float32)  # (bs, bp, m)
+    b = b_ref[...].astype(jnp.float32)  # (bs, n, m)
+    y = jax.lax.dot_general(
+        x, b, (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )
+    w = w_ref[...].astype(jnp.float32)
+    s_tile = _fold_tile_batched(y, w, nonlin)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = s_tile
+
+    @pl.when(i > 0)
+    def _acc():
+        acc_ref[...] += s_tile
+
+    @pl.when(i == n_tiles - 1)
+    def _probe():
+        _probe_streams(
+            b, h_ref, step_ref, gamma_hat_ref, active_ref, conv_ref,
+            conv_out_ref, acc_ref,
+        )
 
 
 def smbgd_probe_bank_pallas(
@@ -344,6 +558,7 @@ def smbgd_probe_bank_pallas(
     block_p: int = 512,
     block_s: int = 1,
     interpret: bool = True,
+    prefetch: bool = False,
 ):
     """Batched virtual-conv probe: ONE launch over frozen bank state.
 
@@ -351,7 +566,8 @@ def smbgd_probe_bank_pallas(
     but the only output is ``conv' (S, 1)`` — the per-stream statistic a
     commit would have produced (``conv`` carried through for masked-out
     streams).  The state operands are read-only: probing never mutates the
-    frozen separators.
+    frozen separators.  ``prefetch=True`` double-buffers the X tile DMA (see
+    the step kernel's prefetch notes; bit-identical on the interpret path).
     """
     S, P, m = X.shape
     n = B.shape[1]
@@ -359,28 +575,64 @@ def smbgd_probe_bank_pallas(
     assert S % block_s == 0, (S, block_s)
     assert B.shape == (S, n, m) and H_hat.shape == (S, n, n)
     n_tiles = P // block_p
-    kernel = functools.partial(
-        _smbgd_probe_bank_kernel, nonlin=nonlinearity, n_tiles=n_tiles
-    )
     bs = block_s
+    n_sblocks = S // bs
+    common_specs = [
+        pl.BlockSpec((bs, block_p, 1), lambda s, i: (s, i, 0)),
+        pl.BlockSpec((bs, n, m), lambda s, i: (s, 0, 0)),
+        pl.BlockSpec((bs, n, n), lambda s, i: (s, 0, 0)),
+        pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
+        pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
+        pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
+        pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
+    ]
+    if prefetch:
+        kernel = functools.partial(
+            _smbgd_probe_bank_kernel_prefetch,
+            nonlin=nonlinearity, n_tiles=n_tiles, n_sblocks=n_sblocks,
+            block_s=bs, block_p=block_p,
+        )
+        x_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+        scratch = [
+            pltpu.VMEM((bs, n, n), jnp.float32),
+            pltpu.VMEM((2, bs, block_p, m), X.dtype),  # the double buffer
+            pltpu.SemaphoreType.DMA((2,)),
+        ]
+        extra = _prefetch_call_params()
+    else:
+        kernel = functools.partial(
+            _smbgd_probe_bank_kernel, nonlin=nonlinearity, n_tiles=n_tiles
+        )
+        x_spec = pl.BlockSpec((bs, block_p, m), lambda s, i: (s, i, 0))
+        scratch = [pltpu.VMEM((bs, n, n), jnp.float32)]
+        extra = {}
     return pl.pallas_call(
         kernel,
-        grid=(S // bs, n_tiles),
-        in_specs=[
-            pl.BlockSpec((bs, block_p, m), lambda s, i: (s, i, 0)),
-            pl.BlockSpec((bs, block_p, 1), lambda s, i: (s, i, 0)),
-            pl.BlockSpec((bs, n, m), lambda s, i: (s, 0, 0)),
-            pl.BlockSpec((bs, n, n), lambda s, i: (s, 0, 0)),
-            pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
-            pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
-            pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
-            pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
-        ],
+        grid=(n_sblocks, n_tiles),
+        in_specs=[x_spec] + common_specs,
         out_specs=pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
         out_shape=jax.ShapeDtypeStruct((S, 1), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((bs, n, n), jnp.float32)],
+        scratch_shapes=scratch,
         interpret=interpret,
+        **extra,
     )(X, W, B, H_hat, step, gamma_hat, active, conv)
+
+
+def _prefetch_call_params() -> dict:
+    """Extra ``pallas_call`` kwargs for the prefetch kernels: the global-tile
+    prefetch window threads DMA state across grid cells, so BOTH grid
+    dimensions must execute sequentially on real TPU ("arbitrary", never
+    "parallel" — Mosaic must not megacore-split the grid).  Interpret mode
+    executes sequentially anyway; older JAX without ``TPUCompilerParams``
+    just omits the hint (interpret-only environments)."""
+    params = getattr(pltpu, "TPUCompilerParams", None)
+    if params is None:
+        return {}
+    return {
+        "compiler_params": params(
+            dimension_semantics=("arbitrary", "arbitrary")
+        )
+    }
 
 
 def smbgd_step_bank_pallas(
@@ -397,6 +649,7 @@ def smbgd_step_bank_pallas(
     block_p: int = 512,
     block_s: int = 1,
     interpret: bool = True,
+    prefetch: bool = False,
 ):
     """Whole-step fused SMBGD bank tick: ONE ``(stream-blocks, P-tiles)``
     launch.
@@ -408,10 +661,16 @@ def smbgd_step_bank_pallas(
     through unchanged for frozen streams).  ``block_s`` streams ride one grid
     cell as a batch dimension (S % block_s == 0) — per-stream math is
     independent, so the result is block_s invariant; larger blocks amortize
-    per-cell grid overhead.  Returns ``(Y (S, P, n), B', H_hat', step',
-    conv')`` — the full next bank state plus outputs, with no intermediate
-    tensors materialized in HBM; ``conv'`` is the relative update magnitude
-    ``‖Ĥ′B‖_F/‖B‖_F`` computed at commit time.
+    per-cell grid overhead.  ``prefetch=True`` replaces the X BlockSpec
+    pipeline with an explicit double-buffered ``make_async_copy`` from
+    ``pltpu.ANY`` — overlapping the next tile's DMA with the current fold —
+    and is bit-identical on the interpret path (tested).  ``B``/``H_hat``
+    may live in a reduced-precision storage dtype (bf16): the kernel casts
+    to f32 at load, accumulates the gradient and the commit in f32, and
+    casts back only at the output writes.  Returns ``(Y (S, P, n), B',
+    H_hat', step', conv')`` — the full next bank state plus outputs, with no
+    intermediate tensors materialized in HBM; ``conv'`` is the relative
+    update magnitude ``‖Ĥ′B‖_F/‖B‖_F`` computed at commit time.
     """
     S, P, m = X.shape
     n = B.shape[1]
@@ -419,23 +678,41 @@ def smbgd_step_bank_pallas(
     assert S % block_s == 0, (S, block_s)
     assert B.shape == (S, n, m) and H_hat.shape == (S, n, n)
     n_tiles = P // block_p
-    kernel = functools.partial(
-        _smbgd_step_bank_kernel, nonlin=nonlinearity, n_tiles=n_tiles
-    )
     bs = block_s
+    n_sblocks = S // bs
+    common_specs = [
+        pl.BlockSpec((bs, block_p, 1), lambda s, i: (s, i, 0)),
+        pl.BlockSpec((bs, n, m), lambda s, i: (s, 0, 0)),
+        pl.BlockSpec((bs, n, n), lambda s, i: (s, 0, 0)),
+        pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
+        pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
+        pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
+        pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
+    ]
+    if prefetch:
+        kernel = functools.partial(
+            _smbgd_step_bank_kernel_prefetch,
+            nonlin=nonlinearity, n_tiles=n_tiles, n_sblocks=n_sblocks,
+            block_s=bs, block_p=block_p,
+        )
+        x_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+        scratch = [
+            pltpu.VMEM((bs, n, n), jnp.float32),
+            pltpu.VMEM((2, bs, block_p, m), X.dtype),  # the double buffer
+            pltpu.SemaphoreType.DMA((2,)),
+        ]
+        extra = _prefetch_call_params()
+    else:
+        kernel = functools.partial(
+            _smbgd_step_bank_kernel, nonlin=nonlinearity, n_tiles=n_tiles
+        )
+        x_spec = pl.BlockSpec((bs, block_p, m), lambda s, i: (s, i, 0))
+        scratch = [pltpu.VMEM((bs, n, n), jnp.float32)]
+        extra = {}
     return pl.pallas_call(
         kernel,
-        grid=(S // bs, n_tiles),
-        in_specs=[
-            pl.BlockSpec((bs, block_p, m), lambda s, i: (s, i, 0)),
-            pl.BlockSpec((bs, block_p, 1), lambda s, i: (s, i, 0)),
-            pl.BlockSpec((bs, n, m), lambda s, i: (s, 0, 0)),
-            pl.BlockSpec((bs, n, n), lambda s, i: (s, 0, 0)),
-            pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
-            pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
-            pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
-            pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
-        ],
+        grid=(n_sblocks, n_tiles),
+        in_specs=[x_spec] + common_specs,
         out_specs=[
             pl.BlockSpec((bs, block_p, n), lambda s, i: (s, i, 0)),
             pl.BlockSpec((bs, n, m), lambda s, i: (s, 0, 0)),
@@ -450,6 +727,7 @@ def smbgd_step_bank_pallas(
             jax.ShapeDtypeStruct((S, 1), jnp.int32),
             jax.ShapeDtypeStruct((S, 1), jnp.float32),
         ],
-        scratch_shapes=[pltpu.VMEM((bs, n, n), jnp.float32)],
+        scratch_shapes=scratch,
         interpret=interpret,
+        **extra,
     )(X, W, B, H_hat, step, gamma_hat, active, conv)

@@ -21,6 +21,18 @@ Block-aligned inputs take the zero-copy fast path: when an array already
 matches its padded geometry the ``zeros().at[].set()`` staging copy is skipped
 entirely — persistent-layout callers (``stream.SeparatorBank`` in fused mode)
 pay no per-step padding.
+
+Memory-system knobs (PR 6):
+
+  * ``prefetch=True`` on the megakernel/probe entry points swaps the X
+    BlockSpec pipeline for an explicit double-buffered ``make_async_copy``
+    (bit-identical on the interpret path),
+  * ``bank_layout(dtype_policy="bf16")`` stores persistent ``B``/``Ĥ`` in
+    bf16 (f32 accumulation inside the kernels) — ``BankLayout`` owns the
+    byte accounting (``persistent_bytes_per_session``,
+    ``tick_hbm_bytes_per_stream``),
+  * the default ``block_s`` is derived from the layout's actual VMEM
+    residency against a budget (``default_block_s``), not a hardcoded cap.
 """
 from __future__ import annotations
 
@@ -40,6 +52,21 @@ from repro.kernels.easi_gradient.easi_gradient import (
 
 _LANE = 128  # TPU lane width (last-dim alignment)
 _SUBLANE = 8  # f32 sublane
+
+# Persistent-state storage dtypes selectable via ``dtype_policy``.  Storage is
+# what B/Ĥ occupy in HBM between ticks; the kernels ALWAYS accumulate the
+# gradient fold and the commit in f32 (casts only at load/commit boundaries),
+# so "bf16" halves the persistent HBM footprint per session without touching
+# the accumulation precision.
+STORAGE_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16}
+
+# VMEM budget for the default block_s derivation: resident bytes per stream x
+# block_s must fit.  Compiled kernels get half of a 16 MiB TPU VMEM (the
+# other half is headroom for Mosaic's own pipeline buffers); the interpreter
+# has no VMEM but the same accounting bounds its per-cell host temporaries.
+_VMEM_BUDGET_ENV = "REPRO_VMEM_BUDGET_BYTES"
+_DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024
+_DEFAULT_INTERPRET_BUDGET = 64 * 1024 * 1024
 
 
 def _interpret_default() -> bool:
@@ -67,6 +94,11 @@ class BankLayout:
     re-pads.  Pad/unpad happen only at the API boundary (admission, eviction,
     diagnostics).  ``interpret`` relaxes lane alignment to the f32 sublane so
     CPU interpret-mode tests exercise realistic (non-trivial) padding.
+
+    ``dtype_policy`` names the persistent storage dtype of ``B``/``Ĥ``
+    (``"f32"`` or ``"bf16"``; see ``STORAGE_DTYPES``) — the layout owns the
+    bank's HBM byte accounting, so capacity math (sessions per device,
+    bytes per tick) reads straight off it.
     """
 
     n: int  # logical components
@@ -76,6 +108,44 @@ class BankLayout:
     m_pad: int
     P_pad: int
     block_p: int
+    dtype_policy: str = "f32"
+
+    @property
+    def storage_dtype(self):
+        """Persistent B/Ĥ storage dtype (kernels still accumulate in f32)."""
+        return STORAGE_DTYPES[self.dtype_policy]
+
+    @property
+    def persistent_bytes_per_session(self) -> int:
+        """HBM bytes one session's persistent state occupies between ticks:
+        padded ``B`` + ``Ĥ`` at the storage dtype, plus the int32 ``step``
+        and f32 ``conv`` scalars.  THE capacity number — sessions per device
+        = HBM budget / this."""
+        itemsize = jnp.dtype(self.storage_dtype).itemsize
+        return (self.n_pad * self.m_pad + self.n_pad * self.n_pad) * itemsize + 4 + 4
+
+    @property
+    def tick_hbm_bytes_per_stream(self) -> int:
+        """Estimated HBM traffic one stream contributes to one megakernel
+        tick: read X + W, read AND write B/Ĥ (storage dtype), write Y, plus
+        the scalar side channels.  An analytic floor — actual traffic adds
+        re-reads only if the compiler spills."""
+        itemsize = jnp.dtype(self.storage_dtype).itemsize
+        x_bytes = self.P_pad * self.m_pad * 4
+        w_bytes = self.P_pad * 4
+        y_bytes = self.P_pad * self.n_pad * 4
+        state_bytes = 2 * (self.n_pad * self.m_pad + self.n_pad * self.n_pad) * itemsize
+        return x_bytes + w_bytes + y_bytes + state_bytes + 4 * 2 + 4 * 2
+
+    def vmem_resident_bytes_per_stream(self, prefetch: bool = False) -> int:
+        """Conservative per-stream VMEM residency of one megakernel grid
+        cell — what the default ``block_s`` derivation budgets against."""
+        return _resident_bytes_per_stream(
+            self.block_p, self.n_pad, self.m_pad,
+            x_itemsize=4,
+            state_itemsize=jnp.dtype(self.storage_dtype).itemsize,
+            prefetch=prefetch,
+        )
 
 
 def bank_layout(
@@ -85,19 +155,27 @@ def bank_layout(
     *,
     block_p: int | None = None,
     interpret: bool | None = None,
+    dtype_policy: str = "f32",
 ) -> BankLayout:
     """Compute the lane/sublane-aligned persistent layout for ``(n, m, P)``.
 
     One geometry rule for the whole stack: ``n`` (last dim of Y/Ĥ) and ``m``
     (last dim of X/B) are lane-aligned; ``P`` rounds up to a whole number of
-    ``block_p`` tiles.
+    ``block_p`` tiles.  ``dtype_policy`` selects the persistent storage dtype
+    (see ``BankLayout``).
     """
     if interpret is None:
         interpret = _interpret_default()
+    if dtype_policy not in STORAGE_DTYPES:
+        raise ValueError(
+            f"dtype_policy must be one of {sorted(STORAGE_DTYPES)}, "
+            f"got {dtype_policy!r}"
+        )
     P_pad, n_pad, block_p = _pad_geometry(P, n, block_p, interpret)
     m_pad = _round_up(max(m, _SUBLANE), _LANE if not interpret else _SUBLANE)
     return BankLayout(
-        n=n, m=m, P=P, n_pad=n_pad, m_pad=m_pad, P_pad=P_pad, block_p=block_p
+        n=n, m=m, P=P, n_pad=n_pad, m_pad=m_pad, P_pad=P_pad, block_p=block_p,
+        dtype_policy=dtype_policy,
     )
 
 
@@ -166,21 +244,88 @@ def easi_gradient_bank(
     return S[:, :n, :n]
 
 
-def _default_block_s(S: int, cap: int) -> int:
-    """Largest divisor of S ≤ cap — streams batched per grid cell.  Per-cell
-    launch overhead (and, in interpret mode, the per-cell grid-loop cost)
-    amortizes over the stream block; per-stream math is independent so any
-    divisor is numerically equivalent (tested).  The cap is backend-aware at
-    the call site: compiled kernels budget VMEM (block_s scales every resident
-    block), the interpreter only pays grid-loop iterations."""
+def _resident_bytes_per_stream(
+    block_p: int,
+    n_pad: int,
+    m_pad: int,
+    *,
+    x_itemsize: int = 4,
+    state_itemsize: int = 4,
+    prefetch: bool = False,
+) -> int:
+    """Conservative VMEM bytes ONE stream keeps resident in a megakernel grid
+    cell: the X tile (doubled when prefetch double-buffers it), the W rows,
+    B/Ĥ in+out blocks at the storage dtype, the f32 gradient accumulator, the
+    Y output tile, and the f32 tile-fold temporaries (y, g, y·w)."""
+    x_bytes = block_p * m_pad * x_itemsize * (2 if prefetch else 1)
+    w_bytes = block_p * 4
+    state_bytes = 2 * (n_pad * m_pad + n_pad * n_pad) * state_itemsize
+    acc_bytes = n_pad * n_pad * 4
+    y_bytes = block_p * n_pad * x_itemsize
+    tmp_bytes = 3 * block_p * n_pad * 4
+    return x_bytes + w_bytes + state_bytes + acc_bytes + y_bytes + tmp_bytes
+
+
+def vmem_budget_bytes(interpret: bool) -> int:
+    """The per-cell VMEM budget the default ``block_s`` derivation targets.
+    Override with ``REPRO_VMEM_BUDGET_BYTES`` (note: resolved at trace time —
+    a jitted caller caches the resolution with the program)."""
+    env = os.environ.get(_VMEM_BUDGET_ENV)
+    if env:
+        return int(env)
+    return _DEFAULT_INTERPRET_BUDGET if interpret else _DEFAULT_VMEM_BUDGET
+
+
+def _default_block_s(
+    S: int, *, resident_bytes: int, interpret: bool
+) -> int:
+    """Largest divisor of S whose stream-block fits the VMEM budget —
+    ``resident_bytes × block_s ≤ vmem_budget_bytes()``.  Streams batched per
+    grid cell amortize per-cell launch overhead (and, in interpret mode, the
+    per-cell grid-loop cost); per-stream math is independent so any divisor
+    is numerically equivalent (tested).  Deriving the cap from the layout's
+    actual residency (instead of a hardcoded 8/32) means large ``(m, n)``
+    shapes shrink ``block_s`` instead of silently blowing VMEM — and a shape
+    whose SINGLE stream exceeds the budget fails loudly on compiled backends
+    (the interpreter clamps to 1: no VMEM to blow, only host memory)."""
+    budget = vmem_budget_bytes(interpret)
+    cap = budget // max(resident_bytes, 1)
+    if cap < 1:
+        if not interpret:
+            raise ValueError(
+                f"one stream's megakernel residency ({resident_bytes} bytes) "
+                f"exceeds the VMEM budget ({budget} bytes) — shrink block_p "
+                f"or raise {_VMEM_BUDGET_ENV}"
+            )
+        cap = 1
     for bs in range(min(S, cap), 0, -1):
         if S % bs == 0:
             return bs
     return 1
 
 
+def default_block_s(
+    S: int,
+    layout: BankLayout,
+    *,
+    prefetch: bool = False,
+    interpret: bool | None = None,
+) -> int:
+    """Public form of the default ``block_s`` derivation for a layout —
+    what ``smbgd_step_bank`` resolves when ``block_s=None`` (benchmarks and
+    tests use this to predict/verify the resolution)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _default_block_s(
+        S,
+        resident_bytes=layout.vmem_resident_bytes_per_stream(prefetch),
+        interpret=interpret,
+    )
+
+
 @functools.partial(
-    jax.jit, static_argnames=("nonlinearity", "block_p", "block_s", "interpret")
+    jax.jit,
+    static_argnames=("nonlinearity", "block_p", "block_s", "interpret", "prefetch"),
 )
 def smbgd_step_bank(
     X: jnp.ndarray,
@@ -196,6 +341,7 @@ def smbgd_step_bank(
     block_p: int | None = None,
     block_s: int | None = None,
     interpret: bool | None = None,
+    prefetch: bool = False,
 ):
     """Whole-step fused bank tick on persistent-padded state (zero staging).
 
@@ -204,15 +350,19 @@ def smbgd_step_bank(
 
       * ``X (S, P_pad, m_pad)``, ``W (S, P_pad, 1)`` f32 weight rows
         (per-stream w_p = μ_s β_s^{P-1-p}, zero in padded rows),
-      * ``B (S, n_pad, m_pad)``, ``H_hat (S, n_pad, n_pad)``,
+      * ``B (S, n_pad, m_pad)``, ``H_hat (S, n_pad, n_pad)`` — in the
+        layout's storage dtype (f32 or bf16; the kernel accumulates in f32
+        either way and writes back in the storage dtype),
       * ``step (S,)`` or ``(S, 1)`` int32, ``gamma_hat (S,)`` or ``(S, 1)``
         f32 (γ̂_s = γ_s β_s^{P-1}), ``active (S,)`` or ``(S, 1)`` bool/int,
       * ``conv (S,)`` or ``(S, 1)`` f32 — previous per-stream convergence
         statistic, carried through for frozen streams (defaults to +inf,
         "never measured").
 
-    ``block_s`` batches that many streams per grid cell (default: largest
-    divisor of S ≤ 8 compiled / ≤ 32 interpreted).  Returns
+    ``block_s`` batches that many streams per grid cell (default: the
+    largest divisor of S whose per-cell residency fits the VMEM budget —
+    see ``default_block_s``).  ``prefetch=True`` double-buffers the X tile
+    DMA (bit-identical on the interpret path).  Returns
     ``(Y (S, P_pad, n_pad), B', H_hat', step' (S,), conv' (S,))`` where
     ``conv'`` is the relative update magnitude ``‖Ĥ′B‖_F/‖B‖_F`` computed
     inside the commit (see ``core.metrics.update_magnitude`` for the
@@ -225,7 +375,16 @@ def smbgd_step_bank(
     if block_p is None:
         block_p = min(512, _round_up(P_pad, _SUBLANE))
     if block_s is None:
-        block_s = _default_block_s(S_streams, cap=32 if interpret else 8)
+        block_s = _default_block_s(
+            S_streams,
+            resident_bytes=_resident_bytes_per_stream(
+                block_p, n_pad, m_pad,
+                x_itemsize=X.dtype.itemsize,
+                state_itemsize=B.dtype.itemsize,
+                prefetch=prefetch,
+            ),
+            interpret=interpret,
+        )
     if P_pad % block_p or n_pad % _SUBLANE or m_pad % _SUBLANE:
         raise ValueError(
             f"smbgd_step_bank requires persistent-layout inputs; got "
@@ -255,12 +414,14 @@ def smbgd_step_bank(
         block_p=block_p,
         block_s=block_s,
         interpret=interpret,
+        prefetch=prefetch,
     )
     return Y, B_new, H_new, step_new.reshape(S_streams), conv_new.reshape(S_streams)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("nonlinearity", "block_p", "block_s", "interpret")
+    jax.jit,
+    static_argnames=("nonlinearity", "block_p", "block_s", "interpret", "prefetch"),
 )
 def smbgd_probe_bank(
     X: jnp.ndarray,
@@ -276,6 +437,7 @@ def smbgd_probe_bank(
     block_p: int | None = None,
     block_s: int | None = None,
     interpret: bool | None = None,
+    prefetch: bool = False,
 ) -> jnp.ndarray:
     """Freeze-only probe launch: the conv statistic a ``smbgd_step_bank``
     tick WOULD commit, without committing anything.
@@ -294,7 +456,16 @@ def smbgd_probe_bank(
     if block_p is None:
         block_p = min(512, _round_up(P_pad, _SUBLANE))
     if block_s is None:
-        block_s = _default_block_s(S_streams, cap=32 if interpret else 8)
+        block_s = _default_block_s(
+            S_streams,
+            resident_bytes=_resident_bytes_per_stream(
+                block_p, n_pad, m_pad,
+                x_itemsize=X.dtype.itemsize,
+                state_itemsize=B.dtype.itemsize,
+                prefetch=prefetch,
+            ),
+            interpret=interpret,
+        )
     if P_pad % block_p or n_pad % _SUBLANE or m_pad % _SUBLANE:
         raise ValueError(
             f"smbgd_probe_bank requires persistent-layout inputs; got "
@@ -324,5 +495,6 @@ def smbgd_probe_bank(
         block_p=block_p,
         block_s=block_s,
         interpret=interpret,
+        prefetch=prefetch,
     )
     return conv_new.reshape(S_streams)

@@ -84,6 +84,29 @@ a ``min_ticks`` floor, and an optional Amari-index confirmation for sessions
 whose true mixing matrix was registered via ``set_mixing`` (the blind
 statistic can dip early; the Amari check vetoes eviction until the separator
 actually separates).
+
+Memory-system knobs (PR 6) — all set on the ``SeparatorBank`` the service
+wraps; the engine threads them to every bank it derives (probe banks pin the
+serving bank's resolved geometry with ``autotune=False``):
+
+  * ``dtype_policy="bf16"`` halves the persistent per-session HBM footprint
+    (``bank.layout.persistent_bytes_per_session``) — the capacity lever for
+    "how many sessions fit per device".  Gradient fold and commit
+    accumulation stay f32 in VMEM; only stored ``B``/``Ĥ`` shrink.  The
+    per-stream hyperparameter rows (μ boost) and the conv statistic remain
+    f32 operands regardless of policy — they are compute-side, not
+    persistent state.  Worth it on real TPU at scale; on CPU interpret it
+    only changes bytes, not speed.
+  * ``prefetch=True`` double-buffers the megakernel's X-tile DMA so the next
+    tile streams in during the current tile's gradient fold.  Turn it on for
+    real TPU deployments (it is where the bandwidth overlap pays); on the
+    interpret path it is bit-identical to the sync path and slightly slower
+    (extra copies), so leave it off for CPU smoke runs.
+  * tile geometry (``block_p``/``block_s``) and ``prefetch`` resolve from the
+    persisted autotune cache (``AUTOTUNE.json``, see ``stream.autotune``)
+    when left unset — run ``benchmarks/stream_throughput.py --autotune`` on
+    the target backend once per deployment shape.  ``dtype_policy`` is never
+    auto-applied: precision is a caller decision.
 """
 from __future__ import annotations
 
@@ -1088,9 +1111,12 @@ class SeparationService:
 
     def _probe_bank(self, width: int) -> Tuple[SeparatorBank, Any]:
         """The (cached) transient probe bank of ``width`` slots: same step
-        geometry as the serving bank (fused / pallas / block_p) with the
-        bank's base hyperparameters — exactly what ``_virtual_conv`` models
-        per session — and its jitted no-commit probe step."""
+        geometry AND memory-system knobs as the serving bank (fused / pallas
+        / block_p / dtype_policy / prefetch) with the bank's base
+        hyperparameters — exactly what ``_virtual_conv`` models per session —
+        and its jitted no-commit probe step.  ``autotune=False``: the probe
+        width is a transient pow-2, not a shape anyone tuned for, so the
+        serving bank's resolved geometry is pinned rather than re-looked-up."""
         got = self._probe_banks.get(width)
         if got is None:
             bank = SeparatorBank(
@@ -1100,7 +1126,14 @@ class SeparationService:
                 algorithm="smbgd_batched",
                 use_pallas=self.bank.use_pallas,
                 fused=self.bank.fused,
-                block_p=self.bank.block_p,
+                block_p=(
+                    self.bank.layout.block_p
+                    if self.bank.fused
+                    else self.bank.block_p
+                ),
+                dtype_policy=self.bank.dtype_policy,
+                prefetch=bool(self.bank.prefetch),
+                autotune=False,
             )
             got = (bank, bank.make_probe())
             self._probe_banks[width] = got

@@ -45,8 +45,21 @@ no-mutation probe mode the serving layer's batched drift watchdog runs over
 transient banks of parked (frozen) separators (``stack_states`` +
 ``unstack_states`` are the in/out ramps).
 
+Memory system (PR 6): ``dtype_policy="bf16"`` stores the persistent
+``B``/``Ĥ`` in bf16 — the kernels (and the vmap fallbacks) still run the
+gradient fold and the commit accumulation in f32, casting only at the
+load/commit boundaries, so separation quality tracks the f32 oracle within
+a tested tolerance while the per-session HBM footprint halves (the
+capacity number: ``bank.layout.persistent_bytes_per_session``).
+``prefetch=True`` double-buffers the megakernel's X tile DMA (bit-identical
+on the interpret path).  Both knobs — plus ``block_p``/``block_s`` — load
+from the persisted autotune cache (``stream.autotune``, ``AUTOTUNE.json``)
+when left unset; ``autotune=False`` opts out.  ``dtype_policy`` is never
+auto-applied from the cache (precision is a caller decision).
+
 Checkpointing: ``BankState`` is a plain pytree of arrays (padded or not), so
-``checkpoint.Checkpointer`` round-trips it unmodified (tested).
+``checkpoint.Checkpointer`` round-trips it unmodified — bf16 banks
+checkpoint and restore at the storage dtype (tested).
 """
 from __future__ import annotations
 
@@ -94,7 +107,15 @@ class SeparatorBank:
     state (requires ``algorithm="smbgd_batched"``); ``block_p`` overrides the
     kernel's P-tile size (autotune knob; default picks ``min(512, P)``
     rounded to the sublane) and ``block_s`` the number of streams batched per
-    grid cell (must divide ``n_streams``; default: largest divisor ≤ 8).
+    grid cell (must divide ``n_streams``; default: largest divisor whose
+    per-cell VMEM residency fits the budget — see ``ops.default_block_s``).
+
+    ``dtype_policy`` ("f32"/"bf16") sets the persistent storage dtype of
+    ``B``/``Ĥ`` (accumulation stays f32 everywhere); the default ``None``
+    follows ``easi.dtype`` — the legacy contract where a bf16 config stores
+    bf16 state.  ``prefetch`` toggles the megakernel's double-buffered X DMA.
+    Geometry knobs left as ``None`` resolve from the persisted autotune cache
+    (``AUTOTUNE.json``) unless ``autotune=False``.
     """
 
     easi: EASIConfig
@@ -106,10 +127,24 @@ class SeparatorBank:
     hyperparams: Optional[BankHyperparams] = None
     block_p: Optional[int] = None
     block_s: Optional[int] = None
+    dtype_policy: Optional[str] = None  # None → follow easi.dtype
+    prefetch: Optional[bool] = None
+    autotune: bool = True
 
     def __post_init__(self) -> None:
         if self.n_streams < 1:
             raise ValueError("n_streams must be >= 1")
+        from repro.kernels.easi_gradient import ops as easi_ops
+
+        if (
+            self.dtype_policy is not None
+            and self.dtype_policy not in easi_ops.STORAGE_DTYPES
+        ):
+            raise ValueError(
+                f"dtype_policy must be one of "
+                f"{sorted(easi_ops.STORAGE_DTYPES)}, got {self.dtype_policy!r}"
+            )
+        self._resolve_autotune()
         # reuse Separator's alias resolution + validation
         sep = Separator(self.easi, self.opt, self.algorithm, self.use_pallas)
         object.__setattr__(self, "algorithm", sep.algorithm)
@@ -131,6 +166,65 @@ class SeparatorBank:
                         f"({self.n_streams},), got {shape}"
                     )
 
+    def _resolve_autotune(self) -> None:
+        """Fill unset GEOMETRY knobs (block_p/block_s/prefetch) from the
+        persisted autotune cache — best-effort, fused banks only.  The
+        resolved values become the dataclass fields, so everything derived
+        from this bank (sharded local banks, probe banks built by the
+        serving layer) inherits the tuned geometry rather than re-resolving
+        against a different shape key."""
+        if not (self.fused and self.autotune):
+            return
+        if not (
+            self.block_p is None
+            or self.block_s is None
+            or self.prefetch is None
+        ):
+            return
+        try:
+            from repro.stream import autotune as autotune_lib
+
+            entry = autotune_lib.lookup(
+                self.n_streams,
+                self.opt.batch_size,
+                self.easi.n_features,
+                self.easi.n_components,
+            )
+        except Exception:  # corrupt cache must never break bank construction
+            entry = None
+        if not entry:
+            return
+        if self.block_p is None and entry.get("block_p"):
+            object.__setattr__(self, "block_p", int(entry["block_p"]))
+        if (
+            self.block_s is None
+            and entry.get("block_s")
+            and self.n_streams % int(entry["block_s"]) == 0
+        ):
+            object.__setattr__(self, "block_s", int(entry["block_s"]))
+        if self.prefetch is None and "prefetch" in entry:
+            object.__setattr__(self, "prefetch", bool(entry["prefetch"]))
+
+    @property
+    def resolved_dtype_policy(self) -> str:
+        """``dtype_policy`` with the ``None`` default resolved against
+        ``easi.dtype`` (a bf16 config stores bf16 — the legacy contract)."""
+        if self.dtype_policy is not None:
+            return self.dtype_policy
+        from repro.kernels.easi_gradient import ops as easi_ops
+
+        for name, dt in easi_ops.STORAGE_DTYPES.items():
+            if jnp.dtype(dt) == jnp.dtype(self.easi.dtype):
+                return name
+        return "f32"
+
+    @property
+    def storage_dtype(self):
+        """Persistent B/Ĥ dtype per ``dtype_policy`` (compute stays f32)."""
+        from repro.kernels.easi_gradient import ops as easi_ops
+
+        return easi_ops.STORAGE_DTYPES[self.resolved_dtype_policy]
+
     @property
     def _sep(self) -> Separator:
         return Separator(self.easi, self.opt, self.algorithm, self.use_pallas)
@@ -147,23 +241,32 @@ class SeparatorBank:
             self.easi.n_features,
             self.opt.batch_size,
             block_p=self.block_p,
+            dtype_policy=self.resolved_dtype_policy,
         )
 
     def pad_state(self, state: BankState) -> BankState:
-        """Logical → persistent-padded state (no-op if already padded)."""
+        """Logical → persistent-padded state in the STORAGE dtype (no-op if
+        already padded and stored right) — the cast-in ramp of the dtype
+        policy: logical f32 states (admission, stacked probe banks,
+        checkpoints written before a policy change) enter bf16 banks here."""
         lay = self.layout
+        dt = lay.storage_dtype
         if state.B.shape[-2:] == (lay.n_pad, lay.m_pad):
-            return state
+            if state.B.dtype == dt and state.H_hat.dtype == dt:
+                return state
+            return state._replace(
+                B=state.B.astype(dt), H_hat=state.H_hat.astype(dt)
+            )
         S = state.B.shape[0]
         B = (
-            jnp.zeros((S, lay.n_pad, lay.m_pad), state.B.dtype)
+            jnp.zeros((S, lay.n_pad, lay.m_pad), dt)
             .at[:, : lay.n, : lay.m]
-            .set(state.B)
+            .set(state.B.astype(dt))
         )
         H = (
-            jnp.zeros((S, lay.n_pad, lay.n_pad), state.H_hat.dtype)
+            jnp.zeros((S, lay.n_pad, lay.n_pad), dt)
             .at[:, : lay.n, : lay.n]
-            .set(state.H_hat)
+            .set(state.H_hat.astype(dt))
         )
         return BankState(B=B, H_hat=H, step=state.step, conv=state.conv)
 
@@ -208,9 +311,10 @@ class SeparatorBank:
         """
         keys = jax.random.split(key, self.n_streams)
         sub = jax.vmap(lambda k: smbgd_lib.init_state(self.easi, k))(keys)
+        dt = self.storage_dtype
         state = BankState(
-            B=sub.B,
-            H_hat=sub.H_hat,
+            B=sub.B.astype(dt),
+            H_hat=sub.H_hat.astype(dt),
             step=sub.step,
             conv=jnp.full((self.n_streams,), jnp.inf, jnp.float32),
         )
@@ -227,7 +331,7 @@ class SeparatorBank:
             B_slot = (
                 jnp.zeros((lay.n_pad, lay.m_pad), state.B.dtype)
                 .at[: lay.n, : lay.m]
-                .set(sub.B)
+                .set(sub.B.astype(state.B.dtype))
             )
             H_slot = jnp.zeros((lay.n_pad, lay.n_pad), state.H_hat.dtype)
             return BankState(
@@ -237,18 +341,23 @@ class SeparatorBank:
                 conv=conv,
             )
         return BankState(
-            B=state.B.at[slot].set(sub.B),
-            H_hat=state.H_hat.at[slot].set(sub.H_hat),
+            B=state.B.at[slot].set(sub.B.astype(state.B.dtype)),
+            H_hat=state.H_hat.at[slot].set(sub.H_hat.astype(state.H_hat.dtype)),
             step=state.step.at[slot].set(sub.step),
             conv=conv,
         )
 
     def slot_state(self, state: BankState, slot: int) -> SMBGDState:
         """Extract one stream's state as a single-stream ``SMBGDState``
-        (always logical shapes — unpads the eviction boundary)."""
+        (always logical shapes — unpads the eviction boundary).  Logical
+        states are the bank-independent interchange format, so bf16 storage
+        casts back to the config compute dtype here."""
         state = self.unpad_state(state)  # no-op on logical state
+        dt = self.easi.dtype
         return SMBGDState(
-            B=state.B[slot], H_hat=state.H_hat[slot], step=state.step[slot]
+            B=state.B[slot].astype(dt),
+            H_hat=state.H_hat[slot].astype(dt),
+            step=state.step[slot],
         )
 
     def set_slot(self, state: BankState, slot, sub: SMBGDState) -> BankState:
@@ -263,12 +372,12 @@ class SeparatorBank:
             B_slot = (
                 jnp.zeros((lay.n_pad, lay.m_pad), state.B.dtype)
                 .at[: lay.n, : lay.m]
-                .set(sub.B)
+                .set(sub.B.astype(state.B.dtype))
             )
             H_slot = (
                 jnp.zeros((lay.n_pad, lay.n_pad), state.H_hat.dtype)
                 .at[: lay.n, : lay.n]
-                .set(sub.H_hat)
+                .set(sub.H_hat.astype(state.H_hat.dtype))
             )
             return BankState(
                 B=state.B.at[slot].set(B_slot),
@@ -277,8 +386,8 @@ class SeparatorBank:
                 conv=conv,
             )
         return BankState(
-            B=state.B.at[slot].set(sub.B),
-            H_hat=state.H_hat.at[slot].set(sub.H_hat),
+            B=state.B.at[slot].set(sub.B.astype(state.B.dtype)),
+            H_hat=state.H_hat.at[slot].set(sub.H_hat.astype(state.H_hat.dtype)),
             step=state.step.at[slot].set(sub.step),
             conv=conv,
         )
@@ -296,23 +405,36 @@ class SeparatorBank:
         return jnp.full((state.B.shape[0],), jnp.inf, jnp.float32)
 
     @staticmethod
-    def stack_states(states) -> BankState:
+    def stack_states(states, dtype=None) -> BankState:
         """Stack S single-stream ``SMBGDState``s into a (logical) ``BankState``
         — feed through ``pad_state`` to enter a fused bank.  Single-stream
-        states carry no convergence statistic, so ``conv`` restarts at +inf."""
+        states carry no convergence statistic, so ``conv`` restarts at +inf.
+        ``dtype`` (optional) casts ``B``/``Ĥ`` on the way in — handy when the
+        target bank stores bf16 and the caller wants the cast before the
+        stack allocates (``pad_state`` would otherwise do it after)."""
+        B = jnp.stack([jnp.asarray(s.B) for s in states])
+        H = jnp.stack([jnp.asarray(s.H_hat) for s in states])
+        if dtype is not None:
+            B, H = B.astype(dtype), H.astype(dtype)
         return BankState(
-            B=jnp.stack([jnp.asarray(s.B) for s in states]),
-            H_hat=jnp.stack([jnp.asarray(s.H_hat) for s in states]),
+            B=B,
+            H_hat=H,
             step=jnp.stack([jnp.asarray(s.step) for s in states]),
             conv=jnp.full((len(states),), jnp.inf, jnp.float32),
         )
 
     def unstack_states(self, state: BankState) -> list:
         """Inverse of ``stack_states``: a list of per-stream single-stream
-        ``SMBGDState``s (always logical shapes — unpads fused-bank state)."""
+        ``SMBGDState``s (always logical shapes AND the config compute dtype
+        — unpads fused-bank state and upcasts bf16 storage)."""
         state = self.unpad_state(state)
+        dt = self.easi.dtype
         return [
-            SMBGDState(B=state.B[s], H_hat=state.H_hat[s], step=state.step[s])
+            SMBGDState(
+                B=state.B[s].astype(dt),
+                H_hat=state.H_hat[s].astype(dt),
+                step=state.step[s],
+            )
             for s in range(state.B.shape[0])
         ]
 
@@ -440,6 +562,7 @@ class SeparatorBank:
                 nonlinearity=self.easi.nonlinearity,
                 block_p=lay.block_p,
                 block_s=self.block_s,
+                prefetch=bool(self.prefetch),
             )
         new_state, _ = self._step_all(state, X)
         if active is None:
@@ -493,6 +616,7 @@ class SeparatorBank:
             nonlinearity=self.easi.nonlinearity,
             block_p=lay.block_p,
             block_s=self.block_s,
+            prefetch=bool(self.prefetch),
         )
         return BankState(B=B_new, H_hat=H_new, step=step_new, conv=conv_new), Y
 
@@ -502,6 +626,23 @@ class SeparatorBank:
         X: jnp.ndarray,
         hyperparams: Optional[BankHyperparams] = None,
     ):
+        # dtype policy on the vmap paths mirrors the megakernel's boundary
+        # casts: bf16-stored banks upcast to f32, run the exact f32 step, and
+        # downcast only the committed B/Ĥ — accumulation never happens at
+        # storage precision.
+        if state.B.dtype != jnp.float32:
+            dt = state.B.dtype
+            f32 = state._replace(
+                B=state.B.astype(jnp.float32),
+                H_hat=state.H_hat.astype(jnp.float32),
+            )
+            new_state, Y = self._step_all(f32, X, hyperparams)
+            return (
+                new_state._replace(
+                    B=new_state.B.astype(dt), H_hat=new_state.H_hat.astype(dt)
+                ),
+                Y,
+            )
         if hyperparams is not None or self.hyperparams is not None:
             return self._step_hetero(state, X, hyperparams)
         if self.algorithm == "smbgd_batched" and self.use_pallas:
@@ -595,6 +736,20 @@ class SeparatorBank:
         typically far larger; don't compare it against tick-tuned thresholds.
         """
         if self.algorithm == "sgd":
+            if state.B.dtype != jnp.float32:  # f32 compute (see _step_all)
+                dt = state.B.dtype
+                f32 = state._replace(
+                    B=state.B.astype(jnp.float32),
+                    H_hat=state.H_hat.astype(jnp.float32),
+                )
+                new_state, Y = self.epoch(f32, X)
+                return (
+                    new_state._replace(
+                        B=new_state.B.astype(dt),
+                        H_hat=new_state.H_hat.astype(dt),
+                    ),
+                    Y,
+                )
             sep = self._sep
             sub = SMBGDState(B=state.B, H_hat=state.H_hat, step=state.step)
             new_sub, Y = jax.vmap(sep.epoch)(sub, X)
@@ -625,13 +780,14 @@ class SeparatorBank:
 
     # -- deployment / diagnostics -----------------------------------------
     def transform(self, state: BankState, X: jnp.ndarray) -> jnp.ndarray:
-        """Per-stream separation: ``X (S, ..., m)`` → ``Y (S, ..., n)``."""
-        B = self.unpad_state(state).B  # no-op on logical state
+        """Per-stream separation: ``X (S, ..., m)`` → ``Y (S, ..., n)``
+        (bf16-stored ``B`` upcasts to the config compute dtype first)."""
+        B = self.unpad_state(state).B.astype(self.easi.dtype)
         return jnp.einsum("s...m,snm->s...n", X, B)
 
     def performance_index(self, state: BankState, A: jnp.ndarray) -> jnp.ndarray:
         """Per-stream Amari index against mixing ``A (m, n)`` or ``(S, m, n)``."""
-        B = self.unpad_state(state).B  # no-op on logical state
+        B = self.unpad_state(state).B.astype(self.easi.dtype)
         if A.ndim == 2:
             A = jnp.broadcast_to(A, (self.n_streams,) + A.shape)
         gs = jax.vmap(metrics_lib.global_system)(B, A)

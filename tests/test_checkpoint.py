@@ -55,6 +55,47 @@ class TestRoundtrip:
             ckpt.save(s, _tree(s))
         assert ckpt.all_steps() == [3, 4]
 
+    def test_bf16_bank_state_roundtrips_at_storage_dtype(self, tmp_path):
+        """The PR-6 dtype policy's persistence leg: a bf16-stored fused
+        BankState checkpoints and restores bit-exact WITHOUT being upcast —
+        capacity planning relies on the on-disk and in-HBM footprints
+        agreeing."""
+        from repro.core.easi import EASIConfig
+        from repro.core.smbgd import SMBGDConfig
+        from repro.stream import SeparatorBank
+
+        ecfg = EASIConfig(n_components=2, n_features=4, mu=1e-3)
+        ocfg = SMBGDConfig(batch_size=8, mu=1e-3, beta=0.9, gamma=0.5)
+        bank = SeparatorBank(
+            ecfg, ocfg, n_streams=3, fused=True,
+            dtype_policy="bf16", autotune=False,
+        )
+        key = jax.random.PRNGKey(0)
+        st, _ = bank.step(
+            bank.init(key), jax.random.normal(jax.random.fold_in(key, 1), (3, 8, 4))
+        )
+        assert st.B.dtype == jnp.bfloat16
+        ckpt = Checkpointer(tmp_path)
+        ckpt.save(1, st._asdict())
+        restored, step = ckpt.restore(
+            jax.tree.map(jnp.zeros_like, st._asdict())
+        )
+        assert step == 1
+        assert restored["B"].dtype == jnp.bfloat16
+        assert restored["H_hat"].dtype == jnp.bfloat16
+        for name in ("B", "H_hat", "step", "conv"):
+            np.testing.assert_array_equal(
+                np.asarray(restored[name]), np.asarray(getattr(st, name))
+            )
+        # and the restored state steps in place of the original, bit-exact
+        X = jax.random.normal(jax.random.fold_in(key, 2), (3, 8, 4))
+        from repro.stream.bank import BankState
+
+        a, Ya = bank.step(st, X)
+        b, Yb = bank.step(BankState(**restored), X)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
     def test_shape_mismatch_rejected(self, tmp_path):
         ckpt = Checkpointer(tmp_path)
         ckpt.save(0, _tree())
