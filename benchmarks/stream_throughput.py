@@ -41,6 +41,11 @@ trajectory is recorded run over run.
         out-of-band drift probing: 256 parked sessions probed through the
         transient probe bank (one launch per probe_batch) vs the PR-4
         sequential one-dispatch-per-session loop
+    PYTHONPATH=src python benchmarks/stream_throughput.py --health     # fault
+        containment overhead: the per-stream health word + in-kernel commit
+        masking (health_checks=True, the default) vs the telemetry-free bank
+        at S=64; exits 1 when containment's HBM overhead exceeds the 5% bar
+        or the wall ratio exceeds the documented interpreter ceiling
 """
 from __future__ import annotations
 
@@ -76,6 +81,21 @@ SMOKE_KEYS = ("bank_tick_s", "fused_tick_s")
 S1_CROSSOVER_FLOOR = 0.45
 # --autotune-smoke: recorded persistent bytes/session may grow at most 10%
 PERSISTENT_BYTES_SLACK = 1.10
+# --health acceptance bar: fault containment must add ≤ 5% to the fused
+# tick's HBM traffic at serving scale.  The health word is an in-register
+# epilogue (isfinite folds + the blow-up bound on the conv statistic already
+# in registers); its ONLY extra HBM traffic is the int32 word written per
+# stream per tick, so the analytic ratio sits at ~1.0002 — the gate exists to
+# fail loudly if containment ever grows a real extra pass over X/Y/state.
+HEALTH_OVERHEAD_BAR = 1.05
+# Interpret-mode wall-clock ceiling for the same comparison, documented
+# rather than papered over (the S1_CROSSOVER_FLOOR idiom): the interpreter
+# executes every VPU op as a separate host array pass, so the free-beside-MXU
+# epilogue prices at 1.1-1.4x here.  A STRUCTURAL regression — health
+# re-reading state or Y from HBM — shows as ≥2x on the interpreter; the
+# ceiling only fails on that, not on the known emulation constant.
+HEALTH_WALL_CEIL_INTERPRET = 1.6
+HEALTH_S = 64
 BF16_REDUCTION_BAR = 1.5  # acceptance: bf16 persistent bytes cut ≥ 1.5x
 
 
@@ -643,6 +663,131 @@ def probe_bench(
     return row
 
 
+def health_bench(
+    S: int = HEALTH_S,
+    P: int = 32,
+    m: int = 4,
+    n: int = 2,
+    n_ticks: int = 50,
+    reps: int = 3,
+) -> Dict[str, float]:
+    """Cost of fault containment: the per-stream health word + in-kernel
+    commit masking (``health_checks=True``, the default) vs the telemetry-free
+    bank (``health_checks=False``), at identical geometry.
+
+    Measured on both serving engines:
+
+      * ``fused`` — the megakernel, where health is ONE more in-register
+        reduction folded into the existing epilogue (isfinite over B'/H'/Y
+        plus the blow-up bound on the conv statistic already in registers),
+      * ``vmap``  — the XLA bank, where the same word is a handful of
+        elementwise reductions fused into the step program.
+
+    Two figures of merit, because always-on containment must be cheap enough
+    to never turn off:
+
+      * the ANALYTIC HBM overhead — (tick bytes + the health word's 4 bytes)
+        / tick bytes off the layout accounting, the quantity the ≤5%
+        acceptance bar (``HEALTH_OVERHEAD_BAR``) gates.  This is the
+        hardware-relevant cost: on a bandwidth-bound kernel the epilogue's
+        VPU ops hide behind the MXU and only bytes moved matter,
+      * the measured wall-clock ratio on THIS backend — recorded for the
+        trajectory, gated only against ``HEALTH_WALL_CEIL_INTERPRET`` (the
+        interpreter prices each in-register op as a host array pass, so the
+        known emulation constant sits well above 5%; see the constant's
+        comment).
+    """
+    ecfg = EASIConfig(n_components=n, n_features=m, mu=1e-3)
+    ocfg = SMBGDConfig(batch_size=P, mu=1e-3, beta=0.9, gamma=0.5)
+    key = jax.random.PRNGKey(0)
+    X = jax.random.normal(jax.random.fold_in(key, 1), (S, P, m))
+    act = jnp.ones((S,), jnp.int32)
+
+    def time_fused(health: bool) -> float:
+        fused = SeparatorBank(
+            ecfg, ocfg, n_streams=S, fused=True, health_checks=health
+        )
+        fstep = fused.make_step()
+        state0 = fused.init(key)
+        Xp = jax.block_until_ready(fused.pad_batch(X))
+        warm = jax.tree.map(jnp.copy, state0)
+        jax.block_until_ready(fstep(warm, Xp, act))  # compile
+        return _time_step_loop(
+            lambda st, x: fstep(st, x, act), state0, n_ticks, reps, Xp,
+            copy_state=True,
+        )
+
+    def time_vmap(health: bool) -> float:
+        bank = SeparatorBank(ecfg, ocfg, n_streams=S, health_checks=health)
+        bstep = jax.jit(bank.step)
+        state0 = bank.init(key)
+        jax.block_until_ready(bstep(state0, X))  # compile
+        return _time_step_loop(bstep, state0, n_ticks, reps, X)
+
+    t_fused_on = time_fused(True)
+    t_fused_off = time_fused(False)
+    t_vmap_on = time_vmap(True)
+    t_vmap_off = time_vmap(False)
+    lay = easi_ops.bank_layout(n, m, P)
+    tick_bytes = lay.tick_hbm_bytes_per_stream
+    hbm_overhead = (
+        tick_bytes + easi_ops.HEALTH_TICK_BYTES_PER_STREAM
+    ) / tick_bytes
+    row = {
+        "health": True,
+        "S": S, "P": P, "m": m, "n": n, "n_ticks": n_ticks,
+        "fused_health_tick_s": t_fused_on,
+        "fused_nohealth_tick_s": t_fused_off,
+        "vmap_health_tick_s": t_vmap_on,
+        "vmap_nohealth_tick_s": t_vmap_off,
+        "fused_health_wall_overhead": t_fused_on / t_fused_off,
+        "vmap_health_wall_overhead": t_vmap_on / t_vmap_off,
+        "health_tick_bytes_per_stream": easi_ops.HEALTH_TICK_BYTES_PER_STREAM,
+        "health_hbm_overhead": hbm_overhead,
+        "health_overhead_bar": HEALTH_OVERHEAD_BAR,
+        "health_wall_ceil_interpret": HEALTH_WALL_CEIL_INTERPRET,
+    }
+    print(
+        f"health,S={S}: hbm +{easi_ops.HEALTH_TICK_BYTES_PER_STREAM}B/stream "
+        f"({hbm_overhead:.4f}x of {tick_bytes}B/tick); fused wall "
+        f"{t_fused_on*1e6:.1f}us vs {t_fused_off*1e6:.1f}us off "
+        f"({row['fused_health_wall_overhead']:.3f}x), vmap "
+        f"{t_vmap_on*1e6:.1f}us vs {t_vmap_off*1e6:.1f}us off "
+        f"({row['vmap_health_wall_overhead']:.3f}x)"
+    )
+    return row
+
+
+def health_gate(row: Dict[str, float], slack: float = 1.0) -> int:
+    """Exit code for the health-overhead acceptance bars: the analytic HBM
+    overhead against ``HEALTH_OVERHEAD_BAR`` (the ≤5% claim), the measured
+    wall ratio against the documented interpreter ceiling (``slack`` widens
+    only the latter for noisy shared CI runners)."""
+    rc = 0
+    hbm = row["health_hbm_overhead"]
+    if hbm > HEALTH_OVERHEAD_BAR:
+        print(
+            f"health: FAIL — containment adds {hbm:.4f}x HBM traffic "
+            f"(> {HEALTH_OVERHEAD_BAR}x): the health word must stay an "
+            f"in-register epilogue, not an extra pass over X/Y/state"
+        )
+        rc = 1
+    else:
+        print(f"health: hbm overhead {hbm:.4f}x ≤ {HEALTH_OVERHEAD_BAR}x ok")
+    ceil = HEALTH_WALL_CEIL_INTERPRET * slack
+    wall = row["fused_health_wall_overhead"]
+    if wall > ceil:
+        print(
+            f"health: FAIL — fused wall overhead {wall:.3f}x exceeds the "
+            f"{ceil:.3f}x interpreter ceiling (structural regression: the "
+            f"emulation constant alone sits at 1.1-1.4x)"
+        )
+        rc = 1
+    else:
+        print(f"health: fused wall overhead {wall:.3f}x ≤ {ceil:.3f}x ok")
+    return rc
+
+
 def smoke_check(baseline_path: Path) -> int:
     """CI regression gate: re-measure S=SMOKE_S quickly and fail (exit 1) when
     any tracked per-tick time is > SMOKE_FACTOR x the checked-in number."""
@@ -743,6 +888,22 @@ def smoke_check(baseline_path: Path) -> int:
                 f"{fresh_probe['probe_launch_ratio']:.1f}x launches (< 5x)"
             )
             failed = True
+    # health-overhead gate: recheck the analytic HBM bar against the CURRENT
+    # layout code and the wall ratio against the interpreter ceiling (1.2x
+    # slack on the ceiling absorbs shared-runner noise in the ratio of two
+    # small numbers; a structural regression still lands far above it)
+    health_base = next((r for r in baseline_rows if r.get("health")), None)
+    if health_base is not None:
+        fresh_health = health_bench(
+            S=int(health_base["S"]),
+            P=int(health_base["P"]),
+            m=int(health_base["m"]),
+            n=int(health_base["n"]),
+            n_ticks=20,
+            reps=2,
+        )
+        if health_gate(fresh_health, slack=1.2):
+            failed = True
     return 1 if failed else 0
 
 
@@ -827,6 +988,7 @@ def run(
     churn: bool = False,
     drift: bool = False,
     probe: bool = False,
+    health: bool = False,
 ) -> List[Dict[str, float]]:
     """Sweep S; write the JSON artifact when ``out`` is given."""
     sweep = (1, 8, 64) if quick else (1, 8, 64, 512)
@@ -849,6 +1011,10 @@ def run(
         )
     if probe:
         rows.append(probe_bench(n_probe_ticks=3 if quick else 5))
+    if health:
+        row = health_bench(n_ticks=20 if quick else 50, reps=reps)
+        health_gate(row)  # report against the bar; artifact records the ratio
+        rows.append(row)
     if out:
         Path(out).write_text(json.dumps(rows, indent=2) + "\n")
         print(f"wrote {out}")
@@ -872,6 +1038,11 @@ def main() -> None:
                     help="drift scenario: rotating mixing, watchdog on vs off")
     ap.add_argument("--probe", action="store_true",
                     help="parked-session probe scenario: batched vs sequential")
+    ap.add_argument("--health", action="store_true",
+                    help="fault-containment overhead: health_checks on vs off "
+                         f"at S=64; exits 1 past the {HEALTH_OVERHEAD_BAR}x "
+                         "HBM bar or the interpreter wall ceiling "
+                         "(no write when standalone)")
     ap.add_argument(
         "--out", default=str(DEFAULT_OUT), help="result file (JSON rows)"
     )
@@ -880,19 +1051,23 @@ def main() -> None:
         sys.exit(autotune_smoke())
     if args.smoke:
         sys.exit(smoke_check(Path(args.out)))
-    if (args.churn or args.drift or args.probe) and not (
+    if (args.churn or args.drift or args.probe or args.health) and not (
         args.quick or args.autotune
     ):
         # standalone scenario run: print only, leave the sweep artifact alone
+        rc = 0
         if args.churn:
             churn_bench()
         if args.drift:
             drift_bench()
         if args.probe:
             probe_bench()
-        return
+        if args.health:
+            rc = health_gate(health_bench())
+        sys.exit(rc)
     run(quick=args.quick, out=args.out, autotune=args.autotune,
-        churn=args.churn, drift=args.drift, probe=args.probe)
+        churn=args.churn, drift=args.drift, probe=args.probe,
+        health=args.health)
 
 
 if __name__ == "__main__":

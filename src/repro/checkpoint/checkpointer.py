@@ -140,13 +140,33 @@ class Checkpointer:
         if step is None:
             raise FileNotFoundError(f"no checkpoint in {self.dir}")
         d = self.dir / f"step_{step:012d}"
+        if not d.is_dir():
+            raise FileNotFoundError(
+                f"checkpoint step {step} not found in {self.dir} "
+                f"(available steps: {self.all_steps() or 'none'})"
+            )
         names, leaves, treedef = _flatten_with_names(target)
         sh_leaves = (
             jax.tree_util.tree_leaves(shardings) if shardings is not None else None
         )
         out = []
         for i, (name, ref) in enumerate(zip(names, leaves)):
-            arr = np.load(d / f"{name}.npy")
+            path = d / f"{name}.npy"
+            if not path.exists():
+                raise FileNotFoundError(
+                    f"checkpoint step {step} is missing leaf {name!r} ({path}): "
+                    f"the checkpoint was written by a different tree structure — "
+                    f"restore with the matching target, or delete the stale step"
+                )
+            try:
+                arr = np.load(path)
+            except (ValueError, OSError, EOFError) as e:
+                raise ValueError(
+                    f"checkpoint step {step} leaf {name!r} is corrupt "
+                    f"({path}: {e}) — the file is truncated or not a valid "
+                    f".npy; delete the damaged step directory and restore an "
+                    f"earlier step"
+                ) from e
             if tuple(arr.shape) != tuple(ref.shape):
                 raise ValueError(
                     f"checkpoint leaf {name}: shape {arr.shape} != expected {ref.shape}"

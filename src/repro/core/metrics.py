@@ -89,21 +89,29 @@ def update_magnitude(
 def ema_update(
     smoothed: jnp.ndarray, value: jnp.ndarray, decay: float
 ) -> jnp.ndarray:
-    """One step of an inf-aware exponential moving average.
+    """One step of an inf-aware, NaN-saturating exponential moving average.
 
     ``smoothed' = decay·smoothed + (1−decay)·value``, except that a
     non-finite ``smoothed`` (the ``inf`` "never measured" init used by
     ``BankState.conv`` and the serving monitors) is *replaced* by the first
-    observation instead of poisoning the average forever.  ``decay == 0``
-    passes the raw value through.  jit/vmap-safe and shape-broadcasting —
-    the in-graph counterpart of ``serve.engine.ConvergenceMonitor.update``'s
-    host-side recurrence (a parity test pins the two to the same values),
-    for callers that want the smoothing fused into the device step.
+    observation instead of poisoning the average forever, and a NaN
+    ``value`` (a faulted tick's statistic) is *skipped* — the average holds
+    its last state rather than carrying the NaN forward (the serving
+    monitors count the skip; see ``ConvergenceMonitor.skipped``).
+    ``decay == 0`` passes the raw value through.  jit/vmap-safe and
+    shape-broadcasting — the in-graph counterpart of
+    ``serve.engine.ConvergenceMonitor.update``'s host-side recurrence (a
+    parity test pins the two to the same values), for callers that want the
+    smoothing fused into the device step.
     """
     smoothed = jnp.asarray(smoothed, dtype=jnp.float32)
     value = jnp.asarray(value, dtype=jnp.float32)
     blended = decay * smoothed + (1.0 - decay) * value
-    return jnp.where(jnp.isfinite(smoothed), blended, value)
+    return jnp.where(
+        jnp.isnan(value),
+        smoothed,
+        jnp.where(jnp.isfinite(smoothed), blended, value),
+    )
 
 
 def whiteness_error(Y: jnp.ndarray) -> jnp.ndarray:

@@ -1,0 +1,186 @@
+"""Input-side fault containment: retry wrapper + fault-injection harness.
+
+Production feeds fail in ways a recording never does: transient I/O errors,
+stalls, short reads, sensor glitches that arrive as NaN/Inf or amplitude
+spikes.  Two wrappers make those failure modes first-class:
+
+  * ``ResilientSource`` — bounded retry-with-backoff and an optional stall
+    timeout around any ``SignalSource.next_block``.  ``SourceExhausted``
+    passes straight through (a drained feed is a finished session, not a
+    fault); anything else is retried ``max_retries`` times with exponential
+    backoff, then re-raised (``SourceStalled`` for timeouts) — at which point
+    ``SeparationService.run_tick`` isolates the failure to that one session
+    (degraded tick via the active mask) instead of failing the launch.
+
+  * ``FaultInjector`` — the chaos harness: deterministic faults scheduled by
+    block index (NaN burst, Inf burst, amplitude spike, truncated block,
+    transient raise, stall).  Drives the end-to-end containment tests:
+    inject → in-kernel detection → rollback/quarantine → healthy sessions
+    bit-identical to a fault-free run.
+
+Both wrappers delegate every other attribute (``position``, ``seek``,
+``n_channels``, ``true_mixing``, ...) to the wrapped source, so the service's
+cursor bookkeeping and the drift watchdog see straight through them.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import time
+from typing import Dict, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.data.sources import SourceExhausted
+
+
+class SourceStalled(Exception):
+    """Raised by ``ResilientSource`` when ``next_block`` exceeds the stall
+    timeout (the wrapped call may still be running on its worker thread —
+    the wrapper abandons it and the service degrades the session's tick)."""
+
+
+class ResilientSource:
+    """Bounded retry-with-backoff (+ optional stall timeout) around a source.
+
+    ``max_retries`` extra attempts follow a failed ``next_block`` (so at most
+    ``1 + max_retries`` calls per block), sleeping ``backoff_s * 2**attempt``
+    between attempts.  ``timeout_s`` runs each attempt on a worker thread and
+    raises ``SourceStalled`` when it doesn't return in time.  Retries are
+    counted for the service's ``n_source_retries`` metric — drain the counter
+    with ``pop_retries()``.
+    """
+
+    def __init__(
+        self,
+        source,
+        max_retries: int = 3,
+        backoff_s: float = 0.0,
+        timeout_s: Optional[float] = None,
+    ):
+        if max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if backoff_s < 0:
+            raise ValueError("backoff_s must be >= 0")
+        if timeout_s is not None and timeout_s <= 0:
+            raise ValueError("timeout_s must be > 0")
+        self._source = source
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self.timeout_s = timeout_s
+        self._retries = 0
+        self._pool: Optional[concurrent.futures.ThreadPoolExecutor] = None
+
+    def pop_retries(self) -> int:
+        """Drain the retry counter (the service folds it into
+        ``metrics['n_source_retries']`` every tick)."""
+        out, self._retries = self._retries, 0
+        return out
+
+    def _attempt(self, n_samples: int) -> np.ndarray:
+        if self.timeout_s is None:
+            return self._source.next_block(n_samples)
+        if self._pool is None:
+            self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+        fut = self._pool.submit(self._source.next_block, n_samples)
+        try:
+            return fut.result(timeout=self.timeout_s)
+        except concurrent.futures.TimeoutError:
+            # the worker may be wedged mid-call: abandon the pool so the next
+            # attempt gets a fresh thread instead of queueing behind the stall
+            fut.cancel()
+            self._pool.shutdown(wait=False)
+            self._pool = None
+            raise SourceStalled(
+                f"next_block({n_samples}) exceeded {self.timeout_s}s"
+            ) from None
+
+    def next_block(self, n_samples: int) -> np.ndarray:
+        last: Optional[BaseException] = None
+        for attempt in range(1 + self.max_retries):
+            try:
+                return self._attempt(n_samples)
+            except SourceExhausted:
+                raise  # drained, not faulted — never retried
+            except Exception as e:  # noqa: BLE001 — the whole point
+                last = e
+                if attempt < self.max_retries:
+                    self._retries += 1
+                    if self.backoff_s:
+                        time.sleep(self.backoff_s * (2**attempt))
+        raise last
+
+    def __getattr__(self, name):
+        return getattr(self._source, name)
+
+
+#: fault modes understood by ``FaultInjector`` (see class docstring)
+FAULT_MODES = ("nan", "inf", "spike", "truncate", "raise", "stall")
+
+
+class FaultInjector:
+    """Deterministic chaos harness: inject one fault per scheduled block.
+
+    ``faults`` maps block index (0-based count of ``next_block`` calls) to a
+    fault mode, or to ``(mode, magnitude)`` for parameterized modes:
+
+      * ``"nan"`` / ``"inf"`` — overwrite the first ``magnitude`` fraction of
+        the block's samples (default 0.25) with NaN / +Inf,
+      * ``"spike"``  — scale the whole block by ``magnitude`` (default 1e6),
+      * ``"truncate"`` — return only the first half (``magnitude`` fraction)
+        of the requested samples (a short read: wrong shape downstream),
+      * ``"raise"`` — raise ``RuntimeError`` INSTEAD of pulling (transient:
+        the block is not consumed, a retry pulls it clean),
+      * ``"stall"`` — sleep ``magnitude`` seconds (default 0.25) before
+        pulling (pairs with ``ResilientSource(timeout_s=...)``).
+
+    Everything else passes through untouched, so a fault-free ``FaultInjector``
+    is bit-identical to the bare source — the property the chaos tests'
+    healthy-session comparisons rest on.
+    """
+
+    def __init__(
+        self,
+        source,
+        faults: Dict[int, Union[str, Tuple[str, float]]],
+    ):
+        norm: Dict[int, Tuple[str, Optional[float]]] = {}
+        for idx, spec in faults.items():
+            mode, mag = spec if isinstance(spec, tuple) else (spec, None)
+            if mode not in FAULT_MODES:
+                raise ValueError(
+                    f"unknown fault mode {mode!r} (choose from {FAULT_MODES})"
+                )
+            norm[int(idx)] = (mode, mag)
+        self._source = source
+        self._faults = norm
+        self._blocks = 0  # next_block call counter (the fault schedule key)
+        self.injected: Dict[int, str] = {}  # what actually fired (test probe)
+
+    def next_block(self, n_samples: int) -> np.ndarray:
+        idx = self._blocks
+        fault = self._faults.get(idx)
+        if fault is not None and fault[0] == "raise":
+            # transient: the inner cursor does NOT advance — a retry sees
+            # the same block, clean (exactly how a flaky read behaves)
+            self._faults.pop(idx)
+            self.injected[idx] = "raise"
+            raise RuntimeError(f"injected transient failure at block {idx}")
+        self._blocks += 1
+        mode, mag = fault if fault is not None else (None, None)
+        if mode == "stall":
+            time.sleep(0.25 if mag is None else float(mag))
+        blk = np.array(self._source.next_block(n_samples), dtype=np.float32)
+        if mode == "nan" or mode == "inf":
+            k = max(1, int(round(n_samples * (0.25 if mag is None else mag))))
+            blk[:, :k] = np.nan if mode == "nan" else np.inf
+        elif mode == "spike":
+            blk *= 1e6 if mag is None else float(mag)
+        elif mode == "truncate":
+            k = max(1, int(round(n_samples * (0.5 if mag is None else mag))))
+            blk = blk[:, :k]
+        if mode is not None:
+            self.injected[idx] = mode
+        return blk
+
+    def __getattr__(self, name):
+        return getattr(self._source, name)

@@ -96,6 +96,41 @@ from repro.core.nonlinearities import NONLINEARITIES
 # the two banks cannot drift.
 NONLIN_KERNELS: dict = NONLINEARITIES
 
+# Per-stream health word: an int32 bitmask folded in-register at commit time
+# (one more reduction riding the conv statistic's pass — no extra HBM
+# traffic).  0 means healthy; any set bit means the tick's commit was REFUSED
+# for that stream (the slot keeps its pre-tick B/Ĥ/step/conv, exactly like
+# the active-mask freeze) and the serving layer decides rollback/quarantine.
+HEALTH_OK = 0
+HEALTH_NONFINITE_B = 1 << 0  # B' picked up a NaN/Inf
+HEALTH_NONFINITE_H = 1 << 1  # Ĥ' picked up a NaN/Inf
+HEALTH_NONFINITE_Y = 1 << 2  # some Y tile was non-finite (bad input block)
+HEALTH_BLOWUP = 1 << 3  # ‖Ĥ′B‖/‖B‖ above the static blow-up bound
+
+# Static blow-up bound on the relative update magnitude ‖ΔB‖_F/‖B‖_F.  A
+# legitimate SMBGD tick moves B by a few percent (early ticks by O(1) at
+# most); the divergent μ-regime of online ICA (arXiv:1710.05384) multiplies
+# B in a handful of ticks — 100 is far above any converging trajectory and
+# far below a blow-up's second tick.
+HEALTH_BLOWUP_BOUND = 100.0
+
+
+def _health_word(b_new, h_new, ybad, delta, blowup: float):
+    """Fold the per-stream health bitmask from commit-time registers:
+    ``b_new``/``h_new`` (bs, n, ·) f32, ``ybad`` (bs, 1) int (nonzero where
+    some Y tile was non-finite), ``delta`` (bs, 1) the conv statistic.
+    ``~(delta <= blowup)`` deliberately catches NaN deltas too."""
+    i32 = jnp.int32
+    bbad = jnp.any(~jnp.isfinite(b_new), axis=(1, 2))[:, None]
+    hbad = jnp.any(~jnp.isfinite(h_new), axis=(1, 2))[:, None]
+    blow = ~(delta <= blowup)
+    return (
+        bbad.astype(i32) * HEALTH_NONFINITE_B
+        + hbad.astype(i32) * HEALTH_NONFINITE_H
+        + (ybad != 0).astype(i32) * HEALTH_NONFINITE_Y
+        + blow.astype(i32) * HEALTH_BLOWUP
+    )
+
 
 def _fold_tile(y, w, nonlin: str):
     """Fold one (bp, n) fp32 tile of Y into an (n, n) gradient contribution."""
@@ -229,15 +264,27 @@ def _commit_streams(
     h_out_ref,
     step_out_ref,
     conv_out_ref,
+    health_out_ref,
     acc_ref,
+    ybad_ref,
+    *,
+    with_health: bool,
+    blowup: float,
 ):
     """The SMBGD commit tail shared by the sync and prefetch step kernels:
     fold the accumulated gradient into ``Ĥ'``/``B'``/``step'``/``conv'`` for
     one stream-block.  ``b`` is the block's B already cast to f32; all math
     runs in f32 and casts back to the output refs' (storage) dtype only at
-    the final writes — frozen slots round-trip bf16→f32→bf16 exactly."""
+    the final writes — frozen slots round-trip bf16→f32→bf16 exactly.
+
+    ``with_health=True`` additionally folds the per-stream health bitmask
+    (``_health_word``) and REFUSES the commit for unhealthy streams: their
+    slots keep the pre-tick B/Ĥ/step/conv exactly like the active-mask
+    freeze, so one poisoned input block can never contaminate persistent
+    state.  ``with_health=False`` writes health 0 and commits on ``active``
+    alone (the pre-containment behaviour; kept as the overhead baseline)."""
     step = step_ref[...]  # (bs, 1)
-    active = (active_ref[...] != 0)[:, :, None]  # (bs, 1, 1)
+    active = active_ref[...] != 0  # (bs, 1)
     # the paper's first-batch rule, per stream: γ̂ gated off at step 0
     gamma_hat = jnp.where(step == 0, 0.0, gamma_hat_ref[...])[:, :, None]
     h_prev = h_ref[...].astype(jnp.float32)  # (bs, n, n)
@@ -254,12 +301,41 @@ def _commit_streams(
     den = jnp.sqrt(jnp.sum(b * b, axis=(1, 2)))
     delta = (num / jnp.maximum(den, 1e-12))[:, None]  # (bs, 1)
     conv_prev = conv_ref[...].astype(jnp.float32)  # (bs, 1)
-    h_out_ref[...] = jnp.where(active, h_new, h_prev).astype(h_out_ref.dtype)
-    b_out_ref[...] = jnp.where(active, b_new, b).astype(b_out_ref.dtype)
-    step_out_ref[...] = step + jnp.where(active[:, :, 0], 1, 0).astype(
-        step.dtype
-    )
-    conv_out_ref[...] = jnp.where(active[:, :, 0], delta, conv_prev)
+    if with_health:
+        health = _health_word(b_new, h_new, ybad_ref[...], delta, blowup)
+        commit = active & (health == 0)  # (bs, 1)
+        # frozen slots report 0: health is a fresh per-tick verdict on the
+        # streams that were actually served, not a carried statistic
+        health_out_ref[...] = jnp.where(active, health, 0)
+    else:
+        commit = active
+        health_out_ref[...] = jnp.zeros_like(health_out_ref)
+    commit3 = commit[:, :, None]  # (bs, 1, 1)
+    h_out_ref[...] = jnp.where(commit3, h_new, h_prev).astype(h_out_ref.dtype)
+    b_out_ref[...] = jnp.where(commit3, b_new, b).astype(b_out_ref.dtype)
+    step_out_ref[...] = step + jnp.where(commit, 1, 0).astype(step.dtype)
+    conv_out_ref[...] = jnp.where(commit, delta, conv_prev)
+
+
+def _fold_ybad_tile(y, ybad_ref, i, with_health: bool):
+    """OR this tile's per-stream "Y went non-finite" flag into the (bs, 1)
+    int32 scratch — the cross-tile leg of the health reduction.  A trace-time
+    no-op when health is off (``with_health`` is static)."""
+    if not with_health:
+        return
+    # Σ(y·0) is NaN iff the tile holds any non-finite (Inf·0 = NaN·0 = NaN)
+    # and exactly 0 otherwise — no finite-overflow corner, and one multiply +
+    # one reduction instead of the isfinite/not/any triple pass.
+    marker = jnp.sum(y * 0.0, axis=(1, 2))[:, None]
+    ybad = (~(marker == 0.0)).astype(jnp.int32)
+
+    @pl.when(i == 0)
+    def _ybad_init():
+        ybad_ref[...] = ybad
+
+    @pl.when(i > 0)
+    def _ybad_acc():
+        ybad_ref[...] = ybad_ref[...] | ybad
 
 
 def _smbgd_step_bank_kernel(
@@ -276,18 +352,22 @@ def _smbgd_step_bank_kernel(
     h_out_ref,
     step_out_ref,
     conv_out_ref,
+    health_out_ref,
     acc_ref,
+    ybad_ref,
     *,
     nonlin: str,
     n_tiles: int,
+    with_health: bool,
+    blowup: float,
 ):
     """One grid step of the whole-step megakernel (grid = (stream-blocks,
     tiles): each cell carries ``block_s`` streams as a batch dimension).
 
     Every tile: Y-tile batch-matmul + nonlinearity + weighted gradient fold
-    into the VMEM scratch accumulator.  The stream-block's last tile
-    additionally commits the SMBGD update and writes ``B'``/``Ĥ'``/``step'``
-    for its streams.
+    into the VMEM scratch accumulator (plus, with health on, the Y-finite
+    flag fold).  The stream-block's last tile additionally commits the SMBGD
+    update and writes ``B'``/``Ĥ'``/``step'``/``health'`` for its streams.
     """
     i = pl.program_id(1)
     x = x_ref[...].astype(jnp.float32)  # (bs, bp, m)
@@ -298,6 +378,7 @@ def _smbgd_step_bank_kernel(
     y_ref[...] = y.astype(y_ref.dtype)
     w = w_ref[...].astype(jnp.float32)  # (bs, bp, 1) — per-stream weight rows
     s_tile = _fold_tile_batched(y, w, nonlin)
+    _fold_ybad_tile(y, ybad_ref, i, with_health)
 
     @pl.when(i == 0)
     def _init():
@@ -311,7 +392,8 @@ def _smbgd_step_bank_kernel(
     def _commit():
         _commit_streams(
             b, h_ref, step_ref, gamma_hat_ref, active_ref, conv_ref,
-            b_out_ref, h_out_ref, step_out_ref, conv_out_ref, acc_ref,
+            b_out_ref, h_out_ref, step_out_ref, conv_out_ref, health_out_ref,
+            acc_ref, ybad_ref, with_health=with_health, blowup=blowup,
         )
 
 
@@ -343,7 +425,9 @@ def _smbgd_step_bank_kernel_prefetch(
     h_out_ref,
     step_out_ref,
     conv_out_ref,
+    health_out_ref,
     acc_ref,
+    ybad_ref,
     xbuf_ref,
     sem_ref,
     *,
@@ -352,6 +436,8 @@ def _smbgd_step_bank_kernel_prefetch(
     n_sblocks: int,
     block_s: int,
     block_p: int,
+    with_health: bool,
+    blowup: float,
 ):
     """Double-buffered variant of ``_smbgd_step_bank_kernel``: X rides in
     ``pltpu.ANY`` (HBM) and each grid step starts the NEXT tile's DMA before
@@ -387,6 +473,7 @@ def _smbgd_step_bank_kernel_prefetch(
     y_ref[...] = y.astype(y_ref.dtype)
     w = w_ref[...].astype(jnp.float32)
     s_tile = _fold_tile_batched(y, w, nonlin)
+    _fold_ybad_tile(y, ybad_ref, i, with_health)
 
     @pl.when(i == 0)
     def _init():
@@ -400,7 +487,8 @@ def _smbgd_step_bank_kernel_prefetch(
     def _commit():
         _commit_streams(
             b, h_ref, step_ref, gamma_hat_ref, active_ref, conv_ref,
-            b_out_ref, h_out_ref, step_out_ref, conv_out_ref, acc_ref,
+            b_out_ref, h_out_ref, step_out_ref, conv_out_ref, health_out_ref,
+            acc_ref, ybad_ref, with_health=with_health, blowup=blowup,
         )
 
 
@@ -414,10 +502,14 @@ def _smbgd_probe_bank_kernel(
     active_ref,
     conv_ref,
     conv_out_ref,
+    health_out_ref,
     acc_ref,
+    ybad_ref,
     *,
     nonlin: str,
     n_tiles: int,
+    with_health: bool,
+    blowup: float,
 ):
     """Freeze-only probe variant of the megakernel: same ``(stream-blocks,
     tiles)`` grid and the same per-tile math (Y-tile batch-matmul +
@@ -434,6 +526,7 @@ def _smbgd_probe_bank_kernel(
     )  # (bs, bp, n) — stays in VMEM; probes never publish Y
     w = w_ref[...].astype(jnp.float32)  # (bs, bp, 1)
     s_tile = _fold_tile_batched(y, w, nonlin)
+    _fold_ybad_tile(y, ybad_ref, i, with_health)
 
     @pl.when(i == 0)
     def _init():
@@ -447,7 +540,8 @@ def _smbgd_probe_bank_kernel(
     def _probe():
         _probe_streams(
             b, h_ref, step_ref, gamma_hat_ref, active_ref, conv_ref,
-            conv_out_ref, acc_ref,
+            conv_out_ref, health_out_ref, acc_ref, ybad_ref,
+            with_health=with_health, blowup=blowup,
         )
 
 
@@ -459,10 +553,19 @@ def _probe_streams(
     active_ref,
     conv_ref,
     conv_out_ref,
+    health_out_ref,
     acc_ref,
+    ybad_ref,
+    *,
+    with_health: bool,
+    blowup: float,
 ):
     """The freeze-only probe tail shared by the sync and prefetch probe
-    kernels: the conv statistic a commit WOULD produce, and nothing else."""
+    kernels: the conv statistic a commit WOULD produce, and nothing else.
+    ``with_health`` additionally reports the health word that commit WOULD
+    have raised (from the virtual ``B' = B + ΔB``) — quarantined sessions
+    are probed for sanity through the same launch that probes parked ones
+    for drift."""
     step = step_ref[...]  # (bs, 1)
     active = active_ref[...] != 0  # (bs, 1)
     gamma_hat = jnp.where(step == 0, 0.0, gamma_hat_ref[...])[:, :, None]
@@ -475,6 +578,11 @@ def _probe_streams(
     den = jnp.sqrt(jnp.sum(b * b, axis=(1, 2)))
     delta = (num / jnp.maximum(den, 1e-12))[:, None]  # (bs, 1)
     conv_prev = conv_ref[...].astype(jnp.float32)
+    if with_health:
+        health = _health_word(b + db, h_new, ybad_ref[...], delta, blowup)
+        health_out_ref[...] = jnp.where(active, health, 0)
+    else:
+        health_out_ref[...] = jnp.zeros_like(health_out_ref)
     conv_out_ref[...] = jnp.where(active, delta, conv_prev)
 
 
@@ -488,7 +596,9 @@ def _smbgd_probe_bank_kernel_prefetch(
     active_ref,
     conv_ref,
     conv_out_ref,
+    health_out_ref,
     acc_ref,
+    ybad_ref,
     xbuf_ref,
     sem_ref,
     *,
@@ -497,6 +607,8 @@ def _smbgd_probe_bank_kernel_prefetch(
     n_sblocks: int,
     block_s: int,
     block_p: int,
+    with_health: bool,
+    blowup: float,
 ):
     """Double-buffered variant of ``_smbgd_probe_bank_kernel`` — the same
     global-tile-counter prefetch window as the step kernel's prefetch
@@ -527,6 +639,7 @@ def _smbgd_probe_bank_kernel_prefetch(
     )
     w = w_ref[...].astype(jnp.float32)
     s_tile = _fold_tile_batched(y, w, nonlin)
+    _fold_ybad_tile(y, ybad_ref, i, with_health)
 
     @pl.when(i == 0)
     def _init():
@@ -540,7 +653,8 @@ def _smbgd_probe_bank_kernel_prefetch(
     def _probe():
         _probe_streams(
             b, h_ref, step_ref, gamma_hat_ref, active_ref, conv_ref,
-            conv_out_ref, acc_ref,
+            conv_out_ref, health_out_ref, acc_ref, ybad_ref,
+            with_health=with_health, blowup=blowup,
         )
 
 
@@ -559,15 +673,19 @@ def smbgd_probe_bank_pallas(
     block_s: int = 1,
     interpret: bool = True,
     prefetch: bool = False,
+    health: bool = True,
+    blowup: float = HEALTH_BLOWUP_BOUND,
 ):
     """Batched virtual-conv probe: ONE launch over frozen bank state.
 
     Same pre-padded persistent-layout contract as ``smbgd_step_bank_pallas``
-    but the only output is ``conv' (S, 1)`` — the per-stream statistic a
+    but the only outputs are ``conv' (S, 1)`` — the per-stream statistic a
     commit would have produced (``conv`` carried through for masked-out
-    streams).  The state operands are read-only: probing never mutates the
-    frozen separators.  ``prefetch=True`` double-buffers the X tile DMA (see
-    the step kernel's prefetch notes; bit-identical on the interpret path).
+    streams) — and ``health' (S, 1)`` int32, the health word that commit
+    would have raised (0 when ``health=False`` or for masked-out streams).
+    The state operands are read-only: probing never mutates the frozen
+    separators.  ``prefetch=True`` double-buffers the X tile DMA (see the
+    step kernel's prefetch notes; bit-identical on the interpret path).
     """
     S, P, m = X.shape
     n = B.shape[1]
@@ -590,28 +708,39 @@ def smbgd_probe_bank_pallas(
         kernel = functools.partial(
             _smbgd_probe_bank_kernel_prefetch,
             nonlin=nonlinearity, n_tiles=n_tiles, n_sblocks=n_sblocks,
-            block_s=bs, block_p=block_p,
+            block_s=bs, block_p=block_p, with_health=health, blowup=blowup,
         )
         x_spec = pl.BlockSpec(memory_space=pltpu.ANY)
         scratch = [
             pltpu.VMEM((bs, n, n), jnp.float32),
+            pltpu.VMEM((bs, 1), jnp.int32),  # cross-tile Y-finite fold
             pltpu.VMEM((2, bs, block_p, m), X.dtype),  # the double buffer
             pltpu.SemaphoreType.DMA((2,)),
         ]
         extra = _prefetch_call_params()
     else:
         kernel = functools.partial(
-            _smbgd_probe_bank_kernel, nonlin=nonlinearity, n_tiles=n_tiles
+            _smbgd_probe_bank_kernel, nonlin=nonlinearity, n_tiles=n_tiles,
+            with_health=health, blowup=blowup,
         )
         x_spec = pl.BlockSpec((bs, block_p, m), lambda s, i: (s, i, 0))
-        scratch = [pltpu.VMEM((bs, n, n), jnp.float32)]
+        scratch = [
+            pltpu.VMEM((bs, n, n), jnp.float32),
+            pltpu.VMEM((bs, 1), jnp.int32),
+        ]
         extra = {}
     return pl.pallas_call(
         kernel,
         grid=(n_sblocks, n_tiles),
         in_specs=[x_spec] + common_specs,
-        out_specs=pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
-        out_shape=jax.ShapeDtypeStruct((S, 1), jnp.float32),
+        out_specs=[
+            pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
+            pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, 1), jnp.float32),
+            jax.ShapeDtypeStruct((S, 1), jnp.int32),
+        ],
         scratch_shapes=scratch,
         interpret=interpret,
         **extra,
@@ -650,6 +779,8 @@ def smbgd_step_bank_pallas(
     block_s: int = 1,
     interpret: bool = True,
     prefetch: bool = False,
+    health: bool = True,
+    blowup: float = HEALTH_BLOWUP_BOUND,
 ):
     """Whole-step fused SMBGD bank tick: ONE ``(stream-blocks, P-tiles)``
     launch.
@@ -668,9 +799,13 @@ def smbgd_step_bank_pallas(
     may live in a reduced-precision storage dtype (bf16): the kernel casts
     to f32 at load, accumulates the gradient and the commit in f32, and
     casts back only at the output writes.  Returns ``(Y (S, P, n), B',
-    H_hat', step', conv')`` — the full next bank state plus outputs, with no
-    intermediate tensors materialized in HBM; ``conv'`` is the relative
-    update magnitude ``‖Ĥ′B‖_F/‖B‖_F`` computed at commit time.
+    H_hat', step', conv', health')`` — the full next bank state plus
+    outputs, with no intermediate tensors materialized in HBM; ``conv'`` is
+    the relative update magnitude ``‖Ĥ′B‖_F/‖B‖_F`` computed at commit
+    time, and ``health' (S, 1)`` int32 is the per-stream fault bitmask (see
+    ``_health_word``; all-zero when ``health=False``).  With ``health=True``
+    an unhealthy stream's commit is REFUSED in-kernel: its slot keeps the
+    pre-tick state exactly like an ``active``-masked stream.
     """
     S, P, m = X.shape
     n = B.shape[1]
@@ -693,21 +828,26 @@ def smbgd_step_bank_pallas(
         kernel = functools.partial(
             _smbgd_step_bank_kernel_prefetch,
             nonlin=nonlinearity, n_tiles=n_tiles, n_sblocks=n_sblocks,
-            block_s=bs, block_p=block_p,
+            block_s=bs, block_p=block_p, with_health=health, blowup=blowup,
         )
         x_spec = pl.BlockSpec(memory_space=pltpu.ANY)
         scratch = [
             pltpu.VMEM((bs, n, n), jnp.float32),
+            pltpu.VMEM((bs, 1), jnp.int32),  # cross-tile Y-finite fold
             pltpu.VMEM((2, bs, block_p, m), X.dtype),  # the double buffer
             pltpu.SemaphoreType.DMA((2,)),
         ]
         extra = _prefetch_call_params()
     else:
         kernel = functools.partial(
-            _smbgd_step_bank_kernel, nonlin=nonlinearity, n_tiles=n_tiles
+            _smbgd_step_bank_kernel, nonlin=nonlinearity, n_tiles=n_tiles,
+            with_health=health, blowup=blowup,
         )
         x_spec = pl.BlockSpec((bs, block_p, m), lambda s, i: (s, i, 0))
-        scratch = [pltpu.VMEM((bs, n, n), jnp.float32)]
+        scratch = [
+            pltpu.VMEM((bs, n, n), jnp.float32),
+            pltpu.VMEM((bs, 1), jnp.int32),
+        ]
         extra = {}
     return pl.pallas_call(
         kernel,
@@ -719,6 +859,7 @@ def smbgd_step_bank_pallas(
             pl.BlockSpec((bs, n, n), lambda s, i: (s, 0, 0)),
             pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
             pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
+            pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((S, P, n), X.dtype),
@@ -726,6 +867,7 @@ def smbgd_step_bank_pallas(
             jax.ShapeDtypeStruct((S, n, n), H_hat.dtype),
             jax.ShapeDtypeStruct((S, 1), jnp.int32),
             jax.ShapeDtypeStruct((S, 1), jnp.float32),
+            jax.ShapeDtypeStruct((S, 1), jnp.int32),
         ],
         scratch_shapes=scratch,
         interpret=interpret,

@@ -43,12 +43,41 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.easi_gradient.easi_gradient import (
+from repro.kernels.easi_gradient.easi_gradient import (  # noqa: F401 — health
+    HEALTH_BLOWUP,  # constants re-exported: ops is the public kernel surface
+    HEALTH_BLOWUP_BOUND,
+    HEALTH_NONFINITE_B,
+    HEALTH_NONFINITE_H,
+    HEALTH_NONFINITE_Y,
+    HEALTH_OK,
     easi_gradient_bank_pallas,
     easi_gradient_pallas,
     smbgd_probe_bank_pallas,
     smbgd_step_bank_pallas,
 )
+
+_HEALTH_BITS = (
+    (HEALTH_NONFINITE_B, "nonfinite-B"),
+    (HEALTH_NONFINITE_H, "nonfinite-H"),
+    (HEALTH_NONFINITE_Y, "nonfinite-Y"),
+    (HEALTH_BLOWUP, "blowup"),
+)
+
+
+def describe_health(word: int) -> str:
+    """Human-readable rendering of a per-stream health word (for eviction
+    provenance and logs): ``"ok"`` or a ``+``-joined flag list."""
+    flags = [name for bit, name in _HEALTH_BITS if int(word) & bit]
+    return "+".join(flags) if flags else "ok"
+
+
+# The ENTIRE extra HBM traffic of ``health_checks=True``: one int32 health
+# word written per stream per tick.  Every other ingredient of the word (the
+# isfinite folds, the blow-up bound on the conv statistic) reads values the
+# kernel already holds in registers — benchmarks/stream_throughput.py --health
+# gates this against the ≤5% acceptance bar using the layout's analytic tick
+# bytes.
+HEALTH_TICK_BYTES_PER_STREAM = 4
 
 _LANE = 128  # TPU lane width (last-dim alignment)
 _SUBLANE = 8  # f32 sublane
@@ -325,7 +354,10 @@ def default_block_s(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("nonlinearity", "block_p", "block_s", "interpret", "prefetch"),
+    static_argnames=(
+        "nonlinearity", "block_p", "block_s", "interpret", "prefetch",
+        "health", "blowup",
+    ),
 )
 def smbgd_step_bank(
     X: jnp.ndarray,
@@ -342,6 +374,8 @@ def smbgd_step_bank(
     block_s: int | None = None,
     interpret: bool | None = None,
     prefetch: bool = False,
+    health: bool = True,
+    blowup: float = HEALTH_BLOWUP_BOUND,
 ):
     """Whole-step fused bank tick on persistent-padded state (zero staging).
 
@@ -363,10 +397,16 @@ def smbgd_step_bank(
     largest divisor of S whose per-cell residency fits the VMEM budget —
     see ``default_block_s``).  ``prefetch=True`` double-buffers the X tile
     DMA (bit-identical on the interpret path).  Returns
-    ``(Y (S, P_pad, n_pad), B', H_hat', step' (S,), conv' (S,))`` where
-    ``conv'`` is the relative update magnitude ``‖Ĥ′B‖_F/‖B‖_F`` computed
-    inside the commit (see ``core.metrics.update_magnitude`` for the
-    reference formula).
+    ``(Y (S, P_pad, n_pad), B', H_hat', step' (S,), conv' (S,),
+    health' (S,))`` where ``conv'`` is the relative update magnitude
+    ``‖Ĥ′B‖_F/‖B‖_F`` computed inside the commit (see
+    ``core.metrics.update_magnitude`` for the reference formula) and
+    ``health'`` is the int32 per-stream fault bitmask (``HEALTH_*``;
+    non-finite B'/Ĥ'/Y or ``conv' > blowup``).  ``health=True`` (default)
+    also refuses unhealthy commits in-kernel — the slot keeps its pre-tick
+    state like a frozen stream; ``health=False`` restores the
+    pre-containment commit-on-active behaviour and returns zeros (the
+    overhead baseline for ``benchmarks --health``).
     """
     if interpret is None:
         interpret = _interpret_default()
@@ -401,7 +441,7 @@ def smbgd_step_bank(
     if conv is None:
         conv = jnp.full((S_streams, 1), jnp.inf, jnp.float32)
     conv2 = conv.reshape(S_streams, 1).astype(jnp.float32)
-    Y, B_new, H_new, step_new, conv_new = smbgd_step_bank_pallas(
+    Y, B_new, H_new, step_new, conv_new, health_new = smbgd_step_bank_pallas(
         X,
         Wp,
         B,
@@ -415,13 +455,25 @@ def smbgd_step_bank(
         block_s=block_s,
         interpret=interpret,
         prefetch=prefetch,
+        health=health,
+        blowup=blowup,
     )
-    return Y, B_new, H_new, step_new.reshape(S_streams), conv_new.reshape(S_streams)
+    return (
+        Y,
+        B_new,
+        H_new,
+        step_new.reshape(S_streams),
+        conv_new.reshape(S_streams),
+        health_new.reshape(S_streams),
+    )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("nonlinearity", "block_p", "block_s", "interpret", "prefetch"),
+    static_argnames=(
+        "nonlinearity", "block_p", "block_s", "interpret", "prefetch",
+        "health", "blowup",
+    ),
 )
 def smbgd_probe_bank(
     X: jnp.ndarray,
@@ -438,16 +490,21 @@ def smbgd_probe_bank(
     block_s: int | None = None,
     interpret: bool | None = None,
     prefetch: bool = False,
-) -> jnp.ndarray:
+    health: bool = True,
+    blowup: float = HEALTH_BLOWUP_BOUND,
+):
     """Freeze-only probe launch: the conv statistic a ``smbgd_step_bank``
     tick WOULD commit, without committing anything.
 
     Same persistent-layout contract and block geometry as ``smbgd_step_bank``
-    (it refuses to silently pad); returns only ``conv' (S,)`` — the virtual
-    per-stream relative update magnitude, with ``conv`` (default +inf)
-    carried through for streams masked out by ``active``.  The state
-    operands are never written: this is the batched out-of-band drift probe
-    of parked (frozen) separators, one launch per ``S``-wide probe batch.
+    (it refuses to silently pad); returns ``(conv' (S,), health' (S,))`` —
+    the virtual per-stream relative update magnitude, with ``conv`` (default
+    +inf) carried through for streams masked out by ``active``, plus the
+    int32 health word that commit would have raised (all-zero when
+    ``health=False``; quarantined sessions are probed for sanity through
+    it).  The state operands are never written: this is the batched
+    out-of-band drift probe of parked (frozen) separators, one launch per
+    ``S``-wide probe batch.
     """
     if interpret is None:
         interpret = _interpret_default()
@@ -482,7 +539,7 @@ def smbgd_probe_bank(
     if conv is None:
         conv = jnp.full((S_streams, 1), jnp.inf, jnp.float32)
     conv2 = conv.reshape(S_streams, 1).astype(jnp.float32)
-    conv_new = smbgd_probe_bank_pallas(
+    conv_new, health_new = smbgd_probe_bank_pallas(
         X,
         Wp,
         B,
@@ -496,5 +553,7 @@ def smbgd_probe_bank(
         block_s=block_s,
         interpret=interpret,
         prefetch=prefetch,
+        health=health,
+        blowup=blowup,
     )
-    return conv_new.reshape(S_streams)
+    return conv_new.reshape(S_streams), health_new.reshape(S_streams)

@@ -38,6 +38,23 @@ def easi_gradient_bank_ref(
     )
 
 
+def health_word_ref(B_new, H_new, Y, delta, blowup: float) -> int:
+    """Independent per-stream health-word derivation (plain Python ints, no
+    shared helper with the kernel): bit 0 non-finite B', bit 1 non-finite
+    Ĥ', bit 2 non-finite Y, bit 3 relative update above ``blowup`` (a NaN
+    delta counts as a blow-up)."""
+    word = 0
+    if not bool(jnp.all(jnp.isfinite(B_new))):
+        word |= 1
+    if not bool(jnp.all(jnp.isfinite(H_new))):
+        word |= 2
+    if not bool(jnp.all(jnp.isfinite(Y))):
+        word |= 4
+    if not bool(delta <= blowup):
+        word |= 8
+    return word
+
+
 def smbgd_step_bank_ref(
     X: jnp.ndarray,
     W: jnp.ndarray,
@@ -48,14 +65,18 @@ def smbgd_step_bank_ref(
     active: jnp.ndarray,
     conv=None,
     nonlinearity: str = "cubic",
+    health: bool = True,
+    blowup: float = 100.0,
 ):
     """Whole-step oracle for the megakernel: a plain per-stream Python loop of
     naive single-stream steps (``Y = X Bᵀ``, per-sample outer-product gradient
     sum via ``easi_gradient_ref``, then the literal commit with the step-0 γ
     gate and active-mask freeze) plus the per-stream convergence statistic
     ``‖Ĥ′B‖_F/‖B‖_F`` (carried through unchanged for frozen streams; ``conv``
-    defaults to +inf).  Same signature/shapes as ``ops.smbgd_step_bank`` minus
-    the padding requirement."""
+    defaults to +inf) and the per-stream health word (``health_word_ref``;
+    unhealthy streams refuse their commit exactly like frozen ones).  Same
+    signature/shapes as ``ops.smbgd_step_bank`` minus the padding
+    requirement."""
     S = X.shape[0]
     W = jnp.asarray(W).reshape(S, -1)
     step = jnp.asarray(step).reshape(S)
@@ -64,7 +85,7 @@ def smbgd_step_bank_ref(
     if conv is None:
         conv = jnp.full((S,), jnp.inf, jnp.float32)
     conv = jnp.asarray(conv).reshape(S).astype(jnp.float32)
-    Ys, Bs, Hs, steps, convs = [], [], [], [], []
+    Ys, Bs, Hs, steps, convs, healths = [], [], [], [], [], []
     for s in range(S):
         B_s = B[s].astype(jnp.float32)
         Y_s = X[s].astype(jnp.float32) @ B_s.T
@@ -77,15 +98,21 @@ def smbgd_step_bank_ref(
             jnp.sqrt(jnp.sum(B_s * B_s)), 1e-12
         )
         act = bool(active[s])
+        word = health_word_ref(B_new, H_new, Y_s, delta, blowup) if health else 0
+        commit = act and word == 0
         Ys.append(Y_s.astype(X.dtype))
-        Bs.append((B_new if act else B[s].astype(jnp.float32)).astype(B.dtype))
-        Hs.append((H_new if act else H_hat[s].astype(jnp.float32)).astype(H_hat.dtype))
-        steps.append(step[s] + (1 if act else 0))
-        convs.append(delta if act else conv[s])
+        Bs.append((B_new if commit else B[s].astype(jnp.float32)).astype(B.dtype))
+        Hs.append(
+            (H_new if commit else H_hat[s].astype(jnp.float32)).astype(H_hat.dtype)
+        )
+        steps.append(step[s] + (1 if commit else 0))
+        convs.append(delta if commit else conv[s])
+        healths.append(word if act else 0)
     return (
         jnp.stack(Ys),
         jnp.stack(Bs),
         jnp.stack(Hs),
         jnp.stack(steps),
         jnp.stack(convs),
+        jnp.asarray(healths, jnp.int32),
     )

@@ -5,16 +5,23 @@ mandate, grown into an end-to-end adaptive service):
 
   * ``SeparationService``   — continuous-batching front door for a
     ``stream.SeparatorBank``: admission, scheduling, convergence lifecycle,
-    drift watchdog, ``run_tick()`` pull ingestion.
+    drift watchdog, fault containment, ``run_tick()`` pull ingestion.
   * ``ConvergencePolicy`` / ``ConvergenceMonitor`` — when is a session done.
   * ``DriftPolicy`` / ``DriftMonitor`` / ``DriftEvent`` — when has a done
     session drifted, and what to do about it (μ boost / warm re-admission).
+  * ``HealthPolicy`` / ``HealthMonitor`` / ``HealthEvent`` — when has a
+    session gone BAD (in-kernel health word: non-finite state / blow-up),
+    and the escalation ladder: rollback-to-shadow + μ cut → quarantine →
+    evict ``"diverged"``.
   * ``AdmissionScheduler`` (FIFO) / ``PriorityScheduler`` /
     ``DeadlineScheduler`` + ``SessionMeta`` — who waits, who activates.
-  * ``EvictionRecord`` / ``ParkedSession`` — what leaves a slot carries.
+  * ``EvictionRecord`` / ``ParkedSession`` / ``QuarantinedSession`` — what
+    leaves a slot carries.
 
 Signal feeds (``data.sources``): bind a ``SignalSource`` at ``admit`` time
-and drive the whole pipeline with ``run_tick()``.
+and drive the whole pipeline with ``run_tick()``.  Flaky feeds wrap in
+``data.resilience.ResilientSource`` (bounded retry/backoff/stall-timeout);
+``data.resilience.FaultInjector`` is the chaos-test harness.
 """
 from repro.serve.drift import DriftEvent, DriftMonitor, DriftPolicy
 from repro.serve.engine import (
@@ -23,10 +30,12 @@ from repro.serve.engine import (
     Engine,
     EvictionRecord,
     ParkedSession,
+    QuarantinedSession,
     SeparationService,
     ServeConfig,
     SessionStats,
 )
+from repro.serve.health import HealthEvent, HealthMonitor, HealthPolicy
 from repro.serve.scheduling import (
     AdmissionScheduler,
     DeadlineScheduler,
@@ -45,8 +54,12 @@ __all__ = [
     "DriftPolicy",
     "Engine",
     "EvictionRecord",
+    "HealthEvent",
+    "HealthMonitor",
+    "HealthPolicy",
     "ParkedSession",
     "PriorityScheduler",
+    "QuarantinedSession",
     "SchedulerContext",
     "SeparationService",
     "ServeConfig",

@@ -102,9 +102,15 @@ class DriftMonitor:
     stat: float = float("inf")  # EMA-smoothed statistic (raw when ema == 0)
     above: int = 0  # consecutive observations with stat > retrigger
     seen: int = 0  # observations since the watch started (cooldown floor)
+    skipped: int = 0  # NaN samples dropped (faulted probes never poison)
 
     def update(self, x: float, policy: DriftPolicy) -> bool:
-        """Fold one observation in; returns True when the watchdog fires."""
+        """Fold one observation in; returns True when the watchdog fires.
+        NaN observations (a faulted probe block) are skipped-and-counted —
+        they neither advance the cooldown nor reset the rise streak."""
+        if math.isnan(x):
+            self.skipped += 1
+            return False
         if policy.ema and math.isfinite(self.stat):
             self.stat = policy.ema * self.stat + (1.0 - policy.ema) * x
         else:

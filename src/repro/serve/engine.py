@@ -56,6 +56,35 @@ Session lifecycle state machine (``SeparationService``)::
                 ``probe_batch=0`` selects the legacy one-dispatch-per-session
                 loop (the batched engine's differential-test oracle).
 
+Fault containment (``HealthPolicy`` — orthogonal to the drift watchdog;
+see ``serve.health``)::
+
+        ACTIVE ── health word ≠ 0 (kernel refused the commit) ──┐
+           ▲                                                    ▼
+           │  rollback to shadow + μ × ``mu_cut``          [escalation]
+           ◄── ≤ ``max_rollbacks`` offenses / ``window`` ───────┤
+           ▲                                                    ▼
+           │  probation: ``probation`` healthy probes      QUARANTINED
+           ◄── (warm re-admission, ladder memory kept) ◄────────┤
+                                                                ▼
+                              > ``max_quarantines`` quarantines │
+                 EVICTED, reason ``"diverged"`` (+ provenance) ◄┘
+
+    Detection is free: the megakernel folds a per-stream health word
+    (non-finite B′/Ĥ′/Y bits + an update-magnitude blow-up bit) into the
+    same in-register reduction as ``conv``, and REFUSES the offender's
+    commit in-kernel — the slot keeps its pre-tick state like a frozen one.
+    The service keeps a per-slot last-known-good SHADOW snapshot
+    (copy-on-healthy every ``shadow_every`` ticks, re-seeded per slot at
+    activation) to roll offenders back to; μ cuts ride the same per-stream
+    ``BankHyperparams`` traced-operand rows as the drift boost (no retrace).
+    Quarantined sessions are probed out of band like parked ones, but the
+    probe's VIRTUAL health word (not conv) decides release.  Source-side
+    faults never reach the ladder: ``run_tick`` isolates a raising/stalling
+    source to its own session (degraded tick via the active mask; wrap
+    flaky feeds in ``data.resilience.ResilientSource`` for bounded
+    retry/backoff/stall-timeout first).
+
 Ingestion: ``run_tick()`` is the scheduler-driven pull loop — sessions bind
 a ``data.sources.SignalSource`` at admit time; each tick backfills free
 slots, pulls one channel-major ``(m, P)`` block per bound source, advances
@@ -127,6 +156,7 @@ from repro.core.smbgd import BankHyperparams, SMBGDState
 from repro.data import sources as sources_lib
 from repro.models import model as M
 from repro.serve.drift import DriftEvent, DriftMonitor, DriftPolicy
+from repro.serve.health import HealthEvent, HealthMonitor, HealthPolicy
 from repro.serve.scheduling import (
     AdmissionScheduler,
     SchedulerContext,
@@ -244,8 +274,15 @@ class ConvergenceMonitor:
     stat: float = float("inf")  # EMA-smoothed statistic (raw when ema == 0)
     below: int = 0  # consecutive data ticks with stat < threshold
     ticks: int = 0  # data ticks observed (min_ticks floor)
+    skipped: int = 0  # NaN samples dropped (faulted ticks never poison)
 
     def update(self, x: float, policy: ConvergencePolicy) -> None:
+        if math.isnan(x):
+            # a faulted tick's statistic: skip the sample, count it — the
+            # EMA and the below-streak must survive a NaN unharmed (the
+            # host-side twin of ``core.metrics.ema_update``'s NaN guard)
+            self.skipped += 1
+            return
         if policy.ema and math.isfinite(self.stat):
             self.stat = policy.ema * self.stat + (1.0 - policy.ema) * x
         else:
@@ -267,8 +304,13 @@ class EvictionRecord:
     state: SMBGDState
     stats: SessionStats
     monitor: Optional[ConvergenceMonitor]
-    reason: str  # "converged" | "evicted" | "exhausted" | "preempted"
+    reason: str  # "converged" | "evicted" | "exhausted" | "preempted" |
+    #              "diverged" | "quarantined"
     tick: int  # service tick counter at eviction
+    # divergence provenance: the health-escalation ladder state at eviction
+    # (offense stamps, quarantine count, last non-zero health word) — set for
+    # reason == "diverged" records, None otherwise
+    health: Optional[HealthMonitor] = None
 
 
 @dataclasses.dataclass
@@ -288,6 +330,22 @@ class ParkedSession:
     # keys its stacked-state cache on it, so an id re-parked with a NEW
     # frozen state can never alias a stale stack
     park_seq: int = -1
+
+
+@dataclasses.dataclass
+class QuarantinedSession:
+    """A session pulled from its slot by the health-escalation ladder: its
+    last-known-good state (the shadow snapshot it was rolled back to — the
+    corrupted state never leaves the kernel), its still-bound source, the
+    escalation monitor (offense history + probation streak), and the
+    scheduling metadata it re-admits with after probation.  Probed out of
+    band like drift-parked sessions, but the probe's HEALTH word (not its
+    conv statistic) decides release."""
+
+    record: EvictionRecord
+    source: Any
+    monitor: HealthMonitor
+    meta: SessionMeta
 
 
 class SeparationService:
@@ -352,6 +410,8 @@ class SeparationService:
         scheduler: Optional[AdmissionScheduler] = None,
         drift_policy: Optional[DriftPolicy] = None,
         on_drift: Optional[Callable[[Hashable, DriftEvent], None]] = None,
+        health_policy: Optional[HealthPolicy] = None,
+        on_health: Optional[Callable[[Hashable, HealthEvent], None]] = None,
     ):
         self.bank = bank
         self.key = jax.random.PRNGKey(seed)
@@ -363,6 +423,13 @@ class SeparationService:
                 "watches sessions that first converged"
             )
         self.drift_policy = drift_policy
+        if health_policy is not None and not bank.health_checks:
+            raise ValueError(
+                "health_policy needs a bank with health_checks=True: the "
+                "escalation ladder consumes the in-kernel health word"
+            )
+        self.health_policy = health_policy
+        self.on_health = on_health
         self.scheduler = (
             scheduler if scheduler is not None else AdmissionScheduler(max_queue)
         )
@@ -396,13 +463,33 @@ class SeparationService:
         self._n_probes = 0  # parked sessions probed (any engine)
         self._n_probe_launches = 0  # probe dispatches (the O(parked/batch) win)
         self._restored_positions: Dict[Hashable, int] = {}  # from lifecycle snapshots
-        # μ boost rides per-stream hyperparameter rows as TRACED operands —
-        # only the boost mode pays for the 4-argument step flavour
-        self._hp_step = drift_policy is not None and drift_policy.mode == "boost"
+        # fault containment (HealthPolicy): escalation monitors, μ-cut
+        # countdowns, the quarantine pool, and the per-slot last-known-good
+        # shadow snapshot the rollback path restores from
+        self._health_mon: Dict[Hashable, HealthMonitor] = {}
+        self._cut_left: Dict[Hashable, int] = {}  # remaining μ-cut ticks
+        self._quarantined: Dict[Hashable, QuarantinedSession] = {}
+        self._shadow: Optional[BankState] = (
+            self.state if health_policy is not None else None
+        )
+        self._health_events: List[HealthEvent] = []
+        self._n_health_events = 0
+        self._n_rollbacks = 0
+        self._n_diverged = 0
+        self._n_degraded_ticks = 0  # session-ticks lost to source faults
+        self._n_source_retries = 0  # ResilientSource retries folded per tick
+        self._last_fault: Dict[Hashable, str] = {}  # sid → last source error
+        self._quar_ticks = 0  # run_tick counter driving quarantine probes
+        # μ boost (drift) and μ cut (health) ride per-stream hyperparameter
+        # rows as TRACED operands — only those modes pay for the 4-argument
+        # step flavour
+        self._hp_step = (
+            drift_policy is not None and drift_policy.mode == "boost"
+        ) or health_policy is not None
         if self._hp_step and bank.algorithm != "smbgd_batched":
             raise ValueError(
-                "DriftPolicy(mode='boost') needs per-stream hyperparams, "
-                "which require algorithm='smbgd_batched'"
+                "DriftPolicy(mode='boost') and HealthPolicy need per-stream "
+                "hyperparams, which require algorithm='smbgd_batched'"
             )
         self._base_hp: Optional[BankHyperparams] = (
             bank._bank_hyperparams() if self._hp_step else None
@@ -469,16 +556,35 @@ class SeparationService:
         out, self._drift_events = self._drift_events, []
         return out
 
+    @property
+    def quarantined(self) -> Dict[Hashable, QuarantinedSession]:
+        """Sessions pulled from their slots by the health-escalation ladder,
+        probed out of band until probation clears (or they diverge)."""
+        return dict(self._quarantined)
+
+    @property
+    def health_events(self) -> List[HealthEvent]:
+        """Containment actions so far (rollback / quarantine / release /
+        diverge; read-only view; drain with ``pop_health_events``)."""
+        return list(self._health_events)
+
+    def pop_health_events(self) -> List[HealthEvent]:
+        out, self._health_events = self._health_events, []
+        return out
+
     def status(self, session_id: Hashable) -> str:
         """Lifecycle state: ``"active" | "converged" | "queued" | "parked" |
-        "finished" | "unknown"`` (``"converged"`` = hot in its slot under
-        drift watch)."""
+        "quarantined" | "finished" | "unknown"`` (``"converged"`` = hot in
+        its slot under drift watch; ``"quarantined"`` = pulled from its slot
+        by the health ladder, probed out of band until probation clears)."""
         if session_id in self._slot_of:
             return "converged" if session_id in self._hot else "active"
         if session_id in self.scheduler:
             return "queued"
         if session_id in self._parked:
             return "parked"
+        if session_id in self._quarantined:
+            return "quarantined"
         if session_id in self._finished:
             return "finished"
         return "unknown"
@@ -506,15 +612,20 @@ class SeparationService:
             session_id not in self._slot_of
             and session_id not in self.scheduler
             and session_id not in self._parked
+            and session_id not in self._quarantined
         ):
             raise KeyError(
-                f"session {session_id!r} is neither active nor queued nor parked"
+                f"session {session_id!r} is neither active nor queued nor "
+                f"parked nor quarantined"
             )
         pos = self._restored_positions.pop(session_id, None) if seek else None
         if pos is not None and hasattr(source, "seek"):
             source.seek(pos)
         if session_id in self._parked:
             self._parked[session_id].source = source
+            return
+        if session_id in self._quarantined:
+            self._quarantined[session_id].source = source
             return
         self._sources[session_id] = source
 
@@ -533,6 +644,12 @@ class SeparationService:
             "n_probe_launches": float(self._n_probe_launches),
             "n_evicted": float(self._n_evicted),
             "n_auto_evicted": float(self._n_auto_evicted),
+            "n_quarantined": float(len(self._quarantined)),
+            "n_rollbacks": float(self._n_rollbacks),
+            "n_diverged": float(self._n_diverged),
+            "n_degraded_ticks": float(self._n_degraded_ticks),
+            "n_source_retries": float(self._n_source_retries),
+            "n_health_events": float(self._n_health_events),
             "n_ticks": float(self._n_ticks),
             "total_samples": float(self._total_samples),
             "last_tick_s": self._last_tick_s,
@@ -595,6 +712,11 @@ class SeparationService:
                 f"session {session_id!r} is parked under drift watch; "
                 f"evict it first to force a fresh admission"
             )
+        if session_id in self._quarantined:
+            raise ValueError(
+                f"session {session_id!r} is quarantined under health watch; "
+                f"evict it first to force a fresh admission"
+            )
         meta = SessionMeta(
             tenant=tenant, priority=float(priority), deadline=deadline,
             order=self._seq,
@@ -651,6 +773,15 @@ class SeparationService:
         self._mu_scale[slot] = 1.0
         self._stats[session_id] = SessionStats(admitted_at=time.perf_counter())
         self._monitors[session_id] = ConvergenceMonitor()
+        if self._shadow is not None:
+            # seed the slot's shadow from the state it was just born with —
+            # a first-offense rollback must restore THIS session's state,
+            # never the slot's previous occupant's
+            self._shadow = self.bank.copy_slot(self._shadow, self.state, slot)
+        if self.health_policy is not None:
+            # quarantine releases re-enter with their ladder memory intact
+            # (setdefault keeps the monitor _release_quarantine pre-seeded)
+            self._health_mon.setdefault(session_id, HealthMonitor())
         if self.on_admit is not None:
             self.on_admit(session_id, slot)
         return slot
@@ -696,16 +827,28 @@ class SeparationService:
             ps = self._parked.pop(session_id)
             self._finished[session_id] = ps.record
             return ps.record.state
+        if session_id in self._quarantined:
+            qs = self._quarantined.pop(session_id)
+            self._health_mon.pop(session_id, None)
+            self._finished[session_id] = qs.record
+            return qs.record.state
         raise KeyError(
-            f"session {session_id!r} is neither active nor queued (nor parked)"
+            f"session {session_id!r} is neither active nor queued (nor "
+            f"parked nor quarantined)"
         )
 
-    def _release(self, session_id: Hashable, reason: str) -> EvictionRecord:
+    def _release(
+        self,
+        session_id: Hashable,
+        reason: str,
+        health: Optional[HealthMonitor] = None,
+    ) -> EvictionRecord:
         """ACTIVE → EVICTED edge shared by manual ``evict``, the policy's
-        auto-eviction, hot-session preemption, source exhaustion and the
-        readmit-mode park: slice the final state out of the bank, free the
-        slot, record the eviction, and backfill from the scheduler — all
-        before the next tick touches the bank."""
+        auto-eviction, hot-session preemption, source exhaustion, the
+        readmit-mode park and the health ladder's divergence eviction: slice
+        the final state out of the bank, free the slot, record the eviction,
+        and backfill from the scheduler — all before the next tick touches
+        the bank."""
         slot = self._slot_of.pop(session_id)
         record = EvictionRecord(
             state=self.bank.slot_state(self.state, slot),
@@ -713,11 +856,14 @@ class SeparationService:
             monitor=self._monitors.pop(session_id, None),
             reason=reason,
             tick=self._n_ticks,
+            health=health,
         )
         self._mixing.pop(session_id, None)
         meta = self._meta.pop(session_id, None)
         self._hot.pop(session_id, None)
         self._boost_left.pop(session_id, None)
+        self._cut_left.pop(session_id, None)
+        self._health_mon.pop(session_id, None)
         self._mu_scale[slot] = 1.0
         self._free.append(slot)
         self._n_evicted += 1
@@ -767,6 +913,7 @@ class SeparationService:
             # caller bugs — name each class so the fix is obvious
             queued = sorted(str(s) for s in unknown if s in self.scheduler)
             parked = sorted(str(s) for s in unknown if s in self._parked)
+            quar = sorted(str(s) for s in unknown if s in self._quarantined)
             msg = f"sessions not active: {sorted(map(str, unknown))}"
             if queued:
                 msg += (
@@ -775,6 +922,11 @@ class SeparationService:
                 )
             if parked:
                 msg += f"; parked under drift watch (evict to detach): {parked}"
+            if quar:
+                msg += (
+                    f"; quarantined under health watch (awaiting probation): "
+                    f"{quar}"
+                )
             raise KeyError(msg)
         S = self.bank.n_streams
         P = self.bank.opt.batch_size
@@ -816,8 +968,14 @@ class SeparationService:
         # slice outputs BEFORE any auto-eviction mutates the slot map: evicted
         # sessions still receive this tick's separated output
         out = {sid: Y[self._slot_of[sid], :P, :n] for sid in batches}
+        served = list(batches.keys())
+        if self.health_policy is not None:
+            # containment first: offenders are rolled back / quarantined /
+            # diverged and drop out of this tick's convergence sweep (their
+            # conv statistic was never committed anyway)
+            served = self._apply_health(served)
         if self.policy is not None:
-            self._apply_policy(batches.keys())
+            self._apply_policy(served)
         return out
 
     def _apply_policy(self, served) -> None:
@@ -912,16 +1070,241 @@ class SeparationService:
 
     def _current_hp(self) -> BankHyperparams:
         """Per-stream hyperparameter rows for THIS tick: the bank's base
-        (μ, β, γ) with the watchdog's μ multipliers folded in.  Traced
-        operands — varying them tick to tick costs no retrace."""
+        (μ, β, γ) with the watchdog's μ boosts and the health ladder's μ cuts
+        folded in (both ride ``_mu_scale``; a session is never boosted and
+        cut at once — the ladders own disjoint lifecycles).  Traced operands
+        — varying them tick to tick costs no retrace."""
         hp = self._base_hp
-        if self._boost_left:
+        if self._boost_left or self._cut_left:
             return BankHyperparams(
                 mu=hp.mu * jnp.asarray(self._mu_scale),
                 beta=hp.beta,
                 gamma=hp.gamma,
             )
         return hp
+
+    # -- fault containment (HealthPolicy) ----------------------------------
+    def _record_health(self, event: HealthEvent) -> None:
+        self._health_events.append(event)
+        self._n_health_events += 1
+        if self.on_health is not None:
+            self.on_health(event.session_id, event)
+
+    def _apply_health(self, served: List[Hashable]) -> List[Hashable]:
+        """End-of-tick containment sweep: read the (S,) health words the
+        kernel folded into this tick, walk the escalation ladder for every
+        offender (rollback + μ cut → quarantine → evict ``"diverged"``), and
+        refresh the copy-on-healthy shadow every ``shadow_every`` ticks.
+        Returns the served sessions still active and healthy — the set the
+        convergence sweep may judge this tick.
+
+        The kernel already refused the offenders' commits (pre-tick state in
+        the slot), so the rollback's job is rewinding the *trajectory*: the
+        pre-tick state may itself be mid-divergence, and the shadow is the
+        last state that survived ``shadow_every`` ticks of health checks."""
+        hpol = self.health_policy
+        words = np.asarray(self.state.health)  # (S,) int32, this tick's verdict
+        healthy: List[Hashable] = []
+        for sid in served:
+            slot = self._slot_of.get(sid)
+            if slot is None:
+                continue
+            word = int(words[slot])
+            mon = self._health_mon.setdefault(sid, HealthMonitor())
+            if word == 0:
+                mon.healthy_streak += 1
+                if sid in self._cut_left:
+                    self._cut_left[sid] -= 1
+                    if self._cut_left[sid] <= 0:
+                        del self._cut_left[sid]
+                        self._mu_scale[slot] = 1.0
+                healthy.append(sid)
+                continue
+            escalate = mon.record_offense(self._n_ticks, word, hpol)
+            # roll the slot back to its last-known-good shadow regardless of
+            # what happens next: the quarantine/diverged record must carry
+            # the recoverable state, not the one that was drifting apart
+            self.state = self.bank.restore_slot(self.state, self._shadow, slot)
+            if not escalate:
+                self._n_rollbacks += 1
+                self._mu_scale[slot] = hpol.mu_cut
+                self._cut_left[sid] = hpol.cut_ticks
+                self._record_health(
+                    HealthEvent(sid, self._n_ticks, word, "rollback", slot)
+                )
+            elif mon.quarantines >= hpol.max_quarantines:
+                self._health_mon.pop(sid, None)
+                self._release(sid, reason="diverged", health=mon)
+                self._n_diverged += 1
+                self._record_health(
+                    HealthEvent(sid, self._n_ticks, word, "diverge", slot)
+                )
+            else:
+                self._quarantine(sid, word)
+        if self._n_ticks % hpol.shadow_every == 0:
+            # copy-on-healthy: only slots that PASSED this tick's checks may
+            # refresh their shadow (offenders were just rolled back — copying
+            # them would be a no-op, but masking keeps the invariant obvious)
+            mask = np.zeros((self.bank.n_streams,), dtype=bool)
+            for sid in healthy:
+                mask[self._slot_of[sid]] = True
+            self._shadow = self.bank.update_shadow(
+                self._shadow, self.state, jnp.asarray(mask)
+            )
+        return healthy
+
+    def _quarantine(self, session_id: Hashable, word: int) -> None:
+        """ACTIVE → QUARANTINED: the session used up its rollback budget —
+        free the slot (the record carries the just-rolled-back last-known-good
+        state) and park it under out-of-band health probes until probation
+        clears or the ladder tops out."""
+        slot = self._slot_of.pop(session_id)
+        mon = self._health_mon.pop(session_id, None) or HealthMonitor()
+        mon.quarantines += 1
+        mon.healthy_streak = 0
+        record = EvictionRecord(
+            state=self.bank.slot_state(self.state, slot),
+            stats=self._stats.pop(session_id),
+            monitor=self._monitors.pop(session_id, None),
+            reason="quarantined",
+            tick=self._n_ticks,
+        )
+        self._mixing.pop(session_id, None)
+        meta = self._meta.pop(session_id, None)
+        self._hot.pop(session_id, None)
+        self._boost_left.pop(session_id, None)
+        self._cut_left.pop(session_id, None)
+        self._mu_scale[slot] = 1.0
+        self._free.append(slot)
+        self._quarantined[session_id] = QuarantinedSession(
+            record=record,
+            source=self._sources.pop(session_id, None),
+            monitor=mon,
+            meta=meta if meta is not None else SessionMeta(),
+        )
+        self._record_health(
+            HealthEvent(session_id, self._n_ticks, word, "quarantine", slot)
+        )
+        self._backfill()
+
+    def _probe_quarantined(self) -> None:
+        """Every ``probe_every`` run_ticks, probe every sourced quarantined
+        session out of band: stack the last-known-good states into transient
+        pow-2 probe banks (the same machinery as the drift watchdog's parked
+        probes) and read the VIRTUAL health word a step on fresh data would
+        produce.  A healthy probe advances the probation streak; ``probation``
+        consecutive healthy probes re-admit the session warm (through the
+        scheduler).  An unhealthy probe resets the streak and counts as an
+        offense on the same ladder — a session whose ladder tops out
+        (``quarantines > max_quarantines``) evicts with reason
+        ``"diverged"``."""
+        hpol = self.health_policy
+        if not self._quarantined or hpol is None:
+            return
+        self._quar_ticks += 1
+        if self._quar_ticks % hpol.probe_every:
+            return
+        due = list(self._quarantined)
+        P = self.bank.opt.batch_size
+        m = self.bank.easi.n_features
+        pulled: List[Tuple[Hashable, QuarantinedSession, np.ndarray]] = []
+        for sid in due:
+            qs = self._quarantined[sid]
+            blk = self._pull_probe_block(
+                sid, qs, pool=self._quarantined, probe_every=hpol.probe_every
+            )
+            if blk is not None:
+                pulled.append((sid, qs, blk))
+        batch = 64  # quarantine pools are small; one pow-2 launch per 64
+        for lo in range(0, len(pulled), batch):
+            chunk = pulled[lo : lo + batch]
+            width = self._probe_width(len(chunk))
+            bank, probe_fn = self._probe_bank(width)
+            states = [qs.record.state for _, qs, _ in chunk]
+            states += [states[-1]] * (width - len(chunk))
+            state = SeparatorBank.stack_states(states)
+            if bank.fused:
+                state = bank.pad_state(state)
+                lay = bank.layout
+                P_stage, m_stage = lay.P_pad, lay.m_pad
+            else:
+                P_stage, m_stage = P, m
+            X = np.zeros((width, P_stage, m_stage), dtype=np.float32)
+            for j, (_, _, blk) in enumerate(chunk):
+                X[j, :P, :m] = blk.T
+            active = np.zeros((width,), dtype=np.int32)
+            active[: len(chunk)] = 1
+            _conv, health = probe_fn(state, jnp.asarray(X), jnp.asarray(active))
+            health = np.asarray(health)
+            self._n_probes += len(chunk)
+            self._n_probe_launches += 1
+            for j, (sid, qs, _) in enumerate(chunk):
+                word = int(health[j])
+                if word == 0:
+                    qs.monitor.healthy_streak += 1
+                    if qs.monitor.healthy_streak >= hpol.probation:
+                        self._release_quarantine(sid, qs)
+                else:
+                    qs.monitor.healthy_streak = 0
+                    qs.monitor.last_word = word
+                    # a failed probe is an offense on the same ladder: when
+                    # the rollback budget is exhausted AGAIN while already
+                    # quarantined, the quarantine counter climbs — a session
+                    # that never produces a healthy probe tops out without
+                    # ever being released
+                    if qs.monitor.record_offense(self._n_ticks, word, hpol):
+                        qs.monitor.quarantines += 1
+                    if qs.monitor.quarantines > hpol.max_quarantines:
+                        del self._quarantined[sid]
+                        record = dataclasses.replace(
+                            qs.record,
+                            reason="diverged",
+                            tick=self._n_ticks,
+                            health=qs.monitor,
+                        )
+                        self._finished[sid] = record
+                        self._n_evicted += 1
+                        self._n_diverged += 1
+                        self._record_health(
+                            HealthEvent(sid, self._n_ticks, word, "diverge")
+                        )
+                        if self.on_evict is not None:
+                            self.on_evict(sid, record)
+
+    def _release_quarantine(
+        self, session_id: Hashable, qs: QuarantinedSession
+    ) -> None:
+        """QUARANTINED → ACTIVE after probation: back through the scheduler's
+        admission gate, warm-started from the last-known-good state, with the
+        escalation ladder's memory intact (a repeat offender escalates past
+        its earlier rungs).  Like ``_readmit``, the release only proceeds
+        when it can activate immediately — otherwise the session stays
+        quarantined and the next probe retries."""
+        del self._quarantined[session_id]
+        self._health_mon[session_id] = qs.monitor
+        try:
+            slot = self.admit(
+                session_id,
+                source=qs.source,
+                state=qs.record.state,
+                tenant=qs.meta.tenant,
+                priority=qs.meta.priority,
+                deadline=qs.meta.deadline,
+            )
+        except RuntimeError:  # bank AND queue full: stay quarantined
+            self._health_mon.pop(session_id, None)
+            self._quarantined[session_id] = qs
+            return
+        if slot is None:  # would queue: back out, stay quarantined
+            self.evict(session_id)  # dequeues; detaches source/warm bindings
+            self._health_mon.pop(session_id, None)
+            self._quarantined[session_id] = qs
+            return
+        self._record_health(
+            HealthEvent(
+                session_id, self._n_ticks, qs.monitor.last_word, "release", slot
+            )
+        )
 
     def _virtual_conv(self, state: SMBGDState, X: jnp.ndarray) -> float:
         """The conv statistic a bank step WOULD commit from ``state`` on
@@ -972,18 +1355,28 @@ class SeparationService:
         else:
             self._probe_batched(due)
 
-    def _pull_probe_block(self, sid: Hashable, ps: ParkedSession):
-        """Seek ``sid``'s parked source to service time and pull one probe
-        block ``(m, P)``.  Returns ``None`` when the session cannot be probed
-        this tick: no source bound yet (fresh restore awaiting
-        ``bind_source``), or the source drained — which EVICTS the parked
-        session with reason ``"exhausted"`` (a drained feed is a finished
-        session; the exception must never escape ``run_tick``)."""
+    def _pull_probe_block(
+        self,
+        sid: Hashable,
+        ps,
+        pool: Optional[Dict[Hashable, Any]] = None,
+        probe_every: Optional[int] = None,
+    ):
+        """Seek ``sid``'s parked (or quarantined) source to service time and
+        pull one probe block ``(m, P)``.  Returns ``None`` when the session
+        cannot be probed this tick: no source bound yet (fresh restore
+        awaiting ``bind_source``), the source faulted (degraded probe — the
+        wrapper's retries were already spent), or the source drained — which
+        EVICTS the session from ``pool`` with reason ``"exhausted"`` (a
+        drained feed is a finished session; no exception ever escapes
+        ``run_tick``)."""
         if ps.source is None:
             return None
-        dpol = self.drift_policy
+        pool = self._parked if pool is None else pool
+        if probe_every is None:
+            probe_every = self.drift_policy.probe_every
         P = self.bank.opt.batch_size
-        skip = (dpol.probe_every - 1) * P
+        skip = (probe_every - 1) * P
         if skip and hasattr(ps.source, "seek") and hasattr(ps.source, "position"):
             target = ps.source.position + skip
             limit = getattr(ps.source, "n_samples", None)
@@ -1003,9 +1396,9 @@ class SeparationService:
             except ValueError:
                 pass  # source without absolute seek semantics: best effort
         try:
-            return np.asarray(ps.source.next_block(P), dtype=np.float32)
+            blk = np.asarray(ps.source.next_block(P), dtype=np.float32)
         except sources_lib.SourceExhausted:
-            del self._parked[sid]
+            del pool[sid]
             record = dataclasses.replace(
                 ps.record, reason="exhausted", tick=self._n_ticks
             )
@@ -1014,6 +1407,17 @@ class SeparationService:
             if self.on_evict is not None:
                 self.on_evict(sid, record)
             return None
+        except Exception as e:  # noqa: BLE001 — probe-side fault isolation
+            self._n_degraded_ticks += 1
+            self._last_fault[sid] = f"{type(e).__name__}: {e}"
+            return None
+        if hasattr(ps.source, "pop_retries"):
+            self._n_source_retries += int(ps.source.pop_retries())
+        if blk.shape != (self.bank.easi.n_features, P):
+            self._n_degraded_ticks += 1
+            self._last_fault[sid] = f"probe block shape {blk.shape}"
+            return None
+        return blk
 
     def _probe_sequential(self, due: List[Hashable]) -> None:
         """The PR-4 probe engine: one jitted virtual-conv dispatch per parked
@@ -1090,9 +1494,8 @@ class SeparationService:
                 X[j, :P, :m] = blk.T
             active = np.zeros((width,), dtype=np.int32)
             active[: len(chunk)] = 1
-            conv = np.asarray(
-                probe_fn(state, jnp.asarray(X), jnp.asarray(active))
-            )
+            conv, _health = probe_fn(state, jnp.asarray(X), jnp.asarray(active))
+            conv = np.asarray(conv)
             self._n_probes += len(chunk)
             self._n_probe_launches += 1
             for j, (sid, ps, _) in enumerate(chunk):
@@ -1181,9 +1584,17 @@ class SeparationService:
         channel-major ``(m, P)`` block from every active session's bound
         ``SignalSource``, advance them all with ONE fused bank step, evict
         sessions whose source drained (reason ``"exhausted"``), and probe
-        parked sessions for drift.  Returns session_id → separated ``(P, n)``
-        outputs (sessions without a source are skipped — push their batches
-        through ``step`` instead; both modes mix freely)."""
+        parked and quarantined sessions out of band.  Returns session_id →
+        separated ``(P, n)`` outputs (sessions without a source are skipped —
+        push their batches through ``step`` instead; both modes mix freely).
+
+        Per-session fault isolation: a source raising anything other than
+        ``SourceExhausted`` (transient I/O error, stall past a
+        ``ResilientSource`` timeout, short read) degrades THAT session's tick
+        — it is simply left out of the batch, so the bank's active mask
+        freezes its slot — and never fails the launch for everyone else.
+        Degraded session-ticks count in ``metrics['n_degraded_ticks']``; the
+        last per-session failure string is kept in ``last_faults``."""
         self._backfill()  # deadline/quota gates may have reopened
         P = self.bank.opt.batch_size
         m = self.bank.easi.n_features
@@ -1195,21 +1606,33 @@ class SeparationService:
                 continue
             try:
                 blk = np.asarray(src.next_block(P), dtype=np.float32)
+                if blk.shape != (m, P):
+                    raise ValueError(
+                        f"block shape {blk.shape} != (m={m}, n_samples={P})"
+                    )
             except sources_lib.SourceExhausted:
                 drained.append(sid)
                 continue
-            if blk.shape != (m, P):
-                raise ValueError(
-                    f"source for session {sid!r}: block shape {blk.shape} != "
-                    f"(m={m}, n_samples={P})"
-                )
+            except Exception as e:  # noqa: BLE001 — per-session isolation
+                self._n_degraded_ticks += 1
+                self._last_fault[sid] = f"{type(e).__name__}: {e}"
+                continue
+            if hasattr(src, "pop_retries"):
+                self._n_source_retries += int(src.pop_retries())
             batches[sid] = blk.T
         out = self.step(batches) if batches else {}
         for sid in drained:
             if sid in self._slot_of:
                 self._release(sid, reason="exhausted")
         self._probe_parked()
+        self._probe_quarantined()
         return out
+
+    @property
+    def last_faults(self) -> Dict[Hashable, str]:
+        """Most recent per-session source-failure strings (degraded ticks —
+        the observability twin of ``metrics['n_degraded_ticks']``)."""
+        return dict(self._last_fault)
 
     # -- persistence -------------------------------------------------------
     # The bank state is a plain pytree, so the array side round-trips through
@@ -1268,6 +1691,31 @@ class SeparationService:
                 if hasattr(src, "position")
             },
             "probe_ticks": self._probe_ticks,
+            "health": {
+                sid: dataclasses.asdict(mon)
+                for sid, mon in self._health_mon.items()
+            },
+            "cut": dict(self._cut_left),
+            "quarantine_ticks": self._quar_ticks,
+            "shadow": self._shadow is not None,
+            "quarantined": [
+                [
+                    sid,
+                    {
+                        "monitor": dataclasses.asdict(qs.monitor),
+                        "meta": qs.meta.asdict(),
+                        "reason": qs.record.reason,
+                        "tick": qs.record.tick,
+                        "position": (
+                            int(qs.source.position)
+                            if qs.source is not None
+                            and hasattr(qs.source, "position")
+                            else None
+                        ),
+                    },
+                ]
+                for sid, qs in self._quarantined.items()
+            ],
             "parked": [
                 [
                     sid,
@@ -1325,6 +1773,23 @@ class SeparationService:
                 [jnp.asarray(s.step) for s in frozen]
             )
             tree["parked_ids"] = self._parked_fingerprint(self._parked)
+        # the last-known-good shadow rides as its own leaves: a restored
+        # service must be able to roll back to the SAME snapshot the
+        # checkpointed one would have, not to the post-restore state
+        if self._shadow is not None:
+            tree["shadow_B"] = self._shadow.B
+            tree["shadow_H_hat"] = self._shadow.H_hat
+            tree["shadow_step"] = self._shadow.step
+            tree["shadow_conv"] = self._shadow.conv
+        # quarantined sessions' last-known-good states ride like parked ones
+        # (zipped back by index against lifecycle['quarantined'], fingerprint
+        # guarded)
+        if self._quarantined:
+            lkg = [qs.record.state for qs in self._quarantined.values()]
+            tree["quar_B"] = jnp.stack([jnp.asarray(s.B) for s in lkg])
+            tree["quar_H_hat"] = jnp.stack([jnp.asarray(s.H_hat) for s in lkg])
+            tree["quar_step"] = jnp.stack([jnp.asarray(s.step) for s in lkg])
+            tree["quar_ids"] = self._parked_fingerprint(self._quarantined)
         checkpointer.save(step, tree)
 
     def restore(
@@ -1372,6 +1837,11 @@ class SeparationService:
         mu_scale = lifecycle.get("mu_scale")
         parked_snap = list(lifecycle.get("parked") or [])
         parked_ids = [sid for sid, _info in parked_snap]
+        health_snap = lifecycle.get("health") or {}
+        cut_snap = lifecycle.get("cut") or {}
+        quar_snap = list(lifecycle.get("quarantined") or [])
+        quar_ids = [sid for sid, _info in quar_snap]
+        want_shadow = bool(lifecycle.get("shadow"))
         bad = {
             s: slot
             for s, slot in sessions.items()
@@ -1395,6 +1865,20 @@ class SeparationService:
             raise ValueError(
                 "lifecycle snapshot carries parked sessions but this service "
                 "has no readmit-mode drift_policy to probe them"
+            )
+        quar_overlap = set(quar_ids) & (
+            set(sessions) | set(queue_ids) | set(parked_ids)
+        )
+        if quar_overlap or len(set(quar_ids)) != len(quar_ids):
+            raise ValueError(
+                f"quarantined/session/queue/parked overlap or duplicates: "
+                f"{quar_ids}"
+            )
+        if (quar_snap or health_snap or cut_snap) and self.health_policy is None:
+            raise ValueError(
+                "lifecycle snapshot carries health-containment state "
+                "(quarantined/health/cut) but this service has no "
+                "health_policy to run the escalation ladder"
             )
         if mu_scale is not None and len(mu_scale) != self.bank.n_streams:
             raise ValueError(
@@ -1430,7 +1914,31 @@ class SeparationService:
             target["parked_H_hat"] = jnp.zeros((K, n, n), dt)
             target["parked_step"] = jnp.zeros((K,), jnp.int32)
             target["parked_ids"] = jnp.zeros((K,), jnp.uint32)
+        if want_shadow:
+            target["shadow_B"] = jnp.zeros_like(self.state.B)
+            target["shadow_H_hat"] = jnp.zeros_like(self.state.H_hat)
+            target["shadow_step"] = jnp.zeros_like(self.state.step)
+            target["shadow_conv"] = jnp.zeros_like(self.state.conv)
+        if quar_snap:
+            n = self.bank.easi.n_components
+            m = self.bank.easi.n_features
+            dt = self.bank.easi.dtype
+            K = len(quar_snap)
+            target["quar_B"] = jnp.zeros((K, n, m), dt)
+            target["quar_H_hat"] = jnp.zeros((K, n, n), dt)
+            target["quar_step"] = jnp.zeros((K,), jnp.int32)
+            target["quar_ids"] = jnp.zeros((K,), jnp.uint32)
         tree, got = checkpointer.restore(target, step=step)
+        if quar_snap:
+            want = np.asarray(self._parked_fingerprint(quar_ids))
+            saved = np.asarray(tree.pop("quar_ids"))
+            if not np.array_equal(saved, want):
+                raise ValueError(
+                    "lifecycle['quarantined'] does not match the checkpoint's "
+                    "quar_* leaves (membership/order changed between save and "
+                    "snapshot?) — last-known-good states would attach to the "
+                    "wrong sessions"
+                )
         if parked_snap:
             # the arrays and the snapshot are zipped by index: the saved sid
             # fingerprint must match the snapshot's park order exactly
@@ -1447,7 +1955,29 @@ class SeparationService:
         parked_B = tree.pop("parked_B", None)
         parked_H = tree.pop("parked_H_hat", None)
         parked_step = tree.pop("parked_step", None)
+        shadow_B = tree.pop("shadow_B", None)
+        shadow_H = tree.pop("shadow_H_hat", None)
+        shadow_step = tree.pop("shadow_step", None)
+        shadow_conv = tree.pop("shadow_conv", None)
+        quar_B = tree.pop("quar_B", None)
+        quar_H = tree.pop("quar_H_hat", None)
+        quar_step = tree.pop("quar_step", None)
         self.state = BankState(**tree)
+        if shadow_B is not None:
+            self._shadow = BankState(
+                B=shadow_B,
+                H_hat=shadow_H,
+                step=shadow_step,
+                conv=shadow_conv,
+                health=jnp.zeros_like(self.state.health),
+            )
+        elif self.health_policy is not None:
+            # checkpoint predates the shadow (or was saved without one):
+            # re-seed the last-known-good snapshot from the restored state —
+            # a state that was committed and saved is by definition healthy
+            self._shadow = self.state
+        else:
+            self._shadow = None
         self._slot_of = dict(sessions)
         self.scheduler.load(queue_entries)
         # convergence progress resumes exactly; sessions without a saved
@@ -1514,6 +2044,45 @@ class SeparationService:
             pos = info.get("position")
             if pos is not None:
                 self._restored_positions[sid] = int(pos)
+        # quarantined sessions resume with their escalation memory intact:
+        # last-known-good states from the stacked leaves, monitors/meta from
+        # the snapshot, sources re-bound via bind_source (unbound quarantined
+        # sessions skip probes, exactly like unbound parked ones)
+        self._quarantined = {}
+        for i, (sid, info) in enumerate(quar_snap):
+            lkg = SMBGDState(B=quar_B[i], H_hat=quar_H[i], step=quar_step[i])
+            self._quarantined[sid] = QuarantinedSession(
+                record=EvictionRecord(
+                    state=lkg,
+                    stats=SessionStats(admitted_at=now),
+                    monitor=None,
+                    reason=info.get("reason", "quarantined"),
+                    tick=int(info.get("tick", 0)),
+                ),
+                source=None,
+                monitor=HealthMonitor(**(info.get("monitor") or {})),
+                meta=SessionMeta(**(info.get("meta") or {})),
+            )
+            pos = info.get("position")
+            if pos is not None:
+                self._restored_positions[sid] = int(pos)
+        # active sessions' ladder memory + μ-cut countdowns resume exactly
+        self._health_mon = {
+            sid: HealthMonitor(**health_snap[sid])
+            for sid in sessions
+            if sid in health_snap
+        }
+        self._cut_left = {
+            sid: int(v) for sid, v in cut_snap.items() if sid in sessions
+        }
+        self._quar_ticks = int(lifecycle.get("quarantine_ticks") or 0)
+        self._health_events = []
+        self._n_health_events = 0
+        self._n_rollbacks = 0
+        self._n_diverged = 0
+        self._n_degraded_ticks = 0
+        self._n_source_retries = 0
+        self._last_fault = {}
         queue_meta_orders = [
             e[1].get("order", 0)
             for e in queue_entries
@@ -1522,6 +2091,7 @@ class SeparationService:
         self._seq = 1 + max(
             [m.order for m in self._meta.values()]
             + [ps.meta.order for ps in self._parked.values()]
+            + [qs.meta.order for qs in self._quarantined.values()]
             + queue_meta_orders,
             default=-1,
         )

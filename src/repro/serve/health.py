@@ -1,0 +1,128 @@
+"""Fault containment: health-word policy, escalation ladder, observability.
+
+The megakernel folds a per-stream *health word* into every tick (one more
+in-register reduction next to ``conv`` — see ``kernels.easi_gradient``):
+non-finite ``B′``/``Ĥ′``/``Y`` bits plus a relative-update blow-up bit.  An
+unhealthy stream's commit is already REFUSED in-kernel (the slot keeps its
+pre-tick state, exactly like the active-mask freeze), so by the time the host
+reads the word nothing is corrupted — containment is about what happens
+*next*.  ``HealthPolicy`` configures the service's escalation ladder over
+repeat offenders; ``HealthMonitor`` is the per-session streaming state;
+``HealthEvent`` the observability record (``on_health`` callbacks,
+``SeparationService.health_events``).
+
+The escalation ladder (``SeparationService._apply_health``):
+
+  1. **rollback** — first offense(s): the slot is rolled back to its
+     last-known-good shadow snapshot (``SeparatorBank.restore_slot``; the
+     shadow refreshes copy-on-healthy every ``shadow_every`` ticks) and the
+     session's μ is cut by ``mu_cut`` for ``cut_ticks`` ticks through the
+     same per-stream ``BankHyperparams`` traced-operand rows the drift
+     watchdog's boost rides — no retrace.
+  2. **quarantine** — more than ``max_rollbacks`` offenses inside a
+     ``window``-tick sliding window: the session leaves its slot (freed for
+     the queue) but is PARKED under health watch, probed out of band like
+     drift-parked sessions (``probe_every`` run_ticks; the no-commit probe
+     returns the VIRTUAL health word, so "still diverging" and "safe to
+     resume" are distinguishable without committing anything).  After
+     ``probation`` consecutive healthy probes it re-admits warm from its
+     last-known-good state.
+  3. **evict "diverged"** — more than ``max_quarantines`` quarantines: the
+     session is evicted for good with an ``EvictionRecord`` carrying the
+     provenance (reason ``"diverged"``; the final health word rides
+     ``HealthMonitor.last_word`` in the lifecycle snapshot).
+
+Input-side containment lives in ``data.resilience`` (``ResilientSource``
+retry/backoff/stall-timeout wrapper, ``FaultInjector`` chaos harness); the
+service isolates any per-session source failure to that session via the
+active mask (degraded tick, not a failed launch).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Hashable, List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthPolicy:
+    """Escalation policy over the per-stream health word.
+
+    A non-zero health word on a served tick is one *offense*.  Offense tick
+    stamps live in a sliding ``window``; while the count stays at or under
+    ``max_rollbacks`` each offense costs a rollback + μ cut, past that the
+    session is quarantined, and past ``max_quarantines`` quarantines it is
+    evicted with reason ``"diverged"``.
+    """
+
+    max_rollbacks: int = 2  # offenses tolerated per window before quarantine
+    window: int = 50  # ticks — how long an offense stays on the record
+    mu_cut: float = 0.25  # μ multiplier applied after a rollback ...
+    cut_ticks: int = 20  # ... for this many served ticks
+    max_quarantines: int = 2  # quarantines tolerated before "diverged"
+    probation: int = 3  # consecutive healthy probes to leave quarantine
+    probe_every: int = 10  # run_tick period of quarantine probes
+    shadow_every: int = 8  # ticks between copy-on-healthy shadow refreshes
+
+    def __post_init__(self) -> None:
+        if self.max_rollbacks < 0:
+            raise ValueError("max_rollbacks must be >= 0")
+        if self.window < 1:
+            raise ValueError("window must be >= 1")
+        if not (0.0 < self.mu_cut <= 1.0):
+            raise ValueError("mu_cut must be in (0, 1]")
+        if self.cut_ticks < 1:
+            raise ValueError("cut_ticks must be >= 1")
+        if self.max_quarantines < 0:
+            raise ValueError("max_quarantines must be >= 0")
+        if self.probation < 1:
+            raise ValueError("probation must be >= 1")
+        if self.probe_every < 1:
+            raise ValueError("probe_every must be >= 1")
+        if self.shadow_every < 1:
+            raise ValueError("shadow_every must be >= 1")
+
+
+@dataclasses.dataclass
+class HealthMonitor:
+    """Per-session streaming state of the escalation ladder (host-side,
+    ``dataclasses.asdict``-serializable — rides ``lifecycle`` snapshots).
+
+    ``offenses`` holds the service-tick stamps of rollbacks still inside the
+    policy window; ``quarantines`` never resets (the ladder only escalates);
+    ``healthy_streak`` counts consecutive healthy quarantine probes toward
+    probation; ``last_word`` is the most recent non-zero health word (the
+    provenance an eviction record points at)."""
+
+    offenses: List[int] = dataclasses.field(default_factory=list)
+    quarantines: int = 0
+    healthy_streak: int = 0
+    last_word: int = 0
+
+    def record_offense(self, tick: int, word: int, policy: HealthPolicy) -> bool:
+        """Fold one offense in; returns True when the ladder escalates past
+        rollback (i.e. this offense overflows the window budget)."""
+        self.last_word = int(word)
+        self.healthy_streak = 0
+        self.offenses = [
+            t for t in self.offenses if tick - t < policy.window
+        ]
+        self.offenses.append(int(tick))
+        return len(self.offenses) > policy.max_rollbacks
+
+
+@dataclasses.dataclass
+class HealthEvent:
+    """One containment action: who, when, what the kernel saw, what we did.
+
+    ``action`` is ``"rollback"`` (shadow restore + μ cut, in place),
+    ``"quarantine"`` (slot freed, session parked under health probe),
+    ``"release"`` (probation served, re-admitted warm) or ``"diverge"``
+    (evicted for good, reason ``"diverged"``).  ``word`` is the health word
+    that triggered it (``kernels.easi_gradient.ops.describe_health`` renders
+    it); ``slot`` the bank slot for in-place actions."""
+
+    session_id: Hashable
+    tick: int
+    word: int
+    action: str
+    slot: Optional[int] = None

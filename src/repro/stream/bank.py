@@ -91,12 +91,21 @@ class BankState(NamedTuple):
     under the active mask, and checkpoints/shards like any other leaf.
     ``conv=None`` (the default, for states built by legacy callers) is
     normalized to +inf on the first step.
+
+    ``health`` is the per-stream fault bitmask of the last tick (see
+    ``kernels.easi_gradient.ops.HEALTH_*``): 0 = the commit landed (or the
+    slot was frozen), any set bit = the commit was REFUSED because the update
+    went non-finite or blew past the static bound — the slot kept its
+    pre-tick state and the serving layer decides rollback/quarantine.  It is
+    a fresh per-tick verdict, not a carried statistic; ``health=None``
+    (legacy states) normalizes to all-healthy zeros.
     """
 
     B: jnp.ndarray  # (S, n, m) or (S, n_pad, m_pad)
     H_hat: jnp.ndarray  # (S, n, n) or (S, n_pad, n_pad)
     step: jnp.ndarray  # (S,) int32 — per-stream mini-batch counter
     conv: Optional[jnp.ndarray] = None  # (S,) f32 — last-tick ‖ΔB‖_F/‖B‖_F
+    health: Optional[jnp.ndarray] = None  # (S,) int32 — last-tick fault bits
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -116,6 +125,12 @@ class SeparatorBank:
     bf16 state.  ``prefetch`` toggles the megakernel's double-buffered X DMA.
     Geometry knobs left as ``None`` resolve from the persisted autotune cache
     (``AUTOTUNE.json``) unless ``autotune=False``.
+
+    ``health_checks`` (default on) folds the per-stream health word into
+    every step path (``BankState.health``) and REFUSES unhealthy commits —
+    the fault-containment layer; ``blowup`` overrides the static blow-up
+    bound on ``‖ΔB‖_F/‖B‖_F`` (default
+    ``kernels.easi_gradient.ops.HEALTH_BLOWUP_BOUND``).
     """
 
     easi: EASIConfig
@@ -130,6 +145,8 @@ class SeparatorBank:
     dtype_policy: Optional[str] = None  # None → follow easi.dtype
     prefetch: Optional[bool] = None
     autotune: bool = True
+    health_checks: bool = True
+    blowup: Optional[float] = None  # None → ops.HEALTH_BLOWUP_BOUND
 
     def __post_init__(self) -> None:
         if self.n_streams < 1:
@@ -226,6 +243,15 @@ class SeparatorBank:
         return easi_ops.STORAGE_DTYPES[self.resolved_dtype_policy]
 
     @property
+    def resolved_blowup(self) -> float:
+        """The static blow-up bound with the ``None`` default resolved."""
+        if self.blowup is not None:
+            return float(self.blowup)
+        from repro.kernels.easi_gradient import ops as easi_ops
+
+        return float(easi_ops.HEALTH_BLOWUP_BOUND)
+
+    @property
     def _sep(self) -> Separator:
         return Separator(self.easi, self.opt, self.algorithm, self.use_pallas)
 
@@ -268,7 +294,9 @@ class SeparatorBank:
             .at[:, : lay.n, : lay.n]
             .set(state.H_hat.astype(dt))
         )
-        return BankState(B=B, H_hat=H, step=state.step, conv=state.conv)
+        return BankState(
+            B=B, H_hat=H, step=state.step, conv=state.conv, health=state.health
+        )
 
     def unpad_state(self, state: BankState) -> BankState:
         """Persistent-padded → logical state (no-op if already logical)."""
@@ -280,6 +308,7 @@ class SeparatorBank:
             H_hat=state.H_hat[:, : lay.n, : lay.n],
             step=state.step,
             conv=state.conv,
+            health=state.health,
         )
 
     def pad_batch(self, X: jnp.ndarray) -> jnp.ndarray:
@@ -317,6 +346,7 @@ class SeparatorBank:
             H_hat=sub.H_hat.astype(dt),
             step=sub.step,
             conv=jnp.full((self.n_streams,), jnp.inf, jnp.float32),
+            health=jnp.zeros((self.n_streams,), jnp.int32),
         )
         return self.pad_state(state) if self.fused else state
 
@@ -326,6 +356,7 @@ class SeparatorBank:
         junk from the previous occupant survives."""
         sub = smbgd_lib.init_state(self.easi, key)
         conv = self._conv_or_default(state).at[slot].set(jnp.inf)
+        health = self._health_or_default(state).at[slot].set(0)
         if self._is_padded(state):
             lay = self.layout
             B_slot = (
@@ -339,12 +370,14 @@ class SeparatorBank:
                 H_hat=state.H_hat.at[slot].set(H_slot),
                 step=state.step.at[slot].set(sub.step),
                 conv=conv,
+                health=health,
             )
         return BankState(
             B=state.B.at[slot].set(sub.B.astype(state.B.dtype)),
             H_hat=state.H_hat.at[slot].set(sub.H_hat.astype(state.H_hat.dtype)),
             step=state.step.at[slot].set(sub.step),
             conv=conv,
+            health=health,
         )
 
     def slot_state(self, state: BankState, slot: int) -> SMBGDState:
@@ -367,6 +400,7 @@ class SeparatorBank:
         the γ step-0 gate does NOT re-apply).  ``conv`` restarts at +inf —
         the statistic describes steps taken *in this slot*."""
         conv = self._conv_or_default(state).at[slot].set(jnp.inf)
+        health = self._health_or_default(state).at[slot].set(0)
         if self._is_padded(state):
             lay = self.layout
             B_slot = (
@@ -384,12 +418,14 @@ class SeparatorBank:
                 H_hat=state.H_hat.at[slot].set(H_slot),
                 step=state.step.at[slot].set(sub.step),
                 conv=conv,
+                health=health,
             )
         return BankState(
             B=state.B.at[slot].set(sub.B.astype(state.B.dtype)),
             H_hat=state.H_hat.at[slot].set(sub.H_hat.astype(state.H_hat.dtype)),
             step=state.step.at[slot].set(sub.step),
             conv=conv,
+            health=health,
         )
 
     def _is_padded(self, state: BankState) -> bool:
@@ -403,6 +439,14 @@ class SeparatorBank:
         if state.conv is not None:
             return state.conv
         return jnp.full((state.B.shape[0],), jnp.inf, jnp.float32)
+
+    @staticmethod
+    def _health_or_default(state: BankState) -> jnp.ndarray:
+        """``state.health``, or all-healthy zeros for states built by legacy
+        callers that predate the health word."""
+        if state.health is not None:
+            return state.health
+        return jnp.zeros((state.B.shape[0],), jnp.int32)
 
     @staticmethod
     def stack_states(states, dtype=None) -> BankState:
@@ -421,6 +465,7 @@ class SeparatorBank:
             H_hat=H,
             step=jnp.stack([jnp.asarray(s.step) for s in states]),
             conv=jnp.full((len(states),), jnp.inf, jnp.float32),
+            health=jnp.zeros((len(states),), jnp.int32),
         )
 
     def unstack_states(self, state: BankState) -> list:
@@ -437,6 +482,75 @@ class SeparatorBank:
             )
             for s in range(state.B.shape[0])
         ]
+
+    # -- shadow snapshots (fault containment) ------------------------------
+    def update_shadow(
+        self, shadow: BankState, state: BankState, mask: jnp.ndarray
+    ) -> BankState:
+        """Copy-on-healthy: refresh the shadow's slots from ``state`` where
+        ``mask (S,)`` is set, keep the previous snapshot elsewhere.  The
+        shadow is the per-slot last-known-good state the serving layer rolls
+        a faulted session back to; it always carries ``health == 0`` (only
+        healthy states are ever copied in).  Both states must share a layout
+        (the service keeps the shadow in the bank's persistent layout)."""
+        mask = jnp.asarray(mask) != 0
+        m3 = mask[:, None, None]
+        return BankState(
+            B=jnp.where(m3, state.B, shadow.B),
+            H_hat=jnp.where(m3, state.H_hat, shadow.H_hat),
+            step=jnp.where(mask, state.step, shadow.step),
+            conv=jnp.where(
+                mask, self._conv_or_default(state), self._conv_or_default(shadow)
+            ),
+            health=jnp.zeros((state.B.shape[0],), jnp.int32),
+        )
+
+    def restore_slot(
+        self, state: BankState, shadow: BankState, slot
+    ) -> BankState:
+        """Roll ONE slot back to its shadow snapshot (B/Ĥ/step/conv), and
+        clear its health word — the first-offense recovery action."""
+        return BankState(
+            B=state.B.at[slot].set(shadow.B[slot]),
+            H_hat=state.H_hat.at[slot].set(shadow.H_hat[slot]),
+            step=state.step.at[slot].set(shadow.step[slot]),
+            conv=self._conv_or_default(state)
+            .at[slot]
+            .set(self._conv_or_default(shadow)[slot]),
+            health=self._health_or_default(state).at[slot].set(0),
+        )
+
+    def copy_slot(self, dst: BankState, src: BankState, slot) -> BankState:
+        """Copy one slot of ``src`` into ``dst`` (same layout on both sides)
+        — how the serving layer seeds a freshly (re)admitted session's
+        shadow so a rollback can never resurrect the slot's previous
+        occupant."""
+        return BankState(
+            B=dst.B.at[slot].set(src.B[slot]),
+            H_hat=dst.H_hat.at[slot].set(src.H_hat[slot]),
+            step=dst.step.at[slot].set(src.step[slot]),
+            conv=self._conv_or_default(dst)
+            .at[slot]
+            .set(self._conv_or_default(src)[slot]),
+            health=self._health_or_default(dst).at[slot].set(0),
+        )
+
+    def corrupt_slot(
+        self, state: BankState, slot, mode: str = "nan", scale: float = 1e30
+    ) -> BankState:
+        """Fault-injection hook (chaos tests): poison ONE slot's separator —
+        ``"nan"``/``"inf"`` overwrite ``B[slot, 0, 0]``, ``"scale"``
+        multiplies ``B[slot]`` by ``scale`` (a blow-up next tick).  The next
+        step's health word must flag the slot; nothing else is touched."""
+        if mode == "nan":
+            B = state.B.at[slot, 0, 0].set(jnp.nan)
+        elif mode == "inf":
+            B = state.B.at[slot, 0, 0].set(jnp.inf)
+        elif mode == "scale":
+            B = state.B.at[slot].multiply(jnp.asarray(scale, state.B.dtype))
+        else:
+            raise ValueError(f"unknown corruption mode {mode!r}")
+        return state._replace(B=B)
 
     # -- stepping ----------------------------------------------------------
     def step(
@@ -471,17 +585,46 @@ class SeparatorBank:
         if self.fused:
             return self._step_fused(state, X, active, hyperparams)
         new_state, Y = self._step_all(state, X, hyperparams)
-        if active is not None:
-            a3 = active[:, None, None]
-            new_state = BankState(
-                B=jnp.where(a3, new_state.B, state.B),
-                H_hat=jnp.where(a3, new_state.H_hat, state.H_hat),
-                step=jnp.where(active, new_state.step, state.step),
-                conv=jnp.where(
-                    active != 0, new_state.conv, self._conv_or_default(state)
-                ),
-            )
+        S = state.B.shape[0]
+        if active is None and not self.health_checks:
+            return new_state._replace(health=jnp.zeros((S,), jnp.int32)), Y
+        act = (
+            jnp.ones((S,), jnp.int32) if active is None else jnp.asarray(active)
+        ) != 0
+        health = (
+            self._vmap_health(new_state, Y, self.resolved_blowup)
+            if self.health_checks
+            else jnp.zeros((S,), jnp.int32)
+        )
+        # unhealthy streams refuse their commit exactly like frozen ones:
+        # pre-tick B/Ĥ/step/conv survive, only the health word reports why
+        commit = act & (health == 0)
+        c3 = commit[:, None, None]
+        new_state = BankState(
+            B=jnp.where(c3, new_state.B, state.B),
+            H_hat=jnp.where(c3, new_state.H_hat, state.H_hat),
+            step=jnp.where(commit, new_state.step, state.step),
+            conv=jnp.where(commit, new_state.conv, self._conv_or_default(state)),
+            health=jnp.where(act, health, 0),
+        )
         return new_state, Y
+
+    @staticmethod
+    def _vmap_health(new_state: BankState, Y: jnp.ndarray, blowup: float):
+        """Per-stream health word on the vmap paths — same bit layout as the
+        megakernel's in-register reduction (``easi_gradient.HEALTH_*``):
+        1 non-finite B′, 2 non-finite Ĥ′, 4 non-finite Y, 8 update magnitude
+        above ``blowup`` (``~(δ <= bound)`` so a NaN δ counts as blow-up)."""
+        fin_b = jnp.all(jnp.isfinite(new_state.B), axis=(1, 2))
+        fin_h = jnp.all(jnp.isfinite(new_state.H_hat), axis=(1, 2))
+        fin_y = jnp.all(jnp.isfinite(Y), axis=(1, 2))
+        blow = ~(new_state.conv <= blowup)
+        return (
+            jnp.where(fin_b, 0, 1)
+            + jnp.where(fin_h, 0, 2)
+            + jnp.where(fin_y, 0, 4)
+            + jnp.where(blow, 8, 0)
+        ).astype(jnp.int32)
 
     @staticmethod
     def _donate_default(donate: Optional[bool]) -> bool:
@@ -522,12 +665,15 @@ class SeparatorBank:
         state: BankState,
         X: jnp.ndarray,
         active: Optional[jnp.ndarray] = None,
-    ) -> jnp.ndarray:
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """No-commit probe step: the per-stream convergence statistic a
         ``step`` on ``X (S, P, m)`` WOULD commit — ``‖Ĥ′B‖_F/‖B‖_F`` from the
         virtual ``Ĥ′ = γ̂Ĥ + S`` — without mutating anything.  Returns
-        ``conv (S,)``; streams masked out by ``active`` carry ``state.conv``
-        through (+inf for never-measured states).
+        ``(conv (S,), health (S,) int32)``; streams masked out by ``active``
+        carry ``state.conv`` through (+inf for never-measured states) and
+        report ``health == 0``.  The health word judges the VIRTUAL step
+        (would this data blow the separator up?), so a quarantine probe can
+        tell "still diverging" from "safe to resume" without committing.
 
         This is the out-of-band drift probe: parked (frozen) separators are
         stacked into a transient bank (``stack_states``/``pad_state``) and
@@ -563,15 +709,27 @@ class SeparatorBank:
                 block_p=lay.block_p,
                 block_s=self.block_s,
                 prefetch=bool(self.prefetch),
+                health=bool(self.health_checks),
+                blowup=self.resolved_blowup,
             )
-        new_state, _ = self._step_all(state, X)
-        if active is None:
-            return new_state.conv
-        return jnp.where(active != 0, new_state.conv, self._conv_or_default(state))
+        new_state, Y = self._step_all(state, X)
+        act = (
+            jnp.ones((state.B.shape[0],), jnp.int32)
+            if active is None
+            else jnp.asarray(active)
+        ) != 0
+        health = (
+            self._vmap_health(new_state, Y, self.resolved_blowup)
+            if self.health_checks
+            else jnp.zeros((state.B.shape[0],), jnp.int32)
+        )
+        conv = jnp.where(act, new_state.conv, self._conv_or_default(state))
+        return conv, jnp.where(act, health, 0)
 
     def make_probe(self):
-        """Jitted ``probe(state, X, active) -> conv (S,)`` (no donation — the
-        probe never consumes its state; the frozen operands stay live)."""
+        """Jitted ``probe(state, X, active) -> (conv (S,), health (S,))`` (no
+        donation — the probe never consumes its state; the frozen operands
+        stay live)."""
         return jax.jit(lambda st, X, active: self.probe(st, X, active=active))
 
     def _bank_hyperparams(self) -> BankHyperparams:
@@ -604,7 +762,7 @@ class SeparatorBank:
         gamma_hat = hp.effective_momentum(lay.P)
         if active is None:
             active = jnp.ones((self.n_streams,), dtype=jnp.int32)
-        Y, B_new, H_new, step_new, conv_new = easi_ops.smbgd_step_bank(
+        Y, B_new, H_new, step_new, conv_new, health_new = easi_ops.smbgd_step_bank(
             X,
             W,
             state.B,
@@ -617,8 +775,19 @@ class SeparatorBank:
             block_p=lay.block_p,
             block_s=self.block_s,
             prefetch=bool(self.prefetch),
+            health=bool(self.health_checks),
+            blowup=self.resolved_blowup,
         )
-        return BankState(B=B_new, H_hat=H_new, step=step_new, conv=conv_new), Y
+        return (
+            BankState(
+                B=B_new,
+                H_hat=H_new,
+                step=step_new,
+                conv=conv_new,
+                health=health_new,
+            ),
+            Y,
+        )
 
     def _step_all(
         self,
@@ -768,8 +937,11 @@ class SeparatorBank:
         Xb = X[:, : K * P].reshape(S, K, P, m).transpose(1, 0, 2, 3)  # (K, S, P, m)
         if self.fused:
             state = self.pad_state(state)
-        # the scan carry must be structure-stable: normalize a legacy conv=None
-        state = state._replace(conv=self._conv_or_default(state))
+        # the scan carry must be structure-stable: normalize legacy None leaves
+        state = state._replace(
+            conv=self._conv_or_default(state),
+            health=self._health_or_default(state),
+        )
 
         def body(st, xb):
             st, Y = self.step(st, xb)

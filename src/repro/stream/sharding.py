@@ -46,6 +46,7 @@ def bank_sharding(mesh, axis: str = "stream") -> BankState:
         H_hat=NamedSharding(mesh, P(axis)),
         step=NamedSharding(mesh, P(axis)),
         conv=NamedSharding(mesh, P(axis)),
+        health=NamedSharding(mesh, P(axis)),
     )
 
 
@@ -94,14 +95,14 @@ def make_sharded_bank_step(
         if hetero:
             lb = dataclasses.replace(lb, hyperparams=BankHyperparams(*hp))
         st, Y = lb.step(BankState(B, H_hat, step, conv), X, active=active)
-        return st.B, st.H_hat, st.step, st.conv, Y
+        return st.B, st.H_hat, st.step, st.conv, st.health, Y
 
     hp_spec = (P(axis),) * 3 if hetero else ()
     sharded = shard_map(
         local_step,
         mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis), hp_spec),
-        out_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
+        out_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis)),
         check_rep=False,
     )
 
@@ -114,9 +115,9 @@ def make_sharded_bank_step(
         conv = state.conv
         if conv is None:  # legacy states: normalize before entering shard_map
             conv = jnp.full((bank.n_streams,), jnp.inf, jnp.float32)
-        B, H_hat, stp, conv, Y = sharded(
+        B, H_hat, stp, conv, health, Y = sharded(
             state.B, state.H_hat, state.step, conv, X, active, hp
         )
-        return BankState(B, H_hat, stp, conv), Y
+        return BankState(B, H_hat, stp, conv, health), Y
 
     return jax.jit(step, donate_argnums=(0,) if donate else ())

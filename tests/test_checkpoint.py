@@ -104,6 +104,93 @@ class TestRoundtrip:
             ckpt.restore(bad)
 
 
+class TestCorruptCheckpointErrors:
+    """Damaged checkpoints must fail with actionable errors naming the leaf
+    and the step — never a bare numpy traceback or, worse, silent garbage."""
+
+    def test_truncated_npy_leaf(self, tmp_path):
+        ckpt = Checkpointer(tmp_path)
+        t = _tree()
+        ckpt.save(4, t)
+        leaf = tmp_path / "step_000000000004" / "layers__w.npy"
+        leaf.write_bytes(leaf.read_bytes()[: 40])  # chop mid-header
+        with pytest.raises(ValueError, match=r"layers__w.*corrupt|corrupt.*layers__w"):
+            ckpt.restore(jax.tree.map(jnp.zeros_like, t))
+
+    def test_garbage_npy_leaf(self, tmp_path):
+        ckpt = Checkpointer(tmp_path)
+        t = _tree()
+        ckpt.save(4, t)
+        (tmp_path / "step_000000000004" / "step_scale.npy").write_bytes(
+            b"not an npy file at all"
+        )
+        with pytest.raises(ValueError, match="step_scale"):
+            ckpt.restore(jax.tree.map(jnp.zeros_like, t))
+
+    def test_missing_leaf_names_the_leaf(self, tmp_path):
+        ckpt = Checkpointer(tmp_path)
+        t = _tree()
+        ckpt.save(2, t)
+        os.remove(tmp_path / "step_000000000002" / "layers__b.npy")
+        with pytest.raises(FileNotFoundError, match="layers__b"):
+            ckpt.restore(jax.tree.map(jnp.zeros_like, t))
+
+    def test_unknown_step_lists_available(self, tmp_path):
+        ckpt = Checkpointer(tmp_path)
+        ckpt.save(1, _tree())
+        with pytest.raises(FileNotFoundError, match="available steps"):
+            ckpt.restore(_tree(), step=99)
+
+    def test_quarantine_fingerprint_mismatch_actionable(self, tmp_path):
+        """A lifecycle snapshot whose quarantine membership disagrees with
+        the checkpoint's stacked quar leaves must fail loudly."""
+        from repro.core import EASIConfig, SMBGDConfig
+        from repro.data.pipeline import MixedSignals
+        from repro.data.resilience import FaultInjector
+        from repro.data.sources import SyntheticSource
+        from repro.serve import ConvergencePolicy, HealthPolicy, SeparationService
+        from repro.stream import SeparatorBank
+
+        ecfg = EASIConfig(n_components=2, n_features=4, mu=3e-3)
+        ocfg = SMBGDConfig(batch_size=16, mu=3e-3, beta=0.9, gamma=0.5)
+
+        def build():
+            return SeparationService(
+                SeparatorBank(
+                    ecfg, ocfg, n_streams=2, fused=True, health_checks=True
+                ),
+                seed=0,
+                policy=ConvergencePolicy(
+                    threshold=1e-12, patience=10**6, min_ticks=10**6
+                ),
+                health_policy=HealthPolicy(
+                    max_rollbacks=1, window=30, probe_every=4, probation=2
+                ),
+            )
+
+        svc = build()
+        svc.admit(
+            "q",
+            source=FaultInjector(
+                SyntheticSource(MixedSignals(m=4, n=2, batch=16, seed=0)),
+                {i: "nan" for i in range(8)},
+            ),
+        )
+        for _ in range(12):
+            svc.run_tick()
+            if svc.status("q") == "quarantined":
+                break
+        assert svc.status("q") == "quarantined"
+        life = svc.lifecycle
+        ckpt = Checkpointer(tmp_path)
+        svc.save(ckpt, step=1)
+        # tamper: rename the quarantined session in the snapshot
+        life["quarantined"][0][0] = "not-q"
+        dup = build()
+        with pytest.raises(ValueError, match="quarantine|fingerprint"):
+            dup.restore(ckpt, lifecycle=life)
+
+
 class TestServiceLifecycleRoundtrip:
     """Queue + convergence-policy state across a checkpoint boundary: the
     arrays ride the Checkpointer, the host-side lifecycle snapshot rides

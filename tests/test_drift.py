@@ -455,11 +455,18 @@ class TestRunTickIngestion:
         assert svc.finished["u"].reason == "exhausted"
         assert svc.finished["u"].stats.ticks == 3
 
-    def test_wrong_channel_count_rejected(self):
+    def test_wrong_channel_count_degrades_not_raises(self):
+        """A misshapen block is a per-session fault, not a launch failure:
+        the session skips the tick (degraded) and the error is surfaced in
+        ``last_faults`` — other sessions keep being served."""
         svc = _svc("boost")
         svc.admit("u", source=ReplaySource(np.zeros((64, 3), np.float32)))
-        with pytest.raises(ValueError, match="block shape"):
-            svc.run_tick()
+        svc.admit("ok", source=_jump_source(seed=1))
+        out = svc.run_tick()
+        assert "u" not in out and "ok" in out
+        assert svc.metrics["n_degraded_ticks"] == 1
+        assert "block shape" in svc.last_faults["u"]
+        assert svc.session_stats("u")["ticks"] == 0
 
     def test_bind_source_after_admit(self):
         svc = _svc("boost")

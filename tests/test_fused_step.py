@@ -68,12 +68,13 @@ class TestMegakernelVsRefOracle:
         gamma_hat = 0.1 + 0.8 * jax.random.uniform(jax.random.fold_in(key, 4), (S,))
         active = (jnp.arange(S) % 3 != 2).astype(jnp.int32)  # freeze every 3rd
         conv0 = jnp.arange(1.0, S + 1.0)  # distinct: frozen carry is visible
-        Y, B2, H2, s2, c2 = easi_ops.smbgd_step_bank(
+        Y, B2, H2, s2, c2, h2 = easi_ops.smbgd_step_bank(
             X, W, B, H, step, gamma_hat, active, conv0, block_p=lay.block_p
         )
-        Yr, Br, Hr, sr, cr = smbgd_step_bank_ref(
+        Yr, Br, Hr, sr, cr, hr = smbgd_step_bank_ref(
             X, W, B, H, step, gamma_hat, active, conv0
         )
+        np.testing.assert_array_equal(np.asarray(h2), np.asarray(hr))
         np.testing.assert_allclose(np.asarray(Y), np.asarray(Yr), rtol=1e-5, atol=1e-5)
         np.testing.assert_allclose(np.asarray(B2), np.asarray(Br), rtol=1e-5, atol=1e-5)
         np.testing.assert_allclose(np.asarray(H2), np.asarray(Hr), rtol=1e-5, atol=1e-5)
@@ -184,9 +185,9 @@ class TestMegakernelPropertySweep:
         out_r = smbgd_step_bank_ref(
             X, W, B, H, step, gamma_hat, active, conv0, nonlinearity=nonlinearity
         )
-        names = ("Y", "B", "H_hat", "step", "conv")
+        names = ("Y", "B", "H_hat", "step", "conv", "health")
         for name, a, b in zip(names, out_k, out_r):
-            if name == "step":
+            if name in ("step", "health"):
                 np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
             else:
                 np.testing.assert_allclose(
@@ -240,7 +241,7 @@ class TestMegakernelPropertySweep:
             assert convs[name].shape == (S,)
         # ref oracle on the logical shapes with the same per-stream weights
         ehp = hp if hp is not None else BankHyperparams.broadcast(ocfg, S)
-        _, _, _, _, conv_ref = smbgd_step_bank_ref(
+        _, _, _, _, conv_ref, _ = smbgd_step_bank_ref(
             X,
             ehp.within_batch_weights(P),
             st0.B,
@@ -313,9 +314,12 @@ class TestFusedBankVsVmapOracle:
 
     def test_step0_gamma_gate_per_stream(self):
         """A stream at step 0 must ignore a poisoned momentum buffer even
-        while its neighbour (step 5) applies it — inside the megakernel."""
+        while its neighbour (step 5) applies it — inside the megakernel.
+        (health_checks off: the drill NEEDS the blown update to commit.)"""
         ecfg, ocfg = _cfgs(P=4, gamma=0.9)
-        bank = SeparatorBank(ecfg, ocfg, n_streams=2, fused=True)
+        bank = SeparatorBank(
+            ecfg, ocfg, n_streams=2, fused=True, health_checks=False
+        )
         key = jax.random.PRNGKey(0)
         state = bank.init(key)
         lay = bank.layout

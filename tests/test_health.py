@@ -1,0 +1,305 @@
+"""In-kernel health telemetry: word semantics, commit refusal, shadows.
+
+The fault-containment contract at the kernel/bank layers: every step reports
+a per-stream int32 health word (non-finite B′/Ĥ′/Y bits + the blow-up flag)
+computed as one more in-register reduction beside ``conv``; a bad word means
+the kernel REFUSED the commit (the slot keeps its pre-tick state, exactly
+like an active-mask freeze); the fused megakernel, the vmap path and the
+naive ref oracle agree bit-for-bit on the verdicts.  On top of that sit the
+service's shadow-snapshot helpers (``update_shadow`` / ``restore_slot`` /
+``copy_slot``) and the NaN-saturating monitor recurrences the escalation
+ladder consumes.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EASIConfig, SMBGDConfig, ema_update
+from repro.kernels.easi_gradient import ops as easi_ops
+from repro.kernels.easi_gradient.ref import health_word_ref, smbgd_step_bank_ref
+from repro.serve import ConvergencePolicy, DriftPolicy, HealthMonitor, HealthPolicy
+from repro.serve.drift import DriftMonitor
+from repro.serve.engine import ConvergenceMonitor
+from repro.stream import SeparatorBank
+from repro.stream.bank import BankState
+
+P = 16
+
+
+def _cfgs(P=P, n=2, m=4, mu=2e-3):
+    return (
+        EASIConfig(n_components=n, n_features=m, mu=mu),
+        SMBGDConfig(batch_size=P, mu=mu, beta=0.9, gamma=0.5),
+    )
+
+
+def _bank(fused, S=4, health_checks=True, **kw):
+    ecfg, ocfg = _cfgs()
+    return SeparatorBank(
+        ecfg, ocfg, n_streams=S, fused=fused, health_checks=health_checks, **kw
+    )
+
+
+def _poisoned_batch(bank, key, S=4, nan_stream=1, inf_stream=2):
+    """(S, P, m) batch with a NaN burst in one stream, an Inf in another."""
+    X = np.array(
+        jax.random.normal(key, (S, P, bank.easi.n_features)), dtype=np.float32
+    )
+    X[nan_stream, : P // 2] = np.nan
+    X[inf_stream, 0, 0] = np.inf
+    return jnp.asarray(X)
+
+
+class TestHealthWord:
+    def test_describe_health(self):
+        assert easi_ops.describe_health(easi_ops.HEALTH_OK) == "ok"
+        s = easi_ops.describe_health(
+            easi_ops.HEALTH_NONFINITE_B | easi_ops.HEALTH_BLOWUP
+        )
+        assert "nonfinite-B" in s and "blowup" in s
+
+    def test_health_word_ref_bits(self):
+        ok = np.zeros((2, 2))
+        bad = np.array([[np.nan, 0.0], [0.0, 0.0]])
+        assert health_word_ref(ok, ok, ok, 0.1, 100.0) == easi_ops.HEALTH_OK
+        assert health_word_ref(bad, ok, ok, 0.1, 100.0) == easi_ops.HEALTH_NONFINITE_B
+        assert health_word_ref(ok, bad, ok, 0.1, 100.0) == easi_ops.HEALTH_NONFINITE_H
+        assert health_word_ref(ok, ok, bad, 0.1, 100.0) == easi_ops.HEALTH_NONFINITE_Y
+        assert health_word_ref(ok, ok, ok, 200.0, 100.0) == easi_ops.HEALTH_BLOWUP
+        # NaN delta counts as blow-up (~(δ <= bound) semantics)
+        assert health_word_ref(ok, ok, ok, float("nan"), 100.0) & easi_ops.HEALTH_BLOWUP
+
+    @pytest.mark.parametrize("fused", [False, True])
+    def test_poisoned_streams_flagged_and_frozen(self, fused):
+        """NaN/Inf input streams report a bad word AND keep pre-tick state;
+        clean neighbours commit normally."""
+        bank = _bank(fused)
+        state = bank.init(jax.random.PRNGKey(0))
+        X = _poisoned_batch(bank, jax.random.PRNGKey(1))
+        new_state, _ = bank.step(state, X)
+        health = np.asarray(new_state.health)
+        assert health[0] == 0 and health[3] == 0
+        assert health[1] != 0 and health[2] != 0
+        B_old, B_new = np.asarray(state.B), np.asarray(new_state.B)
+        step_old, step_new = np.asarray(state.step), np.asarray(new_state.step)
+        for s in range(4):
+            committed = not np.array_equal(B_new[s], B_old[s])
+            assert committed == (health[s] == 0), s
+            assert (step_new[s] == step_old[s] + 1) == (health[s] == 0), s
+
+    def test_fused_vmap_and_ref_words_agree(self):
+        key = jax.random.PRNGKey(7)
+        banks = {f: _bank(f) for f in (False, True)}
+        st0 = banks[False].init(key)
+        X = _poisoned_batch(banks[False], jax.random.fold_in(key, 1))
+        words = {}
+        for f, bank in banks.items():
+            state = bank.pad_state(st0) if f else st0
+            new_state, _ = bank.step(state, X)
+            words[f] = np.asarray(new_state.health)
+        np.testing.assert_array_equal(words[False], words[True])
+
+    def test_kernel_health_matches_ref_oracle(self):
+        """ops.smbgd_step_bank health output vs ref.py on poisoned input."""
+        S, n, m = 4, 2, 4
+        lay = easi_ops.bank_layout(n, m, P)
+        key = jax.random.PRNGKey(3)
+        Xl = np.array(jax.random.normal(key, (S, P, m)), np.float32)
+        Xl[1, :4] = np.nan
+        X = jnp.zeros((S, lay.P_pad, lay.m_pad)).at[:, :P, :m].set(Xl)
+        B = jnp.zeros((S, lay.n_pad, lay.m_pad)).at[:, :n, :m].set(
+            jax.random.normal(jax.random.fold_in(key, 1), (S, n, m)) * 0.3
+        )
+        H = jnp.zeros((S, lay.n_pad, lay.n_pad))
+        W = jnp.full((S, lay.P_pad), 0.0).at[:, :P].set(1.0 / P)
+        step = jnp.ones((S,), jnp.int32)
+        gamma_hat = jnp.full((S,), 0.4)
+        active = jnp.asarray([1, 1, 1, 0], jnp.int32)  # stream 3 frozen
+        out_k = easi_ops.smbgd_step_bank(
+            X, W, B, H, step, gamma_hat, active, block_p=lay.block_p
+        )
+        out_r = smbgd_step_bank_ref(X, W, B, H, step, gamma_hat, active)
+        np.testing.assert_array_equal(np.asarray(out_k[5]), np.asarray(out_r[5]))
+        h = np.asarray(out_k[5])
+        assert h[1] != 0 and h[0] == 0
+        assert h[3] == 0  # frozen streams take no verdict
+
+    @pytest.mark.parametrize("fused", [False, True])
+    def test_probe_reports_virtual_health(self, fused):
+        """The no-commit probe returns the word a step WOULD produce."""
+        bank = _bank(fused)
+        state = bank.init(jax.random.PRNGKey(0))
+        X = _poisoned_batch(bank, jax.random.PRNGKey(1))
+        _conv, health = bank.probe(state, X)
+        stepped, _ = bank.step(state, X)
+        np.testing.assert_array_equal(
+            np.asarray(health), np.asarray(stepped.health)
+        )
+
+    @pytest.mark.parametrize("fused", [False, True])
+    def test_health_checks_off_restores_legacy_commit(self, fused):
+        """health_checks=False: zero overhead, zero words, and a poisoned
+        stream COMMITS its (non-finite) update — the pre-PR behavior."""
+        bank = _bank(fused, health_checks=False)
+        state = bank.init(jax.random.PRNGKey(0))
+        X = _poisoned_batch(bank, jax.random.PRNGKey(1))
+        new_state, _ = bank.step(state, X)
+        assert np.all(np.asarray(new_state.health) == 0)
+        assert not np.all(np.isfinite(np.asarray(new_state.B)[1]))
+
+    def test_blowup_bound_override(self):
+        """A tiny blow-up bound flags ordinary finite updates."""
+        bank = _bank(True, blowup=1e-12)
+        state = bank.init(jax.random.PRNGKey(0))
+        X = jax.random.normal(jax.random.PRNGKey(1), (4, P, 4))
+        new_state, _ = bank.step(state, X)
+        health = np.asarray(new_state.health)
+        assert np.all(health & easi_ops.HEALTH_BLOWUP)
+
+
+class TestShadowHelpers:
+    def test_update_shadow_masks_per_stream(self):
+        bank = _bank(True)
+        key = jax.random.PRNGKey(0)
+        shadow = bank.init(key)
+        state, _ = bank.step(shadow, jax.random.normal(key, (4, P, 4)))
+        mask = jnp.asarray([1, 0, 1, 0], jnp.int32)
+        out = bank.update_shadow(shadow, state, mask)
+        for s in range(4):
+            want = state if s % 2 == 0 else shadow
+            np.testing.assert_array_equal(
+                np.asarray(out.B[s]), np.asarray(want.B[s])
+            )
+            assert int(out.step[s]) == int(want.step[s])
+
+    def test_restore_slot_rolls_back_one_stream(self):
+        bank = _bank(True)
+        key = jax.random.PRNGKey(0)
+        shadow = bank.init(key)
+        state, _ = bank.step(shadow, jax.random.normal(key, (4, P, 4)))
+        out = bank.restore_slot(state, shadow, 2)
+        np.testing.assert_array_equal(np.asarray(out.B[2]), np.asarray(shadow.B[2]))
+        np.testing.assert_array_equal(np.asarray(out.B[0]), np.asarray(state.B[0]))
+        assert int(np.asarray(out.health)[2]) == 0
+
+    def test_copy_slot_reseeds_shadow(self):
+        bank = _bank(True)
+        key = jax.random.PRNGKey(0)
+        dst = bank.init(key)
+        src, _ = bank.step(dst, jax.random.normal(key, (4, P, 4)))
+        out = bank.copy_slot(dst, src, 1)
+        np.testing.assert_array_equal(np.asarray(out.B[1]), np.asarray(src.B[1]))
+        np.testing.assert_array_equal(np.asarray(out.B[0]), np.asarray(dst.B[0]))
+
+    def test_corrupt_slot_modes(self):
+        bank = _bank(True)
+        state = bank.init(jax.random.PRNGKey(0))
+        assert not np.isfinite(np.asarray(bank.corrupt_slot(state, 0, "nan").B)[0, 0, 0])
+        assert np.isinf(np.asarray(bank.corrupt_slot(state, 0, "inf").B)[0, 0, 0])
+        big = bank.corrupt_slot(state, 1, "scale", scale=1e30)
+        assert np.max(np.abs(np.asarray(big.B)[1])) >= 1e20
+        with pytest.raises(ValueError, match="mode"):
+            bank.corrupt_slot(state, 0, "zap")
+
+
+class TestHealthPolicyAndMonitor:
+    def test_policy_validation(self):
+        with pytest.raises(ValueError):
+            HealthPolicy(max_rollbacks=-1)
+        with pytest.raises(ValueError):
+            HealthPolicy(mu_cut=0.0)
+        with pytest.raises(ValueError):
+            HealthPolicy(probation=0)
+        with pytest.raises(ValueError):
+            HealthPolicy(probe_every=0)
+
+    def test_offense_window_escalation(self):
+        pol = HealthPolicy(max_rollbacks=2, window=10)
+        mon = HealthMonitor()
+        assert mon.record_offense(1, 1, pol) is False
+        assert mon.record_offense(2, 1, pol) is False
+        assert mon.record_offense(3, 1, pol) is True  # 3rd within window
+        # offenses outside the sliding window age out
+        mon2 = HealthMonitor()
+        assert mon2.record_offense(1, 1, pol) is False
+        assert mon2.record_offense(2, 1, pol) is False
+        assert mon2.record_offense(50, 1, pol) is False  # 1, 2 pruned
+
+    def test_policy_requires_health_checks(self):
+        from repro.serve import SeparationService
+
+        with pytest.raises(ValueError, match="health_checks"):
+            SeparationService(
+                _bank(True, health_checks=False),
+                policy=ConvergencePolicy(),
+                health_policy=HealthPolicy(),
+            )
+
+
+class TestNaNSaturatingMonitors:
+    """Satellite: a faulted tick's NaN statistic must never poison the
+    host-side monitor recurrences — skip the sample, count the skip."""
+
+    def test_ema_update_skips_nan_value(self):
+        s = ema_update(jnp.asarray(0.5), jnp.asarray(float("nan")), 0.9)
+        assert float(s) == 0.5
+        # +inf value keeps the legacy blend/replace semantics
+        s = ema_update(jnp.asarray(float("inf")), jnp.asarray(0.3), 0.9)
+        assert float(s) == pytest.approx(0.3)
+
+    def test_convergence_monitor_skips_nan(self):
+        pol = ConvergencePolicy(threshold=0.5, patience=2, min_ticks=0, ema=0.5)
+        mon = ConvergenceMonitor()
+        mon.update(0.1, pol)
+        before = (mon.stat, mon.below, mon.ticks)
+        mon.update(float("nan"), pol)
+        assert (mon.stat, mon.below, mon.ticks) == before
+        assert mon.skipped == 1
+        mon.update(0.1, pol)  # streak resumes where it left off
+        assert mon.below == 2
+
+    def test_drift_monitor_skips_nan(self):
+        pol = DriftPolicy(retrigger=0.1, patience=2, cooldown=0)
+        mon = DriftMonitor()
+        assert mon.update(0.5, pol) is False
+        assert mon.update(float("nan"), pol) is False
+        assert mon.skipped == 1 and mon.above == 1  # streak preserved
+        assert mon.update(0.5, pol) is True
+
+    def test_monitor_parity_with_ema_update_under_nan(self):
+        """ConvergenceMonitor's host recurrence stays pinned to the in-graph
+        ema_update even across NaN samples."""
+        pol = ConvergencePolicy(threshold=0.5, patience=10**6, min_ticks=0, ema=0.7)
+        mon = ConvergenceMonitor()
+        smoothed = jnp.asarray(float("inf"))
+        for x in (0.4, float("nan"), 0.2, float("nan"), 0.9):
+            mon.update(x, pol)
+            smoothed = ema_update(smoothed, x, pol.ema)
+            if math.isfinite(float(smoothed)):
+                np.testing.assert_allclose(mon.stat, float(smoothed), rtol=1e-6)
+
+
+class TestBankStateHealthField:
+    def test_state_roundtrips_health_leaf(self):
+        bank = _bank(True)
+        state = bank.init(jax.random.PRNGKey(0))
+        state, _ = bank.step(
+            state, jax.random.normal(jax.random.PRNGKey(1), (4, P, 4))
+        )
+        d = state._asdict()
+        assert "health" in d
+        rt = BankState(**d)
+        np.testing.assert_array_equal(
+            np.asarray(rt.health), np.asarray(state.health)
+        )
+
+    def test_epoch_carries_health(self):
+        bank = _bank(True)
+        state, _ = bank.epoch(
+            bank.init(jax.random.PRNGKey(0)),
+            jax.random.normal(jax.random.PRNGKey(1), (4, 4 * P, 4)),
+        )
+        assert np.asarray(state.health).shape == (4,)

@@ -97,10 +97,11 @@ class TestBankProbeMode:
         state = bank.init(jax.random.PRNGKey(0))
         X = jax.random.normal(jax.random.PRNGKey(1), (4, P, 4))
         stepped, _ = bank.step(state, X)
-        conv = bank.probe(state, X)
+        conv, health = bank.probe(state, X)
         np.testing.assert_allclose(
             np.asarray(conv), np.asarray(stepped.conv), rtol=1e-5, atol=1e-6
         )
+        np.testing.assert_array_equal(np.asarray(health), np.zeros((4,), np.int32))
 
     @pytest.mark.parametrize("fused", [False, True])
     def test_probe_never_mutates_and_masks_inactive(self, fused):
@@ -110,9 +111,10 @@ class TestBankProbeMode:
         state = bank.init(jax.random.PRNGKey(0))
         before = jax.tree.map(np.asarray, state._asdict())
         X = jax.random.normal(jax.random.PRNGKey(1), (4, P, 4))
-        conv = np.asarray(
-            bank.probe(state, X, active=jnp.asarray([1, 0, 1, 0], jnp.int32))
+        conv, _health = bank.probe(
+            state, X, active=jnp.asarray([1, 0, 1, 0], jnp.int32)
         )
+        conv = np.asarray(conv)
         # inactive lanes carry the previous statistic (+inf = never measured)
         assert np.isfinite(conv[0]) and np.isfinite(conv[2])
         assert np.isinf(conv[1]) and np.isinf(conv[3])
