@@ -27,11 +27,22 @@ Adapters:
     recording (memory-mapped by default: the file never fully loads).
   * ``ReplaySource``      — a fixed in-memory array, for deterministic
     regression runs.
+
+Trace capture + replay (the SLO harness's load-test substrate — see
+``serve.slo``):
+  * ``RecordingSource``   — transparent wrapper over ANY source: every block
+    it serves (and the exhaustion point) is captured in served order.
+  * ``save_recording`` / ``load_recording`` — persist captured blocks plus
+    admission/eviction event stamps to one ``.npz`` trace and load them back
+    as ``RecordedSource``s, which serve the captured blocks verbatim — a
+    replayed run sees bit-identical data in bit-identical order, whatever
+    the original source computed.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Protocol, Sequence, Union, runtime_checkable
+import json
+from typing import Dict, Hashable, List, Optional, Protocol, Sequence, Union, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -326,3 +337,161 @@ class ChannelBankSource(_WindowCursor):
         if self.center:
             blk = blk - blk.mean(axis=1, keepdims=True)
         return blk
+
+
+# -- trace capture + deterministic replay (serve.slo load tests) ------------
+
+
+class RecordingSource:
+    """Transparent tap over any ``SignalSource``: every block the wrapped
+    source serves is captured (in served order, as f32 copies), and the
+    exhaustion point is remembered — the raw material of a ``.npz`` trace
+    (``save_recording``) that replays as a deterministic load test.
+
+    Everything else (``position``/``seek``/``true_mixing``/``n_samples``/
+    retry counters/...) delegates to the wrapped source via ``__getattr__``,
+    so ``hasattr`` probes see exactly the inner source's capabilities and
+    the wrapper is invisible to the serving engine."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self._blocks: List[np.ndarray] = []
+        self.exhausted = False
+
+    def next_block(self, n_samples: int) -> np.ndarray:
+        try:
+            blk = self.inner.next_block(n_samples)
+        except SourceExhausted:
+            self.exhausted = True
+            raise
+        blk = np.asarray(blk, dtype=np.float32)
+        self._blocks.append(blk.copy())
+        return blk
+
+    @property
+    def blocks(self) -> List[np.ndarray]:
+        """Captured ``(m, P)`` blocks, in served order (copies)."""
+        return list(self._blocks)
+
+    def __getattr__(self, name):
+        # only reached when normal lookup fails → pure delegation
+        return getattr(self.inner, name)
+
+
+class RecordedSource:
+    """Blocks captured by a ``RecordingSource``, served back verbatim.
+
+    Serves the stacked ``(k, m, P)`` blocks in recorded order and raises
+    ``SourceExhausted`` past the end — the replayed session drains exactly
+    where the recording stopped.  Deliberately exposes NO ``seek``/cursor:
+    a replay is faithful to the *served block sequence*, not to the wrapped
+    source's sample clock (probe-time seek-ahead was already resolved into
+    the recorded blocks at capture time)."""
+
+    _what = "recorded trace"
+
+    def __init__(self, blocks: np.ndarray, exhausted: bool = True):
+        blocks = np.asarray(blocks, dtype=np.float32)
+        if blocks.ndim != 3 and blocks.size:
+            raise ValueError(
+                f"blocks must be (k, m, P), got shape {blocks.shape}"
+            )
+        self._blocks = blocks
+        self.exhausted = bool(exhausted)
+        self._i = 0
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self._blocks.shape[0]) if self._blocks.size else 0
+
+    @property
+    def n_channels(self) -> int:
+        return int(self._blocks.shape[1]) if self._blocks.size else 0
+
+    def next_block(self, n_samples: int) -> np.ndarray:
+        if self._i >= self.n_blocks:
+            raise SourceExhausted(
+                f"{self._what} drained: {self.n_blocks} recorded blocks served"
+            )
+        blk = self._blocks[self._i]
+        if blk.shape[1] != n_samples:
+            raise ValueError(
+                f"recorded block {self._i} is {blk.shape[1]} samples wide; "
+                f"{n_samples} requested (replay must use the recorded P)"
+            )
+        self._i += 1
+        return blk.copy()
+
+
+@dataclasses.dataclass
+class Recording:
+    """A loaded ``.npz`` trace: per-session ``RecordedSource``s (keyed by the
+    recorded session ids — JSON round-tripped, so non-str/int ids come back
+    stringified), the admission/eviction event stamps captured alongside
+    (``[{"action": "admit"|"evict", "sid": ..., "tick": ...}, ...]``), and
+    free-form metadata (bank geometry, seed, ...) for the harness that
+    replays it."""
+
+    sources: Dict[Hashable, RecordedSource]
+    events: List[Dict]
+    meta: Dict
+
+
+def save_recording(
+    path,
+    sources: Dict[Hashable, RecordingSource],
+    events: Optional[List[Dict]] = None,
+    meta: Optional[Dict] = None,
+) -> None:
+    """Persist captured blocks + event stamps to one compressed ``.npz``.
+
+    ``sources`` maps session id → its ``RecordingSource`` tap; ``events`` is
+    the admission/eviction log (JSON-able dicts with at least ``action``/
+    ``sid``/``tick`` — ``serve.slo.replay`` re-admits from the ``admit``
+    entries); ``meta`` is free-form JSON-able context.  The manifest rides as
+    a uint8 JSON leaf, so one file carries arrays and bookkeeping together."""
+    arrays = {}
+    manifest: Dict = {
+        "version": 1,
+        "sessions": [],
+        "events": list(events or []),
+        "meta": dict(meta or {}),
+    }
+    for i, (sid, rec) in enumerate(sources.items()):
+        blocks = (
+            np.stack(rec.blocks).astype(np.float32)
+            if rec.blocks
+            else np.zeros((0, 0, 0), dtype=np.float32)
+        )
+        key = f"blocks_{i}"
+        arrays[key] = blocks
+        manifest["sessions"].append(
+            {
+                "sid": sid,
+                "key": key,
+                "exhausted": bool(getattr(rec, "exhausted", True)),
+                "n_blocks": int(blocks.shape[0]),
+            }
+        )
+    arrays["manifest"] = np.frombuffer(
+        json.dumps(manifest, default=str).encode("utf-8"), dtype=np.uint8
+    )
+    np.savez_compressed(path, **arrays)
+
+
+def load_recording(path) -> Recording:
+    """Load a ``save_recording`` trace back as replayable sources + events."""
+    with np.load(path) as z:
+        if "manifest" not in z:
+            raise ValueError(f"{path}: not a recording (no manifest leaf)")
+        manifest = json.loads(bytes(z["manifest"]).decode("utf-8"))
+        srcs: Dict[Hashable, RecordedSource] = {}
+        for s in manifest["sessions"]:
+            srcs[s["sid"]] = RecordedSource(
+                z[s["key"]], exhausted=s.get("exhausted", True)
+            )
+    return Recording(
+        sources=srcs,
+        events=list(manifest.get("events") or []),
+        meta=dict(manifest.get("meta") or {}),
+    )

@@ -15,6 +15,11 @@ mandate, grown into an end-to-end adaptive service):
     evict ``"diverged"``.
   * ``AdmissionScheduler`` (FIFO) / ``PriorityScheduler`` /
     ``DeadlineScheduler`` + ``SessionMeta`` — who waits, who activates.
+  * ``SLOPolicy`` / ``DeadlineMonitor`` / ``SLOEvent`` / ``LatencySketch`` /
+    ``TickTimer`` + ``slo.replay`` — real-time budgets over TIME-TO-READY
+    tick latency (p50/p99/p999, deadline misses, shed/gate load control) and
+    deterministic replay of recorded loads (``data.sources.RecordingSource``
+    → ``save_recording``/``load_recording``).
   * ``EvictionRecord`` / ``ParkedSession`` / ``QuarantinedSession`` — what
     leaves a slot carries.
 
@@ -43,11 +48,20 @@ from repro.serve.scheduling import (
     SchedulerContext,
     SessionMeta,
 )
+from repro.serve.slo import (
+    DeadlineMonitor,
+    LatencySketch,
+    SLOEvent,
+    SLOPolicy,
+    TickTimer,
+    replay,
+)
 
 __all__ = [
     "AdmissionScheduler",
     "ConvergenceMonitor",
     "ConvergencePolicy",
+    "DeadlineMonitor",
     "DeadlineScheduler",
     "DriftEvent",
     "DriftMonitor",
@@ -57,12 +71,17 @@ __all__ = [
     "HealthEvent",
     "HealthMonitor",
     "HealthPolicy",
+    "LatencySketch",
     "ParkedSession",
     "PriorityScheduler",
     "QuarantinedSession",
+    "SLOEvent",
+    "SLOPolicy",
     "SchedulerContext",
     "SeparationService",
     "ServeConfig",
     "SessionMeta",
     "SessionStats",
+    "TickTimer",
+    "replay",
 ]

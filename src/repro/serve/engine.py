@@ -85,6 +85,34 @@ see ``serve.health``)::
     flaky feeds in ``data.resilience.ResilientSource`` for bounded
     retry/backoff/stall-timeout first).
 
+Latency SLOs (``SLOPolicy`` — see ``serve.slo``; telemetry always on)::
+
+        every tick ── TickTimer: block_until_ready(state.conv) ──► timed dt
+           │          (1-in-k under sync_every>1; block_ticks syncs harder)
+           ▼
+        LatencySketch: p50/p99/p999, exact window + log-binned lifetime
+           │
+           ├─ no deadline_budget_s ────────────► telemetry only
+           │
+           └─ dt > deadline_budget_s: MISS ──► n_deadline_misses++, the
+                windowed miss rate and every served session's
+                ``DeadlineMonitor`` advance; over ``max_miss_rate``:
+                  * ``shed=True`` — the worst-missing active session is
+                    preempted (reason ``"shed"``, lands in ``finished``)
+                  * ``gate_admissions=True`` — backfills and direct
+                    admissions HOLD until the miss window recovers
+
+    The tick clock measures TIME-TO-READY regardless of ``block_ticks``:
+    the dispatch-only latencies the old clock reported on asynchronous
+    backends never enter the books.  ``run_tick`` bills its whole duration
+    (pull + step + drain + out-of-band probes) as the tick's latency;
+    run_ticks with no data batch count as *empty ticks* (distinct counter,
+    still sketched and budget-checked, ``n_ticks`` untouched).  Recorded
+    loads replay deterministically: wrap sources in
+    ``data.sources.RecordingSource``, persist with ``save_recording``, and
+    drive any service through the trace with ``serve.slo.replay`` — the
+    ``--slo`` benchmark row gates p99/miss-rate regressions in CI.
+
 Ingestion: ``run_tick()`` is the scheduler-driven pull loop — sessions bind
 a ``data.sources.SignalSource`` at admit time; each tick backfills free
 slots, pulls one channel-major ``(m, P)`` block per bound source, advances
@@ -139,6 +167,7 @@ serving bank's resolved geometry with ``autotune=False``):
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import json
 import math
@@ -161,6 +190,13 @@ from repro.serve.scheduling import (
     AdmissionScheduler,
     SchedulerContext,
     SessionMeta,
+)
+from repro.serve.slo import (
+    DeadlineMonitor,
+    LatencySketch,
+    SLOEvent,
+    SLOPolicy,
+    TickTimer,
 )
 from repro.stream.bank import BankState, SeparatorBank
 
@@ -218,16 +254,45 @@ class Engine:
 
 @dataclasses.dataclass
 class SessionStats:
-    """Per-session serving counters (host-side bookkeeping)."""
+    """Per-session serving counters (host-side bookkeeping).
 
-    admitted_at: float  # time.perf_counter() at admission
+    ``admitted_at`` stamps ``admit()`` (queue entry); ``activated_at`` stamps
+    the slot claim (``_activate``) — the gap is ``queue_wait_s``.  Throughput
+    divides by SERVICE time (since activation), never by queue wait: a
+    session that sat out a full waiting room is not slow, it was waiting."""
+
+    admitted_at: float  # time.perf_counter() at admission (queue entry)
+    activated_at: Optional[float] = None  # slot claimed (None = not yet)
     ticks: int = 0
     samples: int = 0
 
+    def queue_wait_s(self) -> float:
+        """Seconds between admission and slot activation (0 until active)."""
+        if self.activated_at is None:
+            return 0.0
+        return max(self.activated_at - self.admitted_at, 0.0)
+
     def samples_per_s(self, now: Optional[float] = None) -> float:
-        """Throughput since admission (wall-clock)."""
+        """Service-time throughput: samples over wall-clock since ACTIVATION
+        (falls back to admission time for stats born before activation)."""
         now = time.perf_counter() if now is None else now
-        return self.samples / max(now - self.admitted_at, 1e-9)
+        start = (
+            self.activated_at
+            if self.activated_at is not None
+            else self.admitted_at
+        )
+        return self.samples / max(now - start, 1e-9)
+
+
+class MetricsView(dict):
+    """The service's metrics surface: a plain dict of counters that is ALSO
+    callable — ``svc.metrics()`` returns the same mapping as ``svc.metrics``,
+    so scrape code written against either the property convention (this
+    repo's benchmarks) or the method convention (harness front-ends) reads
+    one surface."""
+
+    def __call__(self) -> "MetricsView":
+        return self
 
 
 @dataclasses.dataclass(frozen=True)
@@ -305,7 +370,7 @@ class EvictionRecord:
     stats: SessionStats
     monitor: Optional[ConvergenceMonitor]
     reason: str  # "converged" | "evicted" | "exhausted" | "preempted" |
-    #              "diverged" | "quarantined"
+    #              "diverged" | "quarantined" | "shed"
     tick: int  # service tick counter at eviction
     # divergence provenance: the health-escalation ladder state at eviction
     # (offense stamps, quarantine count, last non-zero health word) — set for
@@ -371,11 +436,16 @@ class SeparationService:
     padded Y at return — steady-state serving allocates no device state per
     tick (the host→device transfer of the staging buffer remains).
 
-    Metrics (the backpressure/observability hook): ``metrics`` reports
-    per-tick latency (last/mean) and aggregate samples/sec; ``session_stats``
-    reports per-session tick/sample counters and samples/sec since admission.
-    ``block_ticks=True`` synchronizes on the device result before stopping the
-    tick clock, so latencies measure compute, not dispatch.
+    Metrics (the backpressure/observability hook): ``metrics`` (a dict, also
+    callable as ``svc.metrics()``) reports per-tick TIME-TO-READY latency
+    (last/mean + p50/p99/p999 windowed and lifetime — the tick clock blocks
+    on the bank's conv leaf every tick, so the numbers are honest under
+    asynchronous dispatch; ``SLOPolicy.sync_every`` samples the sync 1-in-k)
+    plus deadline-miss counters; ``session_stats`` reports per-session
+    tick/sample counters, queue wait, and SERVICE-TIME samples/sec (queue
+    wait excluded).  ``block_ticks=True`` additionally synchronizes on the
+    full device result before returning — a stronger guarantee than the
+    telemetry sync, kept for lockstep callers.
 
     Lifecycle (see the module docstring for the full state machine): with
     ``max_queue > 0`` a full bank enqueues admissions instead of raising
@@ -412,6 +482,7 @@ class SeparationService:
         on_drift: Optional[Callable[[Hashable, DriftEvent], None]] = None,
         health_policy: Optional[HealthPolicy] = None,
         on_health: Optional[Callable[[Hashable, HealthEvent], None]] = None,
+        slo: Optional[SLOPolicy] = None,
     ):
         self.bank = bank
         self.key = jax.random.PRNGKey(seed)
@@ -508,10 +579,40 @@ class SeparationService:
         self._stage = np.zeros(stage_shape, dtype=np.float32)
         self.block_ticks = block_ticks
         self._stats: Dict[Hashable, SessionStats] = {}
+        self._admit_time: Dict[Hashable, float] = {}  # queue-wait stamps
         self._n_ticks = 0
         self._total_samples = 0
         self._total_tick_s = 0.0
         self._last_tick_s = float("nan")
+        # latency SLO machinery (serve.slo): telemetry is always on — the
+        # default policy has no deadline budget, so only the time-to-ready
+        # sketch runs; a budgeted policy arms misses / shedding / gating
+        self.slo = slo if slo is not None else SLOPolicy()
+        self._reset_slo()
+
+    def _reset_slo(self) -> None:
+        """(Re-)arm the SLO telemetry state — shared by ``__init__`` and
+        ``restore`` (serving metrics describe the current epoch only)."""
+        pol = self.slo
+        self._sketch = LatencySketch(window=pol.window)
+        self._timer = TickTimer(sync_every=pol.sync_every)
+        self._deadline_mon: Dict[Hashable, DeadlineMonitor] = {}
+        self._recent_misses: collections.deque = collections.deque(
+            maxlen=pol.miss_window
+        )
+        self._n_deadline_misses = 0
+        self._n_timed_ticks = 0  # ticks with a time-to-ready measurement
+        self._timed_samples = 0  # samples served on timed ticks
+        self._n_empty_ticks = 0  # run_ticks with no data batch (probe-only)
+        self._n_shed = 0
+        self._slo_events: List[SLOEvent] = []
+        self._n_slo_events = 0
+        self._last_shed_tick = -(10**9)
+        self._last_probe_s = float("nan")
+        # run_tick defers the tick's latency record past the probe phase so
+        # probe work is billed to the tick that ran it (see _finish_tick)
+        self._pending_tick: Optional[Tuple[List[Hashable], bool, int]] = None
+        self._defer_slo = False
 
     @property
     def n_active(self) -> int:
@@ -631,9 +732,29 @@ class SeparationService:
 
     # -- metrics -----------------------------------------------------------
     @property
-    def metrics(self) -> Dict[str, float]:
-        """Service-level serving counters (one dict, cheap to scrape)."""
-        return {
+    def deadline_miss_rate(self) -> float:
+        """Windowed deadline-miss rate: misses over the last ``miss_window``
+        timed ticks (0.0 until a budgeted tick has been timed)."""
+        if not self._recent_misses:
+            return 0.0
+        return sum(self._recent_misses) / len(self._recent_misses)
+
+    @property
+    def metrics(self) -> "MetricsView":
+        """Service-level serving counters (one dict, cheap to scrape; also
+        callable — ``svc.metrics()`` works identically).
+
+        Latency keys measure TIME-TO-READY (the tick clock stops after a
+        ``block_until_ready`` on the bank's conv leaf — see ``serve.slo``),
+        so they are honest on asynchronous backends regardless of
+        ``block_ticks``.  ``p50/p99/p999_tick_s`` are exact over the sketch
+        window; the ``*_life`` twins are bounded-memory lifetime quantiles.
+        ``mean_tick_s``/``samples_per_s`` cover timed DATA ticks;
+        probe-only run_ticks count in ``n_empty_ticks`` and land in the
+        quantile sketch (they spend wall-clock against the deadline budget
+        like any tick) but not in the data-tick means."""
+        sk = self._sketch
+        return MetricsView({
             "n_active": float(self.n_active),
             "n_free": float(self.n_free),
             "n_queued": float(self.n_queued),
@@ -651,34 +772,63 @@ class SeparationService:
             "n_source_retries": float(self._n_source_retries),
             "n_health_events": float(self._n_health_events),
             "n_ticks": float(self._n_ticks),
+            "n_empty_ticks": float(self._n_empty_ticks),
+            "n_timed_ticks": float(self._n_timed_ticks),
             "total_samples": float(self._total_samples),
             "last_tick_s": self._last_tick_s,
-            "mean_tick_s": self._total_tick_s / self._n_ticks
-            if self._n_ticks
+            "last_probe_s": self._last_probe_s,
+            "mean_tick_s": self._total_tick_s / self._n_timed_ticks
+            if self._n_timed_ticks
             else float("nan"),
-            "samples_per_s": self._total_samples / self._total_tick_s
+            "samples_per_s": self._timed_samples / self._total_tick_s
             if self._total_tick_s > 0
             else float("nan"),
-        }
+            "n_deadline_misses": float(self._n_deadline_misses),
+            "deadline_miss_rate": self.deadline_miss_rate,
+            "n_shed": float(self._n_shed),
+            "n_slo_events": float(self._n_slo_events),
+            **sk.summary(),
+        })
 
     def session_stats(self, session_id: Hashable) -> Dict[str, float]:
-        """Per-session counters: ticks, samples, samples/sec since admit —
-        plus the convergence monitor (smoothed stat, consecutive below-count)
-        when a policy is attached."""
+        """Per-session counters: ticks, samples, service-time samples/sec,
+        seconds spent waiting in the admission queue — plus the convergence
+        monitor (smoothed stat, consecutive below-count) when a policy is
+        attached and the deadline record (lifetime misses, window-resident
+        misses) once the session has seen a budgeted tick."""
         st = self._stats[session_id]
         out = {
             "ticks": float(st.ticks),
             "samples": float(st.samples),
             "samples_per_s": st.samples_per_s(),
+            "queue_wait_s": st.queue_wait_s(),
         }
         mon = self._monitors.get(session_id)
         if mon is not None:
             out["conv_stat"] = mon.stat
             out["conv_below"] = float(mon.below)
+        dmon = self._deadline_mon.get(session_id)
+        if dmon is not None:
+            out["deadline_misses"] = float(dmon.misses)
+            out["deadline_misses_recent"] = float(len(dmon.recent))
+        return out
+
+    @property
+    def slo_events(self) -> List[SLOEvent]:
+        """Load-control actions so far (shed/gate; read-only view — drain
+        with ``pop_slo_events``).  Per-tick misses are counters, not events."""
+        return list(self._slo_events)
+
+    def pop_slo_events(self) -> List[SLOEvent]:
+        out, self._slo_events = self._slo_events, []
         return out
 
     def _sched_ctx(self) -> SchedulerContext:
-        return SchedulerContext(tick=self._n_ticks, active=dict(self._meta))
+        return SchedulerContext(
+            tick=self._n_ticks,
+            active=dict(self._meta),
+            deadline_miss_rate=self.deadline_miss_rate,
+        )
 
     def admit(
         self,
@@ -722,6 +872,8 @@ class SeparationService:
             order=self._seq,
         )
         self._seq += 1
+        # queue-wait clock starts NOW — _activate stamps the other end
+        self._admit_time[session_id] = time.perf_counter()
         if source is not None:
             self._sources[session_id] = source
         if state is not None:
@@ -736,6 +888,7 @@ class SeparationService:
             if (
                 self._free
                 and not len(self.scheduler)
+                and not self._slo_gated()
                 and self.scheduler.can_activate(meta, self._sched_ctx())
             ):
                 self._meta[session_id] = meta
@@ -747,11 +900,13 @@ class SeparationService:
                     f"before admitting"
                 )
             # free slots may exist while sessions wait (tenant at quota /
-            # non-empty queue): enqueue and let the scheduler pick
+            # non-empty queue / SLO admission gate): enqueue and let the
+            # scheduler pick when the gate reopens
             self.scheduler.push(session_id, meta)
         except (RuntimeError, ValueError):
             self._sources.pop(session_id, None)
             self._warm.pop(session_id, None)
+            self._admit_time.pop(session_id, None)
             raise
         self._backfill()
         return self._slot_of.get(session_id)
@@ -771,7 +926,11 @@ class SeparationService:
         self._slot_of[session_id] = slot
         self._meta.setdefault(session_id, SessionMeta(order=self._seq))
         self._mu_scale[slot] = 1.0
-        self._stats[session_id] = SessionStats(admitted_at=time.perf_counter())
+        now = time.perf_counter()
+        self._stats[session_id] = SessionStats(
+            admitted_at=self._admit_time.pop(session_id, now),
+            activated_at=now,
+        )
         self._monitors[session_id] = ConvergenceMonitor()
         if self._shadow is not None:
             # seed the slot's shadow from the state it was just born with —
@@ -786,11 +945,38 @@ class SeparationService:
             self.on_admit(session_id, slot)
         return slot
 
+    def _slo_gated(self) -> bool:
+        """Is the SLO admission gate closed?  True while
+        ``SLOPolicy(gate_admissions=True)`` and the windowed deadline-miss
+        rate is over ``max_miss_rate`` — free slots stay free (and direct
+        admissions queue) until the window recovers, so shedding/gating can
+        actually reduce load instead of instantly re-filling it."""
+        return (
+            self.slo.gate_admissions
+            and self.slo.deadline_budget_s is not None
+            and self.deadline_miss_rate > self.slo.max_miss_rate
+        )
+
     def _backfill(self) -> None:
         """Fill free slots from the scheduler until it runs out of eligible
         sessions (``pop`` returning ``None`` = everyone gated, e.g. tenants
         at quota — the slot stays free and we retry at the next release or
-        ``run_tick``)."""
+        ``run_tick``).  The SLO admission gate holds backfills entirely
+        while the service is over its deadline-miss ceiling (one ``"gate"``
+        event per closed-gate attempt with waiting work)."""
+        if self._slo_gated():
+            if self._free and len(self.scheduler):
+                self._record_slo(
+                    SLOEvent(
+                        session_id=None,
+                        tick=self._n_ticks,
+                        tick_s=self._last_tick_s,
+                        budget_s=float(self.slo.deadline_budget_s),
+                        action="gate",
+                        miss_rate=self.deadline_miss_rate,
+                    )
+                )
+            return
         while self._free and len(self.scheduler):
             popped = self.scheduler.pop(self._sched_ctx())
             if popped is None:
@@ -822,6 +1008,7 @@ class SeparationService:
             self._mixing.pop(session_id, None)
             self._sources.pop(session_id, None)
             self._warm.pop(session_id, None)
+            self._admit_time.pop(session_id, None)
             return None
         if session_id in self._parked:
             ps = self._parked.pop(session_id)
@@ -864,6 +1051,8 @@ class SeparationService:
         self._boost_left.pop(session_id, None)
         self._cut_left.pop(session_id, None)
         self._health_mon.pop(session_id, None)
+        self._deadline_mon.pop(session_id, None)
+        self._admit_time.pop(session_id, None)
         self._mu_scale[slot] = 1.0
         self._free.append(slot)
         self._n_evicted += 1
@@ -947,7 +1136,14 @@ class SeparationService:
             slot = self._slot_of[sid]
             X[slot, :P, :m] = xb
             active[slot] = True
-        t0 = time.perf_counter()
+        # time-to-ready tick clock (PR-8 fix): JAX dispatches asynchronously,
+        # so stopping at dispatch measured nothing on a real accelerator.
+        # The timer blocks on the bank's conv leaf — a tiny (S,) vector whose
+        # readiness implies the whole bank program retired — every tick (or
+        # 1-in-k under SLOPolicy.sync_every); block_ticks=True keeps its
+        # stronger full-result sync and is timed as-is.
+        timer = self._timer
+        timer.start()
         if self._hp_step:
             self.state, Y = self._step(
                 self.state, jnp.asarray(X), jnp.asarray(active), self._current_hp()
@@ -956,10 +1152,10 @@ class SeparationService:
             self.state, Y = self._step(self.state, jnp.asarray(X), jnp.asarray(active))
         if self.block_ticks:
             jax.block_until_ready((self.state, Y))
-        dt = time.perf_counter() - t0
+            dt, timed = timer.stop(already_synced=True)
+        else:
+            dt, timed = timer.stop(sync_leaf=self.state.conv)
         self._n_ticks += 1
-        self._last_tick_s = dt
-        self._total_tick_s += dt
         self._total_samples += P * len(batches)
         for sid in batches:
             st = self._stats[sid]
@@ -969,6 +1165,12 @@ class SeparationService:
         # sessions still receive this tick's separated output
         out = {sid: Y[self._slot_of[sid], :P, :n] for sid in batches}
         served = list(batches.keys())
+        if self._defer_slo:
+            # called from run_tick: the tick's latency record is finished
+            # AFTER the probe phase, so probe time is billed to this tick
+            self._pending_tick = (served, timed, P * len(batches))
+        else:
+            self._finish_tick(dt, served, timed, P * len(batches))
         if self.health_policy is not None:
             # containment first: offenders are rolled back / quarantined /
             # diverged and drop out of this tick's convergence sweep (their
@@ -977,6 +1179,76 @@ class SeparationService:
         if self.policy is not None:
             self._apply_policy(served)
         return out
+
+    def _finish_tick(
+        self, dt: float, served: List[Hashable], timed: bool, samples: int
+    ) -> None:
+        """Close out one data tick's latency record.  Sampled-out ticks
+        (``timed=False`` — SLOPolicy.sync_every > 1) stopped the clock at
+        dispatch: they carry no latency information and are dropped entirely
+        rather than recorded as fiction."""
+        if not timed:
+            return
+        self._last_tick_s = dt
+        self._total_tick_s += dt
+        self._n_timed_ticks += 1
+        self._timed_samples += samples
+        self._record_latency(dt, served)
+
+    def _record_slo(self, event: SLOEvent) -> None:
+        self._slo_events.append(event)
+        self._n_slo_events += 1
+
+    def _record_latency(self, dt: float, served: List[Hashable]) -> None:
+        """Fold one timed latency into the sketch and — under a budget —
+        the deadline machinery: the service miss window, every served
+        session's ``DeadlineMonitor``, and (opted in) the shed decision.
+        The shed victim is the still-active session with the most
+        window-resident misses (ties → lower priority, younger admission):
+        the session most consistently present when the budget blows is the
+        best guess at the expensive one."""
+        self._sketch.add(dt)
+        pol = self.slo
+        budget = pol.deadline_budget_s
+        if budget is None:
+            return
+        missed = dt > budget
+        if missed:
+            self._n_deadline_misses += 1
+        self._recent_misses.append(1 if missed else 0)
+        victim, victim_rank = None, None
+        for sid in served:
+            mon = self._deadline_mon.setdefault(sid, DeadlineMonitor())
+            count = mon.record(self._n_ticks, missed, pol)
+            if sid not in self._slot_of:
+                continue  # evicted/parked by this tick's sweeps
+            meta = self._meta.get(sid) or SessionMeta()
+            rank = (-count, meta.priority, -meta.order)
+            if victim_rank is None or rank < victim_rank:
+                victim, victim_rank = sid, rank
+        if not missed:
+            return
+        rate = self.deadline_miss_rate
+        if (
+            pol.shed
+            and rate > pol.max_miss_rate
+            and victim is not None
+            and self.n_active > 1
+            and self._n_ticks - self._last_shed_tick >= pol.shed_cooldown
+        ):
+            self._last_shed_tick = self._n_ticks
+            self._n_shed += 1
+            self._release(victim, reason="shed")
+            self._record_slo(
+                SLOEvent(
+                    session_id=victim,
+                    tick=self._n_ticks,
+                    tick_s=dt,
+                    budget_s=float(budget),
+                    action="shed",
+                    miss_rate=rate,
+                )
+            )
 
     def _apply_policy(self, served) -> None:
         """End-of-tick convergence + drift sweep: update each served session's
@@ -1174,6 +1446,7 @@ class SeparationService:
         self._hot.pop(session_id, None)
         self._boost_left.pop(session_id, None)
         self._cut_left.pop(session_id, None)
+        self._deadline_mon.pop(session_id, None)
         self._mu_scale[slot] = 1.0
         self._free.append(slot)
         self._quarantined[session_id] = QuarantinedSession(
@@ -1594,7 +1867,18 @@ class SeparationService:
         — it is simply left out of the batch, so the bank's active mask
         freezes its slot — and never fails the launch for everyone else.
         Degraded session-ticks count in ``metrics['n_degraded_ticks']``; the
-        last per-session failure string is kept in ``last_faults``."""
+        last per-session failure string is kept in ``last_faults``.
+
+        Latency accounting (PR-8): the tick's recorded latency is the FULL
+        ``run_tick`` duration — pull + bank step (time-to-ready) + drain
+        evictions + out-of-band probes — so probe work is billed to the tick
+        that ran it and a ``deadline_budget_s`` judges what a real-time
+        caller actually waited.  A run_tick whose batches all degraded or
+        drained (or that only probed) no longer vanishes from telemetry: it
+        counts in ``metrics['n_empty_ticks']`` and its duration still lands
+        in the latency sketch and the deadline check (``n_ticks`` remains
+        data ticks only — lifecycle stamps keep their meaning)."""
+        t0 = time.perf_counter()
         self._backfill()  # deadline/quota gates may have reopened
         P = self.bank.opt.batch_size
         m = self.bank.easi.n_features
@@ -1620,12 +1904,35 @@ class SeparationService:
             if hasattr(src, "pop_retries"):
                 self._n_source_retries += int(src.pop_retries())
             batches[sid] = blk.T
-        out = self.step(batches) if batches else {}
+        if batches:
+            self._defer_slo = True
+            try:
+                out = self.step(batches)
+            finally:
+                self._defer_slo = False
+        else:
+            out = {}
         for sid in drained:
             if sid in self._slot_of:
                 self._release(sid, reason="exhausted")
+        had_oob = bool(self._parked or self._quarantined)
+        pt0 = time.perf_counter()
         self._probe_parked()
         self._probe_quarantined()
+        pt1 = time.perf_counter()
+        if had_oob:
+            self._last_probe_s = pt1 - pt0  # out-of-band probe phase, timed
+        dt = pt1 - t0
+        if self._pending_tick is not None:
+            served, timed, samples = self._pending_tick
+            self._pending_tick = None
+            self._finish_tick(dt, served, timed, samples)
+        else:
+            # empty tick: every source degraded/drained, or probe-only work —
+            # distinctly counted, and its wall-clock still faces the budget
+            # (probes end host-synced, so dt is honest without a sync leaf)
+            self._n_empty_ticks += 1
+            self._record_latency(dt, [])
         return out
 
     @property
@@ -2100,13 +2407,20 @@ class SeparationService:
         # serving counters restart at restore time — per-session AND aggregate
         # (metrics must describe the restored epoch, not blend the old run)
         now = time.perf_counter()
-        self._stats = {sid: SessionStats(admitted_at=now) for sid in sessions}
+        self._stats = {
+            sid: SessionStats(admitted_at=now, activated_at=now)
+            for sid in sessions
+        }
+        self._admit_time = {}
         self._n_ticks = 0
         self._total_samples = 0
         self._total_tick_s = 0.0
         self._last_tick_s = float("nan")
         self._n_evicted = 0
         self._n_auto_evicted = 0
+        # SLO telemetry restarts with the epoch (sketch, deadline monitors,
+        # miss window, empty-tick counters — same rule as the counters above)
+        self._reset_slo()
         taken = set(sessions.values())
         self._free = [s for s in range(self.bank.n_streams - 1, -1, -1) if s not in taken]
         return got

@@ -52,11 +52,16 @@ class SessionMeta:
 
 @dataclasses.dataclass(frozen=True)
 class SchedulerContext:
-    """Live view handed to scheduling decisions: the service tick counter and
-    the metadata of currently ACTIVE sessions (slot holders)."""
+    """Live view handed to scheduling decisions: the service tick counter,
+    the metadata of currently ACTIVE sessions (slot holders), and the
+    service's windowed deadline-miss rate (0.0 when no ``SLOPolicy`` budget
+    is armed — see ``serve.slo``; custom policies can use it to hold or
+    reorder admissions under latency pressure, the way the built-in SLO
+    admission gate holds backfills)."""
 
     tick: int
     active: Dict[Hashable, SessionMeta]
+    deadline_miss_rate: float = 0.0
 
     def active_per_tenant(self) -> Dict[Optional[str], int]:
         counts: Dict[Optional[str], int] = collections.Counter()
@@ -197,7 +202,13 @@ class PriorityScheduler(AdmissionScheduler):
 class DeadlineScheduler(AdmissionScheduler):
     """Earliest-deadline-first: the queued session with the smallest
     ``deadline`` (service-tick units by convention) pops first; sessions
-    without a deadline rank after every dated one, FIFO among themselves."""
+    without a deadline rank after every dated one, FIFO among themselves.
+
+    Pairs with the per-tick latency budget (``SLOPolicy.deadline_budget_s``):
+    EDF orders WHO activates while the budget judges whether ticks are
+    landing on time — under sustained misses the service sheds/gates
+    (``serve.slo``) and re-admissions flow back through this ranking, so the
+    tightest-deadline work reclaims capacity first."""
 
     def _rank(self, sid: Hashable, meta: SessionMeta) -> Tuple:
         dated = meta.deadline is not None

@@ -1,0 +1,559 @@
+"""Latency-SLO layer (PR-8): time-to-ready tick accounting, the streaming
+quantile sketch, deadline budgets with shed/gate load control, and the
+record → replay harness.
+
+The three accounting bugfixes this PR lands each get a regression test:
+
+  * ``block_ticks=False`` used to time async *dispatch*, not completion —
+    ``test_async_tick_measures_time_to_ready`` routes the bank's conv leaf
+    through a sleeping ``jax.pure_callback`` and asserts the sleep shows up
+    in ``last_tick_s`` even without ``block_ticks``.
+  * ``samples_per_s`` used to divide by wall time since *admission* — a
+    session that waited in the queue looked slow forever.  Now
+    ``SessionStats`` stamps ``activated_at`` and reports ``queue_wait_s``
+    separately from service-time throughput.
+  * An empty ``run_tick`` (probe-only: every active feed drained/stalled)
+    used to skip ``step()`` and leave no latency record at all, though the
+    drift/quarantine probes it runs spend real wall-clock against any
+    real-time budget.  Now empty ticks count in ``n_empty_ticks``, land in
+    the latency sketch + deadline check, and ``last_probe_s`` surfaces the
+    probe cost — without polluting the data-tick means or ``n_ticks``.
+"""
+import dataclasses
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import EASIConfig, SMBGDConfig
+from repro.data.sources import (
+    RecordedSource,
+    Recording,
+    RecordingSource,
+    ReplaySource,
+    SourceExhausted,
+    load_recording,
+    save_recording,
+)
+from repro.serve import (
+    DeadlineMonitor,
+    LatencySketch,
+    SLOPolicy,
+    SeparationService,
+    SessionStats,
+    TickTimer,
+)
+from repro.serve.slo import replay
+from repro.stream import SeparatorBank
+
+P = 8
+
+
+def _mk_svc(S=2, P=P, fused=False, **kw):
+    ecfg = EASIConfig(n_components=2, n_features=4, mu=2e-3)
+    ocfg = SMBGDConfig(batch_size=P, mu=2e-3, beta=0.9, gamma=0.5)
+    return SeparationService(
+        SeparatorBank(ecfg, ocfg, n_streams=S, fused=fused), seed=0, **kw
+    )
+
+
+def _blocks_source(n_blocks, seed=0, m=4):
+    rng = np.random.default_rng(seed)
+    return ReplaySource(
+        rng.standard_normal((n_blocks * P, m)).astype(np.float32)
+    )
+
+
+class TestLatencySketch:
+    def test_window_quantiles_match_numpy_exactly(self):
+        rng = np.random.default_rng(1)
+        xs = rng.lognormal(mean=-6.0, sigma=1.0, size=500)
+        sk = LatencySketch(window=128)
+        for x in xs:
+            sk.add(float(x))
+        tail = xs[-128:]
+        for q in (0.5, 0.9, 0.99, 0.999):
+            assert sk.window_quantile(q) == pytest.approx(
+                float(np.quantile(tail, q)), rel=0, abs=0
+            )
+
+    def test_lifetime_quantiles_within_bin_relative_error(self):
+        rng = np.random.default_rng(2)
+        xs = rng.lognormal(mean=-5.0, sigma=0.8, size=4000)
+        sk = LatencySketch(window=16)  # tiny window: lifetime must carry
+        for x in xs:
+            sk.add(float(x))
+        # one log bin spans a factor of 10**(1/90); the geometric-midpoint
+        # estimate is off by at most half a bin plus nearest-rank slack
+        tol = 10 ** (1 / sk.bins_per_decade) - 1 + 0.01
+        for q in (0.5, 0.99, 0.999):
+            exact = float(np.quantile(xs, q))
+            assert sk.quantile(q) == pytest.approx(exact, rel=2 * tol)
+
+    def test_nan_skipped_and_reset(self):
+        sk = LatencySketch(window=8)
+        sk.add(float("nan"))
+        assert sk.count == 0 and np.isnan(sk.quantile(0.5))
+        sk.add(0.25)
+        assert sk.count == 1 and sk.window_count == 1
+        sk.reset()
+        assert sk.count == 0 and np.isnan(sk.window_quantile(0.5))
+
+    def test_out_of_range_clamps_to_edge_bins(self):
+        sk = LatencySketch(window=4, lo=1e-3, hi=1e0)
+        sk.add(1e-9)  # below lo
+        sk.add(1e6)  # above hi
+        assert sk.count == 2
+        assert sk.quantile(0.0) <= 2e-3  # pinned near the lo edge
+        assert sk.quantile(1.0) >= 0.5  # pinned near the hi edge
+
+    def test_summary_keys(self):
+        sk = LatencySketch()
+        sk.add(0.01)
+        s = sk.summary()
+        assert set(s) == {
+            "p50_tick_s", "p99_tick_s", "p999_tick_s",
+            "p50_tick_s_life", "p99_tick_s_life", "p999_tick_s_life",
+        }
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            LatencySketch(window=0)
+        with pytest.raises(ValueError):
+            LatencySketch(lo=1.0, hi=0.5)
+        sk = LatencySketch()
+        with pytest.raises(ValueError):
+            sk.quantile(1.5)
+
+
+class TestTickTimer:
+    def test_sampled_sync_cadence(self):
+        t = TickTimer(sync_every=3)
+        timed = []
+        for _ in range(7):
+            t.start()
+            _, was_timed = t.stop(sync_leaf=jnp.zeros((2,)))
+            timed.append(was_timed)
+        assert timed == [True, False, False, True, False, False, True]
+
+    def test_already_synced_is_always_timed(self):
+        t = TickTimer(sync_every=4)
+        for _ in range(5):
+            t.start()
+            _, was_timed = t.stop(already_synced=True)
+            assert was_timed
+
+    def test_stop_without_start_raises(self):
+        with pytest.raises(RuntimeError):
+            TickTimer().stop()
+
+
+class TestSLOPolicyValidation:
+    def test_levers_require_budget(self):
+        with pytest.raises(ValueError, match="deadline_budget_s"):
+            SLOPolicy(shed=True)
+        with pytest.raises(ValueError, match="deadline_budget_s"):
+            SLOPolicy(gate_admissions=True)
+        SLOPolicy(shed=True, gate_admissions=True, deadline_budget_s=0.1)
+
+    @pytest.mark.parametrize(
+        "kw",
+        [
+            dict(deadline_budget_s=0.0),
+            dict(sync_every=0),
+            dict(window=0),
+            dict(miss_window=0),
+            dict(max_miss_rate=0.0),
+            dict(max_miss_rate=1.5),
+            dict(shed_cooldown=0),
+        ],
+    )
+    def test_bad_fields_raise(self, kw):
+        with pytest.raises(ValueError):
+            SLOPolicy(**kw)
+
+
+class TestDeadlineMonitor:
+    def test_window_resident_miss_count(self):
+        pol = SLOPolicy(deadline_budget_s=1.0, miss_window=4)
+        mon = DeadlineMonitor()
+        assert mon.record(0, True, pol) == 1
+        assert mon.record(1, True, pol) == 2
+        assert mon.record(2, False, pol) == 2
+        # tick 4: the miss at tick 0 ages out (4 - 0 >= 4), tick 1 stays
+        assert mon.record(4, False, pol) == 1
+        assert mon.served == 4 and mon.misses == 2
+
+
+class TestTickAccounting:
+    def test_metrics_is_callable_view(self):
+        svc = _mk_svc()
+        m = svc.metrics
+        assert m() is m  # calling the view is the identity
+        assert isinstance(m, dict) and set(svc.metrics()) == set(m)
+
+    def test_async_tick_measures_time_to_ready(self):
+        """Regression (bugfix a): with ``block_ticks=False`` the old clock
+        stopped at dispatch.  A step whose conv leaf passes through a
+        sleeping ``pure_callback`` must still show the sleep in
+        ``last_tick_s`` — the timer blocks on the telemetry leaf."""
+        svc = _mk_svc(S=2, block_ticks=False, policy=None)
+        delay = 0.15
+        orig = svc._step
+
+        def slow_step(state, X, active):
+            state, Y = orig(state, X, active)
+
+            def _sleep(c):
+                time.sleep(delay)
+                return c
+
+            conv = jax.pure_callback(
+                _sleep,
+                jax.ShapeDtypeStruct(state.conv.shape, state.conv.dtype),
+                state.conv,
+            )
+            return state._replace(conv=conv), Y
+
+        svc._step = slow_step
+        svc.admit("a")
+        X = {"a": jnp.zeros((P, 4))}
+        svc.step(X)  # compile tick
+        svc.step(X)
+        assert svc.metrics["last_tick_s"] >= 0.9 * delay
+        assert svc.metrics["p50_tick_s"] >= 0.9 * delay
+
+    def test_sampled_sync_times_one_in_k(self):
+        svc = _mk_svc(S=2, slo=SLOPolicy(sync_every=3))
+        svc.admit("a", source=_blocks_source(9))
+        for _ in range(9):
+            svc.run_tick()
+        m = svc.metrics
+        assert m["n_ticks"] == 9
+        assert m["n_timed_ticks"] == 3  # ticks 0, 3, 6
+        # sampled-out ticks leave no latency record anywhere
+        assert svc._sketch.count == 3
+
+    def test_queue_wait_and_service_time_throughput(self):
+        """Regression (bugfix b): queue wait must not dilute throughput."""
+        t0 = 100.0
+        st = SessionStats(admitted_at=t0, activated_at=t0 + 10.0)
+        st.ticks, st.samples = 1, 100
+        assert st.queue_wait_s() == pytest.approx(10.0)
+        # throughput over SERVICE time (0.5 s), not the 10.5 s since admit
+        assert st.samples_per_s(now=t0 + 10.5) == pytest.approx(200.0)
+        # not-yet-activated: no queue wait reported, no throughput fiction
+        st2 = SessionStats(admitted_at=t0)
+        assert st2.queue_wait_s() == 0.0
+
+    def test_queued_session_reports_queue_wait(self):
+        svc = _mk_svc(S=1, max_queue=2)
+        svc.admit("a", source=_blocks_source(2, seed=0))
+        svc.admit("b", source=_blocks_source(2, seed=1))
+        assert svc.status("b") == "queued"
+        for _ in range(6):
+            svc.run_tick()  # a drains -> evicted -> b backfills + drains
+        stats = svc.finished["b"].stats
+        assert stats.activated_at is not None
+        assert stats.activated_at >= stats.admitted_at
+        assert stats.queue_wait_s() > 0.0
+
+    def test_empty_tick_counted_distinctly(self):
+        """Regression (bugfix c): a probe-only tick leaves a latency record
+        but does not touch the data-tick counters."""
+        svc = _mk_svc(S=2)
+        svc.run_tick()  # nothing admitted: empty
+        m = svc.metrics
+        assert m["n_empty_ticks"] == 1
+        assert m["n_ticks"] == 0 and m["n_timed_ticks"] == 0
+        assert np.isnan(m["last_tick_s"]) and np.isnan(m["mean_tick_s"])
+        assert svc._sketch.count == 1  # ...but the sketch saw its latency
+
+    def test_empty_tick_surfaces_probe_latency(self):
+        from repro.core import smbgd as smbgd_lib
+        from repro.serve import DriftMonitor, DriftPolicy, ParkedSession, SessionMeta
+        from repro.serve.engine import EvictionRecord
+
+        from repro.serve import ConvergencePolicy
+
+        svc = _mk_svc(
+            S=2,
+            policy=ConvergencePolicy(threshold=1e-9, patience=10**6),
+            drift_policy=DriftPolicy(mode="readmit", probe_every=1),
+        )
+        frozen = smbgd_lib.init_state(svc.bank.easi, jax.random.PRNGKey(0))
+        svc._parked["p"] = ParkedSession(
+            record=EvictionRecord(
+                state=frozen, stats=SessionStats(admitted_at=0.0),
+                monitor=None, reason="converged", tick=0,
+            ),
+            source=_blocks_source(50), monitor=DriftMonitor(),
+            meta=SessionMeta(),
+        )
+        assert np.isnan(svc.metrics["last_probe_s"])
+        svc.run_tick()
+        m = svc.metrics
+        assert m["n_empty_ticks"] == 1
+        assert m["last_probe_s"] >= 0.0  # probe cost surfaced
+
+    def test_empty_ticks_feed_the_deadline_check(self):
+        svc = _mk_svc(S=2, slo=SLOPolicy(deadline_budget_s=1e-12))
+        svc.run_tick()
+        assert svc.metrics["n_deadline_misses"] == 1
+
+
+class TestDeadlineBudget:
+    def test_misses_counted_and_per_session(self):
+        svc = _mk_svc(S=2, slo=SLOPolicy(deadline_budget_s=1e-12))
+        svc.admit("a", source=_blocks_source(4))
+        for _ in range(4):
+            svc.run_tick()
+        m = svc.metrics
+        assert m["n_deadline_misses"] == 4
+        assert m["deadline_miss_rate"] == 1.0
+        ss = svc.session_stats("a")
+        assert ss["deadline_misses"] == 4
+        assert ss["deadline_misses_recent"] >= 1
+
+    def test_generous_budget_never_misses(self):
+        svc = _mk_svc(S=2, slo=SLOPolicy(deadline_budget_s=1e6))
+        svc.admit("a", source=_blocks_source(3))
+        for _ in range(3):
+            svc.run_tick()
+        assert svc.metrics["n_deadline_misses"] == 0
+        assert svc.metrics["deadline_miss_rate"] == 0.0
+
+    def test_shed_preempts_worst_missing_session(self):
+        svc = _mk_svc(
+            S=2,
+            max_queue=2,
+            slo=SLOPolicy(
+                deadline_budget_s=1e-12, shed=True, max_miss_rate=0.25,
+                miss_window=8, shed_cooldown=1,
+            ),
+        )
+        svc.admit("a", source=_blocks_source(20, seed=0), priority=1.0)
+        svc.admit("b", source=_blocks_source(20, seed=1), priority=0.0)
+        for _ in range(6):
+            svc.run_tick()
+            if svc.metrics["n_shed"]:
+                break
+        m = svc.metrics
+        assert m["n_shed"] >= 1
+        # equal misses -> the LOWER-priority session is the victim
+        assert svc.finished["b"].reason == "shed"
+        assert svc.status("a") == "active"
+        ev = [e for e in svc.slo_events if e.action == "shed"]
+        assert ev and ev[0].session_id == "b" and ev[0].miss_rate > 0.25
+
+    def test_shed_never_empties_the_bank(self):
+        svc = _mk_svc(
+            S=2,
+            slo=SLOPolicy(
+                deadline_budget_s=1e-12, shed=True, max_miss_rate=0.1,
+                miss_window=4, shed_cooldown=1,
+            ),
+        )
+        svc.admit("only", source=_blocks_source(10))
+        for _ in range(5):
+            svc.run_tick()
+        assert svc.metrics["n_shed"] == 0  # lone session is never shed
+        assert svc.status("only") == "active"
+
+    def test_gate_holds_backfill_until_window_recovers(self):
+        svc = _mk_svc(
+            S=1,
+            max_queue=2,
+            slo=SLOPolicy(
+                deadline_budget_s=1e-12, gate_admissions=True,
+                max_miss_rate=0.5, miss_window=4,
+            ),
+        )
+        svc.admit("a", source=_blocks_source(3, seed=0))
+        svc.admit("b", source=_blocks_source(3, seed=1))
+        assert svc.status("b") == "queued"
+        for _ in range(5):
+            svc.run_tick()  # a drains; every tick misses -> gate holds b
+        assert svc.finished["a"].reason == "exhausted"
+        assert svc.status("b") == "queued" and svc.n_free == 1
+        assert any(e.action == "gate" for e in svc.slo_events)
+        # direct admission is gated too: a free slot exists, yet c queues
+        assert svc.admit("c") is None
+        assert svc.status("c") == "queued"
+        popped = svc.pop_slo_events()
+        assert popped and not svc.slo_events
+
+    def test_scheduler_context_carries_miss_rate(self):
+        svc = _mk_svc(S=1, slo=SLOPolicy(deadline_budget_s=1e-12))
+        svc.admit("a", source=_blocks_source(2))
+        svc.run_tick()
+        assert svc._sched_ctx().deadline_miss_rate == 1.0
+
+    def test_restore_resets_slo_telemetry(self, tmp_path):
+        import json
+
+        from repro.checkpoint.checkpointer import Checkpointer
+
+        svc = _mk_svc(S=2, slo=SLOPolicy(deadline_budget_s=1e-12), max_queue=4)
+        svc.admit("a", source=_blocks_source(8))
+        for _ in range(3):
+            svc.run_tick()
+        assert svc.metrics["n_deadline_misses"] == 3
+        ckpt = Checkpointer(tmp_path)
+        svc.save(ckpt, step=1)
+        snap = json.loads(json.dumps(svc.lifecycle))
+        svc2 = _mk_svc(S=2, slo=SLOPolicy(deadline_budget_s=1e-12), max_queue=4)
+        svc2.restore(ckpt, lifecycle=snap)
+        m = svc2.metrics
+        assert m["n_deadline_misses"] == 0 and m["n_timed_ticks"] == 0
+        assert svc2.session_stats("a")["queue_wait_s"] == 0.0
+
+
+class TestRecording:
+    def test_recording_source_taps_and_delegates(self):
+        inner = _blocks_source(3)
+        tap = RecordingSource(inner)
+        # delegation: the tap is invisible to capability probes
+        assert tap.position == inner.position
+        assert tap.n_channels == inner.n_channels
+        b0 = tap.next_block(P)
+        assert b0.shape == (4, P) and len(tap.blocks) == 1
+        np.testing.assert_array_equal(tap.blocks[0], b0)
+        tap.next_block(P)
+        tap.next_block(P)
+        with pytest.raises(SourceExhausted):
+            tap.next_block(P)
+        assert tap.exhausted and len(tap.blocks) == 3
+
+    def test_recorded_source_replays_verbatim(self):
+        tap = RecordingSource(_blocks_source(2))
+        blocks = [tap.next_block(P), tap.next_block(P)]
+        rec = RecordedSource(np.stack(tap.blocks))
+        np.testing.assert_array_equal(rec.next_block(P), blocks[0])
+        np.testing.assert_array_equal(rec.next_block(P), blocks[1])
+        with pytest.raises(SourceExhausted):
+            rec.next_block(P)
+        # no seek/cursor: replay is faithful to the served-block sequence
+        assert not hasattr(rec, "seek") and not hasattr(rec, "position")
+
+    def test_recorded_source_enforces_recorded_width(self):
+        tap = RecordingSource(_blocks_source(1))
+        tap.next_block(P)
+        rec = RecordedSource(np.stack(tap.blocks))
+        with pytest.raises(ValueError, match="recorded P"):
+            rec.next_block(P + 1)
+
+    def test_save_load_round_trip(self, tmp_path):
+        taps = {
+            "u1": RecordingSource(_blocks_source(3, seed=0)),
+            "u2": RecordingSource(_blocks_source(2, seed=1)),
+        }
+        for _ in range(3):
+            taps["u1"].next_block(P)
+        for _ in range(2):
+            taps["u2"].next_block(P)
+        for tap in taps.values():
+            with pytest.raises(SourceExhausted):
+                tap.next_block(P)
+        events = [
+            {"action": "admit", "sid": "u1", "tick": 0, "order": 0},
+            {"action": "admit", "sid": "u2", "tick": 1, "order": 1},
+            {"action": "evict", "sid": "u1", "tick": 3},
+        ]
+        path = tmp_path / "trace.npz"
+        save_recording(path, taps, events=events, meta={"P": P, "m": 4})
+        rec = load_recording(path)
+        assert set(rec.sources) == {"u1", "u2"}
+        assert rec.sources["u1"].n_blocks == 3
+        assert rec.sources["u2"].n_blocks == 2
+        assert rec.sources["u1"].exhausted
+        np.testing.assert_array_equal(
+            rec.sources["u1"].next_block(P), taps["u1"].blocks[0]
+        )
+        assert rec.events == events
+        assert rec.meta == {"P": P, "m": 4}
+
+
+class TestReplay:
+    @pytest.mark.parametrize("fused", [False, True])
+    def test_replay_is_bit_identical_to_live_run(self, fused):
+        """Record a live multi-session run (staggered admits, uneven feed
+        lengths), then replay the trace into a fresh service: every per-tick
+        output block and the eviction order must match exactly."""
+        feeds = {
+            "u1": (4, 0),
+            "u2": (2, 1),  # drains first
+            "u3": (3, 2),  # admitted at tick 1
+        }
+        taps = {
+            sid: RecordingSource(_blocks_source(n, seed=seed))
+            for sid, (n, seed) in feeds.items()
+        }
+        live = _mk_svc(S=2, fused=fused, max_queue=4)
+        events = []
+        live.admit("u1", source=taps["u1"])
+        live.admit("u2", source=taps["u2"])
+        events += [
+            {"action": "admit", "sid": "u1", "tick": 0, "order": 0},
+            {"action": "admit", "sid": "u2", "tick": 0, "order": 1},
+        ]
+        live_out = [live.run_tick()]
+        live.admit("u3", source=taps["u3"])
+        events.append({"action": "admit", "sid": "u3", "tick": 1, "order": 2})
+        while live.n_active or live.n_queued:
+            live_out.append(live.run_tick())
+        events += [
+            {"action": "evict", "sid": sid, "tick": rec.tick}
+            for sid, rec in live.finished.items()
+        ]
+        assert all(r.reason == "exhausted" for r in live.finished.values())
+
+        import os
+        import tempfile
+
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "trace.npz")
+            save_recording(path, taps, events=events, meta={"P": P})
+            rec = load_recording(path)
+
+        fresh = _mk_svc(S=2, fused=fused, max_queue=4)
+        replay_out = replay(fresh, rec)
+        # same eviction order, reasons, and tick stamps
+        assert list(fresh.finished) == list(live.finished)
+        for sid in live.finished:
+            assert fresh.finished[sid].reason == "exhausted"
+            assert fresh.finished[sid].tick == live.finished[sid].tick
+        # bit-identical separated outputs, tick for tick
+        assert len(replay_out) >= len(live_out)
+        for t, out in enumerate(live_out):
+            assert set(replay_out[t]) == set(out)
+            for sid in out:
+                np.testing.assert_array_equal(
+                    np.asarray(replay_out[t][sid]), np.asarray(out[sid])
+                )
+        assert all(not o for o in replay_out[len(live_out):])
+
+    def test_replay_without_events_admits_everyone_at_tick_zero(self):
+        taps = {"a": RecordingSource(_blocks_source(2))}
+        taps["a"].next_block(P)
+        taps["a"].next_block(P)
+        rec = Recording(
+            sources={"a": RecordedSource(np.stack(taps["a"].blocks))},
+            events=[], meta={},
+        )
+        svc = _mk_svc(S=2)
+        out = replay(svc, rec)
+        assert "a" in out[0]
+        assert svc.finished["a"].reason == "exhausted"
+
+    def test_replay_rejects_unknown_session(self):
+        rec = Recording(
+            sources={},
+            events=[{"action": "admit", "sid": "ghost", "tick": 0}],
+            meta={},
+        )
+        with pytest.raises(ValueError, match="unrecorded"):
+            replay(_mk_svc(), rec)
