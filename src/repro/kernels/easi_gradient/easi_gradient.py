@@ -114,6 +114,16 @@ HEALTH_BLOWUP = 1 << 3  # ‖Ĥ′B‖/‖B‖ above the static blow-up bound
 # far below a blow-up's second tick.
 HEALTH_BLOWUP_BOUND = 100.0
 
+# Per-stream moment telemetry: raw sums [Σy², Σy⁴] over the stream's whole Y
+# block, folded tile-by-tile in the same in-register reduction pass as conv
+# and the health word (Y never re-read from HBM; the only cost is one (S, 2)
+# f32 output leaf — 8 bytes/stream/tick).  The serving layer turns the sums
+# into a kurtosis estimate κ = N·Σy⁴/(Σy²)² (N = logical P·n, known to the
+# host) and drives the moment-scaled adaptive μ controller from it
+# (arXiv:2509.15127: learning rate ∝ 1/high-order moments).  Padding-exact:
+# padded Y entries are exactly zero and contribute nothing to either sum.
+MOMENT_LEAVES = 2  # [Σy², Σy⁴]
+
 
 def _health_word(b_new, h_new, ybad, delta, blowup: float):
     """Fold the per-stream health bitmask from commit-time registers:
@@ -265,10 +275,13 @@ def _commit_streams(
     step_out_ref,
     conv_out_ref,
     health_out_ref,
+    moment_out_ref,
     acc_ref,
     ybad_ref,
+    mom_ref,
     *,
     with_health: bool,
+    with_moments: bool,
     blowup: float,
 ):
     """The SMBGD commit tail shared by the sync and prefetch step kernels:
@@ -282,7 +295,14 @@ def _commit_streams(
     slots keep the pre-tick B/Ĥ/step/conv exactly like the active-mask
     freeze, so one poisoned input block can never contaminate persistent
     state.  ``with_health=False`` writes health 0 and commits on ``active``
-    alone (the pre-containment behaviour; kept as the overhead baseline)."""
+    alone (the pre-containment behaviour; kept as the overhead baseline).
+
+    ``with_moments=True`` publishes the cross-tile moment fold (``mom_ref``,
+    per-stream [Σy², Σy⁴]) for the streams actually served this tick; like
+    health it is a fresh per-tick verdict — frozen slots report 0 and
+    ``with_moments=False`` writes zeros.  The moment write is observational
+    only: B'/Ĥ'/step'/conv'/health' are bit-identical with moments on or
+    off."""
     step = step_ref[...]  # (bs, 1)
     active = active_ref[...] != 0  # (bs, 1)
     # the paper's first-batch rule, per stream: γ̂ gated off at step 0
@@ -310,6 +330,11 @@ def _commit_streams(
     else:
         commit = active
         health_out_ref[...] = jnp.zeros_like(health_out_ref)
+    if with_moments:
+        # (bs, 1) active mask broadcasts over the (bs, 2) [Σy², Σy⁴] fold
+        moment_out_ref[...] = jnp.where(active, mom_ref[...], 0.0)
+    else:
+        moment_out_ref[...] = jnp.zeros_like(moment_out_ref)
     commit3 = commit[:, :, None]  # (bs, 1, 1)
     h_out_ref[...] = jnp.where(commit3, h_new, h_prev).astype(h_out_ref.dtype)
     b_out_ref[...] = jnp.where(commit3, b_new, b).astype(b_out_ref.dtype)
@@ -338,6 +363,27 @@ def _fold_ybad_tile(y, ybad_ref, i, with_health: bool):
         ybad_ref[...] = ybad_ref[...] | ybad
 
 
+def _fold_moment_tile(y, mom_ref, i, with_moments: bool):
+    """Accumulate this tile's per-stream raw moments [Σy², Σy⁴] into the
+    (bs, 2) f32 scratch — the cross-tile leg of the kurtosis reduction, a
+    third reduction riding the same Y registers as conv and the health fold.
+    A trace-time no-op when moments are off (``with_moments`` is static)."""
+    if not with_moments:
+        return
+    y2 = y * y  # one VPU square; y⁴ = (y²)² reuses it
+    mom = jnp.stack(
+        [jnp.sum(y2, axis=(1, 2)), jnp.sum(y2 * y2, axis=(1, 2))], axis=-1
+    )  # (bs, 2)
+
+    @pl.when(i == 0)
+    def _mom_init():
+        mom_ref[...] = mom
+
+    @pl.when(i > 0)
+    def _mom_acc():
+        mom_ref[...] += mom
+
+
 def _smbgd_step_bank_kernel(
     x_ref,
     w_ref,
@@ -353,12 +399,15 @@ def _smbgd_step_bank_kernel(
     step_out_ref,
     conv_out_ref,
     health_out_ref,
+    moment_out_ref,
     acc_ref,
     ybad_ref,
+    mom_ref,
     *,
     nonlin: str,
     n_tiles: int,
     with_health: bool,
+    with_moments: bool,
     blowup: float,
 ):
     """One grid step of the whole-step megakernel (grid = (stream-blocks,
@@ -379,6 +428,7 @@ def _smbgd_step_bank_kernel(
     w = w_ref[...].astype(jnp.float32)  # (bs, bp, 1) — per-stream weight rows
     s_tile = _fold_tile_batched(y, w, nonlin)
     _fold_ybad_tile(y, ybad_ref, i, with_health)
+    _fold_moment_tile(y, mom_ref, i, with_moments)
 
     @pl.when(i == 0)
     def _init():
@@ -393,7 +443,8 @@ def _smbgd_step_bank_kernel(
         _commit_streams(
             b, h_ref, step_ref, gamma_hat_ref, active_ref, conv_ref,
             b_out_ref, h_out_ref, step_out_ref, conv_out_ref, health_out_ref,
-            acc_ref, ybad_ref, with_health=with_health, blowup=blowup,
+            moment_out_ref, acc_ref, ybad_ref, mom_ref,
+            with_health=with_health, with_moments=with_moments, blowup=blowup,
         )
 
 
@@ -426,8 +477,10 @@ def _smbgd_step_bank_kernel_prefetch(
     step_out_ref,
     conv_out_ref,
     health_out_ref,
+    moment_out_ref,
     acc_ref,
     ybad_ref,
+    mom_ref,
     xbuf_ref,
     sem_ref,
     *,
@@ -437,6 +490,7 @@ def _smbgd_step_bank_kernel_prefetch(
     block_s: int,
     block_p: int,
     with_health: bool,
+    with_moments: bool,
     blowup: float,
 ):
     """Double-buffered variant of ``_smbgd_step_bank_kernel``: X rides in
@@ -474,6 +528,7 @@ def _smbgd_step_bank_kernel_prefetch(
     w = w_ref[...].astype(jnp.float32)
     s_tile = _fold_tile_batched(y, w, nonlin)
     _fold_ybad_tile(y, ybad_ref, i, with_health)
+    _fold_moment_tile(y, mom_ref, i, with_moments)
 
     @pl.when(i == 0)
     def _init():
@@ -488,7 +543,8 @@ def _smbgd_step_bank_kernel_prefetch(
         _commit_streams(
             b, h_ref, step_ref, gamma_hat_ref, active_ref, conv_ref,
             b_out_ref, h_out_ref, step_out_ref, conv_out_ref, health_out_ref,
-            acc_ref, ybad_ref, with_health=with_health, blowup=blowup,
+            moment_out_ref, acc_ref, ybad_ref, mom_ref,
+            with_health=with_health, with_moments=with_moments, blowup=blowup,
         )
 
 
@@ -503,12 +559,15 @@ def _smbgd_probe_bank_kernel(
     conv_ref,
     conv_out_ref,
     health_out_ref,
+    moment_out_ref,
     acc_ref,
     ybad_ref,
+    mom_ref,
     *,
     nonlin: str,
     n_tiles: int,
     with_health: bool,
+    with_moments: bool,
     blowup: float,
 ):
     """Freeze-only probe variant of the megakernel: same ``(stream-blocks,
@@ -527,6 +586,7 @@ def _smbgd_probe_bank_kernel(
     w = w_ref[...].astype(jnp.float32)  # (bs, bp, 1)
     s_tile = _fold_tile_batched(y, w, nonlin)
     _fold_ybad_tile(y, ybad_ref, i, with_health)
+    _fold_moment_tile(y, mom_ref, i, with_moments)
 
     @pl.when(i == 0)
     def _init():
@@ -540,8 +600,9 @@ def _smbgd_probe_bank_kernel(
     def _probe():
         _probe_streams(
             b, h_ref, step_ref, gamma_hat_ref, active_ref, conv_ref,
-            conv_out_ref, health_out_ref, acc_ref, ybad_ref,
-            with_health=with_health, blowup=blowup,
+            conv_out_ref, health_out_ref, moment_out_ref,
+            acc_ref, ybad_ref, mom_ref,
+            with_health=with_health, with_moments=with_moments, blowup=blowup,
         )
 
 
@@ -554,10 +615,13 @@ def _probe_streams(
     conv_ref,
     conv_out_ref,
     health_out_ref,
+    moment_out_ref,
     acc_ref,
     ybad_ref,
+    mom_ref,
     *,
     with_health: bool,
+    with_moments: bool,
     blowup: float,
 ):
     """The freeze-only probe tail shared by the sync and prefetch probe
@@ -583,6 +647,10 @@ def _probe_streams(
         health_out_ref[...] = jnp.where(active, health, 0)
     else:
         health_out_ref[...] = jnp.zeros_like(health_out_ref)
+    if with_moments:
+        moment_out_ref[...] = jnp.where(active, mom_ref[...], 0.0)
+    else:
+        moment_out_ref[...] = jnp.zeros_like(moment_out_ref)
     conv_out_ref[...] = jnp.where(active, delta, conv_prev)
 
 
@@ -597,8 +665,10 @@ def _smbgd_probe_bank_kernel_prefetch(
     conv_ref,
     conv_out_ref,
     health_out_ref,
+    moment_out_ref,
     acc_ref,
     ybad_ref,
+    mom_ref,
     xbuf_ref,
     sem_ref,
     *,
@@ -608,6 +678,7 @@ def _smbgd_probe_bank_kernel_prefetch(
     block_s: int,
     block_p: int,
     with_health: bool,
+    with_moments: bool,
     blowup: float,
 ):
     """Double-buffered variant of ``_smbgd_probe_bank_kernel`` — the same
@@ -640,6 +711,7 @@ def _smbgd_probe_bank_kernel_prefetch(
     w = w_ref[...].astype(jnp.float32)
     s_tile = _fold_tile_batched(y, w, nonlin)
     _fold_ybad_tile(y, ybad_ref, i, with_health)
+    _fold_moment_tile(y, mom_ref, i, with_moments)
 
     @pl.when(i == 0)
     def _init():
@@ -653,8 +725,9 @@ def _smbgd_probe_bank_kernel_prefetch(
     def _probe():
         _probe_streams(
             b, h_ref, step_ref, gamma_hat_ref, active_ref, conv_ref,
-            conv_out_ref, health_out_ref, acc_ref, ybad_ref,
-            with_health=with_health, blowup=blowup,
+            conv_out_ref, health_out_ref, moment_out_ref,
+            acc_ref, ybad_ref, mom_ref,
+            with_health=with_health, with_moments=with_moments, blowup=blowup,
         )
 
 
@@ -674,6 +747,7 @@ def smbgd_probe_bank_pallas(
     interpret: bool = True,
     prefetch: bool = False,
     health: bool = True,
+    moments: bool = False,
     blowup: float = HEALTH_BLOWUP_BOUND,
 ):
     """Batched virtual-conv probe: ONE launch over frozen bank state.
@@ -681,11 +755,13 @@ def smbgd_probe_bank_pallas(
     Same pre-padded persistent-layout contract as ``smbgd_step_bank_pallas``
     but the only outputs are ``conv' (S, 1)`` — the per-stream statistic a
     commit would have produced (``conv`` carried through for masked-out
-    streams) — and ``health' (S, 1)`` int32, the health word that commit
-    would have raised (0 when ``health=False`` or for masked-out streams).
-    The state operands are read-only: probing never mutates the frozen
-    separators.  ``prefetch=True`` double-buffers the X tile DMA (see the
-    step kernel's prefetch notes; bit-identical on the interpret path).
+    streams) — ``health' (S, 1)`` int32, the health word that commit
+    would have raised (0 when ``health=False`` or for masked-out streams),
+    and ``moments' (S, 2)`` f32, the raw [Σy², Σy⁴] fold over the probe's Y
+    (0 when ``moments=False`` or for masked-out streams).  The state
+    operands are read-only: probing never mutates the frozen separators.
+    ``prefetch=True`` double-buffers the X tile DMA (see the step kernel's
+    prefetch notes; bit-identical on the interpret path).
     """
     S, P, m = X.shape
     n = B.shape[1]
@@ -708,12 +784,14 @@ def smbgd_probe_bank_pallas(
         kernel = functools.partial(
             _smbgd_probe_bank_kernel_prefetch,
             nonlin=nonlinearity, n_tiles=n_tiles, n_sblocks=n_sblocks,
-            block_s=bs, block_p=block_p, with_health=health, blowup=blowup,
+            block_s=bs, block_p=block_p, with_health=health,
+            with_moments=moments, blowup=blowup,
         )
         x_spec = pl.BlockSpec(memory_space=pltpu.ANY)
         scratch = [
             pltpu.VMEM((bs, n, n), jnp.float32),
             pltpu.VMEM((bs, 1), jnp.int32),  # cross-tile Y-finite fold
+            pltpu.VMEM((bs, MOMENT_LEAVES), jnp.float32),  # [Σy², Σy⁴] fold
             pltpu.VMEM((2, bs, block_p, m), X.dtype),  # the double buffer
             pltpu.SemaphoreType.DMA((2,)),
         ]
@@ -721,12 +799,13 @@ def smbgd_probe_bank_pallas(
     else:
         kernel = functools.partial(
             _smbgd_probe_bank_kernel, nonlin=nonlinearity, n_tiles=n_tiles,
-            with_health=health, blowup=blowup,
+            with_health=health, with_moments=moments, blowup=blowup,
         )
         x_spec = pl.BlockSpec((bs, block_p, m), lambda s, i: (s, i, 0))
         scratch = [
             pltpu.VMEM((bs, n, n), jnp.float32),
             pltpu.VMEM((bs, 1), jnp.int32),
+            pltpu.VMEM((bs, MOMENT_LEAVES), jnp.float32),
         ]
         extra = {}
     return pl.pallas_call(
@@ -736,10 +815,12 @@ def smbgd_probe_bank_pallas(
         out_specs=[
             pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
             pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
+            pl.BlockSpec((bs, MOMENT_LEAVES), lambda s, i: (s, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((S, 1), jnp.float32),
             jax.ShapeDtypeStruct((S, 1), jnp.int32),
+            jax.ShapeDtypeStruct((S, MOMENT_LEAVES), jnp.float32),
         ],
         scratch_shapes=scratch,
         interpret=interpret,
@@ -780,6 +861,7 @@ def smbgd_step_bank_pallas(
     interpret: bool = True,
     prefetch: bool = False,
     health: bool = True,
+    moments: bool = False,
     blowup: float = HEALTH_BLOWUP_BOUND,
 ):
     """Whole-step fused SMBGD bank tick: ONE ``(stream-blocks, P-tiles)``
@@ -799,13 +881,17 @@ def smbgd_step_bank_pallas(
     may live in a reduced-precision storage dtype (bf16): the kernel casts
     to f32 at load, accumulates the gradient and the commit in f32, and
     casts back only at the output writes.  Returns ``(Y (S, P, n), B',
-    H_hat', step', conv', health')`` — the full next bank state plus
-    outputs, with no intermediate tensors materialized in HBM; ``conv'`` is
-    the relative update magnitude ``‖Ĥ′B‖_F/‖B‖_F`` computed at commit
-    time, and ``health' (S, 1)`` int32 is the per-stream fault bitmask (see
-    ``_health_word``; all-zero when ``health=False``).  With ``health=True``
-    an unhealthy stream's commit is REFUSED in-kernel: its slot keeps the
-    pre-tick state exactly like an ``active``-masked stream.
+    H_hat', step', conv', health', moments')`` — the full next bank state
+    plus outputs, with no intermediate tensors materialized in HBM;
+    ``conv'`` is the relative update magnitude ``‖Ĥ′B‖_F/‖B‖_F`` computed
+    at commit time, ``health' (S, 1)`` int32 is the per-stream fault bitmask
+    (see ``_health_word``; all-zero when ``health=False``), and
+    ``moments' (S, 2)`` f32 is the raw [Σy², Σy⁴] per-stream fold over this
+    tick's Y (all-zero when ``moments=False`` or for frozen slots; purely
+    observational — every other output is bit-identical with moments on or
+    off).  With ``health=True`` an unhealthy stream's commit is REFUSED
+    in-kernel: its slot keeps the pre-tick state exactly like an
+    ``active``-masked stream.
     """
     S, P, m = X.shape
     n = B.shape[1]
@@ -828,12 +914,14 @@ def smbgd_step_bank_pallas(
         kernel = functools.partial(
             _smbgd_step_bank_kernel_prefetch,
             nonlin=nonlinearity, n_tiles=n_tiles, n_sblocks=n_sblocks,
-            block_s=bs, block_p=block_p, with_health=health, blowup=blowup,
+            block_s=bs, block_p=block_p, with_health=health,
+            with_moments=moments, blowup=blowup,
         )
         x_spec = pl.BlockSpec(memory_space=pltpu.ANY)
         scratch = [
             pltpu.VMEM((bs, n, n), jnp.float32),
             pltpu.VMEM((bs, 1), jnp.int32),  # cross-tile Y-finite fold
+            pltpu.VMEM((bs, MOMENT_LEAVES), jnp.float32),  # [Σy², Σy⁴] fold
             pltpu.VMEM((2, bs, block_p, m), X.dtype),  # the double buffer
             pltpu.SemaphoreType.DMA((2,)),
         ]
@@ -841,12 +929,13 @@ def smbgd_step_bank_pallas(
     else:
         kernel = functools.partial(
             _smbgd_step_bank_kernel, nonlin=nonlinearity, n_tiles=n_tiles,
-            with_health=health, blowup=blowup,
+            with_health=health, with_moments=moments, blowup=blowup,
         )
         x_spec = pl.BlockSpec((bs, block_p, m), lambda s, i: (s, i, 0))
         scratch = [
             pltpu.VMEM((bs, n, n), jnp.float32),
             pltpu.VMEM((bs, 1), jnp.int32),
+            pltpu.VMEM((bs, MOMENT_LEAVES), jnp.float32),
         ]
         extra = {}
     return pl.pallas_call(
@@ -860,6 +949,7 @@ def smbgd_step_bank_pallas(
             pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
             pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
             pl.BlockSpec((bs, 1), lambda s, i: (s, 0)),
+            pl.BlockSpec((bs, MOMENT_LEAVES), lambda s, i: (s, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((S, P, n), X.dtype),
@@ -868,6 +958,7 @@ def smbgd_step_bank_pallas(
             jax.ShapeDtypeStruct((S, 1), jnp.int32),
             jax.ShapeDtypeStruct((S, 1), jnp.float32),
             jax.ShapeDtypeStruct((S, 1), jnp.int32),
+            jax.ShapeDtypeStruct((S, MOMENT_LEAVES), jnp.float32),
         ],
         scratch_shapes=scratch,
         interpret=interpret,

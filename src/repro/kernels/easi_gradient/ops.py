@@ -50,6 +50,7 @@ from repro.kernels.easi_gradient.easi_gradient import (  # noqa: F401 — health
     HEALTH_NONFINITE_H,
     HEALTH_NONFINITE_Y,
     HEALTH_OK,
+    MOMENT_LEAVES,
     easi_gradient_bank_pallas,
     easi_gradient_pallas,
     smbgd_probe_bank_pallas,
@@ -78,6 +79,14 @@ def describe_health(word: int) -> str:
 # gates this against the ≤5% acceptance bar using the layout's analytic tick
 # bytes.
 HEALTH_TICK_BYTES_PER_STREAM = 4
+
+# The ENTIRE extra HBM traffic of ``moments=True``: one (2,) f32 row of raw
+# [Σy², Σy⁴] sums written per stream per tick.  Both sums fold from the Y
+# registers the gradient pass already holds (see ``_fold_moment_tile``), so —
+# exactly like the health word — the telemetry's HBM cost is its output leaf
+# and nothing else.  benchmarks/stream_throughput.py --adapt gates this
+# against the same ≤5% bar.
+MOMENT_TICK_BYTES_PER_STREAM = MOMENT_LEAVES * 4
 
 _LANE = 128  # TPU lane width (last-dim alignment)
 _SUBLANE = 8  # f32 sublane
@@ -356,7 +365,7 @@ def default_block_s(
     jax.jit,
     static_argnames=(
         "nonlinearity", "block_p", "block_s", "interpret", "prefetch",
-        "health", "blowup",
+        "health", "moments", "blowup",
     ),
 )
 def smbgd_step_bank(
@@ -375,6 +384,7 @@ def smbgd_step_bank(
     interpret: bool | None = None,
     prefetch: bool = False,
     health: bool = True,
+    moments: bool = False,
     blowup: float = HEALTH_BLOWUP_BOUND,
 ):
     """Whole-step fused bank tick on persistent-padded state (zero staging).
@@ -398,15 +408,18 @@ def smbgd_step_bank(
     see ``default_block_s``).  ``prefetch=True`` double-buffers the X tile
     DMA (bit-identical on the interpret path).  Returns
     ``(Y (S, P_pad, n_pad), B', H_hat', step' (S,), conv' (S,),
-    health' (S,))`` where ``conv'`` is the relative update magnitude
-    ``‖Ĥ′B‖_F/‖B‖_F`` computed inside the commit (see
-    ``core.metrics.update_magnitude`` for the reference formula) and
+    health' (S,), moments' (S, 2))`` where ``conv'`` is the relative update
+    magnitude ``‖Ĥ′B‖_F/‖B‖_F`` computed inside the commit (see
+    ``core.metrics.update_magnitude`` for the reference formula),
     ``health'`` is the int32 per-stream fault bitmask (``HEALTH_*``;
-    non-finite B'/Ĥ'/Y or ``conv' > blowup``).  ``health=True`` (default)
-    also refuses unhealthy commits in-kernel — the slot keeps its pre-tick
-    state like a frozen stream; ``health=False`` restores the
-    pre-containment commit-on-active behaviour and returns zeros (the
-    overhead baseline for ``benchmarks --health``).
+    non-finite B'/Ĥ'/Y or ``conv' > blowup``) and ``moments'`` the raw
+    per-stream [Σy², Σy⁴] fold over this tick's Y (zeros when
+    ``moments=False`` — purely observational, every other output is
+    bit-identical either way).  ``health=True`` (default) also refuses
+    unhealthy commits in-kernel — the slot keeps its pre-tick state like a
+    frozen stream; ``health=False`` restores the pre-containment
+    commit-on-active behaviour and returns zeros (the overhead baseline for
+    ``benchmarks --health``).
     """
     if interpret is None:
         interpret = _interpret_default()
@@ -441,22 +454,25 @@ def smbgd_step_bank(
     if conv is None:
         conv = jnp.full((S_streams, 1), jnp.inf, jnp.float32)
     conv2 = conv.reshape(S_streams, 1).astype(jnp.float32)
-    Y, B_new, H_new, step_new, conv_new, health_new = smbgd_step_bank_pallas(
-        X,
-        Wp,
-        B,
-        H_hat,
-        step2,
-        gamma2,
-        active2,
-        conv2,
-        nonlinearity=nonlinearity,
-        block_p=block_p,
-        block_s=block_s,
-        interpret=interpret,
-        prefetch=prefetch,
-        health=health,
-        blowup=blowup,
+    Y, B_new, H_new, step_new, conv_new, health_new, mom_new = (
+        smbgd_step_bank_pallas(
+            X,
+            Wp,
+            B,
+            H_hat,
+            step2,
+            gamma2,
+            active2,
+            conv2,
+            nonlinearity=nonlinearity,
+            block_p=block_p,
+            block_s=block_s,
+            interpret=interpret,
+            prefetch=prefetch,
+            health=health,
+            moments=moments,
+            blowup=blowup,
+        )
     )
     return (
         Y,
@@ -465,6 +481,7 @@ def smbgd_step_bank(
         step_new.reshape(S_streams),
         conv_new.reshape(S_streams),
         health_new.reshape(S_streams),
+        mom_new,
     )
 
 
@@ -472,7 +489,7 @@ def smbgd_step_bank(
     jax.jit,
     static_argnames=(
         "nonlinearity", "block_p", "block_s", "interpret", "prefetch",
-        "health", "blowup",
+        "health", "moments", "blowup",
     ),
 )
 def smbgd_probe_bank(
@@ -491,20 +508,22 @@ def smbgd_probe_bank(
     interpret: bool | None = None,
     prefetch: bool = False,
     health: bool = True,
+    moments: bool = False,
     blowup: float = HEALTH_BLOWUP_BOUND,
 ):
     """Freeze-only probe launch: the conv statistic a ``smbgd_step_bank``
     tick WOULD commit, without committing anything.
 
     Same persistent-layout contract and block geometry as ``smbgd_step_bank``
-    (it refuses to silently pad); returns ``(conv' (S,), health' (S,))`` —
-    the virtual per-stream relative update magnitude, with ``conv`` (default
-    +inf) carried through for streams masked out by ``active``, plus the
-    int32 health word that commit would have raised (all-zero when
-    ``health=False``; quarantined sessions are probed for sanity through
-    it).  The state operands are never written: this is the batched
-    out-of-band drift probe of parked (frozen) separators, one launch per
-    ``S``-wide probe batch.
+    (it refuses to silently pad); returns ``(conv' (S,), health' (S,),
+    moments' (S, 2))`` — the virtual per-stream relative update magnitude,
+    with ``conv`` (default +inf) carried through for streams masked out by
+    ``active``, the int32 health word that commit would have raised
+    (all-zero when ``health=False``; quarantined sessions are probed for
+    sanity through it), and the raw [Σy², Σy⁴] fold over the probe's Y
+    (zeros when ``moments=False``).  The state operands are never written:
+    this is the batched out-of-band drift probe of parked (frozen)
+    separators, one launch per ``S``-wide probe batch.
     """
     if interpret is None:
         interpret = _interpret_default()
@@ -539,7 +558,7 @@ def smbgd_probe_bank(
     if conv is None:
         conv = jnp.full((S_streams, 1), jnp.inf, jnp.float32)
     conv2 = conv.reshape(S_streams, 1).astype(jnp.float32)
-    conv_new, health_new = smbgd_probe_bank_pallas(
+    conv_new, health_new, mom_new = smbgd_probe_bank_pallas(
         X,
         Wp,
         B,
@@ -554,6 +573,7 @@ def smbgd_probe_bank(
         interpret=interpret,
         prefetch=prefetch,
         health=health,
+        moments=moments,
         blowup=blowup,
     )
-    return conv_new.reshape(S_streams), health_new.reshape(S_streams)
+    return conv_new.reshape(S_streams), health_new.reshape(S_streams), mom_new

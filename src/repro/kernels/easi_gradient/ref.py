@@ -55,6 +55,14 @@ def health_word_ref(B_new, H_new, Y, delta, blowup: float) -> int:
     return word
 
 
+def moments_ref(Y: jnp.ndarray):
+    """Independent raw-moment derivation for one stream's ``Y (P, n)``:
+    the [Σy², Σy⁴] pair the kernel folds tile-by-tile, re-derived here as
+    whole-array reductions (no tiling, no shared helper)."""
+    Y = Y.astype(jnp.float32)
+    return jnp.stack([jnp.sum(Y**2), jnp.sum(Y**4)])
+
+
 def smbgd_step_bank_ref(
     X: jnp.ndarray,
     W: jnp.ndarray,
@@ -66,6 +74,7 @@ def smbgd_step_bank_ref(
     conv=None,
     nonlinearity: str = "cubic",
     health: bool = True,
+    moments: bool = False,
     blowup: float = 100.0,
 ):
     """Whole-step oracle for the megakernel: a plain per-stream Python loop of
@@ -73,10 +82,11 @@ def smbgd_step_bank_ref(
     sum via ``easi_gradient_ref``, then the literal commit with the step-0 γ
     gate and active-mask freeze) plus the per-stream convergence statistic
     ``‖Ĥ′B‖_F/‖B‖_F`` (carried through unchanged for frozen streams; ``conv``
-    defaults to +inf) and the per-stream health word (``health_word_ref``;
-    unhealthy streams refuse their commit exactly like frozen ones).  Same
-    signature/shapes as ``ops.smbgd_step_bank`` minus the padding
-    requirement."""
+    defaults to +inf), the per-stream health word (``health_word_ref``;
+    unhealthy streams refuse their commit exactly like frozen ones) and the
+    per-stream raw moments [Σy², Σy⁴] (``moments_ref``; zeros for frozen
+    streams or when ``moments=False``).  Same signature/shapes as
+    ``ops.smbgd_step_bank`` minus the padding requirement."""
     S = X.shape[0]
     W = jnp.asarray(W).reshape(S, -1)
     step = jnp.asarray(step).reshape(S)
@@ -85,7 +95,7 @@ def smbgd_step_bank_ref(
     if conv is None:
         conv = jnp.full((S,), jnp.inf, jnp.float32)
     conv = jnp.asarray(conv).reshape(S).astype(jnp.float32)
-    Ys, Bs, Hs, steps, convs, healths = [], [], [], [], [], []
+    Ys, Bs, Hs, steps, convs, healths, moms = [], [], [], [], [], [], []
     for s in range(S):
         B_s = B[s].astype(jnp.float32)
         Y_s = X[s].astype(jnp.float32) @ B_s.T
@@ -108,6 +118,10 @@ def smbgd_step_bank_ref(
         steps.append(step[s] + (1 if commit else 0))
         convs.append(delta if commit else conv[s])
         healths.append(word if act else 0)
+        if moments and act:
+            moms.append(moments_ref(Y_s))
+        else:
+            moms.append(jnp.zeros((2,), jnp.float32))
     return (
         jnp.stack(Ys),
         jnp.stack(Bs),
@@ -115,4 +129,5 @@ def smbgd_step_bank_ref(
         jnp.stack(steps),
         jnp.stack(convs),
         jnp.asarray(healths, jnp.int32),
+        jnp.stack(moms),
     )

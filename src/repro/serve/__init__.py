@@ -13,6 +13,12 @@ mandate, grown into an end-to-end adaptive service):
     session gone BAD (in-kernel health word: non-finite state / blow-up),
     and the escalation ladder: rollback-to-shadow + μ cut → quarantine →
     evict ``"diverged"``.
+  * ``MomentPolicy`` / ``MomentController`` — moment-scaled adaptive μ over
+    the bank's in-kernel kurtosis telemetry (``SeparatorBank(moments=True)``):
+    fast/slow EMA kurtosis per session, μ × clamp(deviation^gain), annealing
+    as re-convergence pulls the estimate home.  Composition with the other μ
+    writers is pinned: a health μ-cut wins while live; drift boost and the
+    controller multiply.
   * ``AdmissionScheduler`` (FIFO) / ``PriorityScheduler`` /
     ``DeadlineScheduler`` + ``SessionMeta`` — who waits, who activates.
   * ``SLOPolicy`` / ``DeadlineMonitor`` / ``SLOEvent`` / ``LatencySketch`` /
@@ -41,6 +47,7 @@ from repro.serve.engine import (
     SessionStats,
 )
 from repro.serve.health import HealthEvent, HealthMonitor, HealthPolicy
+from repro.serve.moments import MomentController, MomentPolicy
 from repro.serve.scheduling import (
     AdmissionScheduler,
     DeadlineScheduler,
@@ -72,6 +79,8 @@ __all__ = [
     "HealthMonitor",
     "HealthPolicy",
     "LatencySketch",
+    "MomentController",
+    "MomentPolicy",
     "ParkedSession",
     "PriorityScheduler",
     "QuarantinedSession",

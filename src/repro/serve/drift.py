@@ -71,6 +71,16 @@ class DriftPolicy:
     boost_ticks: int = 50  # ticks the boost lasts before μ returns to base
     probe_every: int = 10  # run_tick period of parked-session probes (readmit)
     probe_batch: int = 64  # parked sessions per probe launch (0 = sequential)
+    # Probe-phase staggering: parked sessions hash (stably, by session id)
+    # into ``probe_phases`` buckets and only ONE bucket is due per probe
+    # tick, rotating round-robin — a large parked population amortizes its
+    # probe cost over ``probe_phases`` ticks instead of stalling one tick
+    # with the whole sweep.  Each session is still probed with the same
+    # PERIOD in run_ticks (``probe_every * probe_phases``) and the seek-past
+    # skip accounts for it, so the probe still measures the present.
+    # ``probe_phases=1`` (default) is exactly the legacy everyone-at-once
+    # behavior.
+    probe_phases: int = 1  # stagger buckets (1 = probe all parked at once)
 
     def __post_init__(self) -> None:
         if self.mode not in ("boost", "readmit"):
@@ -87,6 +97,8 @@ class DriftPolicy:
             raise ValueError("probe_every must be >= 1")
         if self.probe_batch < 0:
             raise ValueError("probe_batch must be >= 0 (0 = sequential probes)")
+        if self.probe_phases < 1:
+            raise ValueError("probe_phases must be >= 1")
 
 
 @dataclasses.dataclass

@@ -113,6 +113,34 @@ Latency SLOs (``SLOPolicy`` — see ``serve.slo``; telemetry always on)::
     drive any service through the trace with ``serve.slo.replay`` — the
     ``--slo`` benchmark row gates p99/miss-rate regressions in CI.
 
+Adaptive μ (``MomentPolicy`` — see ``serve.moments``; needs a bank with
+``moments=True`` telemetry)::
+
+        every tick ── kernel folds [Σy², Σy⁴] into the conv reduction ──┐
+           ▲              (8 bytes/stream of extra HBM — output only)   ▼
+           │                                     κ = N·Σy⁴/(Σy²)²  (host-side)
+           │                                                            ▼
+           │                    MomentController: fast EMA (current output
+           │                    distribution) vs slow EMA (converged reference)
+           │                                                            ▼
+           │    ┌─ warmup (< warmup_ticks) or |dev − 1| ≤ deadband ─► scale 1.0
+           │    │
+           └────┴─ deviation (drift re-mixed Y; CLT drags kurtosis toward
+                   Gaussian) ─► μ × clamp(dev^gain) — ANNEALS back to 1 as
+                   re-convergence pulls the fast EMA home (what a fixed
+                   ``DriftPolicy.boost`` pulse cannot do)
+
+    Composition of the three μ writers is pinned (and regression-tested):
+    a HealthPolicy μ-cut WINS outright while it is live (containment beats
+    adaptation — never boost a separator you just rolled back), otherwise
+    the DriftPolicy boost and the controller scale MULTIPLY::
+
+        μ_eff = μ_base · (cut_on ? cut_scale : boost_scale · ctrl_scale)
+
+    Rollback, quarantine, eviction and (re-)activation RESET the session's
+    controller memory — the old kurtosis reference no longer describes the
+    restored/new separator, so the EMAs re-seed from the next usable tick.
+
 Ingestion: ``run_tick()`` is the scheduler-driven pull loop — sessions bind
 a ``data.sources.SignalSource`` at admit time; each tick backfills free
 slots, pulls one channel-major ``(m, P)`` block per bound source, advances
@@ -186,6 +214,7 @@ from repro.data import sources as sources_lib
 from repro.models import model as M
 from repro.serve.drift import DriftEvent, DriftMonitor, DriftPolicy
 from repro.serve.health import HealthEvent, HealthMonitor, HealthPolicy
+from repro.serve.moments import MomentController, MomentPolicy
 from repro.serve.scheduling import (
     AdmissionScheduler,
     SchedulerContext,
@@ -483,6 +512,7 @@ class SeparationService:
         health_policy: Optional[HealthPolicy] = None,
         on_health: Optional[Callable[[Hashable, HealthEvent], None]] = None,
         slo: Optional[SLOPolicy] = None,
+        moment_policy: Optional[MomentPolicy] = None,
     ):
         self.bank = bank
         self.key = jax.random.PRNGKey(seed)
@@ -501,6 +531,22 @@ class SeparationService:
             )
         self.health_policy = health_policy
         self.on_health = on_health
+        if moment_policy is not None and not bank.moments:
+            raise ValueError(
+                "moment_policy needs a bank with moments=True: the adaptive-μ "
+                "controller consumes the in-kernel [Σy², Σy⁴] telemetry"
+            )
+        self.moment_policy = moment_policy
+        # per-session kurtosis EMAs over the (S, 2) telemetry leaf; N is the
+        # LOGICAL Y entry count P·n (padding contributes zeros to both sums)
+        self._moments: Optional[MomentController] = (
+            MomentController(
+                moment_policy,
+                count=bank.opt.batch_size * bank.easi.n_components,
+            )
+            if moment_policy is not None
+            else None
+        )
         self.scheduler = (
             scheduler if scheduler is not None else AdmissionScheduler(max_queue)
         )
@@ -522,7 +568,14 @@ class SeparationService:
         self._warm: Dict[Hashable, SMBGDState] = {}  # warm-start states pending activation
         self._hot: Dict[Hashable, DriftMonitor] = {}  # converged-hot drift watches
         self._boost_left: Dict[Hashable, int] = {}  # remaining boosted ticks
-        self._mu_scale = np.ones((bank.n_streams,), dtype=np.float32)
+        # the three μ ladders write DISJOINT per-slot arrays; composition is
+        # pinned in _effective_mu_scale (cut WINS while live, boost and the
+        # moment controller MULTIPLY) — one ladder expiring can never clobber
+        # another's live multiplier (the PR-9 composition bugfix)
+        self._boost_scale = np.ones((bank.n_streams,), dtype=np.float32)
+        self._cut_scale = np.ones((bank.n_streams,), dtype=np.float32)
+        self._ctrl_scale = np.ones((bank.n_streams,), dtype=np.float32)
+        self._cut_on = np.zeros((bank.n_streams,), dtype=bool)
         self._parked: Dict[Hashable, ParkedSession] = {}
         self._drift_events: List[DriftEvent] = []
         self._n_drift_events = 0
@@ -551,16 +604,19 @@ class SeparationService:
         self._n_source_retries = 0  # ResilientSource retries folded per tick
         self._last_fault: Dict[Hashable, str] = {}  # sid → last source error
         self._quar_ticks = 0  # run_tick counter driving quarantine probes
-        # μ boost (drift) and μ cut (health) ride per-stream hyperparameter
-        # rows as TRACED operands — only those modes pay for the 4-argument
-        # step flavour
+        # μ boost (drift), μ cut (health) and the moment controller ride
+        # per-stream hyperparameter rows as TRACED operands — only those
+        # modes pay for the 4-argument step flavour
         self._hp_step = (
-            drift_policy is not None and drift_policy.mode == "boost"
-        ) or health_policy is not None
+            (drift_policy is not None and drift_policy.mode == "boost")
+            or health_policy is not None
+            or moment_policy is not None
+        )
         if self._hp_step and bank.algorithm != "smbgd_batched":
             raise ValueError(
-                "DriftPolicy(mode='boost') and HealthPolicy need per-stream "
-                "hyperparams, which require algorithm='smbgd_batched'"
+                "DriftPolicy(mode='boost'), HealthPolicy and MomentPolicy "
+                "need per-stream hyperparams, which require "
+                "algorithm='smbgd_batched'"
             )
         self._base_hp: Optional[BankHyperparams] = (
             bank._bank_hyperparams() if self._hp_step else None
@@ -811,6 +867,11 @@ class SeparationService:
         if dmon is not None:
             out["deadline_misses"] = float(dmon.misses)
             out["deadline_misses_recent"] = float(len(dmon.recent))
+        if self._moments is not None:
+            out["mu_ctrl"] = float(self._moments.scale(session_id))
+            est = self._moments.estimate(session_id)
+            if est is not None:
+                out["kurtosis_fast"], out["kurtosis_slow"] = est
         return out
 
     @property
@@ -925,7 +986,11 @@ class SeparationService:
             self.state = self.bank.init_slot(self.state, slot, k)
         self._slot_of[session_id] = slot
         self._meta.setdefault(session_id, SessionMeta(order=self._seq))
-        self._mu_scale[slot] = 1.0
+        self._reset_mu(slot)
+        if self._moments is not None:
+            # a slot's new occupant (fresh OR warm re-admission) starts with
+            # no kurtosis reference — the EMAs re-seed on its first tick
+            self._moments.reset(session_id)
         now = time.perf_counter()
         self._stats[session_id] = SessionStats(
             admitted_at=self._admit_time.pop(session_id, now),
@@ -1053,7 +1118,9 @@ class SeparationService:
         self._health_mon.pop(session_id, None)
         self._deadline_mon.pop(session_id, None)
         self._admit_time.pop(session_id, None)
-        self._mu_scale[slot] = 1.0
+        self._reset_mu(slot)
+        if self._moments is not None:
+            self._moments.forget(session_id)
         self._free.append(slot)
         self._n_evicted += 1
         if reason == "converged":
@@ -1165,6 +1232,17 @@ class SeparationService:
         # sessions still receive this tick's separated output
         out = {sid: Y[self._slot_of[sid], :P, :n] for sid in batches}
         served = list(batches.keys())
+        if self._moments is not None:
+            # one (S, 2) host read per tick: fold this tick's raw moments
+            # into each served session's kurtosis EMAs and refresh its μ
+            # multiplier (consumed by _current_hp next tick — traced operand,
+            # no retrace)
+            mom = np.asarray(self.state.moments)
+            for sid in served:
+                slot = self._slot_of[sid]
+                self._ctrl_scale[slot] = self._moments.observe(
+                    sid, float(mom[slot, 0]), float(mom[slot, 1])
+                )
         if self._defer_slo:
             # called from run_tick: the tick's latency record is finished
             # AFTER the probe phase, so probe time is billed to this tick
@@ -1271,11 +1349,13 @@ class SeparationService:
                     self._fire_boost(sid, slot)
                 continue
             if sid in self._boost_left:
-                # re-adapting under μ boost: count the boost down
+                # re-adapting under μ boost: count the boost down (expiry
+                # releases only the BOOST ladder — a live μ-cut or controller
+                # scale on the same slot is untouched)
                 self._boost_left[sid] -= 1
                 if self._boost_left[sid] <= 0:
                     del self._boost_left[sid]
-                    self._mu_scale[slot] = 1.0
+                    self._boost_scale[slot] = 1.0
             mon = self._monitors[sid]
             mon.update(x, pol)
             if mon.ticks < pol.min_ticks or mon.below < pol.patience:
@@ -1308,7 +1388,7 @@ class SeparationService:
                     # re-converged before the boost ran out: the boost did
                     # its job — μ returns to base for the hot watch
                     del self._boost_left[sid]
-                    self._mu_scale[slot] = 1.0
+                    self._boost_scale[slot] = 1.0
                 continue
             evict_now.append(sid)
         for sid in evict_now:
@@ -1328,7 +1408,7 @@ class SeparationService:
         dpol = self.drift_policy
         self._monitors[session_id] = ConvergenceMonitor()
         if dpol.boost != 1.0:
-            self._mu_scale[slot] = dpol.boost
+            self._boost_scale[slot] = dpol.boost
             self._boost_left[session_id] = dpol.boost_ticks
         self._record_drift(
             DriftEvent(
@@ -1340,16 +1420,32 @@ class SeparationService:
             )
         )
 
+    def _reset_mu(self, slot: int) -> None:
+        """Clear every μ ladder's multiplier for ``slot`` (slot turnover:
+        activation, release, quarantine)."""
+        self._boost_scale[slot] = 1.0
+        self._cut_scale[slot] = 1.0
+        self._ctrl_scale[slot] = 1.0
+        self._cut_on[slot] = False
+
+    def _effective_mu_scale(self) -> np.ndarray:
+        """The pinned composition of the three μ writers, per slot: a live
+        HealthPolicy cut WINS outright (containment beats adaptation — never
+        boost a separator that just rolled back), otherwise the DriftPolicy
+        boost and the moment controller MULTIPLY."""
+        return np.where(
+            self._cut_on, self._cut_scale, self._boost_scale * self._ctrl_scale
+        ).astype(np.float32)
+
     def _current_hp(self) -> BankHyperparams:
         """Per-stream hyperparameter rows for THIS tick: the bank's base
-        (μ, β, γ) with the watchdog's μ boosts and the health ladder's μ cuts
-        folded in (both ride ``_mu_scale``; a session is never boosted and
-        cut at once — the ladders own disjoint lifecycles).  Traced operands
-        — varying them tick to tick costs no retrace."""
+        (μ, β, γ) with the composed μ multipliers folded in
+        (``_effective_mu_scale`` — cut wins, boost × controller multiply).
+        Traced operands — varying them tick to tick costs no retrace."""
         hp = self._base_hp
-        if self._boost_left or self._cut_left:
+        if self._boost_left or self._cut_left or self._moments is not None:
             return BankHyperparams(
-                mu=hp.mu * jnp.asarray(self._mu_scale),
+                mu=hp.mu * jnp.asarray(self._effective_mu_scale()),
                 beta=hp.beta,
                 gamma=hp.gamma,
             )
@@ -1389,7 +1485,10 @@ class SeparationService:
                     self._cut_left[sid] -= 1
                     if self._cut_left[sid] <= 0:
                         del self._cut_left[sid]
-                        self._mu_scale[slot] = 1.0
+                        # the cut expiring hands μ BACK to boost × controller
+                        # (their multipliers kept ticking underneath)
+                        self._cut_scale[slot] = 1.0
+                        self._cut_on[slot] = False
                 healthy.append(sid)
                 continue
             escalate = mon.record_offense(self._n_ticks, word, hpol)
@@ -1397,9 +1496,15 @@ class SeparationService:
             # what happens next: the quarantine/diverged record must carry
             # the recoverable state, not the one that was drifting apart
             self.state = self.bank.restore_slot(self.state, self._shadow, slot)
+            if self._moments is not None:
+                # the rolled-back separator invalidates the kurtosis
+                # reference: drop the EMAs, re-seed from the next clean tick
+                self._moments.reset(sid)
+                self._ctrl_scale[slot] = 1.0
             if not escalate:
                 self._n_rollbacks += 1
-                self._mu_scale[slot] = hpol.mu_cut
+                self._cut_scale[slot] = hpol.mu_cut
+                self._cut_on[slot] = True
                 self._cut_left[sid] = hpol.cut_ticks
                 self._record_health(
                     HealthEvent(sid, self._n_ticks, word, "rollback", slot)
@@ -1447,7 +1552,9 @@ class SeparationService:
         self._boost_left.pop(session_id, None)
         self._cut_left.pop(session_id, None)
         self._deadline_mon.pop(session_id, None)
-        self._mu_scale[slot] = 1.0
+        self._reset_mu(slot)
+        if self._moments is not None:
+            self._moments.forget(session_id)
         self._free.append(slot)
         self._quarantined[session_id] = QuarantinedSession(
             record=record,
@@ -1507,7 +1614,9 @@ class SeparationService:
                 X[j, :P, :m] = blk.T
             active = np.zeros((width,), dtype=np.int32)
             active[: len(chunk)] = 1
-            _conv, health = probe_fn(state, jnp.asarray(X), jnp.asarray(active))
+            _conv, health, _mom = probe_fn(
+                state, jnp.asarray(X), jnp.asarray(active)
+            )
             health = np.asarray(health)
             self._n_probes += len(chunk)
             self._n_probe_launches += 1
@@ -1615,18 +1724,48 @@ class SeparationService:
         Probes treat the source as LIVE: a parked session is not consuming
         its feed, so the samples that arrived between probes are skipped
         (``seek`` past them, for sources exposing a cursor) — the probe sees
-        the present, and parked time advances at service time."""
+        the present, and parked time advances at service time.
+
+        With ``DriftPolicy.probe_phases > 1`` the parked population is
+        STAGGERED: each session hashes (stably, by id) into one of
+        ``probe_phases`` buckets and only the rotating due bucket is probed
+        per probe tick, so a large parked pool spreads its probe cost over
+        ``probe_phases`` ticks instead of stalling one.  Every session keeps
+        a fixed probe period of ``probe_every * probe_phases`` run_ticks
+        (the seek-past skip accounts for it); ``probe_phases=1`` is exactly
+        the legacy everyone-at-once sweep."""
         dpol = self.drift_policy
         if not self._parked or dpol is None or dpol.mode != "readmit":
             return
         self._probe_ticks += 1
         if self._probe_ticks % dpol.probe_every:
             return
-        due = list(self._parked)  # the due batch: every parked session, in park order
+        due = list(self._parked)  # the due batch, in park order
+        if dpol.probe_phases > 1:
+            # rotating bucket: probe cycle k serves phase k mod probe_phases
+            phase = (self._probe_ticks // dpol.probe_every) % dpol.probe_phases
+            due = [
+                sid
+                for sid in due
+                if self._probe_phase(sid, dpol.probe_phases) == phase
+            ]
+        if not due:
+            return
         if dpol.probe_batch == 0:
             self._probe_sequential(due)
         else:
             self._probe_batched(due)
+
+    @staticmethod
+    def _probe_phase(sid: Hashable, phases: int) -> int:
+        """Stable stagger bucket of a parked session: the same
+        JSON-serialized crc32 the parked-leaf fingerprint uses, mod the
+        bucket count — deterministic across processes and restores (Python's
+        ``hash`` is salted per process and would reshuffle buckets on every
+        restart)."""
+        import zlib
+
+        return zlib.crc32(json.dumps(sid, default=str).encode()) % phases
 
     def _pull_probe_block(
         self,
@@ -1647,7 +1786,11 @@ class SeparationService:
             return None
         pool = self._parked if pool is None else pool
         if probe_every is None:
-            probe_every = self.drift_policy.probe_every
+            # a staggered session's effective period is probe_every ×
+            # probe_phases run_ticks — the seek must skip the whole gap or
+            # staggered probes would lag live time by (phases−1) windows
+            dpol = self.drift_policy
+            probe_every = dpol.probe_every * max(dpol.probe_phases, 1)
         P = self.bank.opt.batch_size
         skip = (probe_every - 1) * P
         if skip and hasattr(ps.source, "seek") and hasattr(ps.source, "position"):
@@ -1767,7 +1910,9 @@ class SeparationService:
                 X[j, :P, :m] = blk.T
             active = np.zeros((width,), dtype=np.int32)
             active[: len(chunk)] = 1
-            conv, _health = probe_fn(state, jnp.asarray(X), jnp.asarray(active))
+            conv, _health, _mom = probe_fn(
+                state, jnp.asarray(X), jnp.asarray(active)
+            )
             conv = np.asarray(conv)
             self._n_probes += len(chunk)
             self._n_probe_launches += 1
@@ -1809,6 +1954,7 @@ class SeparationService:
                 ),
                 dtype_policy=self.bank.dtype_policy,
                 prefetch=bool(self.bank.prefetch),
+                moments=bool(self.bank.moments),
                 autotune=False,
             )
             got = (bank, bank.make_probe())
@@ -1991,7 +2137,15 @@ class SeparationService:
                 sid: dataclasses.asdict(mon) for sid, mon in self._hot.items()
             },
             "boost": dict(self._boost_left),
-            "mu_scale": [float(v) for v in self._mu_scale],
+            # legacy composite (pre-split readers) + the per-ladder arrays
+            "mu_scale": [float(v) for v in self._effective_mu_scale()],
+            "mu_boost_scale": [float(v) for v in self._boost_scale],
+            "mu_cut_scale": [float(v) for v in self._cut_scale],
+            "mu_ctrl_scale": [float(v) for v in self._ctrl_scale],
+            "mu_cut_on": [bool(v) for v in self._cut_on],
+            "moments": (
+                self._moments.state_dict() if self._moments is not None else {}
+            ),
             "sources": {
                 sid: int(src.position)
                 for sid, src in self._sources.items()
@@ -2146,6 +2300,11 @@ class SeparationService:
         parked_ids = [sid for sid, _info in parked_snap]
         health_snap = lifecycle.get("health") or {}
         cut_snap = lifecycle.get("cut") or {}
+        boost_scale_snap = lifecycle.get("mu_boost_scale")
+        cut_scale_snap = lifecycle.get("mu_cut_scale")
+        ctrl_scale_snap = lifecycle.get("mu_ctrl_scale")
+        cut_on_snap = lifecycle.get("mu_cut_on")
+        moments_snap = lifecycle.get("moments") or {}
         quar_snap = list(lifecycle.get("quarantined") or [])
         quar_ids = [sid for sid, _info in quar_snap]
         want_shadow = bool(lifecycle.get("shadow"))
@@ -2187,10 +2346,22 @@ class SeparationService:
                 "(quarantined/health/cut) but this service has no "
                 "health_policy to run the escalation ladder"
             )
-        if mu_scale is not None and len(mu_scale) != self.bank.n_streams:
+        for name, arr in (
+            ("mu_scale", mu_scale),
+            ("mu_boost_scale", boost_scale_snap),
+            ("mu_cut_scale", cut_scale_snap),
+            ("mu_ctrl_scale", ctrl_scale_snap),
+            ("mu_cut_on", cut_on_snap),
+        ):
+            if arr is not None and len(arr) != self.bank.n_streams:
+                raise ValueError(
+                    f"{name} length {len(arr)} != n_streams "
+                    f"{self.bank.n_streams}"
+                )
+        if moments_snap and self._moments is None:
             raise ValueError(
-                f"mu_scale length {len(mu_scale)} != n_streams "
-                f"{self.bank.n_streams}"
+                "lifecycle snapshot carries moment-controller state but this "
+                "service has no moment_policy to apply it"
             )
         # drift-watch state needs the drift machinery to run: re-arming hot
         # monitors without a policy would crash the next served tick, and μ
@@ -2200,10 +2371,10 @@ class SeparationService:
                 "lifecycle snapshot carries drift-watch state (hot/boost) "
                 "but this service has no drift_policy"
             )
-        if (
-            mu_scale is not None
-            and not self._hp_step
-            and any(float(v) != 1.0 for v in mu_scale)
+        if not self._hp_step and any(
+            any(float(v) != 1.0 for v in arr)
+            for arr in (mu_scale, boost_scale_snap, cut_scale_snap, ctrl_scale_snap)
+            if arr is not None
         ):
             raise ValueError(
                 "lifecycle snapshot carries μ multipliers but this service "
@@ -2277,6 +2448,7 @@ class SeparationService:
                 step=shadow_step,
                 conv=shadow_conv,
                 health=jnp.zeros_like(self.state.health),
+                moments=jnp.zeros((shadow_B.shape[0], 2), jnp.float32),
             )
         elif self.health_policy is not None:
             # checkpoint predates the shadow (or was saved without one):
@@ -2310,11 +2482,61 @@ class SeparationService:
         self._boost_left = {
             sid: int(v) for sid, v in boost_snap.items() if sid in sessions
         }
-        self._mu_scale = (
-            np.asarray(mu_scale, dtype=np.float32)
-            if mu_scale is not None
-            else np.ones((self.bank.n_streams,), dtype=np.float32)
-        )
+        S = self.bank.n_streams
+        if (
+            boost_scale_snap is not None
+            or cut_scale_snap is not None
+            or ctrl_scale_snap is not None
+        ):
+            # per-ladder snapshot (PR-9+): restore each writer's multiplier
+            self._boost_scale = (
+                np.asarray(boost_scale_snap, np.float32)
+                if boost_scale_snap is not None
+                else np.ones((S,), np.float32)
+            )
+            self._cut_scale = (
+                np.asarray(cut_scale_snap, np.float32)
+                if cut_scale_snap is not None
+                else np.ones((S,), np.float32)
+            )
+            self._ctrl_scale = (
+                np.asarray(ctrl_scale_snap, np.float32)
+                if ctrl_scale_snap is not None
+                else np.ones((S,), np.float32)
+            )
+            self._cut_on = (
+                np.asarray(cut_on_snap, bool)
+                if cut_on_snap is not None
+                else np.zeros((S,), bool)
+            )
+        else:
+            # legacy single-array snapshot: attribute each slot's composite
+            # multiplier to the ladder that owns the session there (μ-cut
+            # sessions are exactly the cut_left keys; everything else was a
+            # boost — the controller never persisted pre-split)
+            self._boost_scale = np.ones((S,), np.float32)
+            self._cut_scale = np.ones((S,), np.float32)
+            self._ctrl_scale = np.ones((S,), np.float32)
+            self._cut_on = np.zeros((S,), bool)
+            if mu_scale is not None:
+                cut_slots = {
+                    sessions[sid] for sid in cut_snap if sid in sessions
+                }
+                for slot, v in enumerate(mu_scale):
+                    v = float(v)
+                    if v == 1.0:
+                        continue
+                    if slot in cut_slots:
+                        self._cut_scale[slot] = v
+                        self._cut_on[slot] = True
+                    else:
+                        self._boost_scale[slot] = v
+        if self._moments is not None:
+            # stringified keys resolve against the restored roster (active
+            # sessions only — parked/quarantined re-seed at re-admission)
+            self._moments.load_state_dict(
+                moments_snap, key_map={str(sid): sid for sid in sessions}
+            )
         self._sources = {}
         self._warm = {}
         self._drift_events = []

@@ -1,0 +1,226 @@
+"""Moment-scaled adaptive μ: the serving-side controller over the bank's
+in-kernel kurtosis telemetry.
+
+The megakernel folds per-stream raw moments [Σy², Σy⁴] into the same
+in-register reduction pass that produces ``conv`` and the health word
+(``BankState.moments``; 8 bytes/stream/tick of extra HBM — the output leaf
+is the entire cost).  This module turns that telemetry into a per-session
+μ multiplier, following the theory that the learning rate should scale
+inversely with high-order data moments (arXiv:2509.15127) — and that μ
+mis-calibration dominates the cost of online ICA in the high-dimensional
+regime (arXiv:1710.05384):
+
+  * per tick, the raw sums collapse to a scale-invariant kurtosis statistic
+    ``κ = N·Σy⁴ / (Σy²)²`` (N = the number of Y entries, logical P·n —
+    padding contributes zeros to both sums, so padded and logical banks
+    agree exactly),
+  * two EMAs track it: a FAST one (the current output distribution) and a
+    SLOW one (the converged reference).  A well-separated EASI output is a
+    maximally non-Gaussian point; when the mixing drifts, Y becomes a
+    mixture again and the central limit theorem drags its kurtosis toward
+    the Gaussian value — the fast EMA leaves the slow reference,
+  * the μ multiplier is the clamped deviation ratio between the two: 1 at
+    steady state (inside the deadband), rising with the deviation, annealing
+    back to 1 as re-convergence pulls the fast EMA home.  That anneal is
+    what the fixed drift boost (``DriftPolicy.boost``) cannot do: a fixed
+    4×-for-40-ticks pulse either overshoots after the separator has mostly
+    recovered or expires before it has.
+
+Composition with the other μ writers is pinned (and regression-tested) in
+``SeparationService``: a HealthPolicy μ-cut WINS outright while it is live
+(containment beats adaptation), otherwise the DriftPolicy boost and the
+controller scale MULTIPLY.
+
+The controller is pure host-side bookkeeping over an (S, 2) telemetry leaf
+the tick already produced — per-session floats, no extra device work, and
+the resulting μ row rides into the megakernel as a traced operand (the PR-4
+``BankHyperparams`` plumbing; no retrace).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MomentPolicy:
+    """Configuration of the moment-scaled adaptive μ controller.
+
+    ``ema_fast``/``ema_slow`` are the per-tick EMA weights of the current
+    and reference kurtosis trackers (fast ≫ slow; both in (0, 1]).
+    ``warmup_ticks`` observed ticks must pass before the controller scales
+    anything — the reference EMA needs to see the *converged* output
+    distribution before deviations from it mean drift.  ``deadband`` is the
+    fractional deviation treated as noise (scale exactly 1.0 inside it), so
+    a converged steady state never jitters μ.  ``gain`` exponentiates the
+    deviation ratio (1.0 = proportional); ``max_scale``/``min_scale`` clamp
+    the multiplier.  ``symmetric=True`` (default) responds to the kurtosis
+    leaving the reference in EITHER direction — sub-Gaussian sources drift
+    kurtosis UP toward Gaussian, super-Gaussian sources DOWN — by always
+    boosting; ``symmetric=False`` maps the signed ratio through the clamps
+    instead (deviation above reference can then cut μ below 1).
+    ``min_activity`` is the Σy² floor below which a tick is ignored (an
+    all-zero or frozen slot's telemetry carries no information).
+    """
+
+    ema_fast: float = 0.3
+    ema_slow: float = 0.02
+    warmup_ticks: int = 10
+    deadband: float = 0.15
+    gain: float = 1.0
+    min_scale: float = 1.0
+    max_scale: float = 8.0
+    symmetric: bool = True
+    min_activity: float = 1e-12
+
+    def __post_init__(self) -> None:
+        if not (0.0 < self.ema_fast <= 1.0):
+            raise ValueError("ema_fast must be in (0, 1]")
+        if not (0.0 < self.ema_slow <= 1.0):
+            raise ValueError("ema_slow must be in (0, 1]")
+        if self.ema_slow > self.ema_fast:
+            raise ValueError("ema_slow must not exceed ema_fast")
+        if self.warmup_ticks < 1:
+            raise ValueError("warmup_ticks must be >= 1")
+        if self.deadband < 0.0:
+            raise ValueError("deadband must be >= 0")
+        if self.gain <= 0.0:
+            raise ValueError("gain must be > 0")
+        if self.min_scale <= 0.0:
+            raise ValueError("min_scale must be > 0")
+        if self.max_scale < self.min_scale:
+            raise ValueError("max_scale must be >= min_scale")
+        if not (self.min_scale <= 1.0 <= self.max_scale):
+            raise ValueError(
+                "the clamp range must include 1.0 (the steady-state scale)"
+            )
+        if self.min_activity < 0.0:
+            raise ValueError("min_activity must be >= 0")
+
+
+@dataclasses.dataclass
+class _SessionMoments:
+    """Per-session controller memory: the two kurtosis EMAs, the observed
+    tick count, and the last computed scale (cached so policy sweeps can
+    read it without re-observing)."""
+
+    fast: float
+    slow: float
+    ticks: int = 1
+    scale: float = 1.0
+
+
+class MomentController:
+    """Per-session EMA kurtosis → μ multiplier (see the module docstring).
+
+    ``count`` is N, the number of entries in one stream's logical Y block
+    (P·n) — the normalizer that turns the raw sums into the kurtosis
+    statistic.  ``observe`` ingests one tick's [Σy², Σy⁴] telemetry for a
+    session and returns the session's new μ scale; ``scale`` reads the
+    cached value without observing; ``forget`` drops a session (eviction).
+    State round-trips checkpoints via ``state_dict``/``load_state_dict``
+    (plain JSON-able floats).
+    """
+
+    def __init__(self, policy: MomentPolicy, count: int) -> None:
+        if count < 1:
+            raise ValueError("count (logical P*n) must be >= 1")
+        self.policy = policy
+        self.count = int(count)
+        self._sessions: Dict[object, _SessionMoments] = {}
+
+    # -- telemetry ingestion ----------------------------------------------
+    def kurtosis(self, s2: float, s4: float) -> Optional[float]:
+        """``κ = N·Σy⁴/(Σy²)²`` or None for a tick with no usable signal
+        (below the activity floor, or non-finite telemetry)."""
+        s2 = float(s2)
+        s4 = float(s4)
+        if not (s2 > self.policy.min_activity):  # also rejects NaN
+            return None
+        kappa = self.count * s4 / (s2 * s2)
+        if not (kappa > 0.0 and kappa == kappa and kappa != float("inf")):
+            return None
+        return kappa
+
+    def observe(self, session_id, s2: float, s4: float) -> float:
+        """Fold one tick's raw moments for ``session_id``; returns the
+        session's μ multiplier (1.0 during warmup / without signal)."""
+        kappa = self.kurtosis(s2, s4)
+        mem = self._sessions.get(session_id)
+        if kappa is None:
+            return mem.scale if mem is not None else 1.0
+        pol = self.policy
+        if mem is None:
+            # first usable tick seeds both EMAs — deviation starts at 0
+            mem = _SessionMoments(fast=kappa, slow=kappa)
+            self._sessions[session_id] = mem
+            return 1.0
+        mem.fast += pol.ema_fast * (kappa - mem.fast)
+        mem.slow += pol.ema_slow * (kappa - mem.slow)
+        mem.ticks += 1
+        mem.scale = self._scale_from(mem)
+        return mem.scale
+
+    def _scale_from(self, mem: _SessionMoments) -> float:
+        pol = self.policy
+        if mem.ticks < pol.warmup_ticks:
+            return 1.0
+        if mem.fast <= 0.0 or mem.slow <= 0.0:
+            return 1.0
+        ratio = mem.slow / mem.fast  # >1 ⟺ kurtosis collapsed under drift
+        dev = max(ratio, 1.0 / ratio) if pol.symmetric else ratio
+        if abs(dev - 1.0) <= pol.deadband:
+            return 1.0
+        scaled = dev**pol.gain
+        return min(max(scaled, pol.min_scale), pol.max_scale)
+
+    # -- reads / lifecycle -------------------------------------------------
+    def scale(self, session_id) -> float:
+        mem = self._sessions.get(session_id)
+        return mem.scale if mem is not None else 1.0
+
+    def estimate(self, session_id) -> Optional[Tuple[float, float]]:
+        """The session's (fast, slow) kurtosis EMAs, or None if unseen."""
+        mem = self._sessions.get(session_id)
+        return (mem.fast, mem.slow) if mem is not None else None
+
+    def forget(self, session_id) -> None:
+        self._sessions.pop(session_id, None)
+
+    def reset(self, session_id) -> None:
+        """Drop the session's EMAs but keep serving it: the next usable tick
+        re-seeds both from scratch (used after rollback/re-admission, where
+        the old reference no longer describes the restored separator)."""
+        self.forget(session_id)
+
+    def __len__(self) -> int:
+        return len(self._sessions)
+
+    # -- checkpointing -----------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-able snapshot (keys stringified exactly like the service's
+        other per-session lifecycle maps)."""
+        return {
+            str(sid): {
+                "fast": float(m.fast),
+                "slow": float(m.slow),
+                "ticks": int(m.ticks),
+                "scale": float(m.scale),
+            }
+            for sid, m in self._sessions.items()
+        }
+
+    def load_state_dict(self, blob: dict, key_map=None) -> None:
+        """Inverse of ``state_dict``.  ``key_map`` (optional) maps the
+        stringified keys back to live session ids (the service resolves
+        them against its roster on restore); unmapped entries are kept
+        under their string key."""
+        self._sessions = {}
+        for key, m in (blob or {}).items():
+            sid = key_map.get(key, key) if key_map else key
+            self._sessions[sid] = _SessionMoments(
+                fast=float(m["fast"]),
+                slow=float(m["slow"]),
+                ticks=int(m.get("ticks", 1)),
+                scale=float(m.get("scale", 1.0)),
+            )

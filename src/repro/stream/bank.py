@@ -99,6 +99,15 @@ class BankState(NamedTuple):
     pre-tick state and the serving layer decides rollback/quarantine.  It is
     a fresh per-tick verdict, not a carried statistic; ``health=None``
     (legacy states) normalizes to all-healthy zeros.
+
+    ``moments`` is the per-stream raw [Σy², Σy⁴] fold of the last tick's Y
+    (the in-kernel kurtosis telemetry; see
+    ``kernels.easi_gradient.ops.MOMENT_TICK_BYTES_PER_STREAM``): zeros when
+    the bank's ``moments`` flag is off, for frozen slots, and for legacy
+    states (``moments=None`` normalizes like ``health``).  Like ``health``
+    it is a fresh per-tick observation — the serving layer's
+    ``MomentController`` turns it into an EMA kurtosis estimate and an
+    adaptive μ scale; nothing in the bank ever reads it back.
     """
 
     B: jnp.ndarray  # (S, n, m) or (S, n_pad, m_pad)
@@ -106,6 +115,7 @@ class BankState(NamedTuple):
     step: jnp.ndarray  # (S,) int32 — per-stream mini-batch counter
     conv: Optional[jnp.ndarray] = None  # (S,) f32 — last-tick ‖ΔB‖_F/‖B‖_F
     health: Optional[jnp.ndarray] = None  # (S,) int32 — last-tick fault bits
+    moments: Optional[jnp.ndarray] = None  # (S, 2) f32 — last-tick [Σy², Σy⁴]
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -131,6 +141,13 @@ class SeparatorBank:
     the fault-containment layer; ``blowup`` overrides the static blow-up
     bound on ``‖ΔB‖_F/‖B‖_F`` (default
     ``kernels.easi_gradient.ops.HEALTH_BLOWUP_BOUND``).
+
+    ``moments`` (default OFF — the telemetry is opt-in, and off keeps every
+    other output bit-identical to the pre-moment bank) folds the per-stream
+    raw [Σy², Σy⁴] into every step/probe path (``BankState.moments``): the
+    in-kernel kurtosis telemetry the serving layer's ``MomentController``
+    scales μ from.  Costs 8 bytes/stream/tick of HBM (the output leaf —
+    both sums fold from registers the gradient pass already holds).
     """
 
     easi: EASIConfig
@@ -147,6 +164,7 @@ class SeparatorBank:
     autotune: bool = True
     health_checks: bool = True
     blowup: Optional[float] = None  # None → ops.HEALTH_BLOWUP_BOUND
+    moments: bool = False  # per-stream [Σy², Σy⁴] telemetry (adaptive μ)
 
     def __post_init__(self) -> None:
         if self.n_streams < 1:
@@ -295,11 +313,15 @@ class SeparatorBank:
             .set(state.H_hat.astype(dt))
         )
         return BankState(
-            B=B, H_hat=H, step=state.step, conv=state.conv, health=state.health
+            B=B, H_hat=H, step=state.step, conv=state.conv,
+            health=state.health, moments=state.moments,
         )
 
     def unpad_state(self, state: BankState) -> BankState:
-        """Persistent-padded → logical state (no-op if already logical)."""
+        """Persistent-padded → logical state (no-op if already logical).
+        ``moments`` carries through unchanged — the (S, 2) leaf is layout-
+        independent (padded Y entries are zero, so padded and logical folds
+        agree exactly)."""
         lay = self.layout
         if state.B.shape[-2:] == (lay.n, lay.m):
             return state
@@ -309,6 +331,7 @@ class SeparatorBank:
             step=state.step,
             conv=state.conv,
             health=state.health,
+            moments=state.moments,
         )
 
     def pad_batch(self, X: jnp.ndarray) -> jnp.ndarray:
@@ -347,6 +370,7 @@ class SeparatorBank:
             step=sub.step,
             conv=jnp.full((self.n_streams,), jnp.inf, jnp.float32),
             health=jnp.zeros((self.n_streams,), jnp.int32),
+            moments=jnp.zeros((self.n_streams, 2), jnp.float32),
         )
         return self.pad_state(state) if self.fused else state
 
@@ -357,6 +381,7 @@ class SeparatorBank:
         sub = smbgd_lib.init_state(self.easi, key)
         conv = self._conv_or_default(state).at[slot].set(jnp.inf)
         health = self._health_or_default(state).at[slot].set(0)
+        moments = self._moments_or_default(state).at[slot].set(0.0)
         if self._is_padded(state):
             lay = self.layout
             B_slot = (
@@ -371,6 +396,7 @@ class SeparatorBank:
                 step=state.step.at[slot].set(sub.step),
                 conv=conv,
                 health=health,
+                moments=moments,
             )
         return BankState(
             B=state.B.at[slot].set(sub.B.astype(state.B.dtype)),
@@ -378,6 +404,7 @@ class SeparatorBank:
             step=state.step.at[slot].set(sub.step),
             conv=conv,
             health=health,
+            moments=moments,
         )
 
     def slot_state(self, state: BankState, slot: int) -> SMBGDState:
@@ -401,6 +428,7 @@ class SeparatorBank:
         the statistic describes steps taken *in this slot*."""
         conv = self._conv_or_default(state).at[slot].set(jnp.inf)
         health = self._health_or_default(state).at[slot].set(0)
+        moments = self._moments_or_default(state).at[slot].set(0.0)
         if self._is_padded(state):
             lay = self.layout
             B_slot = (
@@ -419,6 +447,7 @@ class SeparatorBank:
                 step=state.step.at[slot].set(sub.step),
                 conv=conv,
                 health=health,
+                moments=moments,
             )
         return BankState(
             B=state.B.at[slot].set(sub.B.astype(state.B.dtype)),
@@ -426,6 +455,7 @@ class SeparatorBank:
             step=state.step.at[slot].set(sub.step),
             conv=conv,
             health=health,
+            moments=moments,
         )
 
     def _is_padded(self, state: BankState) -> bool:
@@ -449,6 +479,14 @@ class SeparatorBank:
         return jnp.zeros((state.B.shape[0],), jnp.int32)
 
     @staticmethod
+    def _moments_or_default(state: BankState) -> jnp.ndarray:
+        """``state.moments``, or all-zero [Σy², Σy⁴] rows for states built by
+        legacy callers that predate the moment telemetry."""
+        if state.moments is not None:
+            return state.moments
+        return jnp.zeros((state.B.shape[0], 2), jnp.float32)
+
+    @staticmethod
     def stack_states(states, dtype=None) -> BankState:
         """Stack S single-stream ``SMBGDState``s into a (logical) ``BankState``
         — feed through ``pad_state`` to enter a fused bank.  Single-stream
@@ -466,6 +504,7 @@ class SeparatorBank:
             step=jnp.stack([jnp.asarray(s.step) for s in states]),
             conv=jnp.full((len(states),), jnp.inf, jnp.float32),
             health=jnp.zeros((len(states),), jnp.int32),
+            moments=jnp.zeros((len(states), 2), jnp.float32),
         )
 
     def unstack_states(self, state: BankState) -> list:
@@ -503,6 +542,7 @@ class SeparatorBank:
                 mask, self._conv_or_default(state), self._conv_or_default(shadow)
             ),
             health=jnp.zeros((state.B.shape[0],), jnp.int32),
+            moments=jnp.zeros((state.B.shape[0], 2), jnp.float32),
         )
 
     def restore_slot(
@@ -518,6 +558,7 @@ class SeparatorBank:
             .at[slot]
             .set(self._conv_or_default(shadow)[slot]),
             health=self._health_or_default(state).at[slot].set(0),
+            moments=self._moments_or_default(state).at[slot].set(0.0),
         )
 
     def copy_slot(self, dst: BankState, src: BankState, slot) -> BankState:
@@ -533,6 +574,7 @@ class SeparatorBank:
             .at[slot]
             .set(self._conv_or_default(src)[slot]),
             health=self._health_or_default(dst).at[slot].set(0),
+            moments=self._moments_or_default(dst).at[slot].set(0.0),
         )
 
     def corrupt_slot(
@@ -586,11 +628,17 @@ class SeparatorBank:
             return self._step_fused(state, X, active, hyperparams)
         new_state, Y = self._step_all(state, X, hyperparams)
         S = state.B.shape[0]
-        if active is None and not self.health_checks:
-            return new_state._replace(health=jnp.zeros((S,), jnp.int32)), Y
         act = (
             jnp.ones((S,), jnp.int32) if active is None else jnp.asarray(active)
         ) != 0
+        moments = self._vmap_moments(Y, act)
+        if active is None and not self.health_checks:
+            return (
+                new_state._replace(
+                    health=jnp.zeros((S,), jnp.int32), moments=moments
+                ),
+                Y,
+            )
         health = (
             self._vmap_health(new_state, Y, self.resolved_blowup)
             if self.health_checks
@@ -606,6 +654,7 @@ class SeparatorBank:
             step=jnp.where(commit, new_state.step, state.step),
             conv=jnp.where(commit, new_state.conv, self._conv_or_default(state)),
             health=jnp.where(act, health, 0),
+            moments=moments,
         )
         return new_state, Y
 
@@ -625,6 +674,19 @@ class SeparatorBank:
             + jnp.where(fin_y, 0, 4)
             + jnp.where(blow, 8, 0)
         ).astype(jnp.int32)
+
+    def _vmap_moments(self, Y: jnp.ndarray, act: jnp.ndarray) -> jnp.ndarray:
+        """Per-stream raw [Σy², Σy⁴] on the vmap paths — the same whole-block
+        reduction the megakernel folds tile-by-tile (padding-exact, so the
+        two agree bit-for-bit on identical Y).  Zeros when the bank's
+        ``moments`` flag is off or for masked-out streams."""
+        if not self.moments:
+            return jnp.zeros((Y.shape[0], 2), jnp.float32)
+        y2 = Y.astype(jnp.float32) ** 2
+        mom = jnp.stack(
+            [jnp.sum(y2, axis=(1, 2)), jnp.sum(y2 * y2, axis=(1, 2))], axis=-1
+        )
+        return jnp.where(act[:, None], mom, 0.0)
 
     @staticmethod
     def _donate_default(donate: Optional[bool]) -> bool:
@@ -665,13 +727,15 @@ class SeparatorBank:
         state: BankState,
         X: jnp.ndarray,
         active: Optional[jnp.ndarray] = None,
-    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
         """No-commit probe step: the per-stream convergence statistic a
         ``step`` on ``X (S, P, m)`` WOULD commit — ``‖Ĥ′B‖_F/‖B‖_F`` from the
         virtual ``Ĥ′ = γ̂Ĥ + S`` — without mutating anything.  Returns
-        ``(conv (S,), health (S,) int32)``; streams masked out by ``active``
-        carry ``state.conv`` through (+inf for never-measured states) and
-        report ``health == 0``.  The health word judges the VIRTUAL step
+        ``(conv (S,), health (S,) int32, moments (S, 2) f32)``; streams
+        masked out by ``active`` carry ``state.conv`` through (+inf for
+        never-measured states) and report ``health == 0`` / zero moments
+        (moments are also all-zero when the bank's ``moments`` flag is
+        off).  The health word judges the VIRTUAL step
         (would this data blow the separator up?), so a quarantine probe can
         tell "still diverging" from "safe to resume" without committing.
 
@@ -710,6 +774,7 @@ class SeparatorBank:
                 block_s=self.block_s,
                 prefetch=bool(self.prefetch),
                 health=bool(self.health_checks),
+                moments=bool(self.moments),
                 blowup=self.resolved_blowup,
             )
         new_state, Y = self._step_all(state, X)
@@ -724,12 +789,12 @@ class SeparatorBank:
             else jnp.zeros((state.B.shape[0],), jnp.int32)
         )
         conv = jnp.where(act, new_state.conv, self._conv_or_default(state))
-        return conv, jnp.where(act, health, 0)
+        return conv, jnp.where(act, health, 0), self._vmap_moments(Y, act)
 
     def make_probe(self):
-        """Jitted ``probe(state, X, active) -> (conv (S,), health (S,))`` (no
-        donation — the probe never consumes its state; the frozen operands
-        stay live)."""
+        """Jitted ``probe(state, X, active) -> (conv (S,), health (S,),
+        moments (S, 2))`` (no donation — the probe never consumes its state;
+        the frozen operands stay live)."""
         return jax.jit(lambda st, X, active: self.probe(st, X, active=active))
 
     def _bank_hyperparams(self) -> BankHyperparams:
@@ -762,21 +827,24 @@ class SeparatorBank:
         gamma_hat = hp.effective_momentum(lay.P)
         if active is None:
             active = jnp.ones((self.n_streams,), dtype=jnp.int32)
-        Y, B_new, H_new, step_new, conv_new, health_new = easi_ops.smbgd_step_bank(
-            X,
-            W,
-            state.B,
-            state.H_hat,
-            state.step,
-            gamma_hat,
-            active,
-            self._conv_or_default(state),
-            nonlinearity=self.easi.nonlinearity,
-            block_p=lay.block_p,
-            block_s=self.block_s,
-            prefetch=bool(self.prefetch),
-            health=bool(self.health_checks),
-            blowup=self.resolved_blowup,
+        Y, B_new, H_new, step_new, conv_new, health_new, mom_new = (
+            easi_ops.smbgd_step_bank(
+                X,
+                W,
+                state.B,
+                state.H_hat,
+                state.step,
+                gamma_hat,
+                active,
+                self._conv_or_default(state),
+                nonlinearity=self.easi.nonlinearity,
+                block_p=lay.block_p,
+                block_s=self.block_s,
+                prefetch=bool(self.prefetch),
+                health=bool(self.health_checks),
+                moments=bool(self.moments),
+                blowup=self.resolved_blowup,
+            )
         )
         return (
             BankState(
@@ -785,6 +853,7 @@ class SeparatorBank:
                 step=step_new,
                 conv=conv_new,
                 health=health_new,
+                moments=mom_new,
             ),
             Y,
         )
@@ -941,6 +1010,7 @@ class SeparatorBank:
         state = state._replace(
             conv=self._conv_or_default(state),
             health=self._health_or_default(state),
+            moments=self._moments_or_default(state),
         )
 
         def body(st, xb):

@@ -47,6 +47,7 @@ def bank_sharding(mesh, axis: str = "stream") -> BankState:
         step=NamedSharding(mesh, P(axis)),
         conv=NamedSharding(mesh, P(axis)),
         health=NamedSharding(mesh, P(axis)),
+        moments=NamedSharding(mesh, P(axis)),
     )
 
 
@@ -95,14 +96,14 @@ def make_sharded_bank_step(
         if hetero:
             lb = dataclasses.replace(lb, hyperparams=BankHyperparams(*hp))
         st, Y = lb.step(BankState(B, H_hat, step, conv), X, active=active)
-        return st.B, st.H_hat, st.step, st.conv, st.health, Y
+        return st.B, st.H_hat, st.step, st.conv, st.health, st.moments, Y
 
     hp_spec = (P(axis),) * 3 if hetero else ()
     sharded = shard_map(
         local_step,
         mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis), hp_spec),
-        out_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis)),
+        out_specs=(P(axis),) * 7,
         check_rep=False,
     )
 
@@ -115,9 +116,9 @@ def make_sharded_bank_step(
         conv = state.conv
         if conv is None:  # legacy states: normalize before entering shard_map
             conv = jnp.full((bank.n_streams,), jnp.inf, jnp.float32)
-        B, H_hat, stp, conv, health, Y = sharded(
+        B, H_hat, stp, conv, health, moments, Y = sharded(
             state.B, state.H_hat, state.step, conv, X, active, hp
         )
-        return BankState(B, H_hat, stp, conv, health), Y
+        return BankState(B, H_hat, stp, conv, health, moments), Y
 
     return jax.jit(step, donate_argnums=(0,) if donate else ())

@@ -337,7 +337,10 @@ class TestDriftLifecycleRoundtrip:
         assert svc2.scheduler.meta_of("waiting").priority == 1.0
         # watchdog state: boost countdown + μ row resumed exactly
         assert svc2._boost_left == boost_left_at_save
-        np.testing.assert_array_equal(svc2._mu_scale, svc._mu_scale)
+        np.testing.assert_array_equal(
+            svc2._effective_mu_scale(), svc._effective_mu_scale()
+        )
+        np.testing.assert_array_equal(svc2._boost_scale, svc._boost_scale)
         # source re-binds and seeks to the recorded cursor
         src2 = self._source()
         svc2.bind_source("u", src2)
@@ -352,7 +355,9 @@ class TestDriftLifecycleRoundtrip:
                 )
         assert svc.status("u") == svc2.status("u") == "converged"
         assert svc2._boost_left == svc._boost_left == {}
-        np.testing.assert_array_equal(svc2._mu_scale, svc._mu_scale)
+        np.testing.assert_array_equal(
+            svc2._effective_mu_scale(), svc._effective_mu_scale()
+        )
 
     def test_hot_monitor_roundtrips(self, tmp_path):
         svc = self._svc()
@@ -409,7 +414,10 @@ class TestDriftLifecycleRoundtrip:
         with pytest.raises(ValueError, match="drift"):
             plain.restore(ckpt, lifecycle=snap)
         # dropping the watch state restores fine (arrays are still valid)
-        snap2 = dict(snap, hot={}, boost={}, mu_scale=None)
+        snap2 = dict(
+            snap, hot={}, boost={}, mu_scale=None, mu_boost_scale=None,
+            mu_cut_scale=None, mu_ctrl_scale=None, mu_cut_on=None,
+        )
         plain.restore(ckpt, lifecycle=snap2)
         assert plain.sessions == svc.sessions
 

@@ -138,14 +138,14 @@ class TestBoostLifecycle:
             if events and fired_at is None:
                 fired_at = t
                 slot = svc.sessions["u"]
-                assert svc._mu_scale[slot] == DRIFT_POLICY.boost  # μ boosted
+                assert svc._boost_scale[slot] == DRIFT_POLICY.boost  # μ boosted
                 assert svc.status("u") == "active"  # re-earning convergence
         assert fired_at is not None and fired_at < JUMP_TICK + 40
         (sid, ev), = events[:1]
         assert sid == "u" and ev.action == "boost" and ev.stat > DRIFT_POLICY.retrigger
         # boost expired and the session re-converged on the NEW mixing
         assert svc.status("u") == "converged"
-        assert svc._mu_scale[svc.sessions["u"]] == 1.0
+        assert svc._boost_scale[svc.sessions["u"]] == 1.0
         assert _amari(svc, "u", src) < AMARI_CONVERGED
         assert svc.metrics["n_drift_events"] == len(events) == 1
 
@@ -189,7 +189,7 @@ class TestBoostLifecycle:
             svc_b.run_tick()
         # force a boost on A only (white-box: what _fire_boost applies)
         slot = svc_a.sessions["u"]
-        svc_a._mu_scale[slot] = 4.0
+        svc_a._boost_scale[slot] = 4.0
         svc_a._boost_left["u"] = 5
         svc_a.run_tick()
         svc_b.run_tick()
@@ -217,7 +217,7 @@ class TestWatchdogEdgeCases:
             svc.run_tick()
         slot = svc.sessions["u"]
         # white-box: engage a mild boost that cannot expire by countdown
-        svc._mu_scale[slot] = 1.2
+        svc._boost_scale[slot] = 1.2
         svc._boost_left["u"] = 10_000
         svc._monitors["u"] = type(svc._monitors["u"])()
         for _ in range(120):
@@ -226,7 +226,7 @@ class TestWatchdogEdgeCases:
                 break
         assert svc.status("u") == "converged"
         assert "u" not in svc._boost_left
-        assert svc._mu_scale[slot] == 1.0
+        assert svc._boost_scale[slot] == 1.0
         assert svc.lifecycle["boost"] == {}
 
     def test_gated_admission_does_not_preempt_hot(self):

@@ -122,8 +122,8 @@ class TestBf16VsF32Oracle:
         )
         st = f32.init(key)
         st, _ = f32.step(st, X)  # step once so the probe sees a real state
-        conv_f, health_f = f32.probe(st, X)
-        conv_b, health_b = bf16.probe(bf16.pad_state(f32.unpad_state(st)), X)
+        conv_f, health_f, _mom_f = f32.probe(st, X)
+        conv_b, health_b, _mom_b = bf16.probe(bf16.pad_state(f32.unpad_state(st)), X)
         assert float(jnp.abs(conv_f - conv_b).max()) <= BF16_CONV_TOL
         # a healthy state probes healthy at either storage dtype
         assert not health_f.any() and not health_b.any()
@@ -201,8 +201,8 @@ class TestPrefetchBitIdentity:
         st0 = sync.init(key)
         st0, _ = sync.step(st0, X)
         active = jnp.asarray([1, 0, 1, 1], jnp.int32)  # mask crosses blocks
-        conv_s, health_s = sync.probe(st0, X, active=active)
-        conv_p, health_p = pre.probe(st0, X, active=active)
+        conv_s, health_s, _mom_s = sync.probe(st0, X, active=active)
+        conv_p, health_p, _mom_p = pre.probe(st0, X, active=active)
         np.testing.assert_array_equal(np.asarray(conv_s), np.asarray(conv_p))
         np.testing.assert_array_equal(np.asarray(health_s), np.asarray(health_p))
 

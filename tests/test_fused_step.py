@@ -68,10 +68,10 @@ class TestMegakernelVsRefOracle:
         gamma_hat = 0.1 + 0.8 * jax.random.uniform(jax.random.fold_in(key, 4), (S,))
         active = (jnp.arange(S) % 3 != 2).astype(jnp.int32)  # freeze every 3rd
         conv0 = jnp.arange(1.0, S + 1.0)  # distinct: frozen carry is visible
-        Y, B2, H2, s2, c2, h2 = easi_ops.smbgd_step_bank(
+        Y, B2, H2, s2, c2, h2, _mom = easi_ops.smbgd_step_bank(
             X, W, B, H, step, gamma_hat, active, conv0, block_p=lay.block_p
         )
-        Yr, Br, Hr, sr, cr, hr = smbgd_step_bank_ref(
+        Yr, Br, Hr, sr, cr, hr, _momr = smbgd_step_bank_ref(
             X, W, B, H, step, gamma_hat, active, conv0
         )
         np.testing.assert_array_equal(np.asarray(h2), np.asarray(hr))
@@ -185,7 +185,7 @@ class TestMegakernelPropertySweep:
         out_r = smbgd_step_bank_ref(
             X, W, B, H, step, gamma_hat, active, conv0, nonlinearity=nonlinearity
         )
-        names = ("Y", "B", "H_hat", "step", "conv", "health")
+        names = ("Y", "B", "H_hat", "step", "conv", "health", "moments")
         for name, a, b in zip(names, out_k, out_r):
             if name in ("step", "health"):
                 np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
@@ -241,7 +241,7 @@ class TestMegakernelPropertySweep:
             assert convs[name].shape == (S,)
         # ref oracle on the logical shapes with the same per-stream weights
         ehp = hp if hp is not None else BankHyperparams.broadcast(ocfg, S)
-        _, _, _, _, conv_ref, _ = smbgd_step_bank_ref(
+        _, _, _, _, conv_ref, _, _ = smbgd_step_bank_ref(
             X,
             ehp.within_batch_weights(P),
             st0.B,

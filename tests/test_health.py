@@ -133,7 +133,7 @@ class TestHealthWord:
         bank = _bank(fused)
         state = bank.init(jax.random.PRNGKey(0))
         X = _poisoned_batch(bank, jax.random.PRNGKey(1))
-        _conv, health = bank.probe(state, X)
+        _conv, health, _mom = bank.probe(state, X)
         stepped, _ = bank.step(state, X)
         np.testing.assert_array_equal(
             np.asarray(health), np.asarray(stepped.health)

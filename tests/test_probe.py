@@ -51,7 +51,10 @@ def _park(svc, sid, state, source, order=0):
     )
 
 
-def _mk_svc(m, n, fused, probe_batch, retrigger, S=3, seed=0, probe_every=2):
+def _mk_svc(
+    m, n, fused, probe_batch, retrigger, S=3, seed=0, probe_every=2,
+    probe_phases=1,
+):
     ecfg = EASIConfig(n_components=n, n_features=m, mu=2e-3)
     ocfg = SMBGDConfig(batch_size=P, mu=2e-3, beta=0.9, gamma=0.5)
     return SeparationService(
@@ -66,6 +69,7 @@ def _mk_svc(m, n, fused, probe_batch, retrigger, S=3, seed=0, probe_every=2):
             cooldown=1,
             probe_every=probe_every,
             probe_batch=probe_batch,
+            probe_phases=probe_phases,
         ),
         max_queue=2,
     )
@@ -97,7 +101,7 @@ class TestBankProbeMode:
         state = bank.init(jax.random.PRNGKey(0))
         X = jax.random.normal(jax.random.PRNGKey(1), (4, P, 4))
         stepped, _ = bank.step(state, X)
-        conv, health = bank.probe(state, X)
+        conv, health, _mom = bank.probe(state, X)
         np.testing.assert_allclose(
             np.asarray(conv), np.asarray(stepped.conv), rtol=1e-5, atol=1e-6
         )
@@ -111,7 +115,7 @@ class TestBankProbeMode:
         state = bank.init(jax.random.PRNGKey(0))
         before = jax.tree.map(np.asarray, state._asdict())
         X = jax.random.normal(jax.random.PRNGKey(1), (4, P, 4))
-        conv, _health = bank.probe(
+        conv, _health, _mom = bank.probe(
             state, X, active=jnp.asarray([1, 0, 1, 0], jnp.int32)
         )
         conv = np.asarray(conv)
@@ -188,10 +192,16 @@ class TestProbeEngine:
         assert svc.metrics["n_probes"] == 2  # drained session never probed
 
 
-def _run_pair(k, m, n, fused, fire, probe_batch, ticks=6):
+def _run_pair(k, m, n, fused, fire, probe_batch, ticks=6, probe_phases=1):
     retrigger = 1e-9 if fire else 1e9
-    seq = _mk_svc(m, n, fused, probe_batch=0, retrigger=retrigger)
-    bat = _mk_svc(m, n, fused, probe_batch=probe_batch, retrigger=retrigger)
+    seq = _mk_svc(
+        m, n, fused, probe_batch=0, retrigger=retrigger,
+        probe_phases=probe_phases,
+    )
+    bat = _mk_svc(
+        m, n, fused, probe_batch=probe_batch, retrigger=retrigger,
+        probe_phases=probe_phases,
+    )
     for svc in (seq, bat):
         _populate(svc, k, data_seed=k * 13 + m + 3 * n)
     for _ in range(ticks):
@@ -278,3 +288,124 @@ class TestDifferentialProbe:
         assert seq.sessions == bat.sessions
         for sid in [f"p{i}" for i in range(k)] + ["live"]:
             assert seq.status(sid) == bat.status(sid)
+
+
+class TestStaggeredProbe:
+    """``DriftPolicy.probe_phases``: hash-staggered parked probing.  Each
+    parked session keeps a fixed ``probe_every * probe_phases`` probe period;
+    only which run_tick serves it changes."""
+
+    def test_phase_hash_stable_partition(self):
+        """The bucket hash is deterministic, in range, and identical across
+        services (it must survive checkpoint/restore and process restarts —
+        that is why it is crc32, not the salted builtin ``hash``)."""
+        sids = [f"p{i}" for i in range(20)] + [("tuple", 3), 42]
+        for phases in (1, 2, 3, 5):
+            buckets = [SeparationService._probe_phase(s, phases) for s in sids]
+            assert all(0 <= b < phases for b in buckets)
+            assert buckets == [
+                SeparationService._probe_phase(s, phases) for s in sids
+            ]
+        # a real spread: 20 sids over 3 buckets should not all collide
+        assert len({SeparationService._probe_phase(s, 3) for s in sids}) > 1
+
+    def test_phases_one_matches_default_policy(self):
+        """``probe_phases=1`` is bit-for-bit today's everyone-at-once sweep
+        (the field defaults to 1, so legacy policies are unchanged)."""
+        explicit = _mk_svc(4, 2, False, probe_batch=0, retrigger=1e9,
+                           probe_phases=1)
+        legacy = SeparationService(
+            SeparatorBank(
+                EASIConfig(n_components=2, n_features=4, mu=2e-3),
+                SMBGDConfig(batch_size=P, mu=2e-3, beta=0.9, gamma=0.5),
+                n_streams=3,
+            ),
+            seed=0,
+            policy=ConvergencePolicy(threshold=0.025),
+            drift_policy=DriftPolicy(
+                mode="readmit", retrigger=1e9, patience=1, ema=0.6,
+                cooldown=1, probe_every=2, probe_batch=0,
+            ),
+            max_queue=2,
+        )
+        for svc in (explicit, legacy):
+            _populate(svc, 5, data_seed=7)
+        for _ in range(6):
+            explicit.run_tick()
+            legacy.run_tick()
+        assert explicit.metrics["n_probes"] == legacy.metrics["n_probes"]
+        for sid, ps in explicit.parked.items():
+            lp = legacy.parked[sid]
+            assert ps.monitor.seen == lp.monitor.seen
+            np.testing.assert_allclose(ps.monitor.stat, lp.monitor.stat)
+            assert ps.source.position == lp.source.position
+
+    def test_full_cycle_probes_every_session_once(self):
+        """Over one full cycle (probe_every × probe_phases run_ticks) every
+        parked session is probed exactly once — no sid starved, none doubled."""
+        svc = _mk_svc(4, 2, False, probe_batch=0, retrigger=1e9,
+                      probe_every=2, probe_phases=3)
+        k = 9
+        _populate(svc, k, data_seed=11)
+        for cycle in (1, 2):
+            for _ in range(2 * 3):
+                svc.run_tick()
+            for sid, ps in svc.parked.items():
+                assert ps.monitor.seen == cycle, sid
+            assert svc.metrics["n_probes"] == cycle * k
+
+    def test_staggered_equals_slow_sweep_after_full_cycles(self):
+        """A (probe_every=2, probe_phases=3) schedule gives each session the
+        IDENTICAL per-session probe trajectory as a legacy (probe_every=6)
+        sweep — same blocks pulled (the seek skips the whole 6-tick gap),
+        same virtual conv stats, same cursor — only the serving tick differs."""
+        slow = _mk_svc(4, 2, False, probe_batch=0, retrigger=1e9,
+                       probe_every=6, probe_phases=1)
+        stag = _mk_svc(4, 2, False, probe_batch=0, retrigger=1e9,
+                       probe_every=2, probe_phases=3)
+        for svc in (slow, stag):
+            _populate(svc, 7, data_seed=23)
+        for _ in range(12):  # two full cycles of either schedule
+            slow.run_tick()
+            stag.run_tick()
+        assert slow.metrics["n_probes"] == stag.metrics["n_probes"]
+        for sid, ps in slow.parked.items():
+            sp = stag.parked[sid]
+            assert ps.monitor.seen == sp.monitor.seen == 2
+            np.testing.assert_allclose(
+                ps.monitor.stat, sp.monitor.stat, rtol=1e-5, atol=1e-7
+            )
+            assert ps.source.position == sp.source.position
+
+    @pytest.mark.property
+    @given(
+        k=st.integers(1, 10),
+        probe_phases=st.sampled_from([2, 3]),
+        probe_batch=st.sampled_from([2, 4]),
+        fire=st.sampled_from([True, False]),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_batched_matches_sequential_staggered(
+        self, k, probe_phases, probe_batch, fire
+    ):
+        """The batched ≡ sequential differential contract survives
+        staggering: both engines see the same due bucket per probe tick."""
+        seq, bat = _run_pair(
+            k, 4, 2, False, fire, probe_batch, ticks=2 * 3 * 2,
+            probe_phases=probe_phases,
+        )
+        for sid in [f"p{i}" for i in range(k)]:
+            assert seq.status(sid) == bat.status(sid), sid
+        assert seq.sessions == bat.sessions
+        ev_s = [(e.session_id, e.action, e.slot, e.tick) for e in seq.drift_events]
+        ev_b = [(e.session_id, e.action, e.slot, e.tick) for e in bat.drift_events]
+        assert ev_s == ev_b
+        for sid, ps in seq.parked.items():
+            mb = bat.parked[sid].monitor
+            assert ps.monitor.seen == mb.seen
+            np.testing.assert_allclose(
+                ps.monitor.stat, mb.stat, rtol=1e-4, atol=1e-6
+            )
+            if bat.parked[sid].source is not None:
+                assert ps.source.position == bat.parked[sid].source.position
+        assert seq.metrics["n_probes"] == bat.metrics["n_probes"]
