@@ -59,6 +59,12 @@ trajectory is recorded run over run.
         p50/p99/p999 time-to-ready and the deadline miss rate
     PYTHONPATH=src python benchmarks/stream_throughput.py --record-trace  # re-
         generate the checked-in SLO trace (deterministic synthetic load)
+    PYTHONPATH=src python benchmarks/stream_throughput.py --elastic    # elastic
+        burst trace: a width-2 bank under an 8-session burst with the
+        run_tick autoscaler on (prewarmed power-of-two ladder) vs a bank
+        frozen at max width; records steady-tick latency for both, the
+        resize-tick overhead (gated ≤5x steady), and mean utilization
+        (autoscaled gated ≥1.5x the fixed-wide baseline)
 """
 from __future__ import annotations
 
@@ -126,6 +132,14 @@ ADAPT_OVERHEAD_BAR = 1.05
 # checked-in row records ~2.3x on the drill scenario).
 ADAPT_RECONV_BAR = 1.3
 SLO_BUDGET_FACTOR = 5.0
+# --elastic acceptance bars: a resize tick (grow/shrink/compact inside
+# run_tick, prewarmed ladder so no XLA compile rides along) must stay within
+# ELASTIC_RESIZE_FACTOR x the elastic run's own steady tick — self-relative,
+# so machine speed cancels — and the autoscaled bank's mean utilization over
+# the burst trace must beat the fixed-wide baseline's by ELASTIC_UTIL_GAIN x
+# (the capacity the autoscaler refuses to strand).
+ELASTIC_RESIZE_FACTOR = 5.0
+ELASTIC_UTIL_GAIN = 1.5
 SLO_MISS_REGRESSION = 2.0  # smoke: fail when miss rate regresses this much
 SLO_MISS_FLOOR = 0.10  # ...but never below this absolute slack (tiny-N noise)
 
@@ -1025,6 +1039,193 @@ def adapt_gate(row: Dict[str, float], hbm_overhead: float | None = None) -> int:
     return rc
 
 
+def elastic_bench(
+    S_min: int = 2,
+    S_max: int = 8,
+    n_sessions: int = 8,
+    P: int = 32,
+    m: int = 4,
+    n: int = 2,
+    n_blocks: int = 8,
+) -> Dict[str, float]:
+    """Elastic burst trace: the autoscaled bank vs a fixed-wide baseline.
+
+    ``n_sessions`` sessions with staggered finite feeds (every session
+    serves ``n_blocks`` blocks except the last, which serves ``8 *
+    n_blocks`` — a burst that collapses to a single long-tail session)
+    burst into (a) a width-``S_min`` bank driven by an ``AutoscalePolicy`` capped
+    at ``S_max`` with the power-of-two ladder prewarmed, and (b) a bank
+    frozen at ``S_max``.  Both serve the identical trace through
+    ``run_tick``.  Recorded:
+
+      * steady-tick latency for both (ticks with no resize), and the
+        resize-tick latency — the grow/shrink/compact cost the autoscaler
+        bills to the tick that resized (gated self-relative at
+        ``ELASTIC_RESIZE_FACTOR`` x steady),
+      * mean bank utilization (active/width per tick) for both — the
+        stranded-capacity story (gated at ``ELASTIC_UTIL_GAIN`` x),
+      * the resize counters and history length.
+    """
+    from repro.data.sources import SourceExhausted, SyntheticSource
+    from repro.data.pipeline import MixedSignals
+    from repro.serve import AutoscalePolicy
+    from repro.serve.engine import SeparationService
+
+    ecfg = EASIConfig(n_components=n, n_features=m, mu=1e-3)
+    ocfg = SMBGDConfig(batch_size=P, mu=1e-3, beta=0.9, gamma=0.5)
+
+    class FiniteSource:
+        def __init__(self, seed, blocks):
+            self._src = SyntheticSource(
+                MixedSignals(m=m, n=n, batch=P, seed=seed)
+            )
+            self._left = blocks
+
+        def next_block(self, n_samples):
+            if self._left <= 0:
+                raise SourceExhausted("trace drained")
+            self._left -= 1
+            return self._src.next_block(n_samples)
+
+    def drive(svc, widths):
+        svc.prewarm(widths)
+        for k in range(n_sessions):
+            blocks = n_blocks * 8 if k == n_sessions - 1 else n_blocks
+            svc.admit(f"s{k}", source=FiniteSource(k, blocks))
+        steady, resize, utils = [], [], []
+        n_resizes = 0
+        while svc.n_active or svc.n_queued:
+            before = len(svc.lifecycle["resize_history"])
+            t0 = time.perf_counter()
+            svc.run_tick()
+            dt = time.perf_counter() - t0
+            resized = len(svc.lifecycle["resize_history"]) > before
+            (resize if resized else steady).append(dt)
+            n_resizes += resized
+            if svc.n_active:
+                utils.append(svc.n_active / svc.bank.n_streams)
+            if len(steady) + len(resize) > 100 * n_sessions * n_blocks:
+                raise RuntimeError("elastic benchmark failed to drain")
+        m_ = svc.metrics
+        return {
+            "steady_tick_s": sum(steady) / max(len(steady), 1),
+            "resize_tick_s": (
+                sum(resize) / len(resize) if resize else float("nan")
+            ),
+            "utilization": sum(utils) / max(len(utils), 1),
+            "n_resize_ticks": n_resizes,
+            "n_grows": int(m_["n_grows"]),
+            "n_shrinks": int(m_["n_shrinks"]),
+            "n_compactions": int(m_["n_compactions"]),
+        }
+
+    ladder = []
+    w = S_min
+    while w <= S_max:
+        ladder.append(w)
+        w *= 2
+    pol = AutoscalePolicy(
+        max_streams=S_max, min_streams=S_min, cooldown_ticks=2
+    )
+    # untimed warmup drive: absorbs every process-level one-off (the shared
+    # source-generator compile, host-transfer layouts, ...) so the measured
+    # runs see steady-state costs — the resize gate judges the RESIZE path,
+    # not whatever global compile happens to land on an early tick
+    drive(
+        SeparationService(
+            SeparatorBank(ecfg, ocfg, n_streams=S_min),
+            seed=0,
+            autoscale=pol,
+            max_queue=n_sessions,
+        ),
+        ladder,
+    )
+    el = drive(
+        SeparationService(
+            SeparatorBank(ecfg, ocfg, n_streams=S_min),
+            seed=0,
+            autoscale=pol,
+            max_queue=n_sessions,
+        ),
+        ladder,
+    )
+    fx = drive(
+        SeparationService(
+            SeparatorBank(ecfg, ocfg, n_streams=S_max),
+            seed=0,
+            max_queue=n_sessions,
+        ),
+        [S_max],
+    )
+    row = {
+        "elastic": True,
+        "S_min": S_min, "S_max": S_max, "P": P, "m": m, "n": n,
+        "n_sessions": n_sessions, "n_blocks": n_blocks,
+        "elastic_steady_tick_s": el["steady_tick_s"],
+        "resize_tick_s": el["resize_tick_s"],
+        "fixed_tick_s": fx["steady_tick_s"],
+        # self-relative: resize cost in units of this machine's steady tick
+        "resize_tick_ratio": el["resize_tick_s"] / el["steady_tick_s"],
+        "n_resize_ticks": el["n_resize_ticks"],
+        "n_grows": el["n_grows"],
+        "n_shrinks": el["n_shrinks"],
+        "n_compactions": el["n_compactions"],
+        "elastic_utilization": el["utilization"],
+        "fixed_utilization": fx["utilization"],
+        "utilization_gain": el["utilization"] / fx["utilization"],
+        "resize_factor_bar": ELASTIC_RESIZE_FACTOR,
+        "util_gain_bar": ELASTIC_UTIL_GAIN,
+    }
+    print(
+        f"elastic,S={S_min}->{S_max},sessions={n_sessions}: steady "
+        f"{row['elastic_steady_tick_s']*1e3:.2f}ms/tick (fixed-wide "
+        f"{row['fixed_tick_s']*1e3:.2f}ms), resize tick "
+        f"{row['resize_tick_s']*1e3:.2f}ms ({row['resize_tick_ratio']:.2f}x "
+        f"steady over {row['n_resize_ticks']} resizes: {row['n_grows']}g/"
+        f"{row['n_shrinks']}s/{row['n_compactions']}c), utilization "
+        f"{row['elastic_utilization']:.2f} vs fixed "
+        f"{row['fixed_utilization']:.2f} "
+        f"({row['utilization_gain']:.2f}x)"
+    )
+    return row
+
+
+def elastic_gate(row: Dict[str, float]) -> int:
+    """CI gate over the ``--elastic`` row: the resize tick must stay within
+    ``ELASTIC_RESIZE_FACTOR`` x the elastic run's own steady tick (both
+    measured on the same machine, so the ratio travels), and the autoscaled
+    utilization must beat the fixed-wide baseline's by
+    ``ELASTIC_UTIL_GAIN`` x."""
+    failed = 0
+    ratio = row.get("resize_tick_ratio")
+    if ratio is None or ratio != ratio:  # missing or NaN (no resize fired)
+        print("elastic: FAIL — row carries no resize_tick_ratio; the trace "
+              "never resized (autoscaler mis-wired?)")
+        failed = 1
+    elif ratio > ELASTIC_RESIZE_FACTOR:
+        print(
+            f"elastic: FAIL — resize tick {ratio:.2f}x steady "
+            f"(> {ELASTIC_RESIZE_FACTOR}x): a resize should be a prefix "
+            f"copy + cached-program swap, not a recompile"
+        )
+        failed = 1
+    else:
+        print(f"elastic: resize tick {ratio:.2f}x steady ≤ "
+              f"{ELASTIC_RESIZE_FACTOR}x ok")
+    gain = row.get("utilization_gain", 0.0)
+    if gain < ELASTIC_UTIL_GAIN:
+        print(
+            f"elastic: FAIL — utilization gain {gain:.2f}x < "
+            f"{ELASTIC_UTIL_GAIN}x over the fixed-wide baseline: the "
+            f"autoscaler is stranding capacity"
+        )
+        failed = 1
+    else:
+        print(f"elastic: utilization gain {gain:.2f}x ≥ "
+              f"{ELASTIC_UTIL_GAIN}x ok")
+    return failed
+
+
 def record_trace(
     path: Path = DEFAULT_TRACE,
     n_sessions: int = 4,
@@ -1324,6 +1525,19 @@ def smoke_check(baseline_path: Path) -> int:
         ) / lay.tick_hbm_bytes_per_stream
         if adapt_gate(adapt_base, hbm_overhead=hbm_now):
             failed = True
+    # elastic gate: the --elastic row must exist, its (self-relative,
+    # machine-independent) resize-tick ratio must hold the 5x bar, and the
+    # recorded utilization gain over the fixed-wide baseline must hold 1.5x
+    elastic_base = next((r for r in baseline_rows if r.get("elastic")), None)
+    if elastic_base is None:
+        print(
+            "smoke: FAIL — no --elastic row in the artifact; regenerate "
+            "with `python benchmarks/stream_throughput.py --quick ... "
+            "--elastic`"
+        )
+        failed = True
+    elif elastic_gate(elastic_base):
+        failed = True
     return 1 if failed else 0
 
 
@@ -1411,6 +1625,7 @@ def run(
     health: bool = False,
     slo: bool = False,
     adapt: bool = False,
+    elastic: bool = False,
 ) -> List[Dict[str, float]]:
     """Sweep S; write the JSON artifact when ``out`` is given."""
     sweep = (1, 8, 64) if quick else (1, 8, 64, 512)
@@ -1442,6 +1657,10 @@ def run(
     if adapt:
         row = adapt_bench(n_ticks=650)
         adapt_gate(row)  # report against the bars; artifact records the row
+        rows.append(row)
+    if elastic:
+        row = elastic_bench(n_blocks=5 if quick else 8)
+        elastic_gate(row)  # report against the bars; artifact records the row
         rows.append(row)
     if out:
         Path(out).write_text(json.dumps(rows, indent=2) + "\n")
@@ -1483,6 +1702,13 @@ def main() -> None:
                          f"{ADAPT_OVERHEAD_BAR}x HBM bar or below the "
                          f"{ADAPT_RECONV_BAR}x re-convergence win "
                          "(no write when standalone)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="elastic burst trace: autoscaled bank vs fixed-wide "
+                         "baseline — steady/resize tick latency + mean "
+                         f"utilization; exits 1 past the "
+                         f"{ELASTIC_RESIZE_FACTOR}x resize-tick bar or "
+                         f"below the {ELASTIC_UTIL_GAIN}x utilization gain "
+                         "(no write when standalone)")
     ap.add_argument("--record-trace", action="store_true",
                     help="regenerate the checked-in SLO trace "
                          "(benchmarks/traces/slo_small.npz) and exit")
@@ -1498,7 +1724,7 @@ def main() -> None:
     if args.smoke:
         sys.exit(smoke_check(Path(args.out)))
     if (args.churn or args.drift or args.probe or args.health or args.slo
-            or args.adapt) and not (args.quick or args.autotune):
+            or args.adapt or args.elastic) and not (args.quick or args.autotune):
         # standalone scenario run: print only, leave the sweep artifact alone
         rc = 0
         if args.churn:
@@ -1513,10 +1739,13 @@ def main() -> None:
             slo_bench()
         if args.adapt:
             rc = adapt_gate(adapt_bench()) or rc
+        if args.elastic:
+            rc = elastic_gate(elastic_bench()) or rc
         sys.exit(rc)
     run(quick=args.quick, out=args.out, autotune=args.autotune,
         churn=args.churn, drift=args.drift, probe=args.probe,
-        health=args.health, slo=args.slo, adapt=args.adapt)
+        health=args.health, slo=args.slo, adapt=args.adapt,
+        elastic=args.elastic)
 
 
 if __name__ == "__main__":

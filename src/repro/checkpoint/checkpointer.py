@@ -125,6 +125,28 @@ class Checkpointer:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def leaf_shapes(self, step: Optional[int] = None) -> dict:
+        """Leaf name → shape (tuple) from the step's manifest, WITHOUT
+        loading any array data.  This is the elastic-restore peek: a service
+        whose bank width changed since save reads the checkpoint's true
+        leading dimension here and sizes its restore target to match,
+        instead of failing the per-leaf shape check in ``restore``."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        path = self.dir / f"step_{step:012d}" / "manifest.json"
+        if not path.exists():
+            raise FileNotFoundError(
+                f"checkpoint step {step} not found in {self.dir} "
+                f"(available steps: {self.all_steps() or 'none'})"
+            )
+        manifest = json.loads(path.read_text())
+        return {
+            entry["name"]: tuple(entry["shape"])
+            for entry in manifest.get("leaves", [])
+        }
+
     def restore(
         self,
         target: PyTree,

@@ -41,6 +41,7 @@ Trace capture + replay (the SLO harness's load-test substrate — see
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 from typing import Dict, Hashable, List, Optional, Protocol, Sequence, Union, runtime_checkable
 
@@ -72,6 +73,18 @@ def true_mixing_of(source) -> Optional[np.ndarray]:
     the service-side accessor that makes the method genuinely optional."""
     fn = getattr(source, "true_mixing", None)
     return None if fn is None else fn()
+
+
+@functools.partial(jax.jit, static_argnums=0)  # frozen dataclass → hashable
+def _source_batch_jit(pipe: MixedSignals, seed, A, phase, step) -> jnp.ndarray:
+    """Module-level jit of the per-source block generator, keyed on the
+    (frozen, hashable) stationary pipe: every ``SyntheticSource`` over the
+    same pipe shape shares ONE compiled program.  A per-instance
+    ``jax.jit(lambda ...)`` would give each source its own cache — and a
+    full trace+compile on its first block, which on the serving path lands
+    on whatever ``run_tick`` first pulls from a freshly activated session
+    (ruinous right after an elastic grow backfills several at once)."""
+    return pipe._stream_batch(seed, A, phase, step)
 
 
 def _givens(m: int, theta) -> jnp.ndarray:
@@ -123,11 +136,11 @@ class SyntheticSource:
         self._A0 = pipe._base_mixing(self._seed)
         self._step = 0
         # one trace for every block: (seed, A_eff, phase, step) are traced,
-        # the stationary-pipe shape knobs come from the frozen dataclass
+        # the stationary-pipe shape knobs come from the frozen dataclass —
+        # shared across instances via the module-level jit (see
+        # ``_source_batch_jit``)
         pipe0 = dataclasses.replace(pipe, drift_rate=0.0, streams=0)
-        self._gen = jax.jit(
-            lambda sd, a, ph, st: pipe0._stream_batch(sd, a, ph, st)
-        )
+        self._gen = functools.partial(_source_batch_jit, pipe0)
 
     @property
     def n_channels(self) -> int:

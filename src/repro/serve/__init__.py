@@ -21,6 +21,10 @@ mandate, grown into an end-to-end adaptive service):
     controller multiply.
   * ``AdmissionScheduler`` (FIFO) / ``PriorityScheduler`` /
     ``DeadlineScheduler`` + ``SessionMeta`` — who waits, who activates.
+  * ``AutoscalePolicy`` / ``ResizeDecision`` — telemetry-driven elastic
+    capacity: the service grows/shrinks/compacts its bank from queue depth
+    and deadline-miss pressure (hysteresis bands + cooldown; see
+    ``serve.elastic`` and ``SeparationService.grow``/``shrink``/``compact``).
   * ``SLOPolicy`` / ``DeadlineMonitor`` / ``SLOEvent`` / ``LatencySketch`` /
     ``TickTimer`` + ``slo.replay`` — real-time budgets over TIME-TO-READY
     tick latency (p50/p99/p999, deadline misses, shed/gate load control) and
@@ -35,6 +39,7 @@ and drive the whole pipeline with ``run_tick()``.  Flaky feeds wrap in
 ``data.resilience.FaultInjector`` is the chaos-test harness.
 """
 from repro.serve.drift import DriftEvent, DriftMonitor, DriftPolicy
+from repro.serve.elastic import AutoscalePolicy, ResizeDecision
 from repro.serve.engine import (
     ConvergenceMonitor,
     ConvergencePolicy,
@@ -66,6 +71,7 @@ from repro.serve.slo import (
 
 __all__ = [
     "AdmissionScheduler",
+    "AutoscalePolicy",
     "ConvergenceMonitor",
     "ConvergencePolicy",
     "DeadlineMonitor",
@@ -84,6 +90,7 @@ __all__ = [
     "ParkedSession",
     "PriorityScheduler",
     "QuarantinedSession",
+    "ResizeDecision",
     "SLOEvent",
     "SLOPolicy",
     "SchedulerContext",

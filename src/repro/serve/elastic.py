@@ -1,0 +1,162 @@
+"""Telemetry-driven autoscaling for elastic separator banks.
+
+The bank's width S is capacity: slots cost persistent HBM
+(``bank.layout.persistent_bytes_per_session``) whether occupied or not, and
+a full bank turns every admission into queue wait.  PR 10 makes the serving
+bank elastic (``SeparationService.grow`` / ``shrink`` / ``compact`` over
+``SeparatorBank.with_streams`` / ``resize_state`` / ``move_slot``); this
+module supplies the CONTROLLER — a pure, stateless policy that turns the
+service's live telemetry into resize decisions the ``run_tick`` loop applies:
+
+  * GROW when demand is visible: sessions waiting in the admission queue
+    (``grow_queue_depth``) or the PR-8 windowed deadline-miss rate over
+    ``grow_miss_rate`` — both mean the current width is costing latency.
+    Targets double (``factor``) up to ``max_streams``, so bursts are served
+    in O(log burst) resizes and widths stay on one ladder (min·factorᵏ) the
+    service can pre-compile step functions for.
+  * SHRINK when the bank is provably idle: the queue is EMPTY, miss pressure
+    is off, and utilization (active/width) sits under ``shrink_utilization``.
+    The target is the smallest ladder width whose post-shrink utilization is
+    at most ``hold_utilization`` — sized with headroom, not packed tight.
+  * NEVER FLAP: the two bands are separated by construction (validated:
+    ``shrink_utilization ≤ hold_utilization / factor``, so a just-shrunk bank
+    sits strictly ABOVE the shrink band), growth triggers only on
+    queue/deadline pressure (which a grow immediately relieves — low
+    post-grow utilization alone never triggers a shrink while the queue
+    refills), and ``cooldown_ticks`` of ``run_tick`` quiet time must pass
+    after any resize before the next decision.
+
+The policy is deliberately memoryless — everything it needs (width, active
+count, queue depth, miss rate, ticks since the last resize) is passed in per
+decision, so it snapshots trivially and a restored service resumes identical
+behavior.  Shrinks compact first (``SeparationService.shrink``): live slots
+migrate to the low end via ``SeparatorBank.move_slot``, which carries every
+state leaf verbatim — a resized co-tenant's trajectory stays bit-identical
+to a fixed-width run on both the vmap and megakernel paths (pinned by
+tests/test_elastic.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ResizeDecision:
+    """One autoscaler verdict: ``action`` ("grow"/"shrink"), the ``target``
+    width, and a human-readable ``reason`` (lands in the service's resize
+    history for observability)."""
+
+    action: str
+    target: int
+    reason: str
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoscalePolicy:
+    """Hysteresis-banded resize controller (see module docstring).
+
+    ``max_streams`` caps growth (the provisioned ceiling); ``min_streams``
+    floors shrink (never below — and implicitly never below the live session
+    count).  ``grow_queue_depth`` sessions waiting, or a windowed deadline-
+    miss rate above ``grow_miss_rate`` (``None`` disables the latency
+    trigger), grows by ``factor``; a queue-empty, pressure-free bank whose
+    utilization drops under ``shrink_utilization`` shrinks to the smallest
+    ladder width holding utilization at or under ``hold_utilization``.
+    ``cooldown_ticks`` run_tick calls must pass after any resize before the
+    next decision fires."""
+
+    max_streams: int
+    min_streams: int = 1
+    grow_queue_depth: int = 1
+    grow_miss_rate: Optional[float] = None
+    shrink_utilization: float = 0.25
+    hold_utilization: float = 0.5
+    cooldown_ticks: int = 8
+    factor: int = 2
+    compact_before_shrink: bool = True
+
+    def __post_init__(self) -> None:
+        if self.min_streams < 1:
+            raise ValueError("min_streams must be >= 1")
+        if self.max_streams < self.min_streams:
+            raise ValueError(
+                f"max_streams ({self.max_streams}) must be >= "
+                f"min_streams ({self.min_streams})"
+            )
+        if self.factor < 2:
+            raise ValueError("factor must be >= 2")
+        if self.grow_queue_depth < 1:
+            raise ValueError("grow_queue_depth must be >= 1")
+        if self.grow_miss_rate is not None and not (
+            0.0 < self.grow_miss_rate <= 1.0
+        ):
+            raise ValueError("grow_miss_rate must be in (0, 1]")
+        if not (0.0 < self.hold_utilization <= 1.0):
+            raise ValueError("hold_utilization must be in (0, 1]")
+        if not (0.0 <= self.shrink_utilization < 1.0):
+            raise ValueError("shrink_utilization must be in [0, 1)")
+        # the anti-flap band: the smallest holding width leaves utilization
+        # strictly above hold/factor, which must clear the shrink trigger
+        if self.shrink_utilization > self.hold_utilization / self.factor:
+            raise ValueError(
+                f"shrink_utilization ({self.shrink_utilization}) must be <= "
+                f"hold_utilization / factor "
+                f"({self.hold_utilization / self.factor}) or the bank flaps"
+            )
+        if self.cooldown_ticks < 0:
+            raise ValueError("cooldown_ticks must be >= 0")
+
+    def _ladder_up(self, width: int) -> int:
+        """Smallest ladder width (min_streams · factorᵏ) >= ``width``."""
+        w = self.min_streams
+        while w < width:
+            w *= self.factor
+        return w
+
+    def decide(
+        self,
+        n_streams: int,
+        n_active: int,
+        queue_depth: int,
+        deadline_miss_rate: float = 0.0,
+        ticks_since_resize: Optional[int] = None,
+    ) -> Optional[ResizeDecision]:
+        """The controller: current width + live telemetry in, at most one
+        ``ResizeDecision`` out (``None`` = hold).  ``ticks_since_resize`` is
+        ``None`` when the service has never resized (cooldown waived)."""
+        if (
+            ticks_since_resize is not None
+            and ticks_since_resize < self.cooldown_ticks
+        ):
+            return None
+        queued = queue_depth >= self.grow_queue_depth
+        missing = (
+            self.grow_miss_rate is not None
+            and deadline_miss_rate > self.grow_miss_rate
+        )
+        if (queued or missing) and n_streams < self.max_streams:
+            target = min(self.max_streams, n_streams * self.factor)
+            reason = (
+                f"queue_depth={queue_depth}"
+                if queued
+                else f"deadline_miss_rate={deadline_miss_rate:.3f}"
+            )
+            return ResizeDecision("grow", target, reason)
+        if queued or missing or queue_depth > 0:
+            return None  # demand present — never shrink into it
+        if n_streams <= self.min_streams:
+            return None
+        if n_active / n_streams >= self.shrink_utilization:
+            return None
+        # smallest ladder width that holds utilization <= hold_utilization
+        # (ceil division; n_active == 0 shrinks all the way to the floor)
+        needed = -(-n_active // max(self.hold_utilization, 1e-9))
+        target = self._ladder_up(max(self.min_streams, int(needed), n_active))
+        if target >= n_streams:
+            return None
+        return ResizeDecision(
+            "shrink",
+            target,
+            f"utilization={n_active}/{n_streams}",
+        )

@@ -141,6 +141,44 @@ Adaptive μ (``MomentPolicy`` — see ``serve.moments``; needs a bank with
     controller memory — the old kurtosis reference no longer describes the
     restored/new separator, so the EMAs re-seed from the next usable tick.
 
+Elastic capacity (``AutoscalePolicy`` — see ``serve.elastic``; the bank's
+width S is no longer fixed at construction)::
+
+        run_tick ── after the probe phase: autoscaler reads (width, active,
+           │        queue depth, windowed deadline_miss_rate, cooldown)
+           ▼
+        ┌─ queue ≥ grow_queue_depth, or miss rate > grow_miss_rate ──► GROW
+        │     width × factor (≤ max_streams): state grows by leaf-wise
+        │     prefix copy (new slots blank — NO RNG consumed), free list
+        │     gains the new high slots, the queue backfills into them the
+        │     same tick; the step function re-resolves autotune geometry at
+        │     the new (S, P, m, n, backend) key and is cached per width
+        │
+        ├─ queue EMPTY + no miss pressure + utilization < shrink band ──►
+        │     COMPACT then SHRINK: live slots migrate to the low end
+        │     (``SeparatorBank.move_slot`` — every leaf carried verbatim,
+        │     μ ladders and the shadow move with them), then the high
+        │     half truncates to the smallest ladder width holding
+        │     utilization ≤ hold_utilization
+        │
+        └─ otherwise (or within cooldown_ticks of the last resize) ──► HOLD
+
+    The two bands cannot flap (validated: ``shrink_utilization ≤
+    hold_utilization / factor``, so a just-shrunk bank sits above the shrink
+    band; growth needs queue/deadline pressure, which growing relieves).
+    Resizes are INVISIBLE to co-tenants: surviving sessions' (B, Ĥ, step,
+    conv) trajectories are bit-identical to a fixed-width run on both the
+    vmap and megakernel paths (property-pinned in tests/test_elastic.py) —
+    the persistent layout's trailing dims depend only on (n, m, dtype
+    policy), so a resize is always a prefix copy, never a re-layout.
+    ``grow``/``shrink``/``compact`` are also direct public methods (manual
+    capacity ops need no policy); resize cost lands in the resizing tick's
+    recorded latency, and the resize history (tick, action, widths, reason)
+    rides ``lifecycle`` snapshots through ``save``/``restore``.  Restores
+    accept a checkpoint saved at a DIFFERENT width: live sessions re-place
+    into the new free list (prefix-packed, slot map remapped), failing
+    loudly only when they exceed the new capacity.
+
 Ingestion: ``run_tick()`` is the scheduler-driven pull loop — sessions bind
 a ``data.sources.SignalSource`` at admit time; each tick backfills free
 slots, pulls one channel-major ``(m, P)`` block per bound source, advances
@@ -213,6 +251,7 @@ from repro.core.smbgd import BankHyperparams, SMBGDState
 from repro.data import sources as sources_lib
 from repro.models import model as M
 from repro.serve.drift import DriftEvent, DriftMonitor, DriftPolicy
+from repro.serve.elastic import AutoscalePolicy, ResizeDecision
 from repro.serve.health import HealthEvent, HealthMonitor, HealthPolicy
 from repro.serve.moments import MomentController, MomentPolicy
 from repro.serve.scheduling import (
@@ -513,8 +552,15 @@ class SeparationService:
         on_health: Optional[Callable[[Hashable, HealthEvent], None]] = None,
         slo: Optional[SLOPolicy] = None,
         moment_policy: Optional[MomentPolicy] = None,
+        autoscale: Optional[AutoscalePolicy] = None,
     ):
         self.bank = bank
+        if autoscale is not None and bank.hyperparams is not None:
+            raise ValueError(
+                "autoscale needs a resizable bank: explicit per-stream "
+                "hyperparams are (S,)-shaped and cannot follow a resize"
+            )
+        self.autoscale = autoscale
         self.key = jax.random.PRNGKey(seed)
         self.state: BankState = bank.init(self.key)
         self.policy = policy
@@ -625,6 +671,16 @@ class SeparationService:
         # buffers for the new state — the steady-state tick performs no state
         # allocation (CPU backend opts out; see SeparatorBank.make_step)
         self._step = bank.make_step(with_hyperparams=self._hp_step)
+        # elastic machinery: the jitted step is cached per (width, geometry)
+        # so an oscillating autoscaler compiles each ladder width once (see
+        # prewarm to take even the first compile off the serving path)
+        self._step_cache: Dict[Tuple, Any] = {self._step_key(bank): self._step}
+        self._n_grows = 0
+        self._n_shrinks = 0
+        self._n_compactions = 0
+        self._resize_history: List[Dict[str, Any]] = []
+        self._elastic_ticks = 0  # run_tick counter driving the cooldown
+        self._last_resize_tick: Optional[int] = None
         # one staging buffer for every tick: jnp.asarray copies host→device,
         # so the numpy side is free to be overwritten next tick
         if bank.fused:
@@ -814,6 +870,11 @@ class SeparationService:
             "n_active": float(self.n_active),
             "n_free": float(self.n_free),
             "n_queued": float(self.n_queued),
+            "n_streams": float(self.bank.n_streams),
+            "n_grows": float(self._n_grows),
+            "n_shrinks": float(self._n_shrinks),
+            "n_compactions": float(self._n_compactions),
+            "bank_utilization": self.n_active / self.bank.n_streams,
             "n_hot": float(len(self._hot)),
             "n_parked": float(len(self._parked)),
             "n_drift_events": float(self._n_drift_events),
@@ -1229,8 +1290,14 @@ class SeparationService:
             st.ticks += 1
             st.samples += P
         # slice outputs BEFORE any auto-eviction mutates the slot map: evicted
-        # sessions still receive this tick's separated output
-        out = {sid: Y[self._slot_of[sid], :P, :n] for sid in batches}
+        # sessions still receive this tick's separated output.  Slot index as
+        # a traced operand (bank._dyn), not a Python-int constant: a baked
+        # index compiles a separate eager slice program per (slot, width) —
+        # a per-slot compile storm on the first tick at every new width
+        out = {
+            sid: Y[self.bank._dyn(self._slot_of[sid]), :P, :n]
+            for sid in batches
+        }
         served = list(batches.keys())
         if self._moments is not None:
             # one (S, 2) host read per tick: fold this tick's raw moments
@@ -1997,6 +2064,284 @@ class SeparationService:
             )
         )
 
+    # -- elastic capacity --------------------------------------------------
+    @staticmethod
+    def _step_key(bank: SeparatorBank) -> Tuple:
+        """Jitted-step cache key: a resize back to a previously served
+        (width, geometry) reuses its compiled program instead of retracing."""
+        return (bank.n_streams, bank.block_p, bank.block_s, bank.prefetch)
+
+    def _get_step(self, bank: SeparatorBank):
+        got = self._step_cache.get(self._step_key(bank))
+        if got is None:
+            got = bank.make_step(with_hyperparams=self._hp_step)
+            self._step_cache[self._step_key(bank)] = got
+        return got
+
+    def prewarm(self, widths) -> None:
+        """Compile (and jit-cache) the serving step at each width in
+        ``widths`` ahead of time, so the first tick after a resize pays no
+        compile.  The warm-up CALLS each jitted step on blank operands with
+        the serving tick's exact dtypes (f32 X, bool active mask, the bank's
+        base hyperparameter rows when the μ machinery is armed) — lowering
+        alone would not populate the jit cache.  It also exercises the
+        slot-write and resize paths at every width (and ``resize_state``
+        across each consecutive pair of widths, both directions): those are
+        eager jnp ops whose first execution at a new shape pays a one-off
+        XLA compile that would otherwise land on the serving tick that
+        resizes.  Throwaway states only: the serving state, RNG key and free
+        list are untouched."""
+        widths = sorted(set(widths))
+        banks, states = {}, {}
+        for w in widths:
+            bank = (
+                self.bank if w == self.bank.n_streams
+                else self.bank.with_streams(w)
+            )
+            fn = self._get_step(bank)
+            state = bank.init(jax.random.PRNGKey(0))
+            if bank.fused:
+                lay = bank.layout
+                X = np.zeros((w, lay.P_pad, lay.m_pad), dtype=np.float32)
+            else:
+                X = np.zeros(
+                    (w, bank.opt.batch_size, bank.easi.n_features),
+                    dtype=np.float32,
+                )
+            active = np.zeros((w,), dtype=bool)
+            args = (state, jnp.asarray(X), jnp.asarray(active))
+            if self._hp_step:
+                args = args + (bank._bank_hyperparams(),)
+            out_state, _Y = fn(*args)
+            jax.block_until_ready(out_state.conv)
+            # per-session output slice of the serving step (dynamic slot
+            # index — one gather program covers every slot at this width)
+            jax.block_until_ready(
+                _Y[
+                    bank._dyn(0),
+                    : bank.opt.batch_size,
+                    : bank.easi.n_components,
+                ]
+            )
+            banks[w], states[w] = bank, out_state
+        for w in widths:
+            bank, state = banks[w], states[w]
+            # activation (set_slot), fresh-init (init_slot) and compaction
+            # (move_slot) writes at this width
+            sub = bank.slot_state(state, 0)
+            jax.block_until_ready(bank.set_slot(state, 0, sub).B)
+            jax.block_until_ready(
+                bank.init_slot(state, 0, jax.random.PRNGKey(0)).B
+            )
+            if w > 1:
+                jax.block_until_ready(bank.move_slot(state, 0, w - 1).B)
+        # all ordered width pairs: the autoscaler's shrink can skip ladder
+        # rungs (8 -> 2 straight), and each (from, to) pair has its own
+        # concat/slice shapes
+        for src in widths:
+            for dst in widths:
+                if src != dst:
+                    jax.block_until_ready(
+                        banks[dst].resize_state(states[src]).B
+                    )
+
+    def compact(self) -> int:
+        """Migrate every live slot to the low end of the bank (preserving
+        slot order) so the high end is contiguously free — what lets a
+        half-empty wide bank actually release width.  Each move carries the
+        slot's FULL row (``SeparatorBank.move_slot``: B, Ĥ, step, conv,
+        health, moments — plus the shadow snapshot and the per-slot μ
+        multipliers), so a compacted session's trajectory is bit-identical
+        to never having moved; sid-keyed bookkeeping (monitors, stats,
+        deadline windows, kurtosis EMAs) never even notices.  Returns the
+        number of sessions moved (0 = already compact, not counted as a
+        compaction)."""
+        order = sorted(self._slot_of.items(), key=lambda kv: kv[1])
+        moved = 0
+        for target, (sid, slot) in enumerate(order):
+            if slot == target:
+                continue
+            # slots ascend and each target < its source, so no move ever
+            # reads a row an earlier move already overwrote
+            self.state = self.bank.move_slot(self.state, target, slot)
+            if self._shadow is not None:
+                self._shadow = self.bank.move_slot(self._shadow, target, slot)
+            for arr in (
+                self._boost_scale,
+                self._cut_scale,
+                self._ctrl_scale,
+                self._cut_on,
+            ):
+                arr[target] = arr[slot]
+            self._reset_mu(slot)
+            self._slot_of[sid] = target
+            moved += 1
+        if moved:
+            taken = set(self._slot_of.values())
+            self._free = [
+                s
+                for s in range(self.bank.n_streams - 1, -1, -1)
+                if s not in taken
+            ]
+            self._n_compactions += 1
+            self._resize_history.append(
+                {
+                    "tick": self._n_ticks,
+                    "action": "compact",
+                    "from": self.bank.n_streams,
+                    "to": self.bank.n_streams,
+                    "reason": f"moved={moved}",
+                }
+            )
+        return moved
+
+    def grow(self, new_S: int, reason: str = "manual") -> None:
+        """Widen the bank to ``new_S`` slots in place: surviving sessions
+        keep their slots (state grows by leaf-wise prefix copy; no RNG is
+        consumed for the blank slots), the free list gains the new high
+        slots, and the waiting room backfills into them immediately."""
+        if new_S < self.bank.n_streams:
+            raise ValueError(
+                f"grow target {new_S} < current width "
+                f"{self.bank.n_streams}; use shrink"
+            )
+        self._resize(new_S, "grow", reason)
+
+    def shrink(self, new_S: int, reason: str = "manual") -> None:
+        """Narrow the bank to ``new_S`` slots, compacting live sessions to
+        the low end first when any of them occupies a slot the truncation
+        would drop.  Raises an actionable ``ValueError`` (naming the live
+        sids and both widths) when the live sessions simply do not fit."""
+        if new_S > self.bank.n_streams:
+            raise ValueError(
+                f"shrink target {new_S} > current width "
+                f"{self.bank.n_streams}; use grow"
+            )
+        self._resize(new_S, "shrink", reason)
+
+    def _resize(self, new_S: int, action: str, reason: str) -> None:
+        """The shared grow/shrink edge: swap in ``bank.with_streams(new_S)``
+        (autotune geometry re-resolves at the new width key; explicit knobs
+        win — see ``SeparatorBank.with_streams``), prefix-copy every
+        width-dependent array (state, shadow, μ ladders, staging buffer),
+        rebuild the free list around the surviving slot map, and re-point
+        the jitted step at the cached program for the new geometry."""
+        old_S = self.bank.n_streams
+        if new_S == old_S:
+            return
+        if new_S < 1:
+            raise ValueError("bank width must be >= 1")
+        if new_S < old_S:
+            if self.n_active > new_S:
+                raise ValueError(
+                    f"cannot shrink bank {old_S} -> {new_S}: "
+                    f"{self.n_active} live sessions exceed the new capacity "
+                    f"({sorted(map(str, self._slot_of))})"
+                )
+            if any(slot >= new_S for slot in self._slot_of.values()):
+                self.compact()
+        new_bank = self.bank.with_streams(new_S)
+        self.state = new_bank.resize_state(self.state)
+        if self._shadow is not None:
+            self._shadow = new_bank.resize_state(self._shadow)
+        if new_S > old_S:
+            pad = new_S - old_S
+            self._boost_scale = np.concatenate(
+                [self._boost_scale, np.ones((pad,), np.float32)]
+            )
+            self._cut_scale = np.concatenate(
+                [self._cut_scale, np.ones((pad,), np.float32)]
+            )
+            self._ctrl_scale = np.concatenate(
+                [self._ctrl_scale, np.ones((pad,), np.float32)]
+            )
+            self._cut_on = np.concatenate(
+                [self._cut_on, np.zeros((pad,), bool)]
+            )
+        else:
+            self._boost_scale = self._boost_scale[:new_S].copy()
+            self._cut_scale = self._cut_scale[:new_S].copy()
+            self._ctrl_scale = self._ctrl_scale[:new_S].copy()
+            self._cut_on = self._cut_on[:new_S].copy()
+        if new_bank.fused:
+            lay = new_bank.layout
+            stage_shape = (new_S, lay.P_pad, lay.m_pad)
+        else:
+            stage_shape = (
+                new_S, new_bank.opt.batch_size, new_bank.easi.n_features
+            )
+        self._stage = np.zeros(stage_shape, dtype=np.float32)
+        self._base_hp = (
+            new_bank._bank_hyperparams() if self._hp_step else None
+        )
+        self._step = self._get_step(new_bank)
+        # probe banks pin the SERVING bank's resolved geometry — drop them
+        # only when the re-resolution actually changed it (stacked-state
+        # caches key on park stamps, not geometry, but a probe bank rebuild
+        # would re-pad them, so they go together)
+        old_geom = (
+            self.bank.layout.block_p if self.bank.fused else self.bank.block_p,
+            bool(self.bank.prefetch),
+        )
+        new_geom = (
+            new_bank.layout.block_p if new_bank.fused else new_bank.block_p,
+            bool(new_bank.prefetch),
+        )
+        if old_geom != new_geom:
+            self._probe_banks = {}
+            self._probe_stacks = {}
+        self.bank = new_bank
+        taken = set(self._slot_of.values())
+        self._free = [
+            s for s in range(new_S - 1, -1, -1) if s not in taken
+        ]
+        if action == "grow":
+            self._n_grows += 1
+        else:
+            self._n_shrinks += 1
+        self._resize_history.append(
+            {
+                "tick": self._n_ticks,
+                "action": action,
+                "from": old_S,
+                "to": new_S,
+                "reason": reason,
+            }
+        )
+        self._last_resize_tick = self._elastic_ticks
+        if action == "grow":
+            # new slots serve waiting work the same tick they appear
+            self._backfill()
+
+    def _autoscale_tick(self) -> None:
+        """One autoscaler evaluation per ``run_tick`` (after the probe
+        phase, before the tick's latency record closes — resize cost is
+        billed to the tick that resized)."""
+        pol = self.autoscale
+        if pol is None:
+            return
+        self._elastic_ticks += 1
+        since = (
+            None
+            if self._last_resize_tick is None
+            else self._elastic_ticks - self._last_resize_tick
+        )
+        decision: Optional[ResizeDecision] = pol.decide(
+            self.bank.n_streams,
+            self.n_active,
+            self.n_queued,
+            self.deadline_miss_rate,
+            since,
+        )
+        if decision is None:
+            return
+        if decision.action == "grow":
+            self.grow(decision.target, reason=decision.reason)
+        else:
+            if pol.compact_before_shrink:
+                self.compact()
+            self.shrink(decision.target, reason=decision.reason)
+
     # -- scheduler-driven ingestion ---------------------------------------
     def run_tick(self) -> Dict[Hashable, jnp.ndarray]:
         """One pull tick: backfill free slots from the scheduler, pull a
@@ -2068,7 +2413,12 @@ class SeparationService:
         pt1 = time.perf_counter()
         if had_oob:
             self._last_probe_s = pt1 - pt0  # out-of-band probe phase, timed
-        dt = pt1 - t0
+        # autoscale AFTER serve+probe (decisions see this tick's telemetry)
+        # and BEFORE the latency record closes: resize cost is billed to the
+        # tick that resized, so the SLO sketch and the bench's resize-tick
+        # overhead metric both see it
+        self._autoscale_tick()
+        dt = time.perf_counter() - t0
         if self._pending_tick is not None:
             served, timed, samples = self._pending_tick
             self._pending_tick = None
@@ -2158,6 +2508,7 @@ class SeparationService:
             },
             "cut": dict(self._cut_left),
             "quarantine_ticks": self._quar_ticks,
+            "resize_history": [dict(e) for e in self._resize_history],
             "shadow": self._shadow is not None,
             "quarantined": [
                 [
@@ -2308,10 +2659,29 @@ class SeparationService:
         quar_snap = list(lifecycle.get("quarantined") or [])
         quar_ids = [sid for sid, _info in quar_snap]
         want_shadow = bool(lifecycle.get("shadow"))
+        # elastic restore: the checkpoint's true width comes from the
+        # manifest peek (no array data loaded) — a service resized since
+        # save builds its restore target at the SAVED width and re-places
+        # the sessions into the current free list afterwards, instead of
+        # failing the Checkpointer's per-leaf shape check
+        saved_S = self.bank.n_streams
+        peek = getattr(checkpointer, "leaf_shapes", None)
+        if peek is not None:
+            shape = peek(step=step).get("B")
+            if shape:
+                saved_S = int(shape[0])
+        if saved_S != self.bank.n_streams and len(sessions) > self.bank.n_streams:
+            raise ValueError(
+                f"cannot restore checkpoint of width {saved_S} into a bank "
+                f"of width {self.bank.n_streams}: {len(sessions)} live "
+                f"sessions exceed the new capacity "
+                f"({sorted(map(str, sessions))}) — grow the bank or evict "
+                f"before restoring"
+            )
         bad = {
             s: slot
             for s, slot in sessions.items()
-            if not 0 <= slot < self.bank.n_streams
+            if not 0 <= slot < saved_S
         }
         if bad:
             raise ValueError(f"session slots out of range: {bad}")
@@ -2353,10 +2723,10 @@ class SeparationService:
             ("mu_ctrl_scale", ctrl_scale_snap),
             ("mu_cut_on", cut_on_snap),
         ):
-            if arr is not None and len(arr) != self.bank.n_streams:
+            if arr is not None and len(arr) != saved_S:
                 raise ValueError(
                     f"{name} length {len(arr)} != n_streams "
-                    f"{self.bank.n_streams}"
+                    f"{saved_S}"
                 )
         if moments_snap and self._moments is None:
             raise ValueError(
@@ -2382,7 +2752,20 @@ class SeparationService:
             )
         # validate BEFORE mutating: a rejected map must leave the live
         # service untouched
-        target = dict(self.state._asdict(), rng_key=self.key)
+        if saved_S == self.bank.n_streams:
+            target = dict(self.state._asdict(), rng_key=self.key)
+        else:
+            # restore target at the checkpoint's width; the current state's
+            # trailing dims are width-independent, so they size the leaves
+            target = {
+                name: (
+                    None
+                    if leaf is None
+                    else jnp.zeros((saved_S,) + leaf.shape[1:], leaf.dtype)
+                )
+                for name, leaf in self.state._asdict().items()
+            }
+            target["rng_key"] = self.key
         if parked_snap:
             n = self.bank.easi.n_components
             m = self.bank.easi.n_features
@@ -2393,10 +2776,12 @@ class SeparationService:
             target["parked_step"] = jnp.zeros((K,), jnp.int32)
             target["parked_ids"] = jnp.zeros((K,), jnp.uint32)
         if want_shadow:
-            target["shadow_B"] = jnp.zeros_like(self.state.B)
-            target["shadow_H_hat"] = jnp.zeros_like(self.state.H_hat)
-            target["shadow_step"] = jnp.zeros_like(self.state.step)
-            target["shadow_conv"] = jnp.zeros_like(self.state.conv)
+            # shadow leaves are width-dependent too — sized off the (possibly
+            # saved-width) state target so they match the checkpoint
+            target["shadow_B"] = jnp.zeros_like(target["B"])
+            target["shadow_H_hat"] = jnp.zeros_like(target["H_hat"])
+            target["shadow_step"] = jnp.zeros_like(target["step"])
+            target["shadow_conv"] = jnp.zeros_like(target["conv"])
         if quar_snap:
             n = self.bank.easi.n_components
             m = self.bank.easi.n_features
@@ -2457,6 +2842,46 @@ class SeparationService:
             self._shadow = self.state
         else:
             self._shadow = None
+        if saved_S != self.bank.n_streams:
+            # re-placement: gather the restored sessions' rows (in slot
+            # order), re-place them contiguously from slot 0, and pad or
+            # truncate to the CURRENT width — every surviving row is carried
+            # verbatim, so the restored trajectories stay bit-identical
+            order = sorted(sessions.items(), key=lambda kv: kv[1])
+            idx = jnp.asarray(
+                [slot for _sid, slot in order], dtype=jnp.int32
+            )
+
+            def _gather(st: BankState) -> BankState:
+                return BankState(
+                    B=st.B[idx],
+                    H_hat=st.H_hat[idx],
+                    step=st.step[idx],
+                    conv=None if st.conv is None else st.conv[idx],
+                    health=None if st.health is None else st.health[idx],
+                    moments=(
+                        None if st.moments is None else st.moments[idx]
+                    ),
+                )
+
+            self.state = self.bank.resize_state(_gather(self.state))
+            if self._shadow is not None:
+                self._shadow = self.bank.resize_state(_gather(self._shadow))
+
+            def _remap(arr, fill):
+                if arr is None:
+                    return None
+                out = [fill] * self.bank.n_streams
+                for new_slot, (_sid, old_slot) in enumerate(order):
+                    out[new_slot] = arr[old_slot]
+                return out
+
+            mu_scale = _remap(mu_scale, 1.0)
+            boost_scale_snap = _remap(boost_scale_snap, 1.0)
+            cut_scale_snap = _remap(cut_scale_snap, 1.0)
+            ctrl_scale_snap = _remap(ctrl_scale_snap, 1.0)
+            cut_on_snap = _remap(cut_on_snap, False)
+            sessions = {sid: i for i, (sid, _slot) in enumerate(order)}
         self._slot_of = dict(sessions)
         self.scheduler.load(queue_entries)
         # convergence progress resumes exactly; sessions without a saved
@@ -2643,6 +3068,16 @@ class SeparationService:
         # SLO telemetry restarts with the epoch (sketch, deadline monitors,
         # miss window, empty-tick counters — same rule as the counters above)
         self._reset_slo()
+        # resize provenance rides the lifecycle snapshot; the elastic
+        # counters restart with the epoch like every other serving counter
+        self._resize_history = [
+            dict(e) for e in (lifecycle.get("resize_history") or [])
+        ]
+        self._n_grows = 0
+        self._n_shrinks = 0
+        self._n_compactions = 0
+        self._elastic_ticks = 0
+        self._last_resize_tick = None
         taken = set(sessions.values())
         self._free = [s for s in range(self.bank.n_streams - 1, -1, -1) if s not in taken]
         return got

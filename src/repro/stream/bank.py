@@ -64,6 +64,7 @@ checkpoint and restore at the storage dtype (tested).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -116,6 +117,87 @@ class BankState(NamedTuple):
     conv: Optional[jnp.ndarray] = None  # (S,) f32 — last-tick ‖ΔB‖_F/‖B‖_F
     health: Optional[jnp.ndarray] = None  # (S,) int32 — last-tick fault bits
     moments: Optional[jnp.ndarray] = None  # (S, 2) f32 — last-tick [Σy², Σy⁴]
+
+
+# -- fused row-op programs --------------------------------------------------
+# Slot admission/compaction/resize each touch all six state leaves.  Run
+# eagerly that is ~50 op dispatches per call (≈10 ms of pure host overhead) —
+# the dominant cost of an elastic resize tick, which may activate several
+# sessions at once.  Fused under jit each becomes ONE cached program.  They
+# are module-level (not per-bank closures) so the jit cache keys on leaf
+# shapes alone and every bank instance of the same geometry — including the
+# fresh instance a resize creates via ``with_streams`` — shares the programs
+# a ``prewarm`` already compiled.
+
+
+@jax.jit
+def _row_write_jit(B, H, step, conv, health, moments, slot, subB, subH, substep):
+    """Write one logical sub-state into row ``slot``; conv/health/moments
+    restart (+inf / 0 / 0).  On padded leaves the whole row is cleared and
+    the logical block corner-written, so no stale junk survives."""
+    if B.shape[1:] != subB.shape:  # persistent-padded bank
+        rowB = (
+            jnp.zeros(B.shape[1:], B.dtype)
+            .at[: subB.shape[0], : subB.shape[1]]
+            .set(subB.astype(B.dtype))
+        )
+        rowH = (
+            jnp.zeros(H.shape[1:], H.dtype)
+            .at[: subH.shape[0], : subH.shape[1]]
+            .set(subH.astype(H.dtype))
+        )
+    else:
+        rowB = subB.astype(B.dtype)
+        rowH = subH.astype(H.dtype)
+    return (
+        B.at[slot].set(rowB),
+        H.at[slot].set(rowH),
+        step.at[slot].set(substep),
+        conv.at[slot].set(jnp.inf),
+        health.at[slot].set(0),
+        moments.at[slot].set(0.0),
+    )
+
+
+@functools.partial(jax.jit, static_argnums=0)  # frozen config → hashable
+def _init_state_jit(cfg: EASIConfig, key: jax.Array) -> SMBGDState:
+    """Fresh-session init as one cached program (same RNG stream as the
+    eager call — jit never changes values, only dispatch cost)."""
+    return smbgd_lib.init_state(cfg, key)
+
+
+@jax.jit
+def _row_move_jit(B, H, step, conv, health, moments, dst, src):
+    """Copy row ``src`` over row ``dst`` on every leaf, verbatim."""
+    return (
+        B.at[dst].set(B[src]),
+        H.at[dst].set(H[src]),
+        step.at[dst].set(step[src]),
+        conv.at[dst].set(conv[src]),
+        health.at[dst].set(health[src]),
+        moments.at[dst].set(moments[src]),
+    )
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _resize_rows_jit(new_S, B, H, step, conv, health, moments):
+    """Prefix copy/truncate every leaf to ``new_S`` rows (grow appends blank
+    slots: zero B/Ĥ, step 0, conv +inf, clean health, zero moments)."""
+    old_S = B.shape[0]
+    if old_S > new_S:
+        return (
+            B[:new_S], H[:new_S], step[:new_S],
+            conv[:new_S], health[:new_S], moments[:new_S],
+        )
+    k = new_S - old_S
+    return (
+        jnp.concatenate([B, jnp.zeros((k,) + B.shape[1:], B.dtype)]),
+        jnp.concatenate([H, jnp.zeros((k,) + H.shape[1:], H.dtype)]),
+        jnp.concatenate([step, jnp.zeros((k,), step.dtype)]),
+        jnp.concatenate([conv, jnp.full((k,), jnp.inf, jnp.float32)]),
+        jnp.concatenate([health, jnp.zeros((k,), jnp.int32)]),
+        jnp.concatenate([moments, jnp.zeros((k, 2), jnp.float32)]),
+    )
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -179,6 +261,18 @@ class SeparatorBank:
                 f"dtype_policy must be one of "
                 f"{sorted(easi_ops.STORAGE_DTYPES)}, got {self.dtype_policy!r}"
             )
+        # snapshot the caller's EXPLICIT geometry before autotune fills the
+        # blanks — with_streams() re-resolves at the new width key but must
+        # keep hand-set knobs winning over whatever the cache says there
+        object.__setattr__(
+            self,
+            "_explicit_geometry",
+            {
+                "block_p": self.block_p,
+                "block_s": self.block_s,
+                "prefetch": self.prefetch,
+            },
+        )
         self._resolve_autotune()
         # reuse Separator's alias resolution + validation
         sep = Separator(self.easi, self.opt, self.algorithm, self.use_pallas)
@@ -374,38 +468,23 @@ class SeparatorBank:
         )
         return self.pad_state(state) if self.fused else state
 
+    @staticmethod
+    def _dyn(slot) -> jnp.ndarray:
+        """Slot index as a traced int32 scalar.  A Python-int index is baked
+        into the eager op as a constant, so every distinct slot pays its own
+        one-off XLA compile — ruinous on the serving layer's backfill and
+        compaction paths, which visit arbitrary slots.  As an array operand,
+        one compiled program covers all indices (results are bit-identical
+        either way)."""
+        return jnp.asarray(slot, jnp.int32)
+
     def init_slot(self, state: BankState, slot, key: jax.Array) -> BankState:
         """Reset one stream slot to a fresh session (admission path).  On a
         padded bank the whole padded slot is cleared, so no stale accumulator
-        junk from the previous occupant survives."""
-        sub = smbgd_lib.init_state(self.easi, key)
-        conv = self._conv_or_default(state).at[slot].set(jnp.inf)
-        health = self._health_or_default(state).at[slot].set(0)
-        moments = self._moments_or_default(state).at[slot].set(0.0)
-        if self._is_padded(state):
-            lay = self.layout
-            B_slot = (
-                jnp.zeros((lay.n_pad, lay.m_pad), state.B.dtype)
-                .at[: lay.n, : lay.m]
-                .set(sub.B.astype(state.B.dtype))
-            )
-            H_slot = jnp.zeros((lay.n_pad, lay.n_pad), state.H_hat.dtype)
-            return BankState(
-                B=state.B.at[slot].set(B_slot),
-                H_hat=state.H_hat.at[slot].set(H_slot),
-                step=state.step.at[slot].set(sub.step),
-                conv=conv,
-                health=health,
-                moments=moments,
-            )
-        return BankState(
-            B=state.B.at[slot].set(sub.B.astype(state.B.dtype)),
-            H_hat=state.H_hat.at[slot].set(sub.H_hat.astype(state.H_hat.dtype)),
-            step=state.step.at[slot].set(sub.step),
-            conv=conv,
-            health=health,
-            moments=moments,
-        )
+        junk from the previous occupant survives (``init_state``'s ``Ĥ`` is
+        zero, so the shared row-write program's corner-write IS the clear)."""
+        sub = _init_state_jit(self.easi, key)
+        return self._write_row(state, slot, sub)
 
     def slot_state(self, state: BankState, slot: int) -> SMBGDState:
         """Extract one stream's state as a single-stream ``SMBGDState``
@@ -413,6 +492,7 @@ class SeparatorBank:
         states are the bank-independent interchange format, so bf16 storage
         casts back to the config compute dtype here."""
         state = self.unpad_state(state)  # no-op on logical state
+        slot = self._dyn(slot)
         dt = self.easi.dtype
         return SMBGDState(
             B=state.B[slot].astype(dt),
@@ -426,36 +506,26 @@ class SeparatorBank:
         from its frozen separator (``B``, ``Ĥ``, step counter all carried, so
         the γ step-0 gate does NOT re-apply).  ``conv`` restarts at +inf —
         the statistic describes steps taken *in this slot*."""
-        conv = self._conv_or_default(state).at[slot].set(jnp.inf)
-        health = self._health_or_default(state).at[slot].set(0)
-        moments = self._moments_or_default(state).at[slot].set(0.0)
-        if self._is_padded(state):
-            lay = self.layout
-            B_slot = (
-                jnp.zeros((lay.n_pad, lay.m_pad), state.B.dtype)
-                .at[: lay.n, : lay.m]
-                .set(sub.B.astype(state.B.dtype))
-            )
-            H_slot = (
-                jnp.zeros((lay.n_pad, lay.n_pad), state.H_hat.dtype)
-                .at[: lay.n, : lay.n]
-                .set(sub.H_hat.astype(state.H_hat.dtype))
-            )
-            return BankState(
-                B=state.B.at[slot].set(B_slot),
-                H_hat=state.H_hat.at[slot].set(H_slot),
-                step=state.step.at[slot].set(sub.step),
-                conv=conv,
-                health=health,
-                moments=moments,
-            )
+        return self._write_row(state, slot, sub)
+
+    def _write_row(self, state: BankState, slot, sub: SMBGDState) -> BankState:
+        """One fused-program slot write (see ``_row_write_jit``): pads the
+        logical sub-state to the bank's persistent layout when needed and
+        restarts the slot's conv/health/moments telemetry."""
+        B, H, step, conv, health, moments = _row_write_jit(
+            state.B,
+            state.H_hat,
+            state.step,
+            self._conv_or_default(state),
+            self._health_or_default(state),
+            self._moments_or_default(state),
+            self._dyn(slot),
+            sub.B,
+            sub.H_hat,
+            sub.step,
+        )
         return BankState(
-            B=state.B.at[slot].set(sub.B.astype(state.B.dtype)),
-            H_hat=state.H_hat.at[slot].set(sub.H_hat.astype(state.H_hat.dtype)),
-            step=state.step.at[slot].set(sub.step),
-            conv=conv,
-            health=health,
-            moments=moments,
+            B=B, H_hat=H, step=step, conv=conv, health=health, moments=moments
         )
 
     def _is_padded(self, state: BankState) -> bool:
@@ -566,6 +636,7 @@ class SeparatorBank:
         — how the serving layer seeds a freshly (re)admitted session's
         shadow so a rollback can never resurrect the slot's previous
         occupant."""
+        slot = self._dyn(slot)
         return BankState(
             B=dst.B.at[slot].set(src.B[slot]),
             H_hat=dst.H_hat.at[slot].set(src.H_hat[slot]),
@@ -593,6 +664,99 @@ class SeparatorBank:
         else:
             raise ValueError(f"unknown corruption mode {mode!r}")
         return state._replace(B=B)
+
+    # -- elasticity --------------------------------------------------------
+    def with_streams(self, new_S: int) -> "SeparatorBank":
+        """A bank identical to this one at width ``new_S`` — the resize
+        primitive.  Geometry knobs the CALLER set explicitly carry over
+        verbatim (an explicit ``block_s`` that no longer divides the new
+        width is dropped back to autotune/default resolution rather than
+        erroring); knobs that were autotune-resolved at the old width
+        re-resolve against the new ``(S, P, m, n, backend)`` cache key, so a
+        grown bank picks up the geometry tuned FOR that width.  Per-stream
+        ``hyperparams`` rows are ``(S,)``-shaped and have no canonical resize
+        — rebuild them at the new width and pass through ``replace``."""
+        if new_S == self.n_streams:
+            return self
+        if self.hyperparams is not None:
+            raise ValueError(
+                "cannot resize a bank with explicit per-stream hyperparams "
+                f"(rows are shaped ({self.n_streams},)); rebuild them at "
+                f"width {new_S} and use dataclasses.replace"
+            )
+        explicit = getattr(
+            self,
+            "_explicit_geometry",
+            {"block_p": self.block_p, "block_s": self.block_s,
+             "prefetch": self.prefetch},
+        )
+        block_s = explicit["block_s"]
+        if block_s is not None and new_S % block_s != 0:
+            block_s = None
+        return dataclasses.replace(
+            self,
+            n_streams=new_S,
+            block_p=explicit["block_p"],
+            block_s=block_s,
+            prefetch=explicit["prefetch"],
+        )
+
+    def resize_state(self, state: BankState) -> BankState:
+        """Adopt a ``BankState`` of ANY width into this bank's width by
+        leaf-wise prefix copy — valid because the persistent padded layout's
+        trailing dims (``n_pad``/``m_pad``) depend only on (n, m, dtype
+        policy), never on S or ``block_p``, so resizing never re-lays-out a
+        surviving slot (the bit-identity contract).  Growing appends blank
+        slots (zero B/Ĥ, step 0, conv +inf, clean health, zero moments —
+        exactly what ``init_slot``/``set_slot`` overwrite at activation, and
+        NO RNG is consumed here, so fresh-init key sequences match a
+        fixed-width run); shrinking truncates — the caller (see
+        ``serve.SeparationService.shrink``) must have compacted live slots
+        below ``new_S`` first."""
+        new_S = self.n_streams
+        old_S = state.B.shape[0]
+        state = state._replace(
+            conv=self._conv_or_default(state),
+            health=self._health_or_default(state),
+            moments=self._moments_or_default(state),
+        )
+        if old_S == new_S:
+            return state
+        B, H, step, conv, health, moments = _resize_rows_jit(
+            new_S,
+            state.B,
+            state.H_hat,
+            state.step,
+            state.conv,
+            state.health,
+            state.moments,
+        )
+        return BankState(
+            B=B, H_hat=H, step=step, conv=conv, health=health, moments=moments
+        )
+
+    def move_slot(self, state: BankState, dst, src) -> BankState:
+        """Move one slot's FULL row (B, Ĥ, step, conv, health, moments) to
+        another index of the same state — the compaction primitive.  Unlike
+        ``copy_slot`` (cross-state shadow seeding, which restarts the
+        per-slot verdicts) every leaf carries over verbatim, so a compacted
+        session's trajectory — including its eviction-policy view — is
+        bit-identical to never having moved.  The source row is left behind
+        as-is; it lands on the free list and ``init_slot``/``set_slot``
+        clear it at the next activation (or a shrink truncates it)."""
+        B, H, step, conv, health, moments = _row_move_jit(
+            state.B,
+            state.H_hat,
+            state.step,
+            self._conv_or_default(state),
+            self._health_or_default(state),
+            self._moments_or_default(state),
+            self._dyn(dst),
+            self._dyn(src),
+        )
+        return BankState(
+            B=B, H_hat=H, step=step, conv=conv, health=health, moments=moments
+        )
 
     # -- stepping ----------------------------------------------------------
     def step(

@@ -620,3 +620,118 @@ class TestElasticRestore:
         np.testing.assert_array_equal(
             np.asarray(r1["layers"]["w"]), np.asarray(_tree(1)["layers"]["w"])
         )
+
+
+class TestWidthMismatchRestore:
+    """Elastic-bank regression: a checkpoint saved at one bank width restores
+    into a service whose bank has since grown or shrunk — sessions are
+    RE-PLACED into the new free list (verbatim row carry, so trajectories
+    stay bit-identical) instead of failing the per-leaf shape check; only
+    when the live sessions genuinely exceed the new capacity does restore
+    raise, and then it names the sids and both widths."""
+
+    def _svc(self, S):
+        from repro.core import EASIConfig, SMBGDConfig
+        from repro.serve.engine import SeparationService
+        from repro.stream import SeparatorBank
+
+        ecfg = EASIConfig(n_components=2, n_features=4, mu=2e-3)
+        ocfg = SMBGDConfig(batch_size=8, mu=2e-3, beta=0.9, gamma=0.5)
+        return SeparationService(
+            SeparatorBank(ecfg, ocfg, n_streams=S), seed=0, max_queue=4
+        )
+
+    def test_leaf_shapes_peeks_without_loading(self, tmp_path):
+        ckpt = Checkpointer(tmp_path)
+        ckpt.save(4, _tree())
+        shapes = ckpt.leaf_shapes()
+        assert shapes["layers__w"] == (8, 16)
+        assert shapes["step_scale"] == ()
+        with pytest.raises(FileNotFoundError):
+            Checkpointer(tmp_path / "empty").leaf_shapes()
+
+    def test_restore_into_wider_bank_replaces_and_resumes(self, tmp_path):
+        svc = self._svc(2)
+        svc.admit("a")
+        svc.admit("b")
+        X = jax.random.normal(jax.random.PRNGKey(0), (8, 4))
+        svc.step({"a": X, "b": X})
+        ckpt = Checkpointer(tmp_path)
+        svc.save(ckpt, step=1)
+        snap = json.loads(json.dumps(svc.lifecycle))
+
+        wide = self._svc(4)  # the bank grew since save
+        assert wide.restore(ckpt, lifecycle=snap) == 1
+        assert set(wide.sessions) == {"a", "b"}
+        assert sorted(wide.sessions.values()) == [0, 1]  # re-placed low
+        assert sorted(wide._free) == [2, 3]
+        # the carried rows are verbatim: both services continue identically
+        o1 = svc.step({"a": X, "b": X})
+        o2 = wide.step({"a": X, "b": X})
+        for sid in o1:
+            np.testing.assert_array_equal(
+                np.asarray(o1[sid]), np.asarray(o2[sid])
+            )
+        # and the freed width is genuinely usable
+        assert wide.admit("c") is not None and wide.n_active == 3
+
+    def test_restore_into_narrower_bank_replaces_high_slots(self, tmp_path):
+        svc = self._svc(4)
+        for sid in ("a", "b", "c", "d"):
+            svc.admit(sid)
+        X = jax.random.normal(jax.random.PRNGKey(1), (8, 4))
+        svc.step({sid: X for sid in svc.sessions})
+        # strand the survivors in the HIGH slots a narrow bank doesn't have
+        svc.evict("a")
+        svc.evict("b")
+        assert max(svc.sessions.values()) >= 2
+        ckpt = Checkpointer(tmp_path)
+        svc.save(ckpt, step=2)
+        snap = json.loads(json.dumps(svc.lifecycle))
+
+        narrow = self._svc(2)
+        narrow.restore(ckpt, lifecycle=snap)
+        assert sorted(narrow.sessions.values()) == [0, 1]
+        for sid in ("c", "d"):
+            got = narrow.bank.slot_state(narrow.state, narrow.sessions[sid])
+            want = svc.bank.slot_state(svc.state, svc.sessions[sid])
+            np.testing.assert_array_equal(
+                np.asarray(got.B), np.asarray(want.B)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(got.H_hat), np.asarray(want.H_hat)
+            )
+
+    def test_restore_overflow_is_actionable(self, tmp_path):
+        svc = self._svc(4)
+        for sid in ("a", "b", "c"):
+            svc.admit(sid)
+        ckpt = Checkpointer(tmp_path)
+        svc.save(ckpt, step=0)
+        snap = json.loads(json.dumps(svc.lifecycle))
+        narrow = self._svc(2)
+        with pytest.raises(ValueError) as ei:
+            narrow.restore(ckpt, lifecycle=snap)
+        msg = str(ei.value)
+        # names both widths and the sids that don't fit
+        assert "width 4" in msg and "width 2" in msg
+        for sid in ("a", "b", "c"):
+            assert sid in msg
+        # the rejected restore left the narrow service untouched
+        assert narrow.n_active == 0 and sorted(narrow._free) == [0, 1]
+
+    def test_resize_history_roundtrips(self, tmp_path):
+        svc = self._svc(2)
+        svc.admit("a")
+        svc.grow(4, reason="drill")
+        svc.shrink(2, reason="drain")
+        ckpt = Checkpointer(tmp_path)
+        svc.save(ckpt, step=5)
+        snap = json.loads(json.dumps(svc.lifecycle))
+        svc2 = self._svc(2)
+        svc2.restore(ckpt, lifecycle=snap)
+        hist = svc2.lifecycle["resize_history"]
+        assert [h["action"] for h in hist] == ["grow", "shrink"]
+        assert hist[0]["reason"] == "drill"
+        # counters describe the restored epoch, not the old run
+        assert svc2.metrics["n_grows"] == 0.0

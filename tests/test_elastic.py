@@ -1,0 +1,430 @@
+"""Elastic separator banks: grow/shrink/compact + the autoscaler, end to end.
+
+Three layers, matching the machinery:
+
+  * ``AutoscalePolicy`` decision logic — grow triggers (queue depth,
+    deadline-miss rate), shrink band + ladder targets, cooldown, and the
+    anti-flap construction (a just-shrunk bank never re-triggers shrink,
+    growth only ever fires on demand).
+  * Bank/service elasticity units — ``with_streams`` geometry re-resolution,
+    ``resize_state`` prefix semantics, ``move_slot`` full-row carry,
+    ``grow``/``shrink``/``compact`` bookkeeping (free list, μ ladders,
+    counters, resize history, backfill).
+  * The property sweep (``ci`` hypothesis profile in CI): a random
+    admit/step/evict/grow/shrink/compact schedule against a fixed-max-width
+    oracle — no sid dropped or duplicated, scheduler quotas never exceeded,
+    free list consistent with ``status()``, and every surviving session's
+    (B, Ĥ, step, conv) BIT-identical to the oracle, on the vmap AND
+    megakernel paths.  Bit-identity is the paper's separation math surviving
+    ops: a resize is a prefix copy, a compaction a verbatim row move —
+    neither may perturb a single ULP of any co-tenant's trajectory.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EASIConfig, SMBGDConfig, SMBGDState
+from repro.serve import AutoscalePolicy, PriorityScheduler, SeparationService
+from repro.serve.elastic import ResizeDecision
+from repro.stream import SeparatorBank
+from _hypothesis_compat import given, settings, st
+
+P, M, N = 8, 4, 2
+
+
+def _cfgs():
+    return (
+        EASIConfig(n_components=N, n_features=M, mu=2e-3),
+        SMBGDConfig(batch_size=P, mu=2e-3, beta=0.9, gamma=0.5),
+    )
+
+
+def _bank(S, fused=False, **kw):
+    ecfg, ocfg = _cfgs()
+    return SeparatorBank(ecfg, ocfg, n_streams=S, fused=fused, **kw)
+
+
+def _svc(S, fused=False, **kw):
+    return SeparationService(_bank(S, fused=fused), seed=0, **kw)
+
+
+def _warm(tag):
+    """Deterministic per-sid warm state: admissions never split the service
+    RNG, so elastic and oracle runs consume identical key sequences."""
+    r = np.random.RandomState(0xE1A5 + tag)
+    return SMBGDState(
+        B=jnp.asarray(r.randn(N, M), jnp.float32),
+        H_hat=jnp.zeros((N, N), jnp.float32),
+        step=jnp.asarray(0, jnp.int32),
+    )
+
+
+class TestAutoscalePolicy:
+    def test_grow_on_queue_depth(self):
+        pol = AutoscalePolicy(max_streams=16, min_streams=2)
+        dec = pol.decide(n_streams=4, n_active=4, queue_depth=3)
+        assert isinstance(dec, ResizeDecision)
+        assert dec.action == "grow" and dec.target == 8
+        assert "queue_depth=3" in dec.reason
+
+    def test_grow_caps_at_max(self):
+        pol = AutoscalePolicy(max_streams=6, min_streams=2)
+        dec = pol.decide(n_streams=4, n_active=4, queue_depth=1)
+        assert dec.target == 6
+        assert pol.decide(n_streams=6, n_active=6, queue_depth=5) is None
+
+    def test_grow_on_miss_rate(self):
+        pol = AutoscalePolicy(max_streams=8, min_streams=2, grow_miss_rate=0.1)
+        dec = pol.decide(
+            n_streams=4, n_active=4, queue_depth=0, deadline_miss_rate=0.5
+        )
+        assert dec.action == "grow" and "miss_rate" in dec.reason
+        # miss trigger disabled by default
+        off = AutoscalePolicy(max_streams=8, min_streams=2)
+        assert off.decide(4, 4, 0, deadline_miss_rate=0.9) is None
+
+    def test_never_shrinks_under_demand(self):
+        pol = AutoscalePolicy(max_streams=8, min_streams=2, grow_miss_rate=0.1)
+        # queue pressure at max width: hold, never shrink into demand
+        assert pol.decide(8, 1, queue_depth=2) is None
+        assert pol.decide(8, 1, queue_depth=0, deadline_miss_rate=0.5) is None
+
+    def test_shrink_band_and_ladder_target(self):
+        pol = AutoscalePolicy(max_streams=16, min_streams=2)
+        # utilization 3/16 < 0.25 → shrink to the smallest ladder width
+        # holding 3 sessions at <= 0.5 utilization: ceil(3/0.5)=6 → ladder 8
+        dec = pol.decide(n_streams=16, n_active=3, queue_depth=0)
+        assert dec is not None and dec.action == "shrink" and dec.target == 8
+        # 5/16 >= 0.25 → inside the band, hold
+        assert pol.decide(16, 5, 0) is None
+        # empty bank shrinks to the floor
+        assert pol.decide(16, 0, 0).target == 2
+        assert pol.decide(2, 0, 0) is None  # already at min
+
+    def test_cooldown_blocks_then_releases(self):
+        pol = AutoscalePolicy(max_streams=8, min_streams=2, cooldown_ticks=4)
+        assert pol.decide(2, 2, 3, ticks_since_resize=2) is None
+        assert pol.decide(2, 2, 3, ticks_since_resize=4).action == "grow"
+        # never-resized service: cooldown waived
+        assert pol.decide(2, 2, 3, ticks_since_resize=None).action == "grow"
+
+    def test_anti_flap_construction(self):
+        # bands too close: the just-shrunk bank would sit inside the shrink
+        # band and oscillate — rejected at construction
+        with pytest.raises(ValueError, match="flaps"):
+            AutoscalePolicy(
+                max_streams=8,
+                shrink_utilization=0.4,
+                hold_utilization=0.5,
+            )
+        # and the legal default really is flap-free: post-shrink utilization
+        # clears the shrink trigger for every active count
+        pol = AutoscalePolicy(max_streams=64, min_streams=2)
+        for n_active in range(1, 64):
+            dec = pol.decide(64, n_active, 0)
+            if dec is None:
+                continue
+            again = pol.decide(
+                dec.target, n_active, 0, ticks_since_resize=pol.cooldown_ticks
+            )
+            assert again is None, (n_active, dec, again)
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="min_streams"):
+            AutoscalePolicy(max_streams=4, min_streams=0)
+        with pytest.raises(ValueError, match="max_streams"):
+            AutoscalePolicy(max_streams=1, min_streams=2)
+        with pytest.raises(ValueError, match="factor"):
+            AutoscalePolicy(max_streams=4, factor=1)
+        with pytest.raises(ValueError, match="grow_miss_rate"):
+            AutoscalePolicy(max_streams=4, grow_miss_rate=0.0)
+        # snapshot-safe: the policy is frozen (memoryless by construction)
+        assert AutoscalePolicy.__dataclass_params__.frozen
+
+
+class TestBankElasticity:
+    def test_with_streams_resizes_and_keeps_explicit_knobs(self):
+        ecfg, ocfg = _cfgs()
+        bank = SeparatorBank(
+            ecfg, ocfg, n_streams=4, fused=True, block_p=8, autotune=False
+        )
+        wide = bank.with_streams(8)
+        assert wide.n_streams == 8 and wide.block_p == 8
+        assert wide is not bank and bank.n_streams == 4  # original untouched
+        assert bank.with_streams(4) is bank
+
+    def test_with_streams_drops_nondividing_block_s(self):
+        bank = _bank(8, fused=True, block_s=4, autotune=False)
+        assert bank.with_streams(16).block_s == 4  # still divides
+        assert bank.with_streams(2).block_s is None  # 2 % 4 != 0 → dropped
+
+    def test_with_streams_rejects_per_stream_hyperparams(self):
+        ecfg, ocfg = _cfgs()
+        from repro.core.smbgd import BankHyperparams
+
+        bank = SeparatorBank(
+            ecfg, ocfg, n_streams=4,
+            hyperparams=BankHyperparams.broadcast(ocfg, 4),
+        )
+        with pytest.raises(ValueError, match="per-stream hyperparams"):
+            bank.with_streams(8)
+
+    @pytest.mark.parametrize("fused", [False, True])
+    def test_resize_state_prefix_semantics(self, fused):
+        bank = _bank(4, fused=fused)
+        state = bank.init(jax.random.PRNGKey(0))
+        wide = bank.with_streams(8)
+        grown = wide.resize_state(state)
+        assert grown.B.shape[0] == 8
+        np.testing.assert_array_equal(
+            np.asarray(grown.B[:4]), np.asarray(state.B)
+        )
+        # new rows: blank separators, never-stepped conv sentinel, no RNG use
+        assert float(np.abs(np.asarray(grown.B[4:])).max()) == 0.0
+        assert np.all(np.isinf(np.asarray(grown.conv[4:])))
+        back = bank.resize_state(grown)
+        for name in ("B", "H_hat", "step"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(back, name)), np.asarray(getattr(state, name))
+            )
+
+    def test_move_slot_carries_every_leaf_verbatim(self):
+        bank = _bank(4)
+        state = bank.init(jax.random.PRNGKey(1))
+        moved = bank.move_slot(state, 0, 3)
+        for name in ("B", "H_hat", "step"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(moved, name)[0]),
+                np.asarray(getattr(state, name)[3]),
+            )
+        # conv rides too — unlike copy_slot, which restarts verdicts
+        np.testing.assert_array_equal(
+            np.asarray(bank._conv_or_default(moved)[0]),
+            np.asarray(bank._conv_or_default(state)[3]),
+        )
+
+
+class TestServiceElasticity:
+    def test_grow_backfills_queue_same_call(self):
+        svc = _svc(2, max_queue=4)
+        for i in range(4):
+            svc.admit(f"s{i}")
+        assert svc.n_active == 2 and svc.n_queued == 2
+        svc.grow(4)
+        assert svc.n_active == 4 and svc.n_queued == 0
+        assert svc.metrics["n_grows"] == 1.0
+        assert svc.metrics["n_streams"] == 4.0
+
+    def test_shrink_compacts_first_and_rejects_overflow(self):
+        svc = _svc(8)
+        for i in range(4):
+            svc.admit(f"s{i}")
+        # strand the survivors in high slots
+        svc.evict("s0")
+        svc.evict("s1")
+        assert max(svc.sessions.values()) >= 2
+        svc.shrink(2)
+        assert svc.bank.n_streams == 2
+        assert sorted(svc.sessions.values()) == [0, 1]
+        assert svc.metrics["n_shrinks"] == 1.0
+        with pytest.raises(ValueError, match="exceed the new capacity"):
+            svc.shrink(1)
+        with pytest.raises(ValueError, match="use grow"):
+            svc.shrink(4)
+
+    def test_compact_moves_low_and_fixes_free_list(self):
+        svc = _svc(8)
+        for i in range(5):
+            svc.admit(f"s{i}")
+        for sid in ("s0", "s2"):
+            svc.evict(sid)
+        moved = svc.compact()
+        assert moved > 0
+        assert sorted(svc.sessions.values()) == [0, 1, 2]
+        assert sorted(svc._free) == [3, 4, 5, 6, 7]
+        assert svc.metrics["n_compactions"] == 1.0
+        assert svc.compact() == 0  # idempotent; second pass is not counted
+        assert svc.metrics["n_compactions"] == 1.0
+
+    def test_resize_history_and_utilization(self):
+        svc = _svc(2, max_queue=4)
+        svc.admit("a")
+        assert svc.metrics["bank_utilization"] == 0.5
+        svc.grow(4, reason="unit")
+        svc.shrink(2, reason="unit")
+        hist = svc.lifecycle["resize_history"]
+        assert [h["action"] for h in hist] == ["grow", "shrink"]
+        assert hist[0]["from"] == 2 and hist[0]["to"] == 4
+        assert hist[1]["reason"] == "unit"
+
+    def test_autoscale_rejects_per_stream_hyperparams(self):
+        ecfg, ocfg = _cfgs()
+        from repro.core.smbgd import BankHyperparams
+
+        bank = SeparatorBank(
+            ecfg, ocfg, n_streams=2,
+            hyperparams=BankHyperparams.broadcast(ocfg, 2),
+        )
+        with pytest.raises(ValueError, match="resizable bank"):
+            SeparationService(
+                bank, seed=0, autoscale=AutoscalePolicy(max_streams=4)
+            )
+
+    def test_prewarm_caches_step_per_width(self):
+        svc = _svc(2)
+        svc.prewarm([2, 4])
+        cached = set(svc._step_cache)
+        svc.grow(4)
+        # the resize reused the prewarmed program — no new cache entry
+        assert set(svc._step_cache) == cached
+
+
+# -- the property sweep ------------------------------------------------------
+
+QUOTAS = {"t0": 3, "t1": 3}
+S_MIN, S_MAX = 2, 8
+
+
+def _schedule_invariants(svc, live, gone):
+    S = svc.bank.n_streams
+    slots = svc.sessions
+    # no sid dropped or duplicated: every live sid is in exactly one pool
+    for sid in live:
+        assert svc.status(sid) in ("active", "queued"), sid
+    for sid in gone:
+        assert svc.status(sid) == "finished", sid
+    assert len(set(slots.values())) == len(slots)
+    # free list consistent with the slot map and status()
+    assert sorted(set(svc._free) | set(slots.values())) == list(range(S))
+    assert len(svc._free) == len(set(svc._free)) == svc.n_free
+    # scheduler quotas never exceeded by ACTIVE sessions
+    per_tenant = {}
+    for sid in slots:
+        t = svc._meta[sid].tenant
+        per_tenant[t] = per_tenant.get(t, 0) + 1
+    for tenant, quota in QUOTAS.items():
+        assert per_tenant.get(tenant, 0) <= quota, per_tenant
+
+
+def _run_schedule(seed, fused):
+    rng = np.random.RandomState(seed)
+    elastic = SeparationService(
+        _bank(S_MIN, fused=fused),
+        seed=0,
+        scheduler=PriorityScheduler(max_queue=S_MAX, quotas=QUOTAS),
+    )
+    oracle = SeparationService(_bank(S_MAX, fused=fused), seed=0)
+    live, gone, next_sid = [], [], 0
+    ops = rng.choice(
+        ["admit", "admit", "step", "step", "step", "evict", "grow",
+         "shrink", "compact"],
+        size=24,
+    )
+    for op in ops:
+        if op == "admit" and len(live) < S_MAX:
+            sid = f"s{next_sid}"
+            st8 = _warm(next_sid)
+            elastic.admit(sid, state=st8, tenant=f"t{next_sid % 2}")
+            oracle.admit(sid, state=st8)
+            live.append(sid)
+            next_sid += 1
+        elif op == "step":
+            active = sorted(elastic.sessions, key=str)
+            if active:
+                batches = {
+                    sid: rng.randn(P, M).astype(np.float32) for sid in active
+                }
+                elastic.step(batches)
+                oracle.step({k: v.copy() for k, v in batches.items()})
+        elif op == "evict":
+            active = sorted(elastic.sessions, key=str)
+            if active:
+                sid = active[rng.randint(len(active))]
+                elastic.evict(sid)
+                oracle.evict(sid)
+                live.remove(sid)
+                gone.append(sid)
+        elif op == "grow":
+            elastic.grow(min(S_MAX, elastic.bank.n_streams * 2))
+        elif op == "shrink":
+            target = max(
+                S_MIN, elastic.bank.n_streams // 2, elastic.n_active
+            )
+            if target <= elastic.bank.n_streams:
+                elastic.shrink(target)
+        elif op == "compact":
+            elastic.compact()
+        _schedule_invariants(elastic, live, gone)
+    return elastic, oracle
+
+
+@pytest.mark.property
+@pytest.mark.parametrize("fused", [False, True])
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=9999))
+def test_elastic_schedule_matches_fixed_width_oracle(fused, seed):
+    """The tentpole acceptance bar: any interleaving of resize ops leaves
+    every surviving session's trajectory BIT-identical (not allclose) to the
+    same traffic served by a bank frozen at max width."""
+    elastic, oracle = _run_schedule(seed, fused)
+    for sid, slot in elastic.sessions.items():
+        se = elastic.bank.slot_state(elastic.state, slot)
+        so = oracle.bank.slot_state(oracle.state, oracle.sessions[sid])
+        for name in ("B", "H_hat", "step"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(se, name)),
+                np.asarray(getattr(so, name)),
+                err_msg=f"{sid}.{name} diverged from the fixed-width oracle",
+            )
+        np.testing.assert_array_equal(
+            np.asarray(elastic.bank._conv_or_default(elastic.state)[slot]),
+            np.asarray(
+                oracle.bank._conv_or_default(oracle.state)[
+                    oracle.sessions[sid]
+                ]
+            ),
+            err_msg=f"{sid}.conv diverged from the fixed-width oracle",
+        )
+
+
+@pytest.mark.property
+def test_autoscaled_service_matches_oracle_under_burst():
+    """The autoscaler in the run_tick loop (not manual resizes): a burst of
+    admissions grows the bank, the drain shrinks it, and the sessions that
+    lived through both transitions stay bit-identical to the oracle."""
+    pol = AutoscalePolicy(max_streams=S_MAX, min_streams=S_MIN, cooldown_ticks=0)
+    elastic = SeparationService(
+        _bank(S_MIN), seed=0, autoscale=pol, max_queue=S_MAX
+    )
+    oracle = SeparationService(_bank(S_MAX), seed=0)
+    rng = np.random.RandomState(7)
+    for k in range(6):
+        elastic.admit(f"s{k}", state=_warm(k))
+        oracle.admit(f"s{k}", state=_warm(k))
+    for _ in range(6):  # burst: autoscaler grows to cover the queue
+        batches = {
+            sid: rng.randn(P, M).astype(np.float32)
+            for sid in sorted(elastic.sessions, key=str)
+        }
+        elastic.step(batches)
+        oracle.step({k: v.copy() for k, v in batches.items()})
+        elastic._autoscale_tick()
+    assert elastic.bank.n_streams == S_MAX and elastic.n_queued == 0
+    for k in range(5):  # drain: autoscaler compacts + shrinks
+        elastic.evict(f"s{k}")
+        oracle.evict(f"s{k}")
+    for _ in range(3):
+        elastic._autoscale_tick()
+    assert elastic.bank.n_streams < S_MAX
+    assert elastic.metrics["n_grows"] >= 1
+    assert elastic.metrics["n_shrinks"] >= 1
+    sid = "s5"
+    se = elastic.bank.slot_state(elastic.state, elastic.sessions[sid])
+    so = oracle.bank.slot_state(oracle.state, oracle.sessions[sid])
+    for name in ("B", "H_hat", "step"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(se, name)), np.asarray(getattr(so, name))
+        )
